@@ -1,0 +1,131 @@
+//! END-TO-END DRIVER: the full three-layer stack on a real workload.
+//!
+//!     make artifacts && cargo run --release --example e2e_pipeline -- [--quick]
+//!
+//! Proves all layers compose:
+//!   L1  Pallas logistic kernel  → lowered inside the L2 graphs
+//!   L2  JAX subposterior + fused 10-step leapfrog → HLO text artifacts
+//!   L3  rust coordinator: partition → M HMC workers evaluating the
+//!       subposterior THROUGH PJRT (python is not running) → streaming →
+//!       combination → evaluation
+//!
+//! Workload: Bayesian logistic regression, N=50k observations, d=50,
+//! M=10 machines (the paper's section 8.1.1 setup; --quick runs d=8,
+//! N=4k, M=8 on the small artifacts). Reports:
+//!   * native-vs-runtime log-density parity on random θ,
+//!   * posterior L2 error vs a native groundtruth chain, per method,
+//!   * fused-trajectory telemetry and wall-clock breakdown.
+//! The run is recorded in EXPERIMENTS.md §E2E.
+
+use std::path::Path;
+use std::time::Instant;
+
+use repro::combine::CombineMethod;
+use repro::config::PipelineConfig;
+use repro::coordinator::partition::Partitioner;
+use repro::coordinator::pipeline;
+use repro::data::{io, synth};
+use repro::evaluation::l2_distance_subsampled;
+use repro::model::LogDensity;
+use repro::rng::Pcg64;
+use repro::runtime::{RuntimeClient, XlaDensity};
+use repro::sampler::SamplerKind;
+
+fn main() -> repro::error::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (n, d, machines, t) =
+        if quick { (4_000, 8, 8, 400) } else { (50_000, 50, 10, 1_200) };
+
+    println!("=== E2E: logistic N={n} d={d} M={machines} (PJRT runtime) ===");
+    let data = synth::logistic(n, d, 1234);
+
+    // --- Runtime setup: load + compile artifacts once. -----------------
+    let t_setup = Instant::now();
+    let client = RuntimeClient::cpu(Path::new("artifacts"))?;
+    println!("PJRT platform: {}", client.platform());
+    let shards = Partitioner::Contiguous.split(n, machines, 0)?;
+    let prior_w = 1.0 / machines as f64;
+    let models: Vec<XlaDensity> = shards
+        .iter()
+        .map(|idx| XlaDensity::from_shard(&client, &data, idx, prior_w))
+        .collect::<repro::error::Result<_>>()?;
+    println!(
+        "loaded {} shard models ({}, fused_hmc={}) in {:.2}s",
+        models.len(),
+        models[0].artifact_name(),
+        models[0].has_fused_hmc(),
+        t_setup.elapsed().as_secs_f64()
+    );
+
+    // --- Layer-parity check: runtime vs native on random θ. ------------
+    let native0 = data.subposterior(&shards[0], prior_w)?;
+    let mut rng = Pcg64::seed_from(5);
+    let mut max_rel = 0.0f64;
+    for _ in 0..5 {
+        let theta: Vec<f64> = (0..d).map(|_| 0.3 * rng.normal()).collect();
+        let (lp_n, g_n) = native0.logp_grad(&theta);
+        let (lp_x, g_x) = models[0].logp_grad(&theta);
+        max_rel = max_rel.max((lp_n - lp_x).abs() / lp_n.abs().max(1.0));
+        for j in 0..d {
+            max_rel =
+                max_rel.max((g_n[j] - g_x[j]).abs() / g_n[j].abs().max(1.0));
+        }
+    }
+    println!("native↔runtime max relative diff: {max_rel:.2e}");
+    assert!(max_rel < 1e-3, "runtime/native parity violated");
+
+    // --- Parallel sampling through the runtime. -------------------------
+    let cfg = PipelineConfig::builder("logistic")
+        .machines(machines)
+        .samples_per_machine(t)
+        .sampler(SamplerKind::Hmc { step: 0.05, n_leapfrog: 10 })
+        .method(CombineMethod::Semiparametric)
+        .seed(99)
+        .build();
+    let boxed: Vec<Box<dyn LogDensity>> = models
+        .into_iter()
+        .map(|m| Box::new(m) as Box<dyn LogDensity>)
+        .collect();
+    let t_sample = Instant::now();
+    let out = pipeline::run_sequential(&cfg, boxed)?;
+    println!(
+        "sampled {}×{} draws through PJRT in {:.1}s \
+         (cluster-model sampling time: {:.2}s = max worker)",
+        machines,
+        t,
+        t_sample.elapsed().as_secs_f64(),
+        out.timing.sampling_secs
+    );
+    println!("{}", out.metrics);
+
+    // --- Groundtruth: long native full-data chain. ----------------------
+    println!("sampling native groundtruth chain…");
+    let gt_cfg = PipelineConfig::builder("logistic")
+        .machines(1)
+        .samples_per_machine(if quick { 1_200 } else { 3_000 })
+        .sampler(SamplerKind::Hmc { step: 0.02, n_leapfrog: 12 })
+        .seed(7)
+        .build();
+    let groundtruth = pipeline::run_single_chain(&gt_cfg, &data)?;
+
+    // --- Score every combination method. --------------------------------
+    let mut table = io::Table::new(&["l2_error", "combine_secs"]);
+    println!("\nposterior L2 error vs groundtruth (2-d marginal):");
+    let truth_marg = groundtruth.samples.select_dims(&[0, 1])?;
+    for &method in CombineMethod::all() {
+        let t0 = Instant::now();
+        let combined =
+            repro::combine::combine(method, &out.subposteriors, t, 17)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let err = l2_distance_subsampled(
+            &combined.select_dims(&[0, 1])?,
+            &truth_marg,
+            300,
+        );
+        println!("  {:20} L2={err:.4}  ({secs:.2}s)", method.name());
+        table.push(method.name(), vec![err, secs]);
+    }
+    table.write_csv(Path::new("results/e2e_logistic.csv"))?;
+    println!("\nwrote results/e2e_logistic.csv — record in EXPERIMENTS.md §E2E");
+    Ok(())
+}

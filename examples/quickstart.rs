@@ -1,0 +1,62 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Partitions a conjugate Gaussian problem onto 4 machines, samples each
+//! subposterior independently with HMC, combines with all three of the
+//! paper's estimators, and compares every result against the closed-form
+//! posterior.
+
+use repro::combine::CombineMethod;
+use repro::config::PipelineConfig;
+use repro::coordinator::pipeline;
+use repro::data::synth;
+use repro::evaluation::mean_l2_error;
+use repro::model::GaussianMean;
+use repro::types::SampleMatrix;
+
+fn main() -> repro::error::Result<()> {
+    // 1. A dataset: 20k observations of a 2-d Gaussian with unknown mean.
+    let data = synth::gaussian(20_000, 2, 42);
+
+    // 2. Configure the embarrassingly parallel run: M=4 machines,
+    //    2000 post-burn-in draws each, HMC workers.
+    let cfg = PipelineConfig::builder("gaussian")
+        .machines(4)
+        .samples_per_machine(2_000)
+        .method(CombineMethod::Semiparametric)
+        .seed(42)
+        .build();
+
+    // 3. Run: partition → parallel sample (zero communication) →
+    //    stream → combine.
+    let out = pipeline::run_native(&cfg, &data)?;
+    println!("== run metrics ==\n{}", out.metrics);
+
+    // 4. Ground truth for this conjugate model is available in closed
+    //    form — build it from the full dataset.
+    let full = match &data {
+        repro::data::Dataset::Gaussian { x, lik_prec, prior_prec } => {
+            GaussianMean::new(x.clone(), *lik_prec, *prior_prec, 1.0)
+        }
+        _ => unreachable!(),
+    };
+    let exact = full.exact_posterior();
+    let mut rng = repro::rng::Pcg64::seed_from(7);
+    let exact_draws: SampleMatrix = exact.sample_n(4_000, &mut rng);
+
+    // 5. Compare all combination strategies.
+    println!("\n== posterior mean error vs closed form ==");
+    for &method in CombineMethod::all() {
+        let combined = repro::combine::combine(
+            method,
+            &out.subposteriors,
+            2_000,
+            99,
+        )?;
+        let err = mean_l2_error(&combined, &exact_draws);
+        println!("  {:20} {:.5}", method.name(), err);
+    }
+    println!("\nexact posterior mean: {:?}", exact.mean());
+    Ok(())
+}

@@ -1,0 +1,260 @@
+"""AOT compiler: lower every (model, shape) config to HLO *text* + manifest.
+
+HLO text (NOT lowered.compiler_ir(...).serialize()) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the rust `xla` crate's xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts [--only NAME]
+
+Outputs:
+  artifacts/<name>.hlo.txt   one module per artifact
+  artifacts/manifest.json    input/output specs + baked constants, read by
+                             rust/src/runtime/artifact.rs
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import logistic as logistic_kernel
+
+F32 = "f32"
+
+
+def spec(name, shape, dtype=F32):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _shape_structs(in_specs):
+    dt = {F32: jnp.float32}
+    return [
+        jax.ShapeDtypeStruct(tuple(s["shape"]), dt[s["dtype"]])
+        for s in in_specs
+    ]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry
+# ---------------------------------------------------------------------------
+
+
+def _logistic_entries(n_pad, d, n_steps):
+    """(lpg, hmc) artifact entries for a padded logistic shard of n_pad rows."""
+    block_n = logistic_kernel.choose_block_n(n_pad)
+    data = [spec("x", (n_pad, d)), spec("y", (n_pad,)), spec("mask", (n_pad,))]
+    scalars = [spec("prior_w", ()), spec("prior_prec", ())]
+    lpg = {
+        "name": f"logistic_lpg_n{n_pad}_d{d}",
+        "kind": "logp_grad",
+        "model": "logistic",
+        "params": {"n": n_pad, "d": d, "block_n": block_n},
+        "inputs": data + [spec("theta", (d,))] + scalars,
+        "outputs": [spec("logp", ()), spec("grad", (d,))],
+        "fn": functools.partial(model.logistic_logp_grad, block_n=block_n),
+    }
+    hmc = {
+        "name": f"logistic_hmc_n{n_pad}_d{d}_L{n_steps}",
+        "kind": "hmc",
+        "model": "logistic",
+        "params": {"n": n_pad, "d": d, "block_n": block_n, "n_steps": n_steps},
+        "inputs": data
+        + [spec("theta", (d,)), spec("p", (d,)), spec("eps", ())]
+        + scalars,
+        "outputs": [
+            spec("theta_out", (d,)),
+            spec("p_out", (d,)),
+            spec("logp_out", ()),
+            spec("grad_out", (d,)),
+            spec("logp_in", ()),
+        ],
+        "fn": functools.partial(
+            model.logistic_hmc, n_steps=n_steps, block_n=block_n
+        ),
+    }
+    return [lpg, hmc]
+
+
+def _gmm_entries(n_pad, n_comp, dim, n_steps):
+    block_n = logistic_kernel.choose_block_n(n_pad)
+    td = n_comp * dim
+    data = [spec("x", (n_pad, dim)), spec("mask", (n_pad,))]
+    tail = [
+        spec("logw", (n_comp,)),
+        spec("inv_var", ()),
+        spec("prior_w", ()),
+        spec("prior_prec", ()),
+    ]
+    kw = dict(n_comp=n_comp, dim=dim, block_n=block_n)
+    lpg = {
+        "name": f"gmm_lpg_n{n_pad}_k{n_comp}_dim{dim}",
+        "kind": "logp_grad",
+        "model": "gmm",
+        "params": {"n": n_pad, "k": n_comp, "dim": dim, "block_n": block_n},
+        "inputs": data + [spec("theta", (td,))] + tail,
+        "outputs": [spec("logp", ()), spec("grad", (td,))],
+        "fn": functools.partial(model.gmm_logp_grad, **kw),
+    }
+    hmc = {
+        "name": f"gmm_hmc_n{n_pad}_k{n_comp}_dim{dim}_L{n_steps}",
+        "kind": "hmc",
+        "model": "gmm",
+        "params": {
+            "n": n_pad, "k": n_comp, "dim": dim,
+            "block_n": block_n, "n_steps": n_steps,
+        },
+        "inputs": data
+        + [spec("theta", (td,)), spec("p", (td,)), spec("eps", ())]
+        + tail,
+        "outputs": [
+            spec("theta_out", (td,)),
+            spec("p_out", (td,)),
+            spec("logp_out", ()),
+            spec("grad_out", (td,)),
+            spec("logp_in", ()),
+        ],
+        "fn": functools.partial(model.gmm_hmc, n_steps=n_steps, **kw),
+    }
+    return [lpg, hmc]
+
+
+def _pg_entries(n_pad, n_steps):
+    data = [spec("xs", (n_pad,)), spec("ts", (n_pad,)), spec("mask", (n_pad,))]
+    scalars = [
+        spec("prior_w", ()),
+        spec("lam", ()),
+        spec("alpha", ()),
+        spec("beta_p", ()),
+    ]
+    lpg = {
+        "name": f"pg_lpg_n{n_pad}",
+        "kind": "logp_grad",
+        "model": "poisson_gamma",
+        "params": {"n": n_pad, "d": 2},
+        "inputs": data + [spec("theta", (2,))] + scalars,
+        "outputs": [spec("logp", ()), spec("grad", (2,))],
+        "fn": model.poisson_gamma_logp_grad,
+    }
+    hmc = {
+        "name": f"pg_hmc_n{n_pad}_L{n_steps}",
+        "kind": "hmc",
+        "model": "poisson_gamma",
+        "params": {"n": n_pad, "d": 2, "n_steps": n_steps},
+        "inputs": data
+        + [spec("theta", (2,)), spec("p", (2,)), spec("eps", ())]
+        + scalars,
+        "outputs": [
+            spec("theta_out", (2,)),
+            spec("p_out", (2,)),
+            spec("logp_out", ()),
+            spec("grad_out", (2,)),
+            spec("logp_in", ()),
+        ],
+        "fn": functools.partial(model.poisson_gamma_hmc, n_steps=n_steps),
+    }
+    return [lpg, hmc]
+
+
+def _gaussian_entries(n_pad, d, n_steps):
+    data = [spec("x", (n_pad, d)), spec("mask", (n_pad,))]
+    scalars = [
+        spec("lik_prec", ()),
+        spec("prior_w", ()),
+        spec("prior_prec", ()),
+    ]
+    lpg = {
+        "name": f"gauss_lpg_n{n_pad}_d{d}",
+        "kind": "logp_grad",
+        "model": "gaussian",
+        "params": {"n": n_pad, "d": d},
+        "inputs": data + [spec("theta", (d,))] + scalars,
+        "outputs": [spec("logp", ()), spec("grad", (d,))],
+        "fn": model.gaussian_logp_grad,
+    }
+    hmc = {
+        "name": f"gauss_hmc_n{n_pad}_d{d}_L{n_steps}",
+        "kind": "hmc",
+        "model": "gaussian",
+        "params": {"n": n_pad, "d": d, "n_steps": n_steps},
+        "inputs": data
+        + [spec("theta", (d,)), spec("p", (d,)), spec("eps", ())]
+        + scalars,
+        "outputs": [
+            spec("theta_out", (d,)),
+            spec("p_out", (d,)),
+            spec("logp_out", ()),
+            spec("grad_out", (d,)),
+            spec("logp_in", ()),
+        ],
+        "fn": functools.partial(model.gaussian_hmc, n_steps=n_steps),
+    }
+    return [lpg, hmc]
+
+
+def registry():
+    """Artifact set covering the test suite and every paper experiment."""
+    entries = []
+    # Small shapes: rust unit/integration tests + quickstart example.
+    entries += _gaussian_entries(n_pad=512, d=2, n_steps=10)
+    entries += _logistic_entries(n_pad=512, d=8, n_steps=10)
+    # Fig. 1/2: synthetic logistic N=50k d=50; shards for M=10 and M=20.
+    entries += _logistic_entries(n_pad=5120, d=50, n_steps=10)
+    entries += _logistic_entries(n_pad=2560, d=50, n_steps=10)
+    # Fig. 4/5-left: GMM K=10 in 2-d, M=10 shards of 5k.
+    entries += _gmm_entries(n_pad=5120, n_comp=10, dim=2, n_steps=10)
+    # Fig. 5-right: Poisson-gamma, M=10 shards of 5k.
+    entries += _pg_entries(n_pad=5120, n_steps=10)
+    return entries
+
+
+def lower_entry(entry, out_dir):
+    structs = _shape_structs(entry["inputs"])
+    lowered = jax.jit(entry["fn"]).lower(*structs)
+    text = to_hlo_text(lowered)
+    fname = f"{entry['name']}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    meta = {k: entry[k] for k in
+            ("name", "kind", "model", "params", "inputs", "outputs")}
+    meta["file"] = fname
+    return meta, len(text)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for entry in registry():
+        if args.only and args.only not in entry["name"]:
+            continue
+        meta, nchars = lower_entry(entry, args.out_dir)
+        manifest.append(meta)
+        print(f"  lowered {entry['name']} ({nchars} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+- logistic: fused logistic-regression log-likelihood + gradient (Fig. 1-3).
+- gmm: Gaussian-mixture log-likelihood + gradient over component means
+  (Fig. 4-5 left).
+- ref: pure-jnp oracles used by the pytest/hypothesis correctness sweeps.
+"""
+
+from . import gmm, logistic, ref  # noqa: F401

@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: fused logistic-regression log-likelihood + gradient.
+
+This is the per-sample O(n_shard * d) hot-spot of the embarrassingly
+parallel MCMC worker: every HMC leapfrog step evaluates
+
+    loglik(beta) = sum_i mask_i * ( y_i * z_i - softplus(z_i) ),  z = X @ beta
+    grad(beta)   = X^T ( mask * (y - sigmoid(z)) )
+
+in one pass over the data shard. The kernel tiles X into (BLOCK_N, d)
+VMEM blocks via BlockSpec and accumulates the scalar log-likelihood and
+the d-dim gradient across the grid in the output refs (revisited on every
+grid step, i.e. VMEM-resident accumulators).
+
+TPU adaptation notes (DESIGN.md section Hardware-Adaptation): the X @ beta
+contraction and the X^T r back-contraction are MXU work; padded rows are
+masked instead of branching; accumulators stay f32. On this image the
+kernel runs under interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls), so correctness is validated against kernels.ref and
+performance is argued structurally (VMEM footprint, single pass).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default row-block. (512 x 64) f32 = 128 KiB of VMEM for the X tile,
+# well under the ~16 MiB/core budget, leaving room for double buffering.
+DEFAULT_BLOCK_N = 512
+
+
+def _loglik_grad_kernel(x_ref, y_ref, mask_ref, beta_ref, ll_ref, grad_ref):
+    """One grid step: accumulate loglik + grad contributions of a row block."""
+    i = pl.program_id(0)
+
+    x = x_ref[...].astype(jnp.float32)        # (bn, d)
+    y = y_ref[...].astype(jnp.float32)        # (bn,)
+    mask = mask_ref[...].astype(jnp.float32)  # (bn,)
+    beta = beta_ref[...].astype(jnp.float32)  # (d,)
+
+    z = x @ beta                               # MXU contraction, (bn,)
+    # Numerically stable softplus: log(1 + e^z) = max(z, 0) + log1p(e^{-|z|}).
+    softplus = jnp.maximum(z, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    ll_blk = jnp.sum(mask * (y * z - softplus))
+
+    resid = mask * (y - jax.nn.sigmoid(z))     # (bn,)
+    grad_blk = resid @ x                       # MXU back-contraction, (d,)
+
+    @pl.when(i == 0)
+    def _init():
+        ll_ref[...] = jnp.zeros_like(ll_ref)
+        grad_ref[...] = jnp.zeros_like(grad_ref)
+
+    ll_ref[...] += ll_blk[None]
+    grad_ref[...] += grad_blk
+
+
+def loglik_grad(x, y, mask, beta, *, block_n: int = DEFAULT_BLOCK_N):
+    """Fused logistic log-likelihood and gradient over a (padded) shard.
+
+    Args:
+      x: (n, d) float32 design matrix; n must be a multiple of block_n
+         (callers pad with zero-mask rows — see pad_rows()).
+      y: (n,) float32 0/1 labels.
+      mask: (n,) float32 validity mask (0.0 for padded rows).
+      beta: (d,) float32 parameter.
+      block_n: rows per VMEM tile.
+
+    Returns:
+      (loglik, grad): f32[] and f32[d].
+    """
+    n, d = x.shape
+    if n % block_n != 0:
+        raise ValueError(f"n={n} must be a multiple of block_n={block_n}")
+    grid = (n // block_n,)
+    ll, grad = pl.pallas_call(
+        _loglik_grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, y, mask, beta)
+    return ll[0], grad
+
+
+def pad_rows(n: int, block_n: int = DEFAULT_BLOCK_N) -> int:
+    """Smallest multiple of block_n that is >= n (and >= block_n)."""
+    return max(block_n, ((n + block_n - 1) // block_n) * block_n)
+
+
+def choose_block_n(n: int, preferred: int = DEFAULT_BLOCK_N) -> int:
+    """Pick a row-block size: `preferred` unless the shard is tiny."""
+    if n >= preferred:
+        return preferred
+    # Round tiny shards up to a single block of at least 8 rows.
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def loglik_grad_jit(x, y, mask, beta, block_n: int = DEFAULT_BLOCK_N):
+    return loglik_grad(x, y, mask, beta, block_n=block_n)

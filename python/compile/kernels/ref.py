@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness anchors: every kernel in this package must
+agree with its oracle to float32 tolerance over randomized shapes/values
+(python/tests/test_kernel.py runs the hypothesis sweeps).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def logistic_loglik_grad(x, y, mask, beta):
+    """Reference for kernels.logistic.loglik_grad (masked, stable)."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+    beta = beta.astype(jnp.float32)
+    z = x @ beta
+    softplus = jnp.maximum(z, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    ll = jnp.sum(mask * (y * z - softplus))
+    grad = (mask * (y - jax.nn.sigmoid(z))) @ x
+    return ll, grad
+
+
+def gmm_loglik(x, mask, mu, logw, inv_var):
+    """Reference GMM log-likelihood (value only)."""
+    x = x.astype(jnp.float32)
+    mu = mu.astype(jnp.float32)
+    dim = x.shape[1]
+    inv_var = jnp.asarray(inv_var, jnp.float32).reshape(())
+    log_norm = 0.5 * dim * (jnp.log(2.0 * jnp.pi) - jnp.log(inv_var))
+    sq = jnp.sum((x[:, None, :] - mu[None, :, :]) ** 2, axis=-1)  # (n, K)
+    z = logw[None, :] - 0.5 * inv_var * sq - log_norm
+    ll_i = jax.scipy.special.logsumexp(z, axis=1)
+    return jnp.sum(mask * ll_i)
+
+
+def gmm_loglik_grad(x, mask, mu, logw, inv_var):
+    """Reference for kernels.gmm.loglik_grad: value + autodiff gradient."""
+    ll, grad = jax.value_and_grad(gmm_loglik, argnums=2)(
+        x, mask, mu, logw, inv_var
+    )
+    return ll, grad

@@ -1,0 +1,200 @@
+"""L2: subposterior log-density graphs + fused HMC leapfrog trajectories.
+
+Each model exposes
+
+  logp_grad(<data...>, theta, <scalars...>) -> (logp, grad)
+
+where `logp` is the *subposterior* log-density of Eq. 2.1 in the paper:
+
+    log p_m(theta) = (1/M) * log p(theta) + log p(x^{n_m} | theta)
+
+with the prior weight 1/M passed in as the runtime scalar `prior_w`, so a
+single artifact serves any number of machines M (and `prior_w = 1.0`
+recovers the full-data posterior used by the regularChain baseline).
+
+Each model also exposes a fused `hmc(...)` trajectory: L leapfrog steps
+rolled into one lax.scan so the rust worker advances a whole HMC proposal
+with a single PJRT call instead of 2L+1 (this is the L2 perf optimization
+recorded in EXPERIMENTS.md section Perf).
+
+The likelihood hot-spots call the L1 Pallas kernels (kernels.logistic,
+kernels.gmm) so they lower into the same HLO module.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import gmm as gmm_kernel
+from .kernels import logistic as logistic_kernel
+
+# ---------------------------------------------------------------------------
+# Generic fused leapfrog
+# ---------------------------------------------------------------------------
+
+
+def leapfrog(lpg_fn, theta, p, eps, n_steps):
+    """L leapfrog steps of HMC in one lax.scan.
+
+    Args:
+      lpg_fn: theta -> (logp, grad) closure (the subposterior).
+      theta: (d,) position. p: (d,) momentum. eps: f32[] step size.
+      n_steps: static trajectory length L.
+
+    Returns:
+      (theta_L, p_L, logp_L, grad_L, logp_0): final state plus the initial
+      log-density so the rust caller can form the MH ratio without a second
+      round-trip.
+    """
+    lp0, g0 = lpg_fn(theta)
+
+    def step(carry, _):
+        th, mom, _lp, g = carry
+        mom_half = mom + 0.5 * eps * g
+        th_new = th + eps * mom_half
+        lp_new, g_new = lpg_fn(th_new)
+        mom_new = mom_half + 0.5 * eps * g_new
+        return (th_new, mom_new, lp_new, g_new), None
+
+    (theta_f, p_f, lp_f, g_f), _ = lax.scan(
+        step, (theta, p, lp0, g0), None, length=n_steps
+    )
+    return theta_f, p_f, lp_f, g_f, lp0
+
+
+def _gauss_prior(theta, prior_w, prior_prec):
+    """Powered isotropic Gaussian prior: prior_w * log N(theta | 0, I/prec).
+
+    Includes the normalizing constant so the rust native backend and the
+    artifact agree on absolute values (parity tests), not just deltas.
+    """
+    d = theta.shape[0]
+    lp = -0.5 * prior_prec * jnp.sum(theta * theta) + 0.5 * d * (
+        jnp.log(prior_prec) - jnp.log(2.0 * jnp.pi)
+    )
+    grad = -prior_prec * theta
+    return prior_w * lp, prior_w * grad
+
+
+# ---------------------------------------------------------------------------
+# Logistic regression (paper section 8.1)
+# ---------------------------------------------------------------------------
+
+
+def logistic_logp_grad(x, y, mask, beta, prior_w, prior_prec, *, block_n):
+    ll, gl = logistic_kernel.loglik_grad(x, y, mask, beta, block_n=block_n)
+    lp_pr, g_pr = _gauss_prior(beta, prior_w, prior_prec)
+    return ll + lp_pr, gl + g_pr
+
+
+def logistic_hmc(x, y, mask, theta, p, eps, prior_w, prior_prec,
+                 *, n_steps, block_n):
+    def lpg(th):
+        return logistic_logp_grad(
+            x, y, mask, th, prior_w, prior_prec, block_n=block_n
+        )
+
+    return leapfrog(lpg, theta, p, eps, n_steps)
+
+
+# ---------------------------------------------------------------------------
+# Gaussian mixture over component means (paper section 8.2)
+# ---------------------------------------------------------------------------
+
+
+def gmm_logp_grad(x, mask, theta, logw, inv_var, prior_w, prior_prec,
+                  *, n_comp, dim, block_n):
+    mu = theta.reshape(n_comp, dim)
+    ll, gl = gmm_kernel.loglik_grad(
+        x, mask, mu, logw, jnp.reshape(inv_var, (1,)), block_n=block_n
+    )
+    lp_pr, g_pr = _gauss_prior(theta, prior_w, prior_prec)
+    return ll + lp_pr, gl.reshape(-1) + g_pr
+
+
+def gmm_hmc(x, mask, theta, p, eps, logw, inv_var, prior_w, prior_prec,
+            *, n_comp, dim, n_steps, block_n):
+    def lpg(th):
+        return gmm_logp_grad(
+            x, mask, th, logw, inv_var, prior_w, prior_prec,
+            n_comp=n_comp, dim=dim, block_n=block_n,
+        )
+
+    return leapfrog(lpg, theta, p, eps, n_steps)
+
+
+# ---------------------------------------------------------------------------
+# Poisson-gamma hierarchical model (paper section 8.3)
+#
+# a ~ Exp(lam), b ~ Gamma(alpha, beta_p), q_i ~ Gamma(a, b),
+# x_i ~ Poisson(q_i t_i). The q_i are marginalized analytically:
+#   p(x_i | a, b) = C(x_i + a - 1, x_i) (b/(b+t_i))^a (t_i/(b+t_i))^{x_i}
+# (negative binomial), so theta = (log a, log b) in R^2 -- an unconstrained
+# space as the paper's method requires. The log transform contributes the
+# Jacobian log a + log b to the (powered) prior.
+# ---------------------------------------------------------------------------
+
+
+def _pg_logpost(theta, xs, ts, mask, prior_w, lam, alpha, beta_p):
+    log_a, log_b = theta[0], theta[1]
+    a = jnp.exp(log_a)
+    b = jnp.exp(log_b)
+    gammaln = jax.scipy.special.gammaln
+    # Negative-binomial marginal likelihood per observation.
+    ll_i = (
+        gammaln(xs + a)
+        - gammaln(a)
+        - gammaln(xs + 1.0)
+        + a * (jnp.log(b) - jnp.log(b + ts))
+        + xs * (jnp.log(ts) - jnp.log(b + ts))
+    )
+    ll = jnp.sum(mask * ll_i)
+    # Powered prior + Jacobian of the log transform.
+    lp_a = jnp.log(lam) - lam * a
+    lp_b = alpha * jnp.log(beta_p) - gammaln(alpha) \
+        + (alpha - 1.0) * jnp.log(b) - beta_p * b
+    return ll + prior_w * (lp_a + lp_b) + log_a + log_b
+
+
+def poisson_gamma_logp_grad(xs, ts, mask, theta, prior_w, lam, alpha, beta_p):
+    lp, grad = jax.value_and_grad(_pg_logpost)(
+        theta, xs, ts, mask, prior_w, lam, alpha, beta_p
+    )
+    return lp, grad
+
+
+def poisson_gamma_hmc(xs, ts, mask, theta, p, eps, prior_w, lam, alpha,
+                      beta_p, *, n_steps):
+    def lpg(th):
+        return poisson_gamma_logp_grad(
+            xs, ts, mask, th, prior_w, lam, alpha, beta_p
+        )
+
+    return leapfrog(lpg, theta, p, eps, n_steps)
+
+
+# ---------------------------------------------------------------------------
+# Conjugate Gaussian (exactness anchor; DESIGN.md section 6)
+#
+# x_i ~ N(theta, I/lik_prec), theta ~ N(0, I/prior_prec). The subposterior
+# product has a closed form, so the rust side can verify the combination
+# algorithms against ground truth exactly.
+# ---------------------------------------------------------------------------
+
+
+def gaussian_logp_grad(x, mask, theta, lik_prec, prior_w, prior_prec):
+    d = theta.shape[0]
+    resid = x - theta[None, :]
+    ll = -0.5 * lik_prec * jnp.sum(mask[:, None] * resid * resid) \
+        + 0.5 * d * jnp.sum(mask) * (jnp.log(lik_prec) - jnp.log(2.0 * jnp.pi))
+    gl = lik_prec * jnp.sum(mask[:, None] * resid, axis=0)
+    lp_pr, g_pr = _gauss_prior(theta, prior_w, prior_prec)
+    return ll + lp_pr, gl + g_pr
+
+
+def gaussian_hmc(x, mask, theta, p, eps, lik_prec, prior_w, prior_prec,
+                 *, n_steps):
+    def lpg(th):
+        return gaussian_logp_grad(x, mask, th, lik_prec, prior_w, prior_prec)
+
+    return leapfrog(lpg, theta, p, eps, n_steps)

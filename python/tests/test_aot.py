@@ -1,0 +1,67 @@
+"""AOT registry sanity: manifests are self-consistent and small entries lower."""
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import aot
+
+
+def test_registry_names_unique_and_cover_all_models():
+    entries = aot.registry()
+    names = [e["name"] for e in entries]
+    assert len(names) == len(set(names))
+    models = {e["model"] for e in entries}
+    assert models == {"logistic", "gmm", "poisson_gamma", "gaussian"}
+    kinds = {e["kind"] for e in entries}
+    assert kinds == {"logp_grad", "hmc"}
+
+
+def test_registry_specs_consistent():
+    for e in aot.registry():
+        for s in e["inputs"] + e["outputs"]:
+            assert s["dtype"] == "f32"
+            assert all(isinstance(x, int) and x > 0 for x in s["shape"])
+        in_names = [s["name"] for s in e["inputs"]]
+        assert len(in_names) == len(set(in_names))
+        if e["kind"] == "hmc":
+            out_names = [s["name"] for s in e["outputs"]]
+            assert out_names == [
+                "theta_out", "p_out", "logp_out", "grad_out", "logp_in"
+            ]
+            assert "eps" in in_names
+        else:
+            assert [s["name"] for s in e["outputs"]] == ["logp", "grad"]
+        # theta in/out dims agree.
+        theta = next(s for s in e["inputs"] if s["name"] == "theta")
+        out0 = e["outputs"][0 if e["kind"] == "hmc" else 1]
+        grad = e["outputs"][1 if e["kind"] == "logp_grad" else 3]
+        assert grad["shape"] == theta["shape"]
+        if e["kind"] == "hmc":
+            assert out0["shape"] == theta["shape"]
+
+
+@pytest.mark.parametrize("only", ["gauss_lpg_n512_d2", "pg_lpg_n5120"])
+def test_lower_entry_produces_hlo_text(only):
+    entry = next(e for e in aot.registry() if e["name"] == only)
+    with tempfile.TemporaryDirectory() as td:
+        meta, nchars = aot.lower_entry(entry, td)
+        assert nchars > 100
+        path = os.path.join(td, meta["file"])
+        with open(path) as f:
+            head = f.read(200)
+        assert head.startswith("HloModule")
+        # Entry layout mentions the right number of parameters.
+        assert meta["inputs"] == entry["inputs"]
+
+
+def test_manifest_roundtrips_json():
+    entry = next(e for e in aot.registry() if e["name"] == "gauss_lpg_n512_d2")
+    with tempfile.TemporaryDirectory() as td:
+        meta, _ = aot.lower_entry(entry, td)
+        blob = json.dumps([meta])
+        back = json.loads(blob)
+        assert back[0]["name"] == "gauss_lpg_n512_d2"
+        assert back[0]["params"]["d"] == 2

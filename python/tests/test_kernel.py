@@ -1,0 +1,181 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compile path: the hypothesis
+sweeps randomize shapes, block sizes, masks, and value ranges; fixed cases
+pin down numerically extreme regimes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gmm, logistic, ref
+
+F32 = np.float32
+
+
+def _allclose(a, b, atol=1e-4, rtol=1e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=atol, rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# Logistic kernel
+# ---------------------------------------------------------------------------
+
+
+def _logistic_case(seed, n, d, frac_masked, scale):
+    rng = np.random.default_rng(seed)
+    x = (scale * rng.normal(size=(n, d))).astype(F32)
+    y = (rng.random(n) < 0.5).astype(F32)
+    mask = np.ones(n, F32)
+    n_masked = int(frac_masked * n)
+    if n_masked:
+        mask[n - n_masked:] = 0.0
+    beta = rng.normal(size=d).astype(F32)
+    return x, y, mask, beta
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    log2_blocks=st.integers(0, 3),
+    block_n=st.sampled_from([8, 16, 32, 64]),
+    d=st.integers(1, 40),
+    frac_masked=st.floats(0.0, 0.9),
+    scale=st.floats(0.05, 3.0),
+)
+def test_logistic_kernel_matches_ref(seed, log2_blocks, block_n, d,
+                                     frac_masked, scale):
+    n = block_n * (2 ** log2_blocks)
+    x, y, mask, beta = _logistic_case(seed, n, d, frac_masked, scale)
+    ll, g = logistic.loglik_grad(
+        jnp.array(x), jnp.array(y), jnp.array(mask), jnp.array(beta),
+        block_n=block_n,
+    )
+    ll_r, g_r = ref.logistic_loglik_grad(x, y, mask, beta)
+    # Tolerance scales with shard size (f32 accumulation order differs).
+    tol = 1e-4 * max(1.0, n / 64)
+    _allclose(ll, ll_r, atol=tol, rtol=1e-4)
+    _allclose(g, g_r, atol=tol, rtol=1e-4)
+
+
+def test_logistic_kernel_fully_masked_is_zero():
+    x, y, _, beta = _logistic_case(0, 64, 7, 0.0, 1.0)
+    mask = np.zeros(64, F32)
+    ll, g = logistic.loglik_grad(
+        jnp.array(x), jnp.array(y), jnp.array(mask), jnp.array(beta),
+        block_n=16,
+    )
+    assert float(ll) == 0.0
+    assert np.all(np.asarray(g) == 0.0)
+
+
+def test_logistic_kernel_extreme_logits_finite():
+    """softplus must stay stable for |z| ~ 60 (naive log(1+e^z) overflows)."""
+    rng = np.random.default_rng(3)
+    n, d = 32, 4
+    x = (30.0 * rng.normal(size=(n, d))).astype(F32)
+    y = (rng.random(n) < 0.5).astype(F32)
+    mask = np.ones(n, F32)
+    beta = np.full(d, 2.0, F32)
+    ll, g = logistic.loglik_grad(
+        jnp.array(x), jnp.array(y), jnp.array(mask), jnp.array(beta),
+        block_n=16,
+    )
+    ll_r, g_r = ref.logistic_loglik_grad(x, y, mask, beta)
+    assert np.isfinite(float(ll)) and np.all(np.isfinite(np.asarray(g)))
+    _allclose(ll, ll_r, atol=1e-2, rtol=1e-4)
+    _allclose(g, g_r, atol=1e-3, rtol=1e-4)
+
+
+def test_logistic_kernel_rejects_unaligned_n():
+    x, y, mask, beta = _logistic_case(0, 48, 3, 0.0, 1.0)
+    with pytest.raises(ValueError):
+        logistic.loglik_grad(
+            jnp.array(x), jnp.array(y), jnp.array(mask), jnp.array(beta),
+            block_n=32,
+        )
+
+
+def test_pad_rows_and_choose_block():
+    assert logistic.pad_rows(5000, 512) == 5120
+    assert logistic.pad_rows(5120, 512) == 5120
+    assert logistic.pad_rows(1, 512) == 512
+    assert logistic.choose_block_n(10_000) == logistic.DEFAULT_BLOCK_N
+    b = logistic.choose_block_n(100)
+    assert b >= 100 and b % 2 == 0
+
+
+# ---------------------------------------------------------------------------
+# GMM kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    log2_blocks=st.integers(0, 2),
+    block_n=st.sampled_from([8, 16, 32]),
+    k=st.integers(1, 12),
+    dim=st.integers(1, 5),
+    inv_var=st.floats(0.1, 10.0),
+    frac_masked=st.floats(0.0, 0.9),
+)
+def test_gmm_kernel_matches_ref(seed, log2_blocks, block_n, k, dim,
+                                inv_var, frac_masked):
+    n = block_n * (2 ** log2_blocks)
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, dim)).astype(F32) * 3.0
+    mask = np.ones(n, F32)
+    n_masked = int(frac_masked * n)
+    if n_masked:
+        mask[n - n_masked:] = 0.0
+    mu = rng.normal(size=(k, dim)).astype(F32) * 3.0
+    w = rng.dirichlet(np.ones(k)).astype(F32)
+    logw = np.log(np.maximum(w, 1e-6)).astype(F32)
+    iv = np.array([inv_var], F32)
+
+    ll, g = gmm.loglik_grad(
+        jnp.array(x), jnp.array(mask), jnp.array(mu), jnp.array(logw),
+        jnp.array(iv), block_n=block_n,
+    )
+    ll_r, g_r = ref.gmm_loglik_grad(x, mask, mu, logw, inv_var)
+    tol = 2e-4 * max(1.0, n / 32) * max(1.0, inv_var)
+    _allclose(ll, ll_r, atol=tol, rtol=2e-4)
+    _allclose(g, g_r, atol=tol, rtol=2e-3)
+
+
+def test_gmm_kernel_single_component_is_gaussian():
+    """K=1 GMM log-lik == sum of Gaussian log-pdfs."""
+    rng = np.random.default_rng(7)
+    n, dim = 32, 2
+    x = rng.normal(size=(n, dim)).astype(F32)
+    mask = np.ones(n, F32)
+    mu = np.zeros((1, dim), F32)
+    logw = np.zeros(1, F32)
+    iv = np.array([1.0], F32)
+    ll, _ = gmm.loglik_grad(
+        jnp.array(x), jnp.array(mask), jnp.array(mu), jnp.array(logw),
+        jnp.array(iv), block_n=16,
+    )
+    expected = float(
+        -0.5 * np.sum(x * x) - n * dim * 0.5 * np.log(2 * np.pi)
+    )
+    assert abs(float(ll) - expected) < 1e-2
+
+
+def test_gmm_kernel_fully_masked_is_zero():
+    rng = np.random.default_rng(9)
+    n, dim, k = 16, 2, 3
+    x = rng.normal(size=(n, dim)).astype(F32)
+    mask = np.zeros(n, F32)
+    mu = rng.normal(size=(k, dim)).astype(F32)
+    logw = np.log(np.ones(k, F32) / k)
+    ll, g = gmm.loglik_grad(
+        jnp.array(x), jnp.array(mask), jnp.array(mu), jnp.array(logw),
+        jnp.array([1.0], F32), block_n=16,
+    )
+    assert float(ll) == 0.0
+    assert np.allclose(np.asarray(g), 0.0)

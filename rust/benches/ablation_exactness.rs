@@ -1,0 +1,94 @@
+//! Ablation: convergence of every combiner vs T on the conjugate
+//! Gaussian anchor (closed-form posterior ⇒ error is measured against
+//! mathematical truth, not a reference chain). Checks Theorem 5.3's
+//! qualitative claim: the exact combiners' error shrinks with T while
+//! the biased baselines plateau.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use repro::combine::{self, CombineMethod};
+use repro::config::PipelineConfig;
+use repro::coordinator::pipeline;
+use repro::data::{io, synth, Dataset};
+use repro::evaluation::l2_distance_subsampled;
+use repro::model::GaussianMean;
+use repro::rng::Pcg64;
+use repro::sampler::SamplerKind;
+use std::path::Path;
+
+fn main() -> repro::error::Result<()> {
+    common::header(
+        "ablation_exactness",
+        "combiner L2 error vs draws-per-machine T on the conjugate \
+         Gaussian (error vs CLOSED-FORM posterior)",
+    );
+    let machines = 8;
+    let data = synth::gaussian(20_000, 2, 101);
+    let exact = match &data {
+        Dataset::Gaussian { x, lik_prec, prior_prec } => {
+            GaussianMean::new(x.clone(), *lik_prec, *prior_prec, 1.0)
+                .exact_posterior()
+        }
+        _ => unreachable!(),
+    };
+    let mut rng = Pcg64::seed_from(1);
+    let exact_draws = exact.sample_n(6_000, &mut rng);
+
+    let ts: Vec<usize> = if common::full_scale() {
+        vec![100, 300, 1_000, 3_000, 10_000]
+    } else {
+        vec![100, 300, 1_000, 3_000]
+    };
+    let methods = [
+        CombineMethod::Parametric,
+        CombineMethod::Nonparametric,
+        CombineMethod::Semiparametric,
+        CombineMethod::SemiparametricNw,
+        CombineMethod::Pairwise,
+        CombineMethod::SubpostAvg,
+        CombineMethod::ConsensusWeighted,
+    ];
+
+    let mut table = io::Table::new(&["t", "l2_error"]);
+    println!("\n{:>6} {:>18} {:>10}", "T", "method", "L2");
+    let mut first_errs = std::collections::BTreeMap::new();
+    let mut last_errs = std::collections::BTreeMap::new();
+    for &t in &ts {
+        let cfg = PipelineConfig::builder("gaussian")
+            .machines(machines)
+            .samples_per_machine(t)
+            .sampler(SamplerKind::Hmc { step: 0.3, n_leapfrog: 8 })
+            .seed(55)
+            .build();
+        let out = pipeline::run_native(&cfg, &data)?;
+        for &method in &methods {
+            let c = combine::combine(method, &out.subposteriors, t, 5)?;
+            // Drop the IMG transient for the MCMC-based combiners.
+            let c = if t > 500 { c.split_off_burnin(t / 5) } else { c };
+            let err = l2_distance_subsampled(&c, &exact_draws, 300);
+            println!("{t:>6} {:>18} {err:>10.4}", method.name());
+            table.push(method.name(), vec![t as f64, err]);
+            first_errs.entry(method.name()).or_insert(err);
+            last_errs.insert(method.name(), err);
+        }
+    }
+    table.write_csv(Path::new("results/ablation_exactness.csv"))?;
+    println!("\nwrote results/ablation_exactness.csv");
+
+    println!("\nconvergence summary (first T → last T):");
+    for &method in &methods {
+        let name = method.name();
+        println!(
+            "  {name:18} {:.4} → {:.4}",
+            first_errs[name], last_errs[name]
+        );
+    }
+    println!(
+        "expected shape (Thm 5.3): parametric/nonparametric/semiparametric/\
+         pairwise errors shrink with T (Gaussian target, so parametric is \
+         also exact here); subpostAvg converges too on this symmetric \
+         anchor but is the one that breaks on multimodal targets (fig5)."
+    );
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Shared benchmark kit (criterion is unavailable offline — DESIGN.md
+//! §3 — so benches are `harness = false` binaries built on this module).
+//!
+//! Conventions: every bench prints paper-style rows to stdout AND writes
+//! a CSV under `results/`, so EXPERIMENTS.md can quote either. Set
+//! `REPRO_BENCH_FULL=1` for paper-scale workloads (default: scaled-down
+//! versions with the same shape).
+
+use std::time::Instant;
+
+/// True when paper-scale workloads were requested.
+pub fn full_scale() -> bool {
+    std::env::var("REPRO_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Median wall-clock seconds of `reps` runs of `f` (after one warmup).
+pub fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let mut times: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// Wall-clock of a single run returning its value.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed().as_secs_f64())
+}
+
+/// Print a bench header.
+pub fn header(name: &str, desc: &str) {
+    println!("\n=== {name} ===");
+    println!("{desc}");
+    println!(
+        "scale: {}",
+        if full_scale() { "FULL (paper)" } else { "scaled (REPRO_BENCH_FULL=1 for paper scale)" }
+    );
+}
+
+/// Format seconds with sensible units.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}

@@ -1,0 +1,110 @@
+//! Section 4 complexity claims: direct IMG is O(dTM²) per run with the
+//! naive weight evaluation; the paper's pairwise variant is O(dTM); our
+//! cached fast path brings direct IMG to O(dTM) as well (the L3 §Perf
+//! optimization). This bench measures combine-stage wall-clock vs M and
+//! vs d, and fits the growth exponent in M.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use repro::combine::nonparametric::{nonparametric, nonparametric_naive};
+use repro::combine::pairwise;
+use repro::data::io;
+use repro::math::linalg::Mat;
+use repro::math::mvn::Mvn;
+use repro::rng::Pcg64;
+use repro::types::SampleMatrix;
+use std::path::Path;
+
+fn sets(m: usize, t: usize, d: usize, seed: u64) -> Vec<SampleMatrix> {
+    let mut rng = Pcg64::seed_from(seed);
+    (0..m)
+        .map(|i| {
+            let mu = vec![i as f64 * 0.05; d];
+            Mvn::new(mu, Mat::scaled_identity(d, 1.0))
+                .unwrap()
+                .sample_n(t, &mut rng)
+        })
+        .collect()
+}
+
+/// Fit the growth exponent of y ~ x^a by least squares in log-log.
+fn growth_exponent(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let lx: Vec<f64> = xs.iter().map(|v| v.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|v| v.ln()).collect();
+    let mx = lx.iter().sum::<f64>() / n;
+    let my = ly.iter().sum::<f64>() / n;
+    let num: f64 =
+        lx.iter().zip(&ly).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let den: f64 = lx.iter().map(|a| (a - mx) * (a - mx)).sum();
+    num / den
+}
+
+fn main() -> repro::error::Result<()> {
+    common::header(
+        "complexity_scaling",
+        "combine wall-clock vs M (T, d fixed): naive O(dTM²) vs cached \
+         O(dTM) vs pairwise O(dTM)",
+    );
+    let (t, d, reps) = if common::full_scale() { (2_000, 10, 3) } else { (500, 5, 3) };
+    let ms: Vec<usize> = if common::full_scale() {
+        vec![2, 4, 8, 16, 32, 64]
+    } else {
+        vec![2, 4, 8, 16, 32]
+    };
+
+    let mut table = io::Table::new(&["machines", "secs"]);
+    let mut naive_secs = Vec::new();
+    let mut fast_secs = Vec::new();
+    let mut pair_secs = Vec::new();
+    println!(
+        "\n{:>4} {:>12} {:>12} {:>12}",
+        "M", "naive", "cached", "pairwise"
+    );
+    for &m in &ms {
+        let s = sets(m, t, d, 42);
+        let refs: Vec<&SampleMatrix> = s.iter().collect();
+        let tn = common::time_median(reps, || {
+            nonparametric_naive(&refs, t, 7).unwrap();
+        });
+        let tf = common::time_median(reps, || {
+            nonparametric(&refs, t, 7).unwrap();
+        });
+        let tp = common::time_median(reps, || {
+            pairwise(&refs, t, 7).unwrap();
+        });
+        println!(
+            "{m:>4} {:>12} {:>12} {:>12}",
+            common::fmt_secs(tn),
+            common::fmt_secs(tf),
+            common::fmt_secs(tp)
+        );
+        table.push("naive", vec![m as f64, tn]);
+        table.push("cached", vec![m as f64, tf]);
+        table.push("pairwise", vec![m as f64, tp]);
+        naive_secs.push(tn);
+        fast_secs.push(tf);
+        pair_secs.push(tp);
+    }
+    let xs: Vec<f64> = ms.iter().map(|&m| m as f64).collect();
+    let a_naive = growth_exponent(&xs, &naive_secs);
+    let a_fast = growth_exponent(&xs, &fast_secs);
+    let a_pair = growth_exponent(&xs, &pair_secs);
+    println!("\ngrowth exponents in M (paper: naive 2, others 1):");
+    println!("  naive   M^{a_naive:.2}");
+    println!("  cached  M^{a_fast:.2}");
+    println!("  pairwise M^{a_pair:.2}");
+
+    table.write_csv(Path::new("results/complexity_scaling.csv"))?;
+    println!("wrote results/complexity_scaling.csv");
+
+    // Speedup of the cached path at the largest M (§Perf evidence).
+    let last = ms.len() - 1;
+    println!(
+        "cached-path speedup over naive at M={}: {:.1}×",
+        ms[last],
+        naive_secs[last] / fast_secs[last]
+    );
+    Ok(())
+}

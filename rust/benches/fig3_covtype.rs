@@ -1,0 +1,106 @@
+//! Figure 3 (left): classification accuracy vs time on covtype-like
+//! data, M=50 (paper section 8.1.2). Thin bench wrapper over the same
+//! protocol as examples/covtype_accuracy.rs, at bench scale.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use repro::combine::CombineMethod;
+use repro::config::PipelineConfig;
+use repro::coordinator::pipeline;
+use repro::coordinator::timing::draws_within;
+use repro::data::{io, synth, Dataset};
+use repro::evaluation::classification_accuracy;
+use repro::sampler::SamplerKind;
+use repro::types::SampleMatrix;
+use std::path::Path;
+
+fn main() -> repro::error::Result<()> {
+    common::header(
+        "fig3_covtype",
+        "classification accuracy vs time, covtype-like, parallel (M=50) \
+         vs single chain",
+    );
+    let (n, d, machines, t) = if common::full_scale() {
+        (100_000, 54, 50, 1_000)
+    } else {
+        (20_000, 20, 20, 400)
+    };
+    let full = synth::covtype_like(n, d, 2024);
+    let (train_idx, test_idx) = synth::train_test_split(n, 0.2, 7);
+    let (x_all, y_all, prior_prec) = match &full {
+        Dataset::Logistic { x, y, prior_prec } => (x, y, *prior_prec),
+        _ => unreachable!(),
+    };
+    let train = Dataset::Logistic {
+        x: repro::data::select_rows(x_all, &train_idx)?,
+        y: train_idx.iter().map(|&i| y_all[i]).collect(),
+        prior_prec,
+    };
+    let x_test = repro::data::select_rows(x_all, &test_idx)?;
+    let y_test: Vec<f64> = test_idx.iter().map(|&i| y_all[i]).collect();
+
+    let cfg = PipelineConfig::builder("logistic")
+        .machines(machines)
+        .samples_per_machine(t)
+        .sampler(SamplerKind::Hmc { step: 0.05, n_leapfrog: 10 })
+        .seed(31)
+        .build();
+    let out = pipeline::run_native(&cfg, &train)?;
+    let single = pipeline::run_single_chain(&cfg, &train)?;
+
+    let horizon = out.timing.sampling_secs.max(single.wall_secs);
+    let mut table = io::Table::new(&["budget_secs", "accuracy"]);
+    println!("\n{:>10} {:>22} {:>9}", "budget", "method", "accuracy");
+    let mut first_par = None;
+    let mut first_single = None;
+    for i in 1..=8 {
+        let b = horizon * i as f64 / 8.0;
+        let prefixes: Vec<SampleMatrix> = out
+            .subposteriors
+            .iter()
+            .map(|s| draws_within(s, b))
+            .collect();
+        if prefixes.iter().all(|p| p.len() >= 10) {
+            let refs: Vec<&SampleMatrix> = prefixes.iter().collect();
+            let c = repro::combine::combine_sets(
+                CombineMethod::Parametric,
+                &refs,
+                400,
+                9,
+            )?;
+            let acc = classification_accuracy(&c, &x_test, &y_test);
+            println!(
+                "{:>10} {:>22} {acc:>9.4}",
+                common::fmt_secs(b),
+                "parallel(parametric)"
+            );
+            table.push("parallel_parametric", vec![b, acc]);
+            if acc > 0.7 && first_par.is_none() {
+                first_par = Some(b);
+            }
+        }
+        let prefix = draws_within(&single, b);
+        if prefix.len() >= 10 {
+            let acc = classification_accuracy(&prefix, &x_test, &y_test);
+            println!(
+                "{:>10} {:>22} {acc:>9.4}",
+                common::fmt_secs(b),
+                "regularChain"
+            );
+            table.push("regularChain", vec![b, acc]);
+            if acc > 0.7 && first_single.is_none() {
+                first_single = Some(b);
+            }
+        }
+    }
+    table.write_csv(Path::new("results/fig3_covtype.csv"))?;
+    println!("\nwrote results/fig3_covtype.csv");
+    println!(
+        "shape check (paper Fig. 3-left): parallel reaches 0.7 accuracy at \
+         {} vs single chain {}",
+        first_par.map(common::fmt_secs).unwrap_or_else(|| "n/a".into()),
+        first_single.map(common::fmt_secs).unwrap_or_else(|| "n/a".into())
+    );
+    Ok(())
+}

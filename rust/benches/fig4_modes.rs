@@ -1,0 +1,105 @@
+//! Figure 4: Gaussian-mixture posterior multimodality, quantified.
+//!
+//! The paper's figure is a scatter plot; its claim is structural:
+//! nonparametric/semiparametric draws keep mass on the K! permutation
+//! modes of the μ₀ marginal, while parametric and subpostAvg collapse
+//! into a single off-mode blob. This bench prints (a) near-mode mass and
+//! (b) the number of distinct true-mode regions visited, per method.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use repro::combine::{self, CombineMethod};
+use repro::config::PipelineConfig;
+use repro::coordinator::pipeline;
+use repro::data::{io, synth};
+use repro::sampler::SamplerKind;
+use repro::types::SampleMatrix;
+use std::path::Path;
+
+fn main() -> repro::error::Result<()> {
+    common::header(
+        "fig4_modes",
+        "GMM posterior multimodality: near-mode mass + modes visited",
+    );
+    let (n, k, t) = if common::full_scale() {
+        (50_000, 10, 3_000)
+    } else {
+        (10_000, 4, 1_200)
+    };
+    let sep = 5.0;
+    let data = synth::gmm(n, k, 2, sep, 77);
+    let centers = synth::gmm_true_means(k, 2, sep);
+
+    let cfg = PipelineConfig::builder("gmm")
+        .machines(10)
+        .samples_per_machine(t)
+        .sampler(SamplerKind::Rwm { scale: 0.05 })
+        .seed(3)
+        .build();
+    let out = pipeline::run_native(&cfg, &data)?;
+    println!(
+        "sampled M=10, accept(mean)={:.2}",
+        out.metrics.mean_accept_rate()
+    );
+
+    let stats = |s: &SampleMatrix| -> (f64, usize) {
+        let marg = s.select_dims(&[0, 1]).unwrap();
+        let mut near = 0usize;
+        let mut visited = vec![0usize; centers.len()];
+        for row in marg.rows() {
+            for (ci, c) in centers.iter().enumerate() {
+                if repro::math::linalg::sq_dist(row, &c[..2]) < 2.25 {
+                    near += 1;
+                    visited[ci] += 1;
+                    break;
+                }
+            }
+        }
+        let thresh = (marg.len() as f64 * 0.01) as usize;
+        (
+            near as f64 / marg.len() as f64,
+            visited.iter().filter(|&&v| v > thresh).count(),
+        )
+    };
+
+    let mut table = io::Table::new(&["near_mode_mass", "modes_visited"]);
+    println!(
+        "\n{:>18} {:>15} {:>14}",
+        "method", "near-mode mass", "modes visited"
+    );
+    let mut results = std::collections::BTreeMap::new();
+    for &method in &[
+        CombineMethod::Nonparametric,
+        CombineMethod::Semiparametric,
+        CombineMethod::SemiparametricNw,
+        CombineMethod::Pairwise,
+        CombineMethod::Parametric,
+        CombineMethod::SubpostAvg,
+    ] {
+        let c = combine::combine(method, &out.subposteriors, t, 11)?;
+        let (mass, modes) = stats(&c);
+        println!("{:>18} {mass:>15.3} {modes:>10}/{k}", method.name());
+        table.push(method.name(), vec![mass, modes as f64]);
+        results.insert(method.name(), (mass, modes));
+    }
+    table.write_csv(Path::new("results/fig4_modes.csv"))?;
+    println!("\nwrote results/fig4_modes.csv");
+
+    let (np_mass, _) = results["nonparametric"];
+    let (p_mass, _) = results["parametric"];
+    let (avg_mass, _) = results["subpostAvg"];
+    println!("\nshape checks (paper Fig. 4):");
+    println!(
+        "  exact methods keep mass on modes:   nonparametric {np_mass:.2}"
+    );
+    println!(
+        "  biased methods smear it:            parametric {p_mass:.2}, \
+         subpostAvg {avg_mass:.2}"
+    );
+    println!(
+        "  ordering holds: {}",
+        np_mass > p_mass && np_mass > avg_mass
+    );
+    Ok(())
+}

@@ -1,0 +1,149 @@
+//! Micro-benchmarks of the hot paths, used by the §Perf pass:
+//!   L3: IMG sweep cost (cached vs naive), MVN logpdf, gaussian product;
+//!   runtime: PJRT logp_grad vs fused 10-step HMC trajectory vs native.
+//!
+//! Prints ns/op-style rows; writes results/micro_hotpath.csv.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use repro::combine::nonparametric::{nonparametric, nonparametric_naive, Img};
+use repro::data::{io, synth};
+use repro::math::linalg::Mat;
+use repro::math::mvn::Mvn;
+use repro::model::LogDensity;
+use repro::rng::Pcg64;
+use repro::types::SampleMatrix;
+use std::path::Path;
+
+fn main() -> repro::error::Result<()> {
+    common::header("micro_hotpath", "per-component hot-path timings");
+    let mut table = io::Table::new(&["ns_per_op"]);
+    let mut row = |name: &str, total_secs: f64, ops: usize| {
+        let ns = total_secs * 1e9 / ops as f64;
+        println!("{name:42} {ns:>12.0} ns/op");
+        table.push(name, vec![ns]);
+    };
+
+    // --- L3: MVN logpdf (semiparametric inner loop) --------------------
+    for d in [2usize, 10, 50] {
+        let mvn = Mvn::new(vec![0.0; d], Mat::identity(d)).unwrap();
+        let x = vec![0.3; d];
+        let n = 100_000;
+        let secs = common::time_median(3, || {
+            let mut acc = 0.0;
+            for _ in 0..n {
+                acc += mvn.logpdf(&x);
+            }
+            std::hint::black_box(acc);
+        });
+        row(&format!("mvn_logpdf_d{d}"), secs, n);
+    }
+
+    // --- L3: IMG sweep, cached vs naive ---------------------------------
+    for (m, d) in [(10usize, 10usize), (50, 10), (10, 50)] {
+        let mut rng = Pcg64::seed_from(1);
+        let sets: Vec<SampleMatrix> = (0..m)
+            .map(|_| {
+                Mvn::new(vec![0.0; d], Mat::identity(d))
+                    .unwrap()
+                    .sample_n(500, &mut rng)
+            })
+            .collect();
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let iters = 2_000;
+        let secs_fast = common::time_median(3, || {
+            let mut img = Img::new(&refs);
+            let mut r = Pcg64::seed_from(2);
+            std::hint::black_box(img.run(iters, &mut r));
+        });
+        row(
+            &format!("img_sweep_cached_M{m}_d{d}"),
+            secs_fast,
+            iters * m,
+        );
+        let secs_naive = common::time_median(3, || {
+            std::hint::black_box(
+                nonparametric_naive(&refs, iters, 2).unwrap(),
+            );
+        });
+        row(
+            &format!("img_sweep_naive_M{m}_d{d}"),
+            secs_naive,
+            iters * m,
+        );
+    }
+
+    // --- native logp_grad (logistic, per shard row) ----------------------
+    let data = synth::logistic(5_000, 50, 3);
+    let idx: Vec<usize> = (0..5_000).collect();
+    let native = data.subposterior(&idx, 0.1)?;
+    let theta = vec![0.1; 50];
+    let n = 200;
+    let secs = common::time_median(3, || {
+        for _ in 0..n {
+            std::hint::black_box(native.logp_grad(&theta));
+        }
+    });
+    row("native_logistic_lpg_n5000_d50", secs, n);
+
+    // --- runtime: PJRT logp_grad + fused trajectory ----------------------
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        use repro::runtime::{RuntimeClient, XlaDensity};
+        let client = RuntimeClient::cpu(dir)?;
+        let xla = XlaDensity::from_shard(&client, &data, &idx, 0.1)?;
+        let secs = common::time_median(3, || {
+            for _ in 0..n {
+                std::hint::black_box(xla.logp_grad(&theta));
+            }
+        });
+        row("xla_logistic_lpg_n5120_d50", secs, n);
+
+        if xla.has_fused_hmc() {
+            let p = vec![0.2; 50];
+            let secs_fused = common::time_median(3, || {
+                for _ in 0..20 {
+                    std::hint::black_box(
+                        xla.fused_trajectory(&theta, &p, 0.01, 10),
+                    );
+                }
+            });
+            row("xla_fused_hmc10_n5120_d50 (per traj)", secs_fused, 20);
+            // Unfused equivalent: 2L+1 ≈ 21 logp_grad calls.
+            let secs_unfused = common::time_median(3, || {
+                for _ in 0..20 {
+                    for _ in 0..21 {
+                        std::hint::black_box(xla.logp_grad(&theta));
+                    }
+                }
+            });
+            row("xla_unfused_hmc10 (21 lpg calls)", secs_unfused, 20);
+            println!(
+                "fused-trajectory speedup: {:.1}×",
+                secs_unfused / secs_fused
+            );
+        }
+    } else {
+        println!("(artifacts/ missing — runtime rows skipped; run `make artifacts`)");
+    }
+
+    // --- combine end-to-end at working sizes -----------------------------
+    let mut rng = Pcg64::seed_from(9);
+    let sets: Vec<SampleMatrix> = (0..10)
+        .map(|_| {
+            Mvn::new(vec![0.0; 10], Mat::identity(10))
+                .unwrap()
+                .sample_n(1_000, &mut rng)
+        })
+        .collect();
+    let refs: Vec<&SampleMatrix> = sets.iter().collect();
+    let secs = common::time_median(3, || {
+        std::hint::black_box(nonparametric(&refs, 1_000, 3).unwrap());
+    });
+    row("nonparametric_combine_M10_T1000_d10", secs, 1);
+
+    table.write_csv(Path::new("results/micro_hotpath.csv"))?;
+    println!("\nwrote results/micro_hotpath.csv");
+    Ok(())
+}

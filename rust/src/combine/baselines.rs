@@ -1,0 +1,175 @@
+//! Baseline combination strategies from the paper's empirical study
+//! (section 8) and related work (section 7).
+
+use super::gaussian_product::GaussianEstimate;
+use crate::error::Result;
+use crate::math::linalg::{self, Mat};
+use crate::rng::Pcg64;
+use crate::types::SampleMatrix;
+
+/// subpostAvg: each combined draw is the plain average of one sample
+/// from each machine (indices drawn independently). The paper shows this
+/// is systematically biased, with error growing in M (Fig. 1).
+pub fn subpost_avg(
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+) -> Result<SampleMatrix> {
+    super::validate_sets(sets)?;
+    let mut rng = Pcg64::seed_from(seed);
+    let dim = sets[0].dim();
+    let m = sets.len() as f64;
+    let mut out = SampleMatrix::with_capacity(dim, t_out);
+    let mut acc = vec![0.0; dim];
+    for _ in 0..t_out {
+        acc.iter_mut().for_each(|v| *v = 0.0);
+        for s in sets {
+            let row = s.row(rng.uniform_usize(s.len()));
+            for j in 0..dim {
+                acc[j] += row[j];
+            }
+        }
+        for j in 0..dim {
+            acc[j] /= m;
+        }
+        out.push(&acc);
+    }
+    Ok(out)
+}
+
+/// Consensus Monte Carlo (Scott et al. 2013): covariance-weighted
+/// averaging, `θ = (Σ W_m)⁻¹ Σ W_m θ^m` with `W_m = Σ̂_m⁻¹`.
+pub fn consensus_weighted(
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+) -> Result<SampleMatrix> {
+    super::validate_sets(sets)?;
+    let mut rng = Pcg64::seed_from(seed);
+    let dim = sets[0].dim();
+    let estimates: Vec<GaussianEstimate> = sets
+        .iter()
+        .map(|s| GaussianEstimate::fit(s))
+        .collect::<Result<_>>()?;
+    let mut w_sum = Mat::zeros(dim, dim);
+    for est in &estimates {
+        w_sum = w_sum.add(&est.prec)?;
+    }
+    let w_sum_inv = linalg::spd_inverse_jittered(&w_sum)?;
+
+    let mut out = SampleMatrix::with_capacity(dim, t_out);
+    let mut acc = vec![0.0; dim];
+    for _ in 0..t_out {
+        acc.iter_mut().for_each(|v| *v = 0.0);
+        for (s, est) in sets.iter().zip(&estimates) {
+            let row = s.row(rng.uniform_usize(s.len()));
+            let wr = est.prec.matvec(row)?;
+            for j in 0..dim {
+                acc[j] += wr[j];
+            }
+        }
+        let combined = w_sum_inv.matvec(&acc)?;
+        out.push(&combined);
+    }
+    Ok(out)
+}
+
+/// subpostPool: union of all subposterior draws (biased — it represents
+/// the *mixture*, not the product, of the subposteriors).
+pub fn subpost_pool(sets: &[&SampleMatrix]) -> Result<SampleMatrix> {
+    super::validate_sets(sets)?;
+    let mut out = SampleMatrix::new(sets[0].dim());
+    for s in sets {
+        out.extend(s)?;
+    }
+    Ok(out)
+}
+
+/// duplicateChainsPool: union of M full-data chains' draws. Numerically
+/// identical to pooling, but the inputs are full-posterior chains so the
+/// result is unbiased — it just cannot parallelize burn-in (section 8.1).
+pub fn duplicate_chains_pool(
+    chains: &[&SampleMatrix],
+) -> Result<SampleMatrix> {
+    subpost_pool(chains)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::mvn::Mvn;
+
+    fn gaussian_sets(
+        seed: u64,
+        mus: &[Vec<f64>],
+        var: f64,
+        t: usize,
+    ) -> Vec<SampleMatrix> {
+        let mut rng = Pcg64::seed_from(seed);
+        mus.iter()
+            .map(|mu| {
+                Mvn::new(mu.clone(), Mat::scaled_identity(mu.len(), var))
+                    .unwrap()
+                    .sample_n(t, &mut rng)
+            })
+            .collect()
+    }
+
+    /// For Gaussian subposteriors with EQUAL covariances, averaging is
+    /// actually unbiased in the mean but has variance var/M — which is
+    /// correct here; the bias appears under unequal covariance.
+    #[test]
+    fn subpost_avg_moments_on_symmetric_gaussians() {
+        let sets = gaussian_sets(1, &[vec![0.5], vec![1.5]], 1.0, 8000);
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let out = subpost_avg(&refs, 8000, 2).unwrap();
+        assert!((out.mean()[0] - 1.0).abs() < 0.05);
+        let v = out.covariance()[(0, 0)];
+        assert!((v - 0.5).abs() < 0.05, "var {v}");
+    }
+
+    /// Unequal covariances: the plain average lands at the arithmetic
+    /// mean of the μ_m, but the true product mean is precision-weighted —
+    /// the paper's systematic bias, growing with the covariance spread.
+    #[test]
+    fn subpost_avg_bias_vs_product_mean() {
+        let mut rng = Pcg64::seed_from(3);
+        let tight = Mvn::new(vec![0.0], Mat::diag(&[0.1]))
+            .unwrap()
+            .sample_n(8000, &mut rng);
+        let wide = Mvn::new(vec![4.0], Mat::diag(&[10.0]))
+            .unwrap()
+            .sample_n(8000, &mut rng);
+        let refs: Vec<&SampleMatrix> = vec![&tight, &wide];
+        let avg = subpost_avg(&refs, 8000, 4).unwrap();
+        // Product mean ≈ (0/0.1 + 4/10)/(1/0.1 + 1/10) ≈ 0.0396.
+        // Plain average mean = 2.0 — strongly biased.
+        assert!((avg.mean()[0] - 2.0).abs() < 0.1);
+        let cw = consensus_weighted(&refs, 8000, 5).unwrap();
+        assert!(
+            (cw.mean()[0] - 0.0396).abs() < 0.1,
+            "consensus mean {}",
+            cw.mean()[0]
+        );
+    }
+
+    #[test]
+    fn pool_is_union() {
+        let sets = gaussian_sets(6, &[vec![0.0], vec![1.0]], 1.0, 100);
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let pooled = subpost_pool(&refs).unwrap();
+        assert_eq!(pooled.len(), 200);
+        // Pooling a bimodal pair has variance > either component.
+        let v = pooled.covariance()[(0, 0)];
+        assert!(v > 1.0, "var {v}");
+    }
+
+    #[test]
+    fn consensus_on_equal_covariances_matches_avg() {
+        let sets = gaussian_sets(7, &[vec![0.0], vec![2.0]], 1.0, 10_000);
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let avg = subpost_avg(&refs, 10_000, 8).unwrap();
+        let cw = consensus_weighted(&refs, 10_000, 8).unwrap();
+        assert!((avg.mean()[0] - cw.mean()[0]).abs() < 0.06);
+    }
+}

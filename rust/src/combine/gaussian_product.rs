@@ -1,0 +1,132 @@
+//! Product of M Gaussian densities (paper Eqs. 3.1-3.2).
+//!
+//! If `p̂_m = N(μ̂_m, Σ̂_m)`, their product is proportional to
+//! `N(μ̂_M, Σ̂_M)` with
+//!
+//!   Σ̂_M = (Σ_m Σ̂_m⁻¹)⁻¹,   μ̂_M = Σ̂_M (Σ_m Σ̂_m⁻¹ μ̂_m).
+
+use crate::error::Result;
+use crate::math::linalg::{spd_inverse_jittered, Mat};
+use crate::math::mvn::Mvn;
+use crate::types::SampleMatrix;
+
+/// Per-machine Gaussian estimate (sample mean + covariance + cached
+/// precision).
+#[derive(Debug, Clone)]
+pub struct GaussianEstimate {
+    pub mean: Vec<f64>,
+    pub cov: Mat,
+    pub prec: Mat,
+}
+
+impl GaussianEstimate {
+    /// Fit from one machine's draws.
+    pub fn fit(samples: &SampleMatrix) -> Result<Self> {
+        let mean = samples.mean();
+        let cov = samples.covariance();
+        let prec = spd_inverse_jittered(&cov)?;
+        Ok(GaussianEstimate { mean, cov, prec })
+    }
+
+    /// The fitted `N(μ̂_m, Σ̂_m)` as a sampleable distribution.
+    pub fn mvn(&self) -> Result<Mvn> {
+        Mvn::new(self.mean.clone(), self.cov.clone())
+    }
+}
+
+/// Combine per-machine Gaussian estimates into the product Gaussian
+/// `N(μ̂_M, Σ̂_M)` (Eqs. 3.1-3.2).
+pub fn gaussian_product(estimates: &[GaussianEstimate]) -> Result<Mvn> {
+    assert!(!estimates.is_empty());
+    let d = estimates[0].mean.len();
+    let mut prec_sum = Mat::zeros(d, d);
+    let mut weighted_mean_sum = vec![0.0; d];
+    for est in estimates {
+        prec_sum = prec_sum.add(&est.prec)?;
+        let pm = est.prec.matvec(&est.mean)?;
+        for j in 0..d {
+            weighted_mean_sum[j] += pm[j];
+        }
+    }
+    let cov = spd_inverse_jittered(&prec_sum)?;
+    let mean = cov.matvec(&weighted_mean_sum)?;
+    Mvn::new(mean, cov)
+}
+
+/// Fit all machines and form the product in one call.
+pub fn fit_and_product(sets: &[&SampleMatrix]) -> Result<(Vec<GaussianEstimate>, Mvn)> {
+    let estimates: Vec<GaussianEstimate> = sets
+        .iter()
+        .map(|s| GaussianEstimate::fit(s))
+        .collect::<Result<_>>()?;
+    let product = gaussian_product(&estimates)?;
+    Ok((estimates, product))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    /// Two 1-d Gaussians: product precision/mean has the textbook form.
+    #[test]
+    fn product_of_two_scalars() {
+        let a = GaussianEstimate {
+            mean: vec![1.0],
+            cov: Mat::diag(&[2.0]),
+            prec: Mat::diag(&[0.5]),
+        };
+        let b = GaussianEstimate {
+            mean: vec![3.0],
+            cov: Mat::diag(&[1.0]),
+            prec: Mat::diag(&[1.0]),
+        };
+        let prod = gaussian_product(&[a, b]).unwrap();
+        // prec = 1.5, mean = (0.5·1 + 1·3)/1.5 = 3.5/1.5.
+        assert!((prod.mean()[0] - 3.5 / 1.5).abs() < 1e-12);
+        let lp0 = prod.logpdf(&[3.5 / 1.5]);
+        let lp1 = prod.logpdf(&[3.5 / 1.5 + 0.1]);
+        // Curvature implies var = 1/1.5: logpdf drop = 0.1²·1.5/2.
+        assert!(((lp0 - lp1) - 0.5 * 0.01 * 1.5).abs() < 1e-10);
+    }
+
+    /// Product of M identical Gaussians: same mean, covariance / M.
+    #[test]
+    fn product_of_identical() {
+        let est = GaussianEstimate {
+            mean: vec![2.0, -1.0],
+            cov: Mat::diag(&[4.0, 9.0]),
+            prec: Mat::diag(&[0.25, 1.0 / 9.0]),
+        };
+        let prod =
+            gaussian_product(&[est.clone(), est.clone(), est.clone(), est])
+                .unwrap();
+        assert!((prod.mean()[0] - 2.0).abs() < 1e-12);
+        assert!((prod.mean()[1] + 1.0).abs() < 1e-12);
+        // Sample and check variance ≈ diag(1, 2.25).
+        let mut rng = Pcg64::seed_from(1);
+        let s = prod.sample_n(40_000, &mut rng);
+        let c = s.covariance();
+        assert!((c[(0, 0)] - 1.0).abs() < 0.05, "{}", c[(0, 0)]);
+        assert!((c[(1, 1)] - 2.25).abs() < 0.1, "{}", c[(1, 1)]);
+    }
+
+    /// Fitting recovers the generating Gaussian.
+    #[test]
+    fn fit_recovers_moments() {
+        let mut rng = Pcg64::seed_from(2);
+        let gen = Mvn::new(
+            vec![1.0, -2.0],
+            Mat::from_vec(vec![2.0, 0.6, 0.6, 1.0], 2, 2).unwrap(),
+        )
+        .unwrap();
+        let s = gen.sample_n(30_000, &mut rng);
+        let est = GaussianEstimate::fit(&s).unwrap();
+        assert!((est.mean[0] - 1.0).abs() < 0.05);
+        assert!((est.cov[(0, 1)] - 0.6).abs() < 0.05);
+        // prec · cov ≈ I.
+        let prod = est.prec.matmul(&est.cov).unwrap();
+        assert!((prod[(0, 0)] - 1.0).abs() < 1e-8);
+        assert!(prod[(0, 1)].abs() < 1e-8);
+    }
+}

@@ -1,0 +1,242 @@
+//! Subposterior combination — the paper's core contribution (section 3).
+//!
+//! Given `M` sets of subposterior samples, produce draws from an
+//! estimator of the density product `p_1 ⋯ p_M(θ) ∝ p(θ | x^N)`:
+//!
+//! * [`parametric`] — Gaussian product via the Bernstein-von Mises
+//!   approximation (section 3.1; fast, asymptotically biased),
+//! * [`nonparametric`] — implicit KDE-product sampling via Independent
+//!   Metropolis within Gibbs (Algorithm 1; asymptotically exact),
+//! * [`semiparametric`] — Hjort-Glad parametric-start × nonparametric
+//!   correction (section 3.3; asymptotically exact), plus the paper's
+//!   second variant [`semiparametric_nw`] with nonparametric weights,
+//! * [`pairwise`] — the O(dTM) tree-of-pairs reduction (section 3.2/4),
+//! * [`baselines`] — subpostAvg / subpostPool / duplicateChainsPool /
+//!   consensus-weighted averaging (sections 7-8 comparison methods),
+//! * [`online`] — streaming combination (section 4).
+
+pub mod baselines;
+pub mod gaussian_product;
+pub mod nonparametric;
+pub mod online;
+pub mod pairwise;
+pub mod parametric;
+pub mod semiparametric;
+
+pub use baselines::{
+    consensus_weighted, duplicate_chains_pool, subpost_avg, subpost_pool,
+};
+pub use gaussian_product::{gaussian_product, GaussianEstimate};
+pub use nonparametric::nonparametric;
+pub use online::OnlineCombiner;
+pub use pairwise::pairwise;
+pub use parametric::parametric;
+pub use semiparametric::{semiparametric, semiparametric_nw};
+
+use crate::error::{Error, Result};
+use crate::types::{SampleMatrix, SubposteriorSamples};
+
+/// Which combination algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CombineMethod {
+    Parametric,
+    Nonparametric,
+    Semiparametric,
+    /// Semiparametric components with nonparametric weights (paper's
+    /// higher-acceptance variant).
+    SemiparametricNw,
+    /// Pairwise tree reduction using the nonparametric pair combiner.
+    Pairwise,
+    /// Baseline: average one sample from each machine.
+    SubpostAvg,
+    /// Baseline: union of all subposterior samples.
+    SubpostPool,
+    /// Baseline: consensus Monte Carlo (covariance-weighted averaging).
+    ConsensusWeighted,
+}
+
+impl CombineMethod {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CombineMethod::Parametric => "parametric",
+            CombineMethod::Nonparametric => "nonparametric",
+            CombineMethod::Semiparametric => "semiparametric",
+            CombineMethod::SemiparametricNw => "semiparametricNW",
+            CombineMethod::Pairwise => "pairwise",
+            CombineMethod::SubpostAvg => "subpostAvg",
+            CombineMethod::SubpostPool => "subpostPool",
+            CombineMethod::ConsensusWeighted => "consensusWeighted",
+        }
+    }
+
+    /// All methods, for sweep-style experiments.
+    pub fn all() -> &'static [CombineMethod] {
+        &[
+            CombineMethod::Parametric,
+            CombineMethod::Nonparametric,
+            CombineMethod::Semiparametric,
+            CombineMethod::SemiparametricNw,
+            CombineMethod::Pairwise,
+            CombineMethod::SubpostAvg,
+            CombineMethod::SubpostPool,
+            CombineMethod::ConsensusWeighted,
+        ]
+    }
+
+    pub fn parse(s: &str) -> Result<CombineMethod> {
+        CombineMethod::all()
+            .iter()
+            .copied()
+            .find(|m| m.name().eq_ignore_ascii_case(s))
+            .ok_or_else(|| Error::Config(format!("unknown method '{s}'")))
+    }
+}
+
+/// Dispatch a combination method. `t_out` is the number of combined
+/// draws requested (pooling methods return min(t_out, pooled)).
+pub fn combine(
+    method: CombineMethod,
+    subs: &[SubposteriorSamples],
+    t_out: usize,
+    seed: u64,
+) -> Result<SampleMatrix> {
+    let sets: Vec<&SampleMatrix> = subs.iter().map(|s| &s.samples).collect();
+    combine_sets(method, &sets, t_out, seed)
+}
+
+/// Like [`combine`] but over bare sample sets.
+pub fn combine_sets(
+    method: CombineMethod,
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+) -> Result<SampleMatrix> {
+    validate_sets(sets)?;
+    match method {
+        CombineMethod::Parametric => parametric(sets, t_out, seed),
+        CombineMethod::Nonparametric => nonparametric(sets, t_out, seed),
+        CombineMethod::Semiparametric => semiparametric(sets, t_out, seed),
+        CombineMethod::SemiparametricNw => {
+            semiparametric_nw(sets, t_out, seed)
+        }
+        CombineMethod::Pairwise => pairwise(sets, t_out, seed),
+        CombineMethod::SubpostAvg => subpost_avg(sets, t_out, seed),
+        CombineMethod::SubpostPool => Ok(subpost_pool(sets)?.take(t_out)),
+        CombineMethod::ConsensusWeighted => {
+            consensus_weighted(sets, t_out, seed)
+        }
+    }
+}
+
+/// Per-dimension whitening scale shared by all machines: the average
+/// subposterior standard deviation of each coordinate.
+///
+/// The paper's Algorithm 1 anneals an *absolute* bandwidth
+/// `h_i = i^{-1/(4+d)}`; for posteriors concentrated at scales ≪ 1
+/// (every large-N experiment in the paper) an absolute unit bandwidth
+/// over-smooths catastrophically. Following standard KDE practice the
+/// nonparametric/semiparametric combiners therefore operate in whitened
+/// coordinates (`θ_j / s_j`) and map their draws back — a diagonal
+/// linear transform under which every density-product estimator here is
+/// exactly equivariant, so Theorem 5.3's rates are unchanged.
+pub(crate) fn whitening_scales(sets: &[&SampleMatrix]) -> Vec<f64> {
+    let d = sets[0].dim();
+    let mut s = vec![0.0; d];
+    let mut counted = 0usize;
+    for set in sets {
+        if set.len() < 2 {
+            continue;
+        }
+        let v = crate::stats::moments::variances(set);
+        for j in 0..d {
+            s[j] += v[j].sqrt();
+        }
+        counted += 1;
+    }
+    let denom = counted.max(1) as f64;
+    for sj in s.iter_mut() {
+        *sj = (*sj / denom).max(1e-12);
+    }
+    s
+}
+
+/// Divide every draw's coordinate j by `scales[j]`.
+pub(crate) fn whiten(sets: &[&SampleMatrix], scales: &[f64]) -> Vec<SampleMatrix> {
+    sets.iter()
+        .map(|set| {
+            let mut out = SampleMatrix::with_capacity(set.dim(), set.len());
+            let mut buf = vec![0.0; set.dim()];
+            for row in set.rows() {
+                for (j, (&v, &s)) in row.iter().zip(scales).enumerate() {
+                    buf[j] = v / s;
+                }
+                out.push(&buf);
+            }
+            out
+        })
+        .collect()
+}
+
+/// Multiply every draw's coordinate j by `scales[j]` (inverse of
+/// [`whiten`]).
+pub(crate) fn unwhiten(samples: &mut SampleMatrix, scales: &[f64]) {
+    let d = samples.dim();
+    let mut out = SampleMatrix::with_capacity(d, samples.len());
+    let mut buf = vec![0.0; d];
+    for row in samples.rows() {
+        for (j, (&v, &s)) in row.iter().zip(scales).enumerate() {
+            buf[j] = v * s;
+        }
+        out.push(&buf);
+    }
+    *samples = out;
+}
+
+/// Common validation: at least one non-empty set, all dims equal.
+pub(crate) fn validate_sets(sets: &[&SampleMatrix]) -> Result<()> {
+    if sets.is_empty() {
+        return Err(Error::Config("no subposterior sample sets".into()));
+    }
+    let dim = sets[0].dim();
+    for (m, s) in sets.iter().enumerate() {
+        if s.dim() != dim {
+            return Err(Error::Shape(format!(
+                "machine {m} dim {} != {dim}",
+                s.dim()
+            )));
+        }
+        if s.is_empty() {
+            return Err(Error::Config(format!("machine {m} has no samples")));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for &m in CombineMethod::all() {
+            assert_eq!(CombineMethod::parse(m.name()).unwrap(), m);
+        }
+        assert!(CombineMethod::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_mismatched_dims() {
+        let a = SampleMatrix::from_rows(vec![1.0, 2.0], 2).unwrap();
+        let b = SampleMatrix::from_rows(vec![1.0], 1).unwrap();
+        assert!(validate_sets(&[&a, &b]).is_err());
+        assert!(validate_sets(&[]).is_err());
+        assert!(validate_sets(&[&a]).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_empty_machine() {
+        let a = SampleMatrix::from_rows(vec![1.0, 2.0], 2).unwrap();
+        let b = SampleMatrix::new(2);
+        assert!(validate_sets(&[&a, &b]).is_err());
+    }
+}

@@ -1,0 +1,423 @@
+//! Nonparametric combination — Algorithm 1 of the paper.
+//!
+//! The KDE product of the M subposteriors is a mixture of `T^M`
+//! Gaussians; component `t· = (t_1 … t_M)` has mean `θ̄_t = mean_m
+//! θ^m_{t_m}`, covariance `(h²/M) I` and unnormalized weight
+//!
+//!   w_t = Π_m N(θ^m_{t_m} | θ̄_t, h² I).
+//!
+//! Components are sampled by Independent Metropolis within Gibbs: each
+//! inner step redraws one machine's index uniformly and accepts with
+//! probability `min(1, w_c / w_t)`; the bandwidth anneals as
+//! `h_i = i^{-1/(4+d)}`.
+//!
+//! ## O(d) proposal evaluation
+//!
+//! `log w_t = -(Md/2)·log(2πh²) - D_t/(2h²)` with the scatter
+//! `D_t = Σ_m |θ^m_{t_m} - θ̄_t|² = Q_t - |S_t|²/M`, where
+//! `S_t = Σ_m θ^m_{t_m}` and `Q_t = Σ_m |θ^m_{t_m}|²`. Swapping one
+//! index updates `S_t` in O(d) and `Q_t` in O(1) (per-draw squared norms
+//! are precomputed), so an IMG sweep costs O(dM) instead of the naive
+//! O(dM²) — this is the L3 hot-path optimization measured in
+//! EXPERIMENTS.md §Perf. The scatter is recomputed exactly every few
+//! hundred accepted swaps to stop fp drift.
+
+use crate::error::Result;
+use crate::rng::Pcg64;
+use crate::stats::kde::annealed_bandwidth;
+use crate::types::SampleMatrix;
+
+/// Draw `t_out` samples from the nonparametric density-product estimate
+/// (Algorithm 1). Runs in whitened coordinates (see
+/// [`super::whitening_scales`]) so the annealed bandwidth is relative to
+/// the subposterior scale.
+pub fn nonparametric(
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+) -> Result<SampleMatrix> {
+    let scales = super::whitening_scales(sets);
+    let whitened = super::whiten(sets, &scales);
+    let refs: Vec<&SampleMatrix> = whitened.iter().collect();
+    let mut img = Img::new(&refs);
+    // Restarted, multi-sweep IMG (see Img::run_restarts): fresh t·
+    // draws bound the freeze as h anneals, extra sweeps decorrelate.
+    let mut out =
+        img.run_restarts(t_out, 500, 3, &mut Pcg64::seed_from(seed));
+    super::unwhiten(&mut out, &scales);
+    Ok(out)
+}
+
+/// Algorithm 1 exactly as printed (absolute bandwidth, no whitening) —
+/// kept for the ablation bench; use [`nonparametric`] in practice.
+pub fn nonparametric_absolute_h(
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+) -> Result<SampleMatrix> {
+    let mut img = Img::new(sets);
+    Ok(img.run(t_out, &mut Pcg64::seed_from(seed)))
+}
+
+/// IMG sampler state over M subposterior sample sets.
+pub struct Img<'a> {
+    sets: &'a [&'a SampleMatrix],
+    dim: usize,
+    /// Current component indices t_m.
+    indices: Vec<usize>,
+    /// S_t = Σ_m θ^m_{t_m}.
+    sum: Vec<f64>,
+    /// Q_t = Σ_m |θ^m_{t_m}|².
+    sq_sum: f64,
+    /// Precomputed |θ^m_t|² per machine per draw.
+    norms: Vec<Vec<f64>>,
+    /// Accepted swaps since the last exact recompute.
+    since_recompute: usize,
+    /// Telemetry: proposals and acceptances.
+    pub proposals: usize,
+    pub accepts: usize,
+}
+
+impl<'a> Img<'a> {
+    pub fn new(sets: &'a [&'a SampleMatrix]) -> Self {
+        assert!(!sets.is_empty());
+        let dim = sets[0].dim();
+        let norms: Vec<Vec<f64>> = sets
+            .iter()
+            .map(|s| s.rows().map(|r| r.iter().map(|v| v * v).sum()).collect())
+            .collect();
+        let mut img = Img {
+            sets,
+            dim,
+            indices: vec![0; sets.len()],
+            sum: vec![0.0; dim],
+            sq_sum: 0.0,
+            norms,
+            since_recompute: 0,
+            proposals: 0,
+            accepts: 0,
+        };
+        img.recompute();
+        img
+    }
+
+    /// Number of machines.
+    pub fn machines(&self) -> usize {
+        self.sets.len()
+    }
+
+    /// Exactly recompute S_t and Q_t from the current indices.
+    fn recompute(&mut self) {
+        self.sum.iter_mut().for_each(|v| *v = 0.0);
+        self.sq_sum = 0.0;
+        for (m, s) in self.sets.iter().enumerate() {
+            let row = s.row(self.indices[m]);
+            for j in 0..self.dim {
+                self.sum[j] += row[j];
+            }
+            self.sq_sum += self.norms[m][self.indices[m]];
+        }
+        self.since_recompute = 0;
+    }
+
+    /// Scatter D_t = Q_t - |S_t|²/M (≥ 0 up to fp noise).
+    #[inline]
+    fn scatter(sq_sum: f64, sum: &[f64], m: f64) -> f64 {
+        let s2: f64 = sum.iter().map(|v| v * v).sum();
+        (sq_sum - s2 / m).max(0.0)
+    }
+
+    /// Algorithm 1 with restarts: independent IMG chains of `chunk`
+    /// draws each (fresh `t·` per chunk, bandwidth re-annealed), with
+    /// `sweeps` full index sweeps per emitted draw.
+    ///
+    /// Restarting and extra sweeps both leave each chain's target
+    /// unchanged; they counter the freeze of the annealed index chain on
+    /// well-separated subposteriors (the paper's own low-acceptance
+    /// caveat, section 3.2). `chunk = t_out, sweeps = 1` recovers the
+    /// algorithm exactly as printed.
+    /// Chunks grow geometrically (500, 1000, 2000, …) and the first 20%
+    /// of each chunk is discarded as per-restart warmup, so the pooled
+    /// output's bandwidth-inflation vanishes as T → ∞ (the final chunk
+    /// dominates and its h has annealed to (T/2)^{-1/(4+d)} → 0):
+    /// asymptotic exactness is preserved.
+    pub fn run_restarts(
+        &mut self,
+        t_out: usize,
+        chunk0: usize,
+        sweeps: usize,
+        rng: &mut Pcg64,
+    ) -> SampleMatrix {
+        let mut chunk = chunk0.clamp(1, t_out.max(1));
+        let mut out = SampleMatrix::with_capacity(self.dim, t_out);
+        while out.len() < t_out {
+            let n = chunk.min(t_out - out.len());
+            let warmup = n / 5;
+            let part = self.run_sweeps(n + warmup, sweeps, rng);
+            out.extend(&part.split_off_burnin(warmup)).expect("dims agree");
+            chunk = chunk.saturating_mul(2);
+        }
+        out.take(t_out)
+    }
+
+    /// Run Algorithm 1 for `t_out` outer iterations, drawing one
+    /// combined sample per iteration.
+    pub fn run(&mut self, t_out: usize, rng: &mut Pcg64) -> SampleMatrix {
+        self.run_sweeps(t_out, 1, rng)
+    }
+
+    /// [`Img::run`] with `sweeps` index sweeps per emitted draw.
+    pub fn run_sweeps(
+        &mut self,
+        t_out: usize,
+        sweeps: usize,
+        rng: &mut Pcg64,
+    ) -> SampleMatrix {
+        let m = self.sets.len() as f64;
+        // Line 1: draw t· uniformly.
+        for (idx, s) in self.indices.iter_mut().zip(self.sets) {
+            *idx = rng.uniform_usize(s.len());
+        }
+        self.recompute();
+
+        let mut out = SampleMatrix::with_capacity(self.dim, t_out);
+        let mut theta = vec![0.0; self.dim];
+        for i in 1..=t_out {
+            // Line 3: anneal the bandwidth.
+            let h = annealed_bandwidth(i, self.dim);
+            let h2 = h * h;
+            let mut d_cur = Self::scatter(self.sq_sum, &self.sum, m);
+            // Lines 4-11: `sweeps` IMG sweeps over machines.
+            for mach_sweep in 0..(self.sets.len() * sweeps.max(1)) {
+                let mach = mach_sweep % self.sets.len();
+                let set = self.sets[mach];
+                let old_idx = self.indices[mach];
+                let new_idx = rng.uniform_usize(set.len());
+                self.proposals += 1;
+                if new_idx == old_idx {
+                    self.accepts += 1;
+                    continue;
+                }
+                let old_row = set.row(old_idx);
+                let new_row = set.row(new_idx);
+                // O(d): proposed S', Q' and scatter.
+                let mut s2_new = 0.0;
+                for j in 0..self.dim {
+                    let sj = self.sum[j] - old_row[j] + new_row[j];
+                    s2_new += sj * sj;
+                }
+                let q_new = self.sq_sum - self.norms[mach][old_idx]
+                    + self.norms[mach][new_idx];
+                let d_new = (q_new - s2_new / m).max(0.0);
+                // log w_c - log w_t = -(D_c - D_t)/(2h²).
+                let log_ratio = -(d_new - d_cur) / (2.0 * h2);
+                if log_ratio >= 0.0 || rng.uniform().ln() < log_ratio {
+                    // Accept: commit the swap.
+                    for j in 0..self.dim {
+                        self.sum[j] += new_row[j] - old_row[j];
+                    }
+                    self.sq_sum = q_new;
+                    self.indices[mach] = new_idx;
+                    d_cur = d_new;
+                    self.accepts += 1;
+                    self.since_recompute += 1;
+                    if self.since_recompute >= 512 {
+                        self.recompute();
+                        d_cur = Self::scatter(self.sq_sum, &self.sum, m);
+                    }
+                }
+            }
+            // Line 12: θ_i ~ N(θ̄_t, (h²/M) I).
+            let sd = (h2 / m).sqrt();
+            for j in 0..self.dim {
+                theta[j] = self.sum[j] / m + sd * rng.normal();
+            }
+            out.push(&theta);
+        }
+        out
+    }
+
+    /// Acceptance rate so far.
+    pub fn accept_rate(&self) -> f64 {
+        if self.proposals == 0 {
+            f64::NAN
+        } else {
+            self.accepts as f64 / self.proposals as f64
+        }
+    }
+}
+
+/// Naive reference implementation of Algorithm 1 with O(dM) weight
+/// evaluation per proposal (recomputes θ̄ and the full product). Used by
+/// tests to validate the O(d) fast path and by the perf ablation bench.
+pub fn nonparametric_naive(
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+) -> Result<SampleMatrix> {
+    // Same whitening as the fast path so outputs are comparable 1:1.
+    let scales = super::whitening_scales(sets);
+    let whitened = super::whiten(sets, &scales);
+    let sets: Vec<&SampleMatrix> = whitened.iter().collect();
+    let sets = &sets[..];
+    let mut rng = Pcg64::seed_from(seed);
+    let m_count = sets.len();
+    let m = m_count as f64;
+    let dim = sets[0].dim();
+    let mut indices: Vec<usize> =
+        sets.iter().map(|s| rng.uniform_usize(s.len())).collect();
+
+    // Full O(dM) scatter: D_t = Σ_m |θ^m - θ̄|².
+    let scatter = |idx: &[usize]| -> f64 {
+        let mut mean = vec![0.0; dim];
+        for (mach, s) in sets.iter().enumerate() {
+            for (j, v) in s.row(idx[mach]).iter().enumerate() {
+                mean[j] += v / m;
+            }
+        }
+        let mut d = 0.0;
+        for (mach, s) in sets.iter().enumerate() {
+            d += crate::math::linalg::sq_dist(s.row(idx[mach]), &mean);
+        }
+        d
+    };
+
+    let mut out = SampleMatrix::with_capacity(dim, t_out);
+    let mut theta = vec![0.0; dim];
+    for i in 1..=t_out {
+        let h = annealed_bandwidth(i, dim);
+        let h2 = h * h;
+        for mach in 0..m_count {
+            let mut cand = indices.clone();
+            cand[mach] = rng.uniform_usize(sets[mach].len());
+            let log_ratio = -(scatter(&cand) - scatter(&indices)) / (2.0 * h2);
+            if log_ratio >= 0.0 || rng.uniform().ln() < log_ratio {
+                indices = cand;
+            }
+        }
+        let mut mean = vec![0.0; dim];
+        for (mach, s) in sets.iter().enumerate() {
+            for (j, v) in s.row(indices[mach]).iter().enumerate() {
+                mean[j] += v / m;
+            }
+        }
+        let sd = (h2 / m).sqrt();
+        for j in 0..dim {
+            theta[j] = mean[j] + sd * rng.normal();
+        }
+        out.push(&theta);
+    }
+    super::unwhiten(&mut out, &scales);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::linalg::Mat;
+    use crate::math::mvn::Mvn;
+
+    fn gaussian_sets(
+        seed: u64,
+        mus: &[Vec<f64>],
+        var: f64,
+        t: usize,
+    ) -> Vec<SampleMatrix> {
+        let mut rng = Pcg64::seed_from(seed);
+        mus.iter()
+            .map(|mu| {
+                Mvn::new(mu.clone(), Mat::scaled_identity(mu.len(), var))
+                    .unwrap()
+                    .sample_n(t, &mut rng)
+            })
+            .collect()
+    }
+
+    /// Product of Gaussian subposteriors: nonparametric combiner must
+    /// recover mean ≈ average of means, var ≈ var/M.
+    #[test]
+    fn recovers_gaussian_product() {
+        let mus = vec![vec![0.6, -0.4], vec![1.0, 0.0], vec![1.4, 0.4]];
+        let sets = gaussian_sets(1, &mus, 1.0, 8000);
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        // The IMG index chain mixes slowly at first (large annealed h);
+        // discard its transient like any MCMC output.
+        let out = nonparametric(&refs, 8000, 2).unwrap().split_off_burnin(2000);
+        let mean = out.mean();
+        assert!((mean[0] - 1.0).abs() < 0.15, "mean0 {}", mean[0]);
+        assert!((mean[1] - 0.0).abs() < 0.15, "mean1 {}", mean[1]);
+        let c = out.covariance();
+        // True product variance = 1/3 per dim (KDE widens it by ~h²).
+        assert!((c[(0, 0)] - 1.0 / 3.0).abs() < 0.15, "var {}", c[(0, 0)]);
+    }
+
+    /// The O(d) fast path and the naive O(dM) implementation follow the
+    /// same distribution of outputs (identical RNG stream → identical
+    /// accept decisions → identical draws). Compare single plain runs
+    /// (no restarts/extra sweeps) over identically whitened inputs.
+    #[test]
+    fn fast_path_matches_naive_exactly() {
+        let mus = vec![vec![0.0, 0.0], vec![0.5, -0.5]];
+        let sets = gaussian_sets(3, &mus, 0.5, 300);
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let scales = crate::combine::whitening_scales(&refs);
+        let whitened = crate::combine::whiten(&refs, &scales);
+        let wrefs: Vec<&SampleMatrix> = whitened.iter().collect();
+        let mut img = Img::new(&wrefs);
+        let mut fast = img.run(400, &mut Pcg64::seed_from(11));
+        crate::combine::unwhiten(&mut fast, &scales);
+        let naive = nonparametric_naive(&refs, 400, 11).unwrap();
+        assert_eq!(fast.len(), naive.len());
+        for i in 0..fast.len() {
+            for j in 0..2 {
+                assert!(
+                    (fast.row(i)[j] - naive.row(i)[j]).abs() < 1e-8,
+                    "draw {i} dim {j}: {} vs {}",
+                    fast.row(i)[j],
+                    naive.row(i)[j]
+                );
+            }
+        }
+    }
+
+    /// Single machine: the estimate is that machine's KDE, so the
+    /// combined draws must match its moments.
+    #[test]
+    fn single_machine_reproduces_input() {
+        let sets = gaussian_sets(4, &[vec![2.0]], 1.5, 6000);
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let out = nonparametric(&refs, 6000, 5).unwrap();
+        assert!((out.mean()[0] - 2.0).abs() < 0.08);
+        let v = out.covariance()[(0, 0)];
+        assert!((v - 1.5).abs() < 0.2, "var {v}");
+    }
+
+    #[test]
+    fn acceptance_telemetry_sane() {
+        let mus = vec![vec![0.0; 2]; 5];
+        let sets = gaussian_sets(6, &mus, 1.0, 500);
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let mut img = Img::new(&refs);
+        let mut rng = Pcg64::seed_from(9);
+        let _ = img.run(500, &mut rng);
+        assert_eq!(img.proposals, 500 * 5);
+        let rate = img.accept_rate();
+        assert!(rate > 0.05 && rate <= 1.0, "rate {rate}");
+    }
+
+    /// Overlapping subposteriors → higher IMG acceptance than disjoint
+    /// ones (the failure mode pairwise combination addresses).
+    #[test]
+    fn acceptance_drops_with_separation() {
+        let near = gaussian_sets(7, &[vec![0.0], vec![0.2]], 1.0, 400);
+        let far = gaussian_sets(8, &[vec![0.0], vec![6.0]], 1.0, 400);
+        let rate = |sets: &[SampleMatrix]| {
+            let refs: Vec<&SampleMatrix> = sets.iter().collect();
+            let mut img = Img::new(&refs);
+            let mut rng = Pcg64::seed_from(10);
+            let _ = img.run(600, &mut rng);
+            img.accept_rate()
+        };
+        assert!(rate(&near) > rate(&far));
+    }
+}

@@ -1,0 +1,184 @@
+//! Online combination (paper section 4).
+//!
+//! Workers stream draws to the leader as they are produced; the leader
+//! folds each into per-machine buffers and online Gaussian moment
+//! accumulators. At any time it can emit (a) parametric product draws in
+//! O(d³ + t·d²) using only the running moments — no buffer pass — or (b)
+//! asymptotically exact draws by running the IMG combiner over the
+//! buffers collected so far.
+
+use crate::combine::{self, CombineMethod};
+use crate::error::{Error, Result};
+use crate::math::running::RunningMoments;
+use crate::types::SampleMatrix;
+
+/// Streaming leader-side combiner.
+#[derive(Debug)]
+pub struct OnlineCombiner {
+    dim: usize,
+    buffers: Vec<SampleMatrix>,
+    moments: Vec<RunningMoments>,
+    total_received: usize,
+}
+
+impl OnlineCombiner {
+    pub fn new(machines: usize, dim: usize) -> Self {
+        assert!(machines > 0 && dim > 0);
+        OnlineCombiner {
+            dim,
+            buffers: (0..machines).map(|_| SampleMatrix::new(dim)).collect(),
+            moments: (0..machines).map(|_| RunningMoments::new(dim)).collect(),
+            total_received: 0,
+        }
+    }
+
+    pub fn machines(&self) -> usize {
+        self.buffers.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Draws received so far (all machines).
+    pub fn total_received(&self) -> usize {
+        self.total_received
+    }
+
+    /// Smallest per-machine buffer length — combination quality is
+    /// limited by the slowest machine.
+    pub fn min_buffer_len(&self) -> usize {
+        self.buffers.iter().map(|b| b.len()).min().unwrap_or(0)
+    }
+
+    /// Ingest one draw from `machine`.
+    pub fn push(&mut self, machine: usize, theta: &[f64]) -> Result<()> {
+        if machine >= self.buffers.len() {
+            return Err(Error::Config(format!(
+                "machine {machine} out of range ({})",
+                self.buffers.len()
+            )));
+        }
+        if theta.len() != self.dim {
+            return Err(Error::Shape(format!(
+                "draw dim {} != {}",
+                theta.len(),
+                self.dim
+            )));
+        }
+        self.buffers[machine].push(theta);
+        self.moments[machine].push(theta);
+        self.total_received += 1;
+        Ok(())
+    }
+
+    /// Parametric product from the *running* moments (footnote 3 of the
+    /// paper: online mean/covariance updates) — O(d³) regardless of how
+    /// many draws have streamed in.
+    pub fn parametric_draws(
+        &self,
+        t_out: usize,
+        seed: u64,
+    ) -> Result<SampleMatrix> {
+        use crate::combine::gaussian_product::{
+            gaussian_product, GaussianEstimate,
+        };
+        let estimates: Vec<GaussianEstimate> = self
+            .moments
+            .iter()
+            .map(|rm| {
+                if rm.count() < 2 {
+                    return Err(Error::Config(
+                        "need ≥ 2 draws per machine".into(),
+                    ));
+                }
+                let cov = rm.covariance();
+                let prec = crate::math::linalg::spd_inverse_jittered(&cov)?;
+                Ok(GaussianEstimate { mean: rm.mean().to_vec(), cov, prec })
+            })
+            .collect::<Result<_>>()?;
+        let product = gaussian_product(&estimates)?;
+        let mut rng = crate::rng::Pcg64::seed_from(seed);
+        Ok(product.sample_n(t_out, &mut rng))
+    }
+
+    /// Run any batch combiner over the buffered draws so far.
+    pub fn combined_draws(
+        &self,
+        method: CombineMethod,
+        t_out: usize,
+        seed: u64,
+    ) -> Result<SampleMatrix> {
+        let refs: Vec<&SampleMatrix> = self.buffers.iter().collect();
+        combine::combine_sets(method, &refs, t_out, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::linalg::Mat;
+    use crate::math::mvn::Mvn;
+    use crate::rng::Pcg64;
+
+    fn feed(oc: &mut OnlineCombiner, seed: u64, mus: &[f64], n: usize) {
+        let mut rng = Pcg64::seed_from(seed);
+        let gens: Vec<Mvn> = mus
+            .iter()
+            .map(|&mu| Mvn::new(vec![mu], Mat::diag(&[1.0])).unwrap())
+            .collect();
+        for _ in 0..n {
+            for (m, g) in gens.iter().enumerate() {
+                oc.push(m, &g.sample(&mut rng)).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn online_parametric_matches_batch() {
+        let mut oc = OnlineCombiner::new(2, 1);
+        feed(&mut oc, 1, &[0.5, 1.5], 5000);
+        let online = oc.parametric_draws(5000, 2).unwrap();
+        let batch = oc
+            .combined_draws(CombineMethod::Parametric, 5000, 2)
+            .unwrap();
+        assert!((online.mean()[0] - batch.mean()[0]).abs() < 0.05);
+        assert!((online.mean()[0] - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn online_exact_combiner_runs_midstream() {
+        let mut oc = OnlineCombiner::new(3, 1);
+        feed(&mut oc, 3, &[0.8, 1.0, 1.2], 400);
+        // Combine midstream…
+        let first = oc
+            .combined_draws(CombineMethod::Nonparametric, 400, 4)
+            .unwrap();
+        // …then stream more and combine again: error should not grow.
+        feed(&mut oc, 5, &[0.8, 1.0, 1.2], 3600);
+        let second = oc
+            .combined_draws(CombineMethod::Nonparametric, 3000, 4)
+            .unwrap();
+        let e1 = (first.mean()[0] - 1.0).abs();
+        let e2 = (second.mean()[0] - 1.0).abs();
+        assert!(e2 < e1 + 0.05, "e1={e1} e2={e2}");
+    }
+
+    #[test]
+    fn push_validates() {
+        let mut oc = OnlineCombiner::new(2, 2);
+        assert!(oc.push(5, &[0.0, 0.0]).is_err());
+        assert!(oc.push(0, &[0.0]).is_err());
+        assert!(oc.push(0, &[0.0, 1.0]).is_ok());
+        assert_eq!(oc.total_received(), 1);
+        assert_eq!(oc.min_buffer_len(), 0);
+    }
+
+    #[test]
+    fn parametric_needs_two_draws_per_machine() {
+        let mut oc = OnlineCombiner::new(2, 1);
+        oc.push(0, &[1.0]).unwrap();
+        oc.push(1, &[1.0]).unwrap();
+        assert!(oc.parametric_draws(10, 1).is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! Pairwise tree reduction (paper sections 3.2 and 4).
+//!
+//! Applying Algorithm 1 directly to M machines costs O(dTM²) and its
+//! acceptance rate decays with M (each sweep perturbs one of M indices
+//! of a product of M kernels). The paper's remedy: combine subposteriors
+//! in pairs, then combine the pair-outputs in pairs, and so on —
+//! ⌈log₂ M⌉ rounds, O(dTM) total work, and each IMG run only ever sees
+//! M̃ = 2 components.
+
+use super::nonparametric::nonparametric;
+use crate::error::Result;
+use crate::rng::Pcg64;
+use crate::types::SampleMatrix;
+
+/// Combine M subposterior sample sets by repeated pairing.
+pub fn pairwise(
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+) -> Result<SampleMatrix> {
+    super::validate_sets(sets)?;
+    let mut rng = Pcg64::seed_from(seed);
+    let mut current: Vec<SampleMatrix> =
+        sets.iter().map(|s| (*s).clone()).collect();
+    while current.len() > 1 {
+        let mut next = Vec::with_capacity(current.len().div_ceil(2));
+        let mut iter = current.chunks(2);
+        for chunk in &mut iter {
+            if chunk.len() == 2 {
+                let pair: Vec<&SampleMatrix> = vec![&chunk[0], &chunk[1]];
+                next.push(nonparametric(&pair, t_out, rng.next_u64())?);
+            } else {
+                // Odd one out: carried to the next round unchanged.
+                next.push(chunk[0].clone());
+            }
+        }
+        current = next;
+    }
+    Ok(current.pop().unwrap().take(t_out))
+}
+
+/// Number of pair-combination invocations performed for M machines
+/// (M - 1, matching the paper's O(dTM) complexity claim).
+pub fn pair_combinations(m: usize) -> usize {
+    m.saturating_sub(1)
+}
+
+/// Generalized tree reduction over groups of `group_size` (the paper's
+/// "groups of M̃ < M subposteriors", section 3.2). `group_size = 2`
+/// recovers [`pairwise`]; larger groups trade IMG acceptance rate for
+/// fewer reduction rounds.
+pub fn grouped(
+    sets: &[&SampleMatrix],
+    group_size: usize,
+    t_out: usize,
+    seed: u64,
+) -> Result<SampleMatrix> {
+    super::validate_sets(sets)?;
+    assert!(group_size >= 2, "group size must be >= 2");
+    let mut rng = Pcg64::seed_from(seed);
+    let mut current: Vec<SampleMatrix> =
+        sets.iter().map(|s| (*s).clone()).collect();
+    while current.len() > 1 {
+        let mut next = Vec::with_capacity(current.len().div_ceil(group_size));
+        for chunk in current.chunks(group_size) {
+            if chunk.len() >= 2 {
+                let group: Vec<&SampleMatrix> = chunk.iter().collect();
+                next.push(nonparametric(&group, t_out, rng.next_u64())?);
+            } else {
+                next.push(chunk[0].clone());
+            }
+        }
+        current = next;
+    }
+    Ok(current.pop().unwrap().take(t_out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::linalg::Mat;
+    use crate::math::mvn::Mvn;
+
+    fn gaussian_sets(
+        seed: u64,
+        mus: &[f64],
+        var: f64,
+        t: usize,
+    ) -> Vec<SampleMatrix> {
+        let mut rng = Pcg64::seed_from(seed);
+        mus.iter()
+            .map(|&mu| {
+                Mvn::new(vec![mu], Mat::diag(&[var]))
+                    .unwrap()
+                    .sample_n(t, &mut rng)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pairwise_recovers_gaussian_product_m4() {
+        // Four N(μ_m, 1): product = N(mean, 1/4).
+        let sets = gaussian_sets(1, &[0.7, 0.9, 1.1, 1.3], 1.0, 3000);
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let out = pairwise(&refs, 3000, 2).unwrap();
+        assert!((out.mean()[0] - 1.0).abs() < 0.1, "{}", out.mean()[0]);
+        let v = out.covariance()[(0, 0)];
+        assert!((v - 0.25).abs() < 0.12, "var {v}");
+    }
+
+    #[test]
+    fn pairwise_handles_odd_m() {
+        let sets = gaussian_sets(3, &[0.8, 1.0, 1.2], 1.0, 2000);
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let out = pairwise(&refs, 2000, 4).unwrap();
+        assert_eq!(out.len(), 2000);
+        // IMG chains are autocorrelated; cross-seed sd of this mean is
+        // ~0.07, so allow 3σ.
+        assert!((out.mean()[0] - 1.0).abs() < 0.25, "{}", out.mean()[0]);
+    }
+
+    #[test]
+    fn pairwise_single_set_is_passthrough_kde() {
+        let sets = gaussian_sets(5, &[2.0], 1.0, 2000);
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let out = pairwise(&refs, 1500, 6).unwrap();
+        assert_eq!(out.len(), 1500);
+        assert!((out.mean()[0] - 2.0).abs() < 0.15);
+    }
+
+    #[test]
+    fn pair_combination_count() {
+        assert_eq!(pair_combinations(1), 0);
+        assert_eq!(pair_combinations(2), 1);
+        assert_eq!(pair_combinations(10), 9);
+    }
+
+    #[test]
+    fn grouped_matches_pairwise_quality() {
+        // Groups of 3 over 6 gaussians: same product target.
+        let sets =
+            gaussian_sets(9, &[0.7, 0.8, 0.9, 1.1, 1.2, 1.3], 1.0, 2500);
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let out = grouped(&refs, 3, 2500, 10).unwrap();
+        assert_eq!(out.len(), 2500);
+        assert!((out.mean()[0] - 1.0).abs() < 0.12, "{}", out.mean()[0]);
+        // Product of 6 unit-variance gaussians → var 1/6.
+        let v = out.covariance()[(0, 0)];
+        assert!((v - 1.0 / 6.0).abs() < 0.12, "var {v}");
+    }
+
+    #[test]
+    #[should_panic(expected = "group size")]
+    fn grouped_rejects_degenerate_group() {
+        let sets = gaussian_sets(1, &[0.0], 1.0, 10);
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let _ = grouped(&refs, 1, 10, 0);
+    }
+}

@@ -1,0 +1,77 @@
+//! Parametric combination (paper section 3.1).
+//!
+//! Fit `N(μ̂_m, Σ̂_m)` to each machine's draws, form the product Gaussian
+//! (Eqs. 3.1-3.2) and sample from it. Asymptotically biased (exactly
+//! Gaussian by construction) but converges fastest — the paper's Fig. 3
+//! (right) shows it scaling best with dimension.
+
+use super::gaussian_product::fit_and_product;
+use crate::error::Result;
+use crate::rng::Pcg64;
+use crate::types::SampleMatrix;
+
+/// Draw `t_out` samples from the parametric density-product estimate.
+pub fn parametric(
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+) -> Result<SampleMatrix> {
+    let (_, product) = fit_and_product(sets)?;
+    let mut rng = Pcg64::seed_from(seed);
+    Ok(product.sample_n(t_out, &mut rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::linalg::Mat;
+    use crate::math::mvn::Mvn;
+
+    /// Conjugate check: subposteriors N(μ_m, Σ) with equal covariance →
+    /// product N(mean of information-weighted μ_m, Σ/M).
+    #[test]
+    fn parametric_combines_gaussian_subposteriors_exactly() {
+        let mut rng = Pcg64::seed_from(3);
+        let cov = Mat::diag(&[1.0, 0.5]);
+        let mus = [[0.8, -0.2], [1.2, 0.2], [1.0, 0.1], [0.9, -0.1]];
+        let sets: Vec<SampleMatrix> = mus
+            .iter()
+            .map(|mu| {
+                Mvn::new(mu.to_vec(), cov.clone())
+                    .unwrap()
+                    .sample_n(20_000, &mut rng)
+            })
+            .collect();
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let combined = parametric(&refs, 20_000, 7).unwrap();
+        let mean = combined.mean();
+        let want0 = mus.iter().map(|m| m[0]).sum::<f64>() / 4.0;
+        let want1 = mus.iter().map(|m| m[1]).sum::<f64>() / 4.0;
+        assert!((mean[0] - want0).abs() < 0.03, "{} vs {want0}", mean[0]);
+        assert!((mean[1] - want1).abs() < 0.03, "{} vs {want1}", mean[1]);
+        let c = combined.covariance();
+        assert!((c[(0, 0)] - 0.25).abs() < 0.02, "var0 {}", c[(0, 0)]);
+        assert!((c[(1, 1)] - 0.125).abs() < 0.01, "var1 {}", c[(1, 1)]);
+    }
+
+    #[test]
+    fn single_machine_is_identity_in_distribution() {
+        let mut rng = Pcg64::seed_from(4);
+        let gen = Mvn::new(vec![2.0], Mat::diag(&[3.0])).unwrap();
+        let s = gen.sample_n(30_000, &mut rng);
+        let combined = parametric(&[&s], 30_000, 5).unwrap();
+        assert!((combined.mean()[0] - 2.0).abs() < 0.06);
+        let v = combined.covariance()[(0, 0)];
+        assert!((v - 3.0).abs() < 0.15, "var {v}");
+    }
+
+    #[test]
+    fn requested_count_respected() {
+        let mut rng = Pcg64::seed_from(5);
+        let s = Mvn::new(vec![0.0], Mat::diag(&[1.0]))
+            .unwrap()
+            .sample_n(100, &mut rng);
+        let out = parametric(&[&s], 42, 6).unwrap();
+        assert_eq!(out.len(), 42);
+    }
+}

@@ -1,0 +1,330 @@
+//! Experiment / pipeline configuration.
+//!
+//! Configs are built programmatically (builder pattern) or parsed from
+//! simple `key = value` files (`.cfg`) — the CLI's `--config` flag. No
+//! external dependencies are available offline, so the format is a flat,
+//! documented key list rather than TOML.
+
+use crate::combine::CombineMethod;
+use crate::error::{Error, Result};
+use crate::sampler::SamplerKind;
+use std::collections::BTreeMap;
+
+/// Full configuration of an embarrassingly-parallel MCMC run.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Model name: gaussian | logistic | gmm | poisson_gamma | linreg.
+    pub model: String,
+    /// Number of machines M.
+    pub machines: usize,
+    /// Post-burn-in draws per machine T.
+    pub samples_per_machine: usize,
+    /// Burn-in per machine (default: T/5, the paper's 1/6-of-total rule).
+    pub burn_in: usize,
+    /// Thinning.
+    pub thin: usize,
+    /// Root RNG seed (workers derive independent streams).
+    pub seed: u64,
+    /// Worker sampler.
+    pub sampler: SamplerKind,
+    /// Combination method for the leader.
+    pub method: CombineMethod,
+    /// Combined draws to emit (defaults to samples_per_machine).
+    pub t_out: usize,
+    /// OS threads to use for workers (defaults to machines).
+    pub threads: usize,
+    /// Evaluate the subposterior through the PJRT runtime instead of the
+    /// native backend (requires artifacts/).
+    pub use_runtime: bool,
+    /// Artifact directory for `use_runtime`.
+    pub artifact_dir: String,
+}
+
+impl PipelineConfig {
+    pub fn builder(model: &str) -> PipelineConfigBuilder {
+        PipelineConfigBuilder::new(model)
+    }
+
+    /// Parse a flat `key = value` config file (lines starting with `#`
+    /// are comments).
+    pub fn from_str_cfg(text: &str) -> Result<Self> {
+        let mut kv = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Parse(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get = |k: &str| kv.get(k).cloned();
+        let parse_usize = |k: &str, default: usize| -> Result<usize> {
+            match get(k) {
+                None => Ok(default),
+                Some(v) => v
+                    .parse()
+                    .map_err(|_| Error::Parse(format!("bad usize for {k}: {v}"))),
+            }
+        };
+        let model = get("model")
+            .ok_or_else(|| Error::Config("missing 'model'".into()))?;
+        let mut b = PipelineConfigBuilder::new(&model);
+        b.machines = parse_usize("machines", b.machines)?;
+        b.samples_per_machine =
+            parse_usize("samples_per_machine", b.samples_per_machine)?;
+        b.burn_in = match get("burn_in") {
+            None => None,
+            Some(v) => Some(v.parse().map_err(|_| {
+                Error::Parse(format!("bad usize for burn_in: {v}"))
+            })?),
+        };
+        b.thin = parse_usize("thin", b.thin)?;
+        b.seed = match get("seed") {
+            None => b.seed,
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Parse(format!("bad u64 for seed: {v}")))?,
+        };
+        if let Some(v) = get("method") {
+            b.method = CombineMethod::parse(&v)?;
+        }
+        if let Some(v) = get("sampler") {
+            b.sampler = Some(parse_sampler(&v)?);
+        }
+        b.t_out = match get("t_out") {
+            None => None,
+            Some(v) => Some(v.parse().map_err(|_| {
+                Error::Parse(format!("bad usize for t_out: {v}"))
+            })?),
+        };
+        if let Some(v) = get("use_runtime") {
+            b.use_runtime = v == "true" || v == "1";
+        }
+        if let Some(v) = get("artifact_dir") {
+            b.artifact_dir = v;
+        }
+        Ok(b.build())
+    }
+
+    pub fn from_file(path: &str) -> Result<Self> {
+        Self::from_str_cfg(&std::fs::read_to_string(path)?)
+    }
+}
+
+fn parse_sampler(s: &str) -> Result<SamplerKind> {
+    // Formats: "hmc:eps,L" | "nuts:eps,maxdepth" | "rwm:scale" | "mala:eps"
+    let (name, args) = match s.split_once(':') {
+        Some((n, a)) => (n, a),
+        None => (s, ""),
+    };
+    let nums: Vec<f64> = if args.is_empty() {
+        vec![]
+    } else {
+        args.split(',')
+            .map(|v| {
+                v.trim()
+                    .parse()
+                    .map_err(|_| Error::Parse(format!("bad sampler arg {v}")))
+            })
+            .collect::<Result<_>>()?
+    };
+    let f = |i: usize, d: f64| nums.get(i).copied().unwrap_or(d);
+    match name {
+        "hmc" => Ok(SamplerKind::Hmc {
+            step: f(0, 0.1),
+            n_leapfrog: f(1, 10.0) as usize,
+        }),
+        "nuts" => Ok(SamplerKind::Nuts {
+            step: f(0, 0.1),
+            max_depth: f(1, 10.0) as usize,
+        }),
+        "rwm" => Ok(SamplerKind::Rwm { scale: f(0, 1.0) }),
+        "mala" => Ok(SamplerKind::Mala { step: f(0, 0.1) }),
+        other => Err(Error::Config(format!("unknown sampler '{other}'"))),
+    }
+}
+
+/// Builder for [`PipelineConfig`].
+#[derive(Debug, Clone)]
+pub struct PipelineConfigBuilder {
+    model: String,
+    machines: usize,
+    samples_per_machine: usize,
+    burn_in: Option<usize>,
+    thin: usize,
+    seed: u64,
+    sampler: Option<SamplerKind>,
+    method: CombineMethod,
+    t_out: Option<usize>,
+    threads: Option<usize>,
+    use_runtime: bool,
+    artifact_dir: String,
+}
+
+impl PipelineConfigBuilder {
+    pub fn new(model: &str) -> Self {
+        PipelineConfigBuilder {
+            model: model.to_string(),
+            machines: 10,
+            samples_per_machine: 1000,
+            burn_in: None,
+            thin: 1,
+            seed: 42,
+            sampler: None,
+            method: CombineMethod::Semiparametric,
+            t_out: None,
+            threads: None,
+            use_runtime: false,
+            artifact_dir: "artifacts".to_string(),
+        }
+    }
+
+    pub fn machines(mut self, m: usize) -> Self {
+        self.machines = m;
+        self
+    }
+
+    pub fn samples_per_machine(mut self, t: usize) -> Self {
+        self.samples_per_machine = t;
+        self
+    }
+
+    pub fn burn_in(mut self, b: usize) -> Self {
+        self.burn_in = Some(b);
+        self
+    }
+
+    pub fn thin(mut self, t: usize) -> Self {
+        self.thin = t.max(1);
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn sampler(mut self, s: SamplerKind) -> Self {
+        self.sampler = Some(s);
+        self
+    }
+
+    pub fn method(mut self, m: CombineMethod) -> Self {
+        self.method = m;
+        self
+    }
+
+    pub fn t_out(mut self, t: usize) -> Self {
+        self.t_out = Some(t);
+        self
+    }
+
+    pub fn threads(mut self, t: usize) -> Self {
+        self.threads = Some(t);
+        self
+    }
+
+    pub fn use_runtime(mut self, b: bool) -> Self {
+        self.use_runtime = b;
+        self
+    }
+
+    pub fn artifact_dir(mut self, d: &str) -> Self {
+        self.artifact_dir = d.to_string();
+        self
+    }
+
+    pub fn build(self) -> PipelineConfig {
+        let t = self.samples_per_machine;
+        PipelineConfig {
+            model: self.model,
+            machines: self.machines,
+            samples_per_machine: t,
+            burn_in: self.burn_in.unwrap_or(t / 5),
+            thin: self.thin,
+            seed: self.seed,
+            sampler: self
+                .sampler
+                .unwrap_or(SamplerKind::Hmc { step: 0.1, n_leapfrog: 10 }),
+            method: self.method,
+            t_out: self.t_out.unwrap_or(t),
+            threads: self.threads.unwrap_or(self.machines),
+            use_runtime: self.use_runtime,
+            artifact_dir: self.artifact_dir,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults() {
+        let c = PipelineConfig::builder("gaussian").build();
+        assert_eq!(c.machines, 10);
+        assert_eq!(c.burn_in, 200);
+        assert_eq!(c.t_out, 1000);
+        assert_eq!(c.threads, 10);
+    }
+
+    #[test]
+    fn cfg_file_roundtrip() {
+        let text = "\
+# demo config
+model = logistic
+machines = 20
+samples_per_machine = 500
+method = nonparametric
+sampler = hmc:0.05,20
+seed = 7
+use_runtime = true
+artifact_dir = my_artifacts
+";
+        let c = PipelineConfig::from_str_cfg(text).unwrap();
+        assert_eq!(c.model, "logistic");
+        assert_eq!(c.machines, 20);
+        assert_eq!(c.method.name(), "nonparametric");
+        assert_eq!(c.seed, 7);
+        assert!(c.use_runtime);
+        assert_eq!(c.artifact_dir, "my_artifacts");
+        match c.sampler {
+            SamplerKind::Hmc { step, n_leapfrog } => {
+                assert!((step - 0.05).abs() < 1e-12);
+                assert_eq!(n_leapfrog, 20);
+            }
+            _ => panic!("wrong sampler"),
+        }
+    }
+
+    #[test]
+    fn cfg_rejects_garbage() {
+        assert!(PipelineConfig::from_str_cfg("model logistic").is_err());
+        assert!(PipelineConfig::from_str_cfg("machines = 5").is_err()); // no model
+        assert!(
+            PipelineConfig::from_str_cfg("model = x\nmachines = nope").is_err()
+        );
+        assert!(PipelineConfig::from_str_cfg(
+            "model = x\nsampler = warp:1"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn sampler_spec_parsing() {
+        assert!(matches!(
+            parse_sampler("rwm:2.0").unwrap(),
+            SamplerKind::Rwm { .. }
+        ));
+        assert!(matches!(
+            parse_sampler("nuts").unwrap(),
+            SamplerKind::Nuts { .. }
+        ));
+        assert!(matches!(
+            parse_sampler("mala:0.2").unwrap(),
+            SamplerKind::Mala { .. }
+        ));
+    }
+}

@@ -1,0 +1,116 @@
+//! Leader: receives the M unidirectional draw streams and maintains the
+//! online combination state (paper section 4's online variant).
+
+use std::sync::mpsc::Receiver;
+
+use crate::combine::{CombineMethod, OnlineCombiner};
+use crate::coordinator::worker::DrawMsg;
+use crate::error::Result;
+use crate::types::SampleMatrix;
+
+/// Leader-side stream consumer.
+pub struct Leader {
+    combiner: OnlineCombiner,
+    finished: Vec<bool>,
+    /// Max worker-local elapsed time seen so far (cluster clock).
+    pub max_elapsed: f64,
+    /// Scalars received (d per draw) — the paper's O(dTM) communication.
+    pub scalars_received: usize,
+}
+
+impl Leader {
+    pub fn new(machines: usize, dim: usize) -> Self {
+        Leader {
+            combiner: OnlineCombiner::new(machines, dim),
+            finished: vec![false; machines],
+            max_elapsed: 0.0,
+            scalars_received: 0,
+        }
+    }
+
+    /// Ingest one message.
+    pub fn ingest(&mut self, msg: &DrawMsg) -> Result<()> {
+        self.combiner.push(msg.machine, &msg.theta)?;
+        self.scalars_received += msg.theta.len();
+        if msg.elapsed > self.max_elapsed {
+            self.max_elapsed = msg.elapsed;
+        }
+        if msg.last {
+            self.finished[msg.machine] = true;
+        }
+        Ok(())
+    }
+
+    /// Drain a receiver until every worker has sent its final message
+    /// (or the channel closes).
+    pub fn drain(&mut self, rx: &Receiver<DrawMsg>) -> Result<()> {
+        for msg in rx.iter() {
+            self.ingest(&msg)?;
+            if self.all_finished() {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn all_finished(&self) -> bool {
+        self.finished.iter().all(|&f| f)
+    }
+
+    pub fn combiner(&self) -> &OnlineCombiner {
+        &self.combiner
+    }
+
+    /// Current full-posterior draws by any method over what has streamed
+    /// in so far.
+    pub fn draws(
+        &self,
+        method: CombineMethod,
+        t_out: usize,
+        seed: u64,
+    ) -> Result<SampleMatrix> {
+        self.combiner.combined_draws(method, t_out, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(machine: usize, v: f64, last: bool) -> DrawMsg {
+        DrawMsg { machine, theta: vec![v], elapsed: v.abs(), last }
+    }
+
+    #[test]
+    fn tracks_completion_and_telemetry() {
+        let mut leader = Leader::new(2, 1);
+        leader.ingest(&msg(0, 1.0, false)).unwrap();
+        leader.ingest(&msg(1, 2.0, false)).unwrap();
+        assert!(!leader.all_finished());
+        leader.ingest(&msg(0, 3.0, true)).unwrap();
+        leader.ingest(&msg(1, 0.5, true)).unwrap();
+        assert!(leader.all_finished());
+        assert_eq!(leader.scalars_received, 4);
+        assert!((leader.max_elapsed - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drain_consumes_channel() {
+        use std::sync::mpsc::channel;
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(msg(0, i as f64, i == 9)).unwrap();
+        }
+        drop(tx);
+        let mut leader = Leader::new(1, 1);
+        leader.drain(&rx).unwrap();
+        assert!(leader.all_finished());
+        assert_eq!(leader.combiner().total_received(), 10);
+    }
+
+    #[test]
+    fn rejects_bad_machine() {
+        let mut leader = Leader::new(1, 1);
+        assert!(leader.ingest(&msg(5, 0.0, false)).is_err());
+    }
+}

@@ -1,0 +1,100 @@
+//! Run-level metrics collected by the pipeline.
+
+use std::fmt;
+
+/// Counters and summaries for one pipeline run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub machines: usize,
+    pub samples_per_machine: usize,
+    pub param_dim: usize,
+    /// Per-machine acceptance rates.
+    pub accept_rates: Vec<f64>,
+    /// Per-machine wall-clock seconds.
+    pub worker_secs: Vec<f64>,
+    /// Scalars transferred worker→leader.
+    pub scalars_transferred: usize,
+    /// Seconds spent in the combination stage.
+    pub combine_secs: f64,
+    /// Total end-to-end wall-clock (real, not modeled).
+    pub total_secs: f64,
+}
+
+impl RunMetrics {
+    pub fn mean_accept_rate(&self) -> f64 {
+        if self.accept_rates.is_empty() {
+            return f64::NAN;
+        }
+        self.accept_rates.iter().sum::<f64>() / self.accept_rates.len() as f64
+    }
+
+    pub fn max_worker_secs(&self) -> f64 {
+        self.worker_secs.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Load imbalance: max/mean worker time (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        if self.worker_secs.is_empty() {
+            return f64::NAN;
+        }
+        let mean = self.worker_secs.iter().sum::<f64>()
+            / self.worker_secs.len() as f64;
+        if mean == 0.0 {
+            return 1.0;
+        }
+        self.max_worker_secs() / mean
+    }
+}
+
+impl fmt::Display for RunMetrics {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "machines={} T={} d={}",
+            self.machines, self.samples_per_machine, self.param_dim
+        )?;
+        writeln!(
+            f,
+            "accept_rate(mean)={:.3} worker_secs(max)={:.3} imbalance={:.2}",
+            self.mean_accept_rate(),
+            self.max_worker_secs(),
+            self.imbalance()
+        )?;
+        write!(
+            f,
+            "scalars={} combine_secs={:.3} total_secs={:.3}",
+            self.scalars_transferred, self.combine_secs, self.total_secs
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summaries() {
+        let m = RunMetrics {
+            machines: 2,
+            samples_per_machine: 10,
+            param_dim: 3,
+            accept_rates: vec![0.6, 0.8],
+            worker_secs: vec![1.0, 3.0],
+            scalars_transferred: 60,
+            combine_secs: 0.5,
+            total_secs: 4.0,
+        };
+        assert!((m.mean_accept_rate() - 0.7).abs() < 1e-12);
+        assert!((m.max_worker_secs() - 3.0).abs() < 1e-12);
+        assert!((m.imbalance() - 1.5).abs() < 1e-12);
+        let s = format!("{m}");
+        assert!(s.contains("machines=2"));
+    }
+
+    #[test]
+    fn empty_metrics_are_nan_not_panic() {
+        let m = RunMetrics::default();
+        assert!(m.mean_accept_rate().is_nan());
+        assert!(m.imbalance().is_nan());
+    }
+}

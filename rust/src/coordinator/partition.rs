@@ -1,0 +1,134 @@
+//! Data partitioning across machines (paper step 1: "arbitrarily
+//! partition data onto multiple machines").
+
+use crate::error::{Error, Result};
+use crate::rng::Pcg64;
+
+/// Partitioning strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partitioner {
+    /// Contiguous blocks (machine m gets rows [m·n/M, (m+1)·n/M)).
+    Contiguous,
+    /// Uniformly random assignment (the paper's i.i.d. setting makes
+    /// this equivalent in distribution to contiguous, but it guards
+    /// against ordered datasets).
+    Random,
+    /// Round-robin (deterministic, balanced to within one row).
+    RoundRobin,
+}
+
+impl Partitioner {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "contiguous" => Ok(Partitioner::Contiguous),
+            "random" => Ok(Partitioner::Random),
+            "round_robin" => Ok(Partitioner::RoundRobin),
+            other => Err(Error::Config(format!("unknown partitioner '{other}'"))),
+        }
+    }
+
+    /// Split `0..n` into `m` shards. Every index appears exactly once;
+    /// shard sizes differ by at most 1.
+    pub fn split(&self, n: usize, m: usize, seed: u64) -> Result<Vec<Vec<usize>>> {
+        if m == 0 {
+            return Err(Error::Config("machines must be > 0".into()));
+        }
+        if n < m {
+            return Err(Error::Config(format!(
+                "cannot split {n} observations over {m} machines"
+            )));
+        }
+        let mut shards: Vec<Vec<usize>> = match self {
+            Partitioner::Contiguous => {
+                let mut out = Vec::with_capacity(m);
+                let base = n / m;
+                let extra = n % m;
+                let mut start = 0;
+                for i in 0..m {
+                    let len = base + usize::from(i < extra);
+                    out.push((start..start + len).collect());
+                    start += len;
+                }
+                out
+            }
+            Partitioner::Random => {
+                let mut rng = Pcg64::seed_from(seed);
+                let perm = rng.permutation(n);
+                let mut out = vec![Vec::with_capacity(n / m + 1); m];
+                for (i, idx) in perm.into_iter().enumerate() {
+                    out[i % m].push(idx);
+                }
+                out
+            }
+            Partitioner::RoundRobin => {
+                let mut out = vec![Vec::with_capacity(n / m + 1); m];
+                for i in 0..n {
+                    out[i % m].push(i);
+                }
+                out
+            }
+        };
+        for s in shards.iter_mut() {
+            s.sort_unstable();
+        }
+        Ok(shards)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_is_partition(shards: &[Vec<usize>], n: usize) {
+        let mut seen = vec![false; n];
+        for s in shards {
+            for &i in s {
+                assert!(!seen[i], "index {i} duplicated");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "not all indices covered");
+    }
+
+    #[test]
+    fn all_strategies_produce_partitions() {
+        for p in [
+            Partitioner::Contiguous,
+            Partitioner::Random,
+            Partitioner::RoundRobin,
+        ] {
+            for (n, m) in [(100, 10), (101, 10), (7, 7), (1000, 3)] {
+                let shards = p.split(n, m, 42).unwrap();
+                assert_eq!(shards.len(), m);
+                assert_is_partition(&shards, n);
+                let max = shards.iter().map(Vec::len).max().unwrap();
+                let min = shards.iter().map(Vec::len).min().unwrap();
+                assert!(max - min <= 1, "{p:?} imbalanced: {min}..{max}");
+            }
+        }
+    }
+
+    #[test]
+    fn errors_on_degenerate_input() {
+        assert!(Partitioner::Contiguous.split(10, 0, 0).is_err());
+        assert!(Partitioner::Contiguous.split(3, 10, 0).is_err());
+    }
+
+    #[test]
+    fn random_is_seed_deterministic() {
+        let a = Partitioner::Random.split(50, 5, 7).unwrap();
+        let b = Partitioner::Random.split(50, 5, 7).unwrap();
+        let c = Partitioner::Random.split(50, 5, 8).unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(
+            Partitioner::parse("contiguous").unwrap(),
+            Partitioner::Contiguous
+        );
+        assert!(Partitioner::parse("nope").is_err());
+    }
+}

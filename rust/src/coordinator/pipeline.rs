@@ -1,0 +1,268 @@
+//! End-to-end pipeline: partition → parallel subposterior sampling →
+//! streaming → combination.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::combine;
+use crate::config::PipelineConfig;
+use crate::coordinator::metrics::RunMetrics;
+use crate::coordinator::partition::Partitioner;
+use crate::coordinator::timing::ClusterTiming;
+use crate::coordinator::worker::{run_worker, DrawMsg};
+use crate::coordinator::Leader;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::model::LogDensity;
+use crate::rng::Pcg64;
+use crate::types::{SampleMatrix, SubposteriorSamples};
+
+/// Everything a pipeline run produces.
+#[derive(Debug)]
+pub struct PipelineOutput {
+    /// Per-machine subposterior draws (criterion 2's independent chains).
+    pub subposteriors: Vec<SubposteriorSamples>,
+    /// Full-posterior draws from the configured combination method.
+    pub combined: SampleMatrix,
+    /// Counters and timings.
+    pub metrics: RunMetrics,
+    /// Paper-style cluster-time model.
+    pub timing: ClusterTiming,
+}
+
+/// Run the full embarrassingly-parallel pipeline with native (pure-rust)
+/// subposterior evaluation and OS-thread workers.
+pub fn run_native(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutput> {
+    let shards =
+        Partitioner::Contiguous.split(data.len(), cfg.machines, cfg.seed)?;
+    let prior_w = 1.0 / cfg.machines as f64;
+    let dim = data.param_dim();
+    let t0 = Instant::now();
+
+    // Independent RNG stream per worker, derived from the root seed.
+    let mut root = Pcg64::seed_from(cfg.seed);
+    let worker_rngs: Vec<Pcg64> =
+        (0..cfg.machines).map(|m| root.split(m as u64)).collect();
+
+    let (tx, rx) = channel::<DrawMsg>();
+    let results: Mutex<Vec<Option<SubposteriorSamples>>> =
+        Mutex::new((0..cfg.machines).map(|_| None).collect());
+    let next_machine = AtomicUsize::new(0);
+    let n_threads = cfg.threads.clamp(1, cfg.machines);
+    let rng_slots: Vec<Mutex<Option<Pcg64>>> =
+        worker_rngs.into_iter().map(|r| Mutex::new(Some(r))).collect();
+
+    let mut leader = Leader::new(cfg.machines, dim);
+    std::thread::scope(|scope| -> Result<()> {
+        for _ in 0..n_threads {
+            let tx = tx.clone();
+            let shards = &shards;
+            let results = &results;
+            let next_machine = &next_machine;
+            let rng_slots = &rng_slots;
+            scope.spawn(move || {
+                loop {
+                    let m = next_machine.fetch_add(1, Ordering::SeqCst);
+                    if m >= cfg.machines {
+                        break;
+                    }
+                    let target = match data.subposterior(&shards[m], prior_w)
+                    {
+                        Ok(t) => t,
+                        Err(_) => break, // validated above; unreachable
+                    };
+                    let rng = rng_slots[m].lock().unwrap().take().unwrap();
+                    let sampler = cfg.sampler.build(target.dim());
+                    let out = run_worker(
+                        m,
+                        target.as_ref(),
+                        sampler,
+                        cfg.samples_per_machine,
+                        cfg.burn_in,
+                        cfg.thin,
+                        rng,
+                        Some(&tx),
+                    );
+                    results.lock().unwrap()[m] = Some(out);
+                }
+            });
+        }
+        drop(tx); // close our copy so rx terminates when workers finish
+        leader.drain(&rx)?;
+        Ok(())
+    })?;
+
+    let subposteriors: Vec<SubposteriorSamples> = results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.ok_or_else(|| Error::Runtime("worker died".into())))
+        .collect::<Result<_>>()?;
+
+    finish_run(cfg, subposteriors, leader.scalars_received, t0)
+}
+
+/// Run the pipeline over pre-built subposterior models, sequentially on
+/// the calling thread. This is the path for PJRT-runtime-backed models
+/// (the XLA client is not `Send`); per-worker wall-clocks are still
+/// measured individually so [`ClusterTiming`] models the parallel
+/// cluster the paper ran on.
+pub fn run_sequential(
+    cfg: &PipelineConfig,
+    models: Vec<Box<dyn LogDensity + '_>>,
+) -> Result<PipelineOutput> {
+    if models.len() != cfg.machines {
+        return Err(Error::Config(format!(
+            "{} models for {} machines",
+            models.len(),
+            cfg.machines
+        )));
+    }
+    let t0 = Instant::now();
+    let mut root = Pcg64::seed_from(cfg.seed);
+    let mut subposteriors = Vec::with_capacity(cfg.machines);
+    let mut scalars = 0usize;
+    for (m, target) in models.iter().enumerate() {
+        let rng = root.split(m as u64);
+        let sampler = cfg.sampler.build(target.dim());
+        let out = run_worker(
+            m,
+            target.as_ref(),
+            sampler,
+            cfg.samples_per_machine,
+            cfg.burn_in,
+            cfg.thin,
+            rng,
+            None,
+        );
+        scalars += out.samples.len() * out.samples.dim();
+        subposteriors.push(out);
+    }
+    finish_run(cfg, subposteriors, scalars, t0)
+}
+
+fn finish_run(
+    cfg: &PipelineConfig,
+    subposteriors: Vec<SubposteriorSamples>,
+    scalars: usize,
+    t0: Instant,
+) -> Result<PipelineOutput> {
+    let tc = Instant::now();
+    let combined =
+        combine::combine(cfg.method, &subposteriors, cfg.t_out, cfg.seed ^ 0x5EED)?;
+    let combine_secs = tc.elapsed().as_secs_f64();
+
+    let timing = ClusterTiming::from_run(&subposteriors, combine_secs);
+    let metrics = RunMetrics {
+        machines: cfg.machines,
+        samples_per_machine: cfg.samples_per_machine,
+        param_dim: combined.dim(),
+        accept_rates: subposteriors.iter().map(|s| s.accept_rate).collect(),
+        worker_secs: subposteriors.iter().map(|s| s.wall_secs).collect(),
+        scalars_transferred: scalars,
+        combine_secs,
+        total_secs: t0.elapsed().as_secs_f64(),
+    };
+    Ok(PipelineOutput { subposteriors, combined, metrics, timing })
+}
+
+/// Run a single full-data chain (the `regularChain` baseline).
+pub fn run_single_chain(
+    cfg: &PipelineConfig,
+    data: &Dataset,
+) -> Result<SubposteriorSamples> {
+    let target = data.full_posterior()?;
+    let mut rng = Pcg64::seed_from(cfg.seed ^ 0xF0F0);
+    let sampler = cfg.sampler.build(target.dim());
+    Ok(run_worker(
+        0,
+        target.as_ref(),
+        sampler,
+        cfg.samples_per_machine,
+        cfg.burn_in,
+        cfg.thin,
+        rng.split(0),
+        None,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::combine::CombineMethod;
+    use crate::data::synth;
+
+    fn cfg(machines: usize, t: usize) -> PipelineConfig {
+        PipelineConfig::builder("gaussian")
+            .machines(machines)
+            .samples_per_machine(t)
+            .method(CombineMethod::Parametric)
+            .seed(11)
+            .build()
+    }
+
+    #[test]
+    fn native_pipeline_recovers_posterior_mean() {
+        let data = synth::gaussian(4000, 2, 5);
+        let out = run_native(&cfg(4, 800), &data).unwrap();
+        assert_eq!(out.subposteriors.len(), 4);
+        assert_eq!(out.combined.len(), 800);
+        // Posterior mean ≈ sample mean of the data (n large, weak prior).
+        let mean = out.combined.mean();
+        assert!((mean[0] - 1.0).abs() < 0.1, "mean0 {}", mean[0]);
+        assert!((mean[1] - 1.1).abs() < 0.1, "mean1 {}", mean[1]);
+        assert_eq!(
+            out.metrics.scalars_transferred,
+            4 * 800 * 2,
+            "O(dTM) communication"
+        );
+        assert!(out.timing.total_secs() > 0.0);
+    }
+
+    #[test]
+    fn thread_cap_does_not_change_results_count() {
+        let data = synth::gaussian(1000, 2, 6);
+        let mut c = cfg(6, 200);
+        c.threads = 2; // fewer threads than machines
+        let out = run_native(&c, &data).unwrap();
+        assert_eq!(out.subposteriors.len(), 6);
+        for s in &out.subposteriors {
+            assert_eq!(s.samples.len(), 200);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let data = synth::gaussian(500, 1, 7);
+        let a = run_native(&cfg(2, 100), &data).unwrap();
+        let b = run_native(&cfg(2, 100), &data).unwrap();
+        for (sa, sb) in a.subposteriors.iter().zip(&b.subposteriors) {
+            assert_eq!(sa.samples.as_slice(), sb.samples.as_slice());
+        }
+        assert_eq!(a.combined.as_slice(), b.combined.as_slice());
+    }
+
+    #[test]
+    fn sequential_matches_machine_count() {
+        let data = synth::gaussian(600, 1, 8);
+        let shards = Partitioner::Contiguous.split(600, 3, 0).unwrap();
+        let models: Vec<Box<dyn LogDensity>> = shards
+            .iter()
+            .map(|idx| data.subposterior(idx, 1.0 / 3.0).unwrap())
+            .collect();
+        let out = run_sequential(&cfg(3, 150), models).unwrap();
+        assert_eq!(out.subposteriors.len(), 3);
+        assert_eq!(out.combined.len(), 150);
+    }
+
+    #[test]
+    fn single_chain_baseline_runs() {
+        let data = synth::gaussian(500, 2, 9);
+        let out = run_single_chain(&cfg(1, 300), &data).unwrap();
+        assert_eq!(out.samples.len(), 300);
+        let mean = out.samples.mean();
+        assert!((mean[0] - 1.0).abs() < 0.15, "mean {:?}", mean);
+    }
+}

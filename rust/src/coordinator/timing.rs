@@ -1,0 +1,107 @@
+//! Cluster-time accounting (how the paper measures "time").
+//!
+//! Workers here are OS threads, not separate cluster nodes, but the
+//! algorithmic timing model is the paper's: parallel sampling time is
+//! the *max* over machines (they run concurrently and never wait),
+//! transfer adds `d·T·M` scalars at an assumed link rate, and the
+//! combination runs on one machine afterwards (or online, overlapped).
+
+use crate::types::SubposteriorSamples;
+
+/// Timing breakdown of one embarrassingly-parallel run.
+#[derive(Debug, Clone)]
+pub struct ClusterTiming {
+    /// max_m (worker wall-clock), seconds.
+    pub sampling_secs: f64,
+    /// Modeled transfer time for d·T·M scalars, seconds.
+    pub transfer_secs: f64,
+    /// Measured combination time, seconds.
+    pub combine_secs: f64,
+}
+
+impl ClusterTiming {
+    /// Assumed link throughput: 1e8 scalars/sec (≈ 800 MB/s of f64 —
+    /// commodity 10GbE, matching the paper's "standard cluster").
+    pub const SCALARS_PER_SEC: f64 = 1e8;
+
+    pub fn from_run(
+        subs: &[SubposteriorSamples],
+        combine_secs: f64,
+    ) -> ClusterTiming {
+        let sampling_secs = subs
+            .iter()
+            .map(|s| s.wall_secs)
+            .fold(0.0, f64::max);
+        let scalars: usize = subs
+            .iter()
+            .map(|s| s.samples.len() * s.samples.dim())
+            .sum();
+        ClusterTiming {
+            sampling_secs,
+            transfer_secs: scalars as f64 / Self::SCALARS_PER_SEC,
+            combine_secs,
+        }
+    }
+
+    /// Total modeled wall-clock.
+    pub fn total_secs(&self) -> f64 {
+        self.sampling_secs + self.transfer_secs + self.combine_secs
+    }
+}
+
+/// Error-vs-time protocol support: the set of draws from one machine
+/// that were available within `budget` seconds of sampling.
+pub fn draws_within(
+    sub: &SubposteriorSamples,
+    budget: f64,
+) -> crate::types::SampleMatrix {
+    let mut out = crate::types::SampleMatrix::new(sub.samples.dim());
+    for (i, &t) in sub.draw_times.iter().enumerate() {
+        if t <= budget {
+            out.push(sub.samples.row(i));
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::SampleMatrix;
+
+    fn fake_sub(machine: usize, wall: f64, n: usize) -> SubposteriorSamples {
+        let mut samples = SampleMatrix::new(2);
+        let mut draw_times = Vec::new();
+        for i in 0..n {
+            samples.push(&[i as f64, 0.0]);
+            draw_times.push(wall * (i + 1) as f64 / n as f64);
+        }
+        SubposteriorSamples {
+            machine,
+            samples,
+            accept_rate: 1.0,
+            wall_secs: wall,
+            draw_times,
+        }
+    }
+
+    #[test]
+    fn sampling_time_is_max_over_workers() {
+        let subs = vec![fake_sub(0, 2.0, 10), fake_sub(1, 5.0, 10)];
+        let t = ClusterTiming::from_run(&subs, 0.5);
+        assert!((t.sampling_secs - 5.0).abs() < 1e-12);
+        assert!((t.total_secs() - (5.0 + t.transfer_secs + 0.5)).abs() < 1e-12);
+        // 20 draws × 2 dims = 40 scalars.
+        assert!((t.transfer_secs - 40.0 / ClusterTiming::SCALARS_PER_SEC).abs() < 1e-18);
+    }
+
+    #[test]
+    fn draws_within_budget_prefix() {
+        let sub = fake_sub(0, 10.0, 10); // draws at 1,2,…,10s
+        assert_eq!(draws_within(&sub, 3.5).len(), 3);
+        assert_eq!(draws_within(&sub, 0.5).len(), 0);
+        assert_eq!(draws_within(&sub, 100.0).len(), 10);
+    }
+}

@@ -1,0 +1,167 @@
+//! CSV I/O for sample matrices and experiment result tables.
+
+use crate::error::{Error, Result};
+use crate::types::SampleMatrix;
+use std::io::Write;
+use std::path::Path;
+
+/// Write a sample matrix as CSV with `d0,d1,...` headers.
+pub fn write_samples_csv(path: &Path, samples: &SampleMatrix) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let header: Vec<String> =
+        (0..samples.dim()).map(|j| format!("d{j}")).collect();
+    writeln!(f, "{}", header.join(","))?;
+    for row in samples.rows() {
+        let line: Vec<String> = row.iter().map(|v| format!("{v:.9e}")).collect();
+        writeln!(f, "{}", line.join(","))?;
+    }
+    Ok(())
+}
+
+/// Read a CSV written by [`write_samples_csv`] (header required).
+pub fn read_samples_csv(path: &Path) -> Result<SampleMatrix> {
+    let text = std::fs::read_to_string(path)?;
+    let mut lines = text.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::Parse("empty csv".into()))?;
+    let dim = header.split(',').count();
+    let mut out = SampleMatrix::new(dim);
+    let mut buf = vec![0.0; dim];
+    for (ln, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut count = 0;
+        for (j, tok) in line.split(',').enumerate() {
+            if j >= dim {
+                return Err(Error::Parse(format!("line {}: too many fields", ln + 2)));
+            }
+            buf[j] = tok.trim().parse().map_err(|_| {
+                Error::Parse(format!("line {}: bad float '{tok}'", ln + 2))
+            })?;
+            count += 1;
+        }
+        if count != dim {
+            return Err(Error::Parse(format!("line {}: expected {dim} fields", ln + 2)));
+        }
+        out.push(&buf);
+    }
+    Ok(out)
+}
+
+/// Generic row-oriented results table (e.g. error-vs-time curves).
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+    /// Optional string tag per row (e.g. method name).
+    pub tags: Vec<String>,
+}
+
+impl Table {
+    pub fn new(columns: &[&str]) -> Self {
+        Table {
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            tags: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, tag: &str, row: Vec<f64>) {
+        assert_eq!(row.len(), self.columns.len());
+        self.rows.push(row);
+        self.tags.push(tag.to_string());
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "tag,{}", self.columns.join(","))?;
+        for (tag, row) in self.tags.iter().zip(&self.rows) {
+            let line: Vec<String> =
+                row.iter().map(|v| format!("{v:.6e}")).collect();
+            writeln!(f, "{tag},{}", line.join(","))?;
+        }
+        Ok(())
+    }
+
+    /// Render as an aligned markdown table (for EXPERIMENTS.md).
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        s.push_str("| tag |");
+        for c in &self.columns {
+            s.push_str(&format!(" {c} |"));
+        }
+        s.push('\n');
+        s.push_str("|---|");
+        for _ in &self.columns {
+            s.push_str("---|");
+        }
+        s.push('\n');
+        for (tag, row) in self.tags.iter().zip(&self.rows) {
+            s.push_str(&format!("| {tag} |"));
+            for v in row {
+                s.push_str(&format!(" {v:.4} |"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_csv_roundtrip() {
+        let dir = std::env::temp_dir().join("repro_io_test");
+        let path = dir.join("s.csv");
+        let mut s = SampleMatrix::new(3);
+        s.push(&[1.0, -2.5, 3.25]);
+        s.push(&[0.125, 7.0, -0.0625]);
+        write_samples_csv(&path, &s).unwrap();
+        let back = read_samples_csv(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        for i in 0..2 {
+            for j in 0..3 {
+                assert!((back.row(i)[j] - s.row(i)[j]).abs() < 1e-12);
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_rejects_bad_rows() {
+        let dir = std::env::temp_dir().join("repro_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "d0,d1\n1.0,2.0\n3.0\n").unwrap();
+        assert!(read_samples_csv(&path).is_err());
+        std::fs::write(&path, "d0\nnot_a_number\n").unwrap();
+        assert!(read_samples_csv(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn table_markdown_and_csv() {
+        let mut t = Table::new(&["time", "error"]);
+        t.push("parametric", vec![1.0, 0.25]);
+        t.push("nonparametric", vec![2.0, 0.125]);
+        let md = t.to_markdown();
+        assert!(md.contains("| parametric |"));
+        assert!(md.contains("error"));
+        let dir = std::env::temp_dir().join("repro_io_test3");
+        let path = dir.join("t.csv");
+        t.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("tag,time,error"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,197 @@
+//! Datasets: synthetic generators for every paper experiment, a
+//! covtype-like generator (substitute for the real 581k×54 dataset — see
+//! DESIGN.md §3), and CSV I/O for experiment outputs.
+
+pub mod io;
+pub mod synth;
+
+use crate::error::{Error, Result};
+use crate::model::{
+    GaussianMean, GmmMeans, LinearRegression, LogDensity, LogisticRegression,
+    PoissonGamma,
+};
+use crate::types::SampleMatrix;
+
+/// A dataset plus the metadata needed to build subposterior models.
+#[derive(Debug, Clone)]
+pub enum Dataset {
+    /// Gaussian mean estimation: observations + known likelihood precision.
+    Gaussian { x: SampleMatrix, lik_prec: f64, prior_prec: f64 },
+    /// Logistic regression: design matrix + labels.
+    Logistic { x: SampleMatrix, y: Vec<f64>, prior_prec: f64 },
+    /// GMM over means: observations + known log-weights and 1/σ².
+    Gmm {
+        x: SampleMatrix,
+        logw: Vec<f64>,
+        inv_var: f64,
+        prior_prec: f64,
+    },
+    /// Poisson-gamma: counts + exposures + prior hyperparameters.
+    PoissonGamma {
+        xs: Vec<f64>,
+        ts: Vec<f64>,
+        lam: f64,
+        alpha: f64,
+        beta_p: f64,
+    },
+    /// Linear regression: design + responses + known noise precision.
+    LinReg {
+        x: SampleMatrix,
+        y: Vec<f64>,
+        lik_prec: f64,
+        prior_prec: f64,
+    },
+}
+
+impl Dataset {
+    /// Number of observations.
+    pub fn len(&self) -> usize {
+        match self {
+            Dataset::Gaussian { x, .. } => x.len(),
+            Dataset::Logistic { x, .. } => x.len(),
+            Dataset::Gmm { x, .. } => x.len(),
+            Dataset::PoissonGamma { xs, .. } => xs.len(),
+            Dataset::LinReg { x, .. } => x.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Dimension of the *parameter* θ.
+    pub fn param_dim(&self) -> usize {
+        match self {
+            Dataset::Gaussian { x, .. } => x.dim(),
+            Dataset::Logistic { x, .. } => x.dim(),
+            Dataset::Gmm { x, logw, .. } => x.dim() * logw.len(),
+            Dataset::PoissonGamma { .. } => 2,
+            Dataset::LinReg { x, .. } => x.dim(),
+        }
+    }
+
+    /// Model name matching [`crate::config::PipelineConfig::model`].
+    pub fn model_name(&self) -> &'static str {
+        match self {
+            Dataset::Gaussian { .. } => "gaussian",
+            Dataset::Logistic { .. } => "logistic",
+            Dataset::Gmm { .. } => "gmm",
+            Dataset::PoissonGamma { .. } => "poisson_gamma",
+            Dataset::LinReg { .. } => "linreg",
+        }
+    }
+
+    /// Build the subposterior model for the observation subset `idx`
+    /// with prior weight `prior_w = 1/M` (Eq. 2.1). `prior_w = 1` with
+    /// all indices gives the full-data posterior.
+    pub fn subposterior(
+        &self,
+        idx: &[usize],
+        prior_w: f64,
+    ) -> Result<Box<dyn LogDensity>> {
+        if idx.is_empty() {
+            return Err(Error::Config("empty shard".into()));
+        }
+        match self {
+            Dataset::Gaussian { x, lik_prec, prior_prec } => {
+                let shard = select_rows(x, idx)?;
+                Ok(Box::new(GaussianMean::new(
+                    shard, *lik_prec, *prior_prec, prior_w,
+                )))
+            }
+            Dataset::Logistic { x, y, prior_prec } => {
+                let xs = select_rows(x, idx)?;
+                let ys = idx.iter().map(|&i| y[i]).collect();
+                Ok(Box::new(LogisticRegression::new(
+                    xs, ys, *prior_prec, prior_w,
+                )))
+            }
+            Dataset::Gmm { x, logw, inv_var, prior_prec } => {
+                let shard = select_rows(x, idx)?;
+                Ok(Box::new(GmmMeans::new(
+                    shard,
+                    logw.clone(),
+                    *inv_var,
+                    *prior_prec,
+                    prior_w,
+                )))
+            }
+            Dataset::PoissonGamma { xs, ts, lam, alpha, beta_p } => {
+                let xsub = idx.iter().map(|&i| xs[i]).collect();
+                let tsub = idx.iter().map(|&i| ts[i]).collect();
+                Ok(Box::new(PoissonGamma::new(
+                    xsub, tsub, prior_w, *lam, *alpha, *beta_p,
+                )))
+            }
+            Dataset::LinReg { x, y, lik_prec, prior_prec } => {
+                let xs = select_rows(x, idx)?;
+                let ys = idx.iter().map(|&i| y[i]).collect();
+                Ok(Box::new(LinearRegression::new(
+                    xs, ys, *lik_prec, *prior_prec, prior_w,
+                )))
+            }
+        }
+    }
+
+    /// Full-data posterior model (all observations, unpowered prior).
+    pub fn full_posterior(&self) -> Result<Box<dyn LogDensity>> {
+        let idx: Vec<usize> = (0..self.len()).collect();
+        self.subposterior(&idx, 1.0)
+    }
+}
+
+/// Extract rows by index.
+pub fn select_rows(x: &SampleMatrix, idx: &[usize]) -> Result<SampleMatrix> {
+    let mut out = SampleMatrix::with_capacity(x.dim(), idx.len());
+    for &i in idx {
+        if i >= x.len() {
+            return Err(Error::Shape(format!(
+                "row index {i} out of range ({})",
+                x.len()
+            )));
+        }
+        out.push(x.row(i));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subposterior_factory_all_models() {
+        let g = synth::gaussian(100, 2, 1);
+        let l = synth::logistic(100, 3, 2);
+        let m = synth::gmm(100, 3, 2, 3.0, 3);
+        let p = synth::poisson_gamma(100, 4);
+        let r = synth::linreg(100, 2, 5);
+        let idx: Vec<usize> = (0..50).collect();
+        for ds in [&g, &l, &m, &p, &r] {
+            let sub = ds.subposterior(&idx, 0.5).unwrap();
+            assert_eq!(sub.dim(), ds.param_dim());
+            let mut rng = crate::rng::Pcg64::seed_from(9);
+            let theta = sub.init_point(&mut rng);
+            let (lp, grad) = sub.logp_grad(&theta);
+            assert!(lp.is_finite(), "{}", ds.model_name());
+            assert!(grad.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn empty_shard_rejected() {
+        let g = synth::gaussian(10, 2, 1);
+        assert!(g.subposterior(&[], 0.5).is_err());
+    }
+
+    #[test]
+    fn select_rows_bounds_checked() {
+        let g = match synth::gaussian(10, 2, 1) {
+            Dataset::Gaussian { x, .. } => x,
+            _ => unreachable!(),
+        };
+        assert!(select_rows(&g, &[99]).is_err());
+        let s = select_rows(&g, &[0, 5, 9]).unwrap();
+        assert_eq!(s.len(), 3);
+    }
+}

@@ -1,0 +1,299 @@
+//! Synthetic dataset generators matching the paper's experiments.
+
+use super::Dataset;
+use crate::math::special::sigmoid;
+use crate::rng::Pcg64;
+use crate::types::SampleMatrix;
+
+/// Gaussian mean-estimation data: `x_i ~ N(μ*, I)` with
+/// `μ*_j = 1 + j/10`. Known `lik_prec = 1`, prior `N(0, I/0.1)`.
+pub fn gaussian(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::seed_from(seed);
+    let mu: Vec<f64> = (0..d).map(|j| 1.0 + j as f64 / 10.0).collect();
+    let mut x = SampleMatrix::with_capacity(d, n);
+    let mut row = vec![0.0; d];
+    for _ in 0..n {
+        for j in 0..d {
+            row[j] = mu[j] + rng.normal();
+        }
+        x.push(&row);
+    }
+    Dataset::Gaussian { x, lik_prec: 1.0, prior_prec: 0.1 }
+}
+
+/// The paper's synthetic logistic regression (section 8.1.1): every
+/// element of β and X drawn from a standard normal,
+/// `y_i ~ Bernoulli(logit⁻¹(x_i·β))`. Returns the dataset; the
+/// generating β is deterministic in `seed` via [`logistic_truth`].
+pub fn logistic(n: usize, d: usize, seed: u64) -> Dataset {
+    let (x, y, _) = logistic_raw(n, d, seed);
+    Dataset::Logistic { x, y, prior_prec: 0.01 }
+}
+
+/// Generating parameter of [`logistic`] for the same seed.
+pub fn logistic_truth(d: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::seed_from(seed);
+    (0..d).map(|_| rng.normal()).collect()
+}
+
+fn logistic_raw(
+    n: usize,
+    d: usize,
+    seed: u64,
+) -> (SampleMatrix, Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg64::seed_from(seed);
+    let beta: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let mut x = SampleMatrix::with_capacity(d, n);
+    let mut y = Vec::with_capacity(n);
+    let mut row = vec![0.0; d];
+    for _ in 0..n {
+        let mut z = 0.0;
+        for j in 0..d {
+            row[j] = rng.normal();
+            z += row[j] * beta[j];
+        }
+        y.push(if rng.bernoulli(sigmoid(z)) { 1.0 } else { 0.0 });
+        x.push(&row);
+    }
+    (x, y, beta)
+}
+
+/// Covtype-like logistic data (substitute for the real 581k×54 forest
+/// cover dataset): correlated mixed-scale features — a few dominant
+/// directions plus noise dimensions, mimicking cartographic variables —
+/// and labels from a sparse-ish generating β. Same protocol as the
+/// paper's section 8.1.2 (classification accuracy vs time).
+pub fn covtype_like(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::seed_from(seed);
+    // Sparse generating β: ~25% of coordinates active.
+    let beta: Vec<f64> = (0..d)
+        .map(|_| if rng.bernoulli(0.25) { 2.0 * rng.normal() } else { 0.0 })
+        .collect();
+    // Low-rank factor loadings to correlate features.
+    let rank = (d / 8).max(2);
+    let loadings: Vec<Vec<f64>> = (0..d)
+        .map(|_| (0..rank).map(|_| 0.6 * rng.normal()).collect())
+        .collect();
+    let scales: Vec<f64> =
+        (0..d).map(|_| rng.uniform() * 2.0 + 0.2).collect();
+    let mut x = SampleMatrix::with_capacity(d, n);
+    let mut y = Vec::with_capacity(n);
+    let mut row = vec![0.0; d];
+    let mut factors = vec![0.0; rank];
+    for _ in 0..n {
+        for f in factors.iter_mut() {
+            *f = rng.normal();
+        }
+        let mut z = 0.0;
+        for j in 0..d {
+            let common: f64 =
+                loadings[j].iter().zip(&factors).map(|(l, f)| l * f).sum();
+            row[j] = scales[j] * (common + 0.8 * rng.normal());
+            z += row[j] * beta[j];
+        }
+        // Scale logits to keep classes balanced but separable.
+        y.push(if rng.bernoulli(sigmoid(0.5 * z)) { 1.0 } else { 0.0 });
+        x.push(&row);
+    }
+    Dataset::Logistic { x, y, prior_prec: 0.01 }
+}
+
+/// The paper's GMM experiment (section 8.2): `n` draws from a
+/// `k`-component mixture of `dim`-d Gaussians with equal weights,
+/// isotropic unit-ish variance and well-separated means on a circle of
+/// radius `sep`.
+pub fn gmm(n: usize, k: usize, dim: usize, sep: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg64::seed_from(seed);
+    let means = gmm_true_means(k, dim, sep);
+    let sigma2: f64 = 1.0;
+    let mut x = SampleMatrix::with_capacity(dim, n);
+    let mut row = vec![0.0; dim];
+    for _ in 0..n {
+        let c = rng.uniform_usize(k);
+        for j in 0..dim {
+            row[j] = means[c][j] + sigma2.sqrt() * rng.normal();
+        }
+        x.push(&row);
+    }
+    Dataset::Gmm {
+        x,
+        logw: vec![-(k as f64).ln(); k],
+        inv_var: 1.0 / sigma2,
+        prior_prec: 0.01,
+    }
+}
+
+/// True component means used by [`gmm`] (circle layout in the first two
+/// coordinates, zeros beyond).
+pub fn gmm_true_means(k: usize, dim: usize, sep: f64) -> Vec<Vec<f64>> {
+    (0..k)
+        .map(|c| {
+            let angle = 2.0 * std::f64::consts::PI * c as f64 / k as f64;
+            let mut mu = vec![0.0; dim];
+            mu[0] = sep * angle.cos();
+            if dim > 1 {
+                mu[1] = sep * angle.sin();
+            }
+            mu
+        })
+        .collect()
+}
+
+/// The paper's hierarchical Poisson-gamma data (section 8.3):
+/// `a* = 2, b* = 1.5`, exposures `t_i ~ U(0.5, 1.5)`,
+/// `q_i ~ Gamma(a*, b*)`, `x_i ~ Poisson(q_i t_i)`.
+pub fn poisson_gamma(n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::seed_from(seed);
+    let (a, b) = (2.0, 1.5);
+    let mut xs = Vec::with_capacity(n);
+    let mut ts = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t = rng.uniform_range(0.5, 1.5);
+        let q = rng.gamma(a, b);
+        xs.push(rng.poisson(q * t) as f64);
+        ts.push(t);
+    }
+    Dataset::PoissonGamma { xs, ts, lam: 1.0, alpha: 2.0, beta_p: 1.0 }
+}
+
+/// Linear regression with known noise: X ~ N(0, I) with mild
+/// collinearity, `y = Xβ* + ε`, `ε ~ N(0, 0.5²)`.
+pub fn linreg(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::seed_from(seed);
+    let beta: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let mut x = SampleMatrix::with_capacity(d, n);
+    let mut y = Vec::with_capacity(n);
+    let mut row = vec![0.0; d];
+    for _ in 0..n {
+        let shared = rng.normal();
+        let mut z = 0.0;
+        for j in 0..d {
+            row[j] = 0.3 * shared + rng.normal();
+            z += row[j] * beta[j];
+        }
+        y.push(z + 0.5 * rng.normal());
+        x.push(&row);
+    }
+    Dataset::LinReg { x, y, lik_prec: 4.0, prior_prec: 1.0 }
+}
+
+/// Train/test split by index (deterministic shuffle).
+pub fn train_test_split(
+    n: usize,
+    test_frac: f64,
+    seed: u64,
+) -> (Vec<usize>, Vec<usize>) {
+    assert!((0.0..1.0).contains(&test_frac));
+    let mut rng = Pcg64::seed_from(seed);
+    let perm = rng.permutation(n);
+    let n_test = (n as f64 * test_frac) as usize;
+    let test = perm[..n_test].to_vec();
+    let train = perm[n_test..].to_vec();
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logistic_labels_binary_and_balanced_ish() {
+        let ds = logistic(5000, 10, 1);
+        if let Dataset::Logistic { y, .. } = &ds {
+            assert!(y.iter().all(|&v| v == 0.0 || v == 1.0));
+            let ones = y.iter().sum::<f64>() / y.len() as f64;
+            assert!((0.3..0.7).contains(&ones), "ones frac {ones}");
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn logistic_truth_matches_generation_seed() {
+        let ds = logistic(2000, 4, 9);
+        let beta = logistic_truth(4, 9);
+        // Labels must correlate with x·β sign.
+        if let Dataset::Logistic { x, y, .. } = &ds {
+            let mut agree = 0usize;
+            for (row, &yi) in x.rows().zip(y) {
+                let z: f64 = row.iter().zip(&beta).map(|(a, b)| a * b).sum();
+                if (z > 0.0) == (yi == 1.0) {
+                    agree += 1;
+                }
+            }
+            let frac = agree as f64 / y.len() as f64;
+            // Bernoulli noise caps attainable agreement well below 1.
+            assert!(frac > 0.6, "agreement {frac}");
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn gmm_data_clusters_near_true_means() {
+        let ds = gmm(3000, 4, 2, 6.0, 2);
+        let means = gmm_true_means(4, 2, 6.0);
+        if let Dataset::Gmm { x, .. } = &ds {
+            // Every point should be within ~4σ of some component mean.
+            let mut far = 0usize;
+            for row in x.rows() {
+                let near = means.iter().any(|mu| {
+                    crate::math::linalg::sq_dist(row, mu) < 16.0
+                });
+                if !near {
+                    far += 1;
+                }
+            }
+            assert!(far < 30, "{far} far points");
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn poisson_gamma_counts_nonnegative() {
+        let ds = poisson_gamma(2000, 3);
+        if let Dataset::PoissonGamma { xs, ts, .. } = &ds {
+            assert!(xs.iter().all(|&x| x >= 0.0 && x.fract() == 0.0));
+            assert!(ts.iter().all(|&t| (0.5..1.5).contains(&t)));
+            // Mean count ≈ E[q]·E[t] = (a/b)·1 = 4/3.
+            let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+            assert!((mean - 4.0 / 3.0).abs() < 0.15, "mean {mean}");
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn covtype_like_shapes() {
+        let ds = covtype_like(1000, 54, 4);
+        assert_eq!(ds.len(), 1000);
+        assert_eq!(ds.param_dim(), 54);
+        if let Dataset::Logistic { y, .. } = &ds {
+            let ones = y.iter().sum::<f64>() / y.len() as f64;
+            assert!((0.2..0.8).contains(&ones), "ones frac {ones}");
+        }
+    }
+
+    #[test]
+    fn split_is_partition() {
+        let (train, test) = train_test_split(100, 0.2, 5);
+        assert_eq!(train.len() + test.len(), 100);
+        let mut seen = vec![false; 100];
+        for &i in train.iter().chain(&test) {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = gaussian(50, 2, 7);
+        let b = gaussian(50, 2, 7);
+        if let (Dataset::Gaussian { x: xa, .. }, Dataset::Gaussian { x: xb, .. }) =
+            (&a, &b)
+        {
+            assert_eq!(xa.as_slice(), xb.as_slice());
+        }
+    }
+}

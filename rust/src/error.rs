@@ -1,0 +1,60 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Errors produced anywhere in the library.
+#[derive(Debug)]
+pub enum Error {
+    /// Shape/dimension mismatch in a numeric routine.
+    Shape(String),
+    /// Matrix is not positive definite (Cholesky failure etc.).
+    NotPosDef(String),
+    /// Invalid configuration or argument.
+    Config(String),
+    /// Artifact manifest / runtime problems.
+    Runtime(String),
+    /// Underlying XLA/PJRT error.
+    Xla(String),
+    /// I/O error.
+    Io(std::io::Error),
+    /// JSON / config parse error (manifest, CLI, config files).
+    Parse(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::NotPosDef(m) => write!(f, "matrix not positive definite: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Shorthand for `Error::Shape` with formatting.
+#[macro_export]
+macro_rules! shape_err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::Shape(format!($($arg)*))
+    };
+}

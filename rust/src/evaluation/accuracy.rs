@@ -1,0 +1,83 @@
+//! Posterior-predictive classification accuracy (paper section 8.1.2).
+//!
+//! `P(y | x, data) ≈ (1/S) Σ_s P(y | x, β_s)` over posterior draws β_s;
+//! a point is classified 1 when the predictive probability exceeds 1/2.
+
+use crate::math::linalg::dot;
+use crate::math::special::sigmoid;
+use crate::types::SampleMatrix;
+
+/// Mean predictive probability `P(y=1|x)` for each test row.
+pub fn predictive_probs(
+    draws: &SampleMatrix,
+    x_test: &SampleMatrix,
+) -> Vec<f64> {
+    assert_eq!(draws.dim(), x_test.dim(), "β/x dim mismatch");
+    let s = draws.len().max(1) as f64;
+    x_test
+        .rows()
+        .map(|x| {
+            draws.rows().map(|b| sigmoid(dot(x, b))).sum::<f64>() / s
+        })
+        .collect()
+}
+
+/// Classification accuracy of the posterior predictive on a test set.
+pub fn classification_accuracy(
+    draws: &SampleMatrix,
+    x_test: &SampleMatrix,
+    y_test: &[f64],
+) -> f64 {
+    assert_eq!(x_test.len(), y_test.len());
+    let probs = predictive_probs(draws, x_test);
+    let correct = probs
+        .iter()
+        .zip(y_test)
+        .filter(|(&p, &y)| (p > 0.5) == (y == 1.0))
+        .count();
+    correct as f64 / y_test.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth, Dataset};
+
+    #[test]
+    fn true_beta_scores_high_accuracy() {
+        let ds = synth::logistic(4000, 6, 1);
+        let beta = synth::logistic_truth(6, 1);
+        if let Dataset::Logistic { x, y, .. } = &ds {
+            let mut draws = SampleMatrix::new(6);
+            draws.push(&beta);
+            let acc = classification_accuracy(&draws, x, y);
+            assert!(acc > 0.75, "accuracy {acc}");
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn zero_beta_is_chance_level() {
+        let ds = synth::logistic(4000, 6, 2);
+        if let Dataset::Logistic { x, y, .. } = &ds {
+            let mut draws = SampleMatrix::new(6);
+            draws.push(&vec![0.0; 6]);
+            let acc = classification_accuracy(&draws, x, y);
+            assert!((acc - 0.5).abs() < 0.15, "accuracy {acc}");
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn averaging_over_draws_smooths_probs() {
+        let mut draws = SampleMatrix::new(1);
+        draws.push(&[10.0]);
+        draws.push(&[-10.0]);
+        let mut x = SampleMatrix::new(1);
+        x.push(&[1.0]);
+        let p = predictive_probs(&draws, &x);
+        assert!((p[0] - 0.5).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation: the paper's L₂ posterior-error metric, posterior
+//! predictive classification accuracy, and moment-error summaries.
+
+pub mod accuracy;
+pub mod l2;
+pub mod moments;
+
+pub use accuracy::classification_accuracy;
+pub use l2::{l2_distance, l2_distance_subsampled};
+pub use moments::{cov_frobenius_error, mean_l2_error};

@@ -1,0 +1,67 @@
+//! Moment-error summaries (secondary metrics; the paper's primary metric
+//! is the L₂ density distance, which moments cannot replace for
+//! multimodal posteriors — section 8, footnote 5).
+
+use crate::types::SampleMatrix;
+
+/// ‖mean(a) − mean(b)‖₂.
+pub fn mean_l2_error(a: &SampleMatrix, b: &SampleMatrix) -> f64 {
+    assert_eq!(a.dim(), b.dim());
+    let ma = a.mean();
+    let mb = b.mean();
+    ma.iter()
+        .zip(&mb)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Frobenius norm of the covariance difference.
+pub fn cov_frobenius_error(a: &SampleMatrix, b: &SampleMatrix) -> f64 {
+    assert_eq!(a.dim(), b.dim());
+    let ca = a.covariance();
+    let cb = b.covariance();
+    let d = a.dim();
+    let mut acc = 0.0;
+    for i in 0..d {
+        for j in 0..d {
+            let r = ca[(i, j)] - cb[(i, j)];
+            acc += r * r;
+        }
+    }
+    acc.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::linalg::Mat;
+    use crate::math::mvn::Mvn;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn zero_for_identical() {
+        let mut rng = Pcg64::seed_from(1);
+        let s = Mvn::new(vec![0.0, 1.0], Mat::identity(2))
+            .unwrap()
+            .sample_n(500, &mut rng);
+        assert_eq!(mean_l2_error(&s, &s), 0.0);
+        assert_eq!(cov_frobenius_error(&s, &s), 0.0);
+    }
+
+    #[test]
+    fn detects_mean_shift_and_scale() {
+        let mut rng = Pcg64::seed_from(2);
+        let a = Mvn::new(vec![0.0], Mat::diag(&[1.0]))
+            .unwrap()
+            .sample_n(20_000, &mut rng);
+        let b = Mvn::new(vec![2.0], Mat::diag(&[1.0]))
+            .unwrap()
+            .sample_n(20_000, &mut rng);
+        let c = Mvn::new(vec![0.0], Mat::diag(&[4.0]))
+            .unwrap()
+            .sample_n(20_000, &mut rng);
+        assert!((mean_l2_error(&a, &b) - 2.0).abs() < 0.05);
+        assert!((cov_frobenius_error(&a, &c) - 3.0).abs() < 0.2);
+    }
+}

@@ -1,0 +1,64 @@
+//! # repro — Asymptotically Exact, Embarrassingly Parallel MCMC
+//!
+//! A rust + JAX/Pallas reproduction of Neiswanger, Wang & Xing (2013),
+//! *Asymptotically Exact, Embarrassingly Parallel MCMC* (arXiv:1311.4780).
+//!
+//! The system partitions `N` i.i.d. observations onto `M` independent
+//! workers; each worker runs any MCMC sampler on its **subposterior**
+//! `p_m(θ) ∝ p(θ)^{1/M} p(x^{n_m}|θ)` with zero communication, and a
+//! leader combines the `M` sample streams into draws from (an estimator
+//! of) the full-data posterior `p_1 ⋯ p_M(θ) ∝ p(θ|x^N)`.
+//!
+//! ## Layering
+//!
+//! * **L3 (this crate)** — coordinator: partitioning ([`coordinator`]),
+//!   parallel workers, streaming, the paper's combination algorithms
+//!   ([`combine`]), the MCMC substrate ([`sampler`]), evaluation and the
+//!   full experiment harness.
+//! * **L2/L1 (python, build-time only)** — JAX subposterior graphs with
+//!   Pallas likelihood kernels, AOT-lowered to HLO text artifacts that
+//!   [`runtime`] loads and executes through the PJRT C API. Python is
+//!   never on the sampling path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use repro::prelude::*;
+//! use repro::combine::CombineMethod;
+//!
+//! // Conjugate Gaussian toy problem: 10k points on 4 machines.
+//! let data = repro::data::synth::gaussian(10_000, 2, 42);
+//! let cfg = PipelineConfig::builder("gaussian")
+//!     .machines(4)
+//!     .samples_per_machine(2_000)
+//!     .method(CombineMethod::Semiparametric)
+//!     .build();
+//! let out = repro::coordinator::pipeline::run_native(&cfg, &data).unwrap();
+//! println!("posterior mean ≈ {:?}", out.combined.mean());
+//! ```
+
+pub mod combine;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod evaluation;
+pub mod math;
+pub mod model;
+pub mod rng;
+pub mod runtime;
+pub mod sampler;
+pub mod stats;
+pub mod types;
+
+/// Convenience re-exports for downstream users.
+pub mod prelude {
+    pub use crate::combine::{self, CombineMethod};
+    pub use crate::config::PipelineConfig;
+    pub use crate::coordinator::pipeline;
+    pub use crate::error::{Error, Result};
+    pub use crate::model::LogDensity;
+    pub use crate::rng::Pcg64;
+    pub use crate::sampler::{Chain, Sampler};
+    pub use crate::types::SampleMatrix;
+}

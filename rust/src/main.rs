@@ -1,0 +1,303 @@
+//! `repro` — embarrassingly parallel MCMC CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   pipeline      run partition → parallel sample → combine end-to-end
+//!   single-chain  run the regularChain baseline
+//!   combine       combine subposterior sample CSVs into posterior draws
+//!   eval          L2 distance between two sample CSVs
+//!   info          inspect an artifact directory
+//!
+//! Examples:
+//!   repro pipeline --model logistic --n 50000 --d 50 --machines 10 \
+//!       --samples 2000 --method semiparametric --out combined.csv
+//!   repro combine --method nonparametric --out post.csv m0.csv m1.csv
+//!   repro eval a.csv b.csv
+//!   repro info --artifacts artifacts
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::process::ExitCode;
+
+use repro::combine::CombineMethod;
+use repro::config::PipelineConfig;
+use repro::coordinator::pipeline;
+use repro::data::{io, synth, Dataset};
+use repro::error::{Error, Result};
+use repro::evaluation::l2_distance_subsampled;
+use repro::types::SampleMatrix;
+
+/// Tiny flag parser: `--key value` pairs plus positional arguments.
+struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = argv.get(i + 1).ok_or_else(|| {
+                    Error::Config(format!("flag --{key} needs a value"))
+                })?;
+                flags.insert(key.to_string(), val.clone());
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Args { flags, positional })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("bad --{key}: {v}"))),
+        }
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("bad --{key}: {v}"))),
+        }
+    }
+}
+
+fn build_dataset(model: &str, n: usize, d: usize, seed: u64) -> Result<Dataset> {
+    Ok(match model {
+        "gaussian" => synth::gaussian(n, d, seed),
+        "logistic" => synth::logistic(n, d, seed),
+        "covtype" => synth::covtype_like(n, d, seed),
+        "gmm" => synth::gmm(n, 10, 2, 5.0, seed),
+        "poisson_gamma" => synth::poisson_gamma(n, seed),
+        "linreg" => synth::linreg(n, d, seed),
+        other => {
+            return Err(Error::Config(format!("unknown model '{other}'")))
+        }
+    })
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let cfg = match args.get("config") {
+        Some(path) => PipelineConfig::from_file(path)?,
+        None => {
+            let model = args.get("model").unwrap_or("gaussian").to_string();
+            let mut b = PipelineConfig::builder(&model)
+                .machines(args.get_usize("machines", 10)?)
+                .samples_per_machine(args.get_usize("samples", 1000)?)
+                .seed(args.get_u64("seed", 42)?);
+            if let Some(m) = args.get("method") {
+                b = b.method(CombineMethod::parse(m)?);
+            }
+            if let Some(t) = args.get("threads") {
+                b = b.threads(t.parse().map_err(|_| {
+                    Error::Config(format!("bad --threads: {t}"))
+                })?);
+            }
+            if args.get("use-runtime") == Some("true") {
+                b = b.use_runtime(true);
+            }
+            if let Some(d) = args.get("artifacts") {
+                b = b.artifact_dir(d);
+            }
+            b.build()
+        }
+    };
+    let n = args.get_usize("n", 10_000)?;
+    let d = args.get_usize("d", 10)?;
+    let data = build_dataset(&cfg.model, n, d, cfg.seed)?;
+    eprintln!(
+        "pipeline: model={} n={} d={} M={} T={} method={}",
+        cfg.model,
+        n,
+        data.param_dim(),
+        cfg.machines,
+        cfg.samples_per_machine,
+        cfg.method.name()
+    );
+    let out = if cfg.use_runtime {
+        run_runtime_pipeline(&cfg, &data)?
+    } else {
+        pipeline::run_native(&cfg, &data)?
+    };
+    eprintln!("{}", out.metrics);
+    eprintln!(
+        "cluster-time model: sampling={:.3}s transfer={:.6}s combine={:.3}s",
+        out.timing.sampling_secs, out.timing.transfer_secs, out.timing.combine_secs
+    );
+    let mean = out.combined.mean();
+    let show = mean.len().min(8);
+    eprintln!("posterior mean (first {show} dims): {:?}", &mean[..show]);
+    if let Some(path) = args.get("out") {
+        io::write_samples_csv(Path::new(path), &out.combined)?;
+        eprintln!("wrote {} draws to {path}", out.combined.len());
+    }
+    Ok(())
+}
+
+/// PJRT-runtime pipeline: subposteriors evaluated through compiled
+/// artifacts (sequential workers; see pipeline::run_sequential docs).
+fn run_runtime_pipeline(
+    cfg: &PipelineConfig,
+    data: &Dataset,
+) -> Result<pipeline::PipelineOutput> {
+    use repro::coordinator::partition::Partitioner;
+    use repro::model::LogDensity;
+    use repro::runtime::{RuntimeClient, XlaDensity};
+    let client = RuntimeClient::cpu(Path::new(&cfg.artifact_dir))?;
+    eprintln!("runtime: platform={}", client.platform());
+    let shards =
+        Partitioner::Contiguous.split(data.len(), cfg.machines, cfg.seed)?;
+    let prior_w = 1.0 / cfg.machines as f64;
+    let models: Vec<Box<dyn LogDensity>> = shards
+        .iter()
+        .map(|idx| {
+            let xd = XlaDensity::from_shard(&client, data, idx, prior_w)?;
+            eprintln!("  machine: {xd:?}");
+            Ok(Box::new(xd) as Box<dyn LogDensity>)
+        })
+        .collect::<Result<_>>()?;
+    pipeline::run_sequential(cfg, models)
+}
+
+fn cmd_single_chain(args: &Args) -> Result<()> {
+    let model = args.get("model").unwrap_or("gaussian");
+    let n = args.get_usize("n", 10_000)?;
+    let d = args.get_usize("d", 10)?;
+    let seed = args.get_u64("seed", 42)?;
+    let cfg = PipelineConfig::builder(model)
+        .machines(1)
+        .samples_per_machine(args.get_usize("samples", 1000)?)
+        .seed(seed)
+        .build();
+    let data = build_dataset(model, n, d, seed)?;
+    let out = pipeline::run_single_chain(&cfg, &data)?;
+    eprintln!(
+        "single chain: {} draws, accept={:.3}, {:.3}s",
+        out.samples.len(),
+        out.accept_rate,
+        out.wall_secs
+    );
+    if let Some(path) = args.get("out") {
+        io::write_samples_csv(Path::new(path), &out.samples)?;
+    }
+    Ok(())
+}
+
+fn cmd_combine(args: &Args) -> Result<()> {
+    if args.positional.is_empty() {
+        return Err(Error::Config(
+            "combine needs subposterior CSV paths".into(),
+        ));
+    }
+    let sets: Vec<SampleMatrix> = args
+        .positional
+        .iter()
+        .map(|p| io::read_samples_csv(Path::new(p)))
+        .collect::<Result<_>>()?;
+    let refs: Vec<&SampleMatrix> = sets.iter().collect();
+    let method =
+        CombineMethod::parse(args.get("method").unwrap_or("semiparametric"))?;
+    let t_out = args.get_usize("t", refs[0].len())?;
+    let seed = args.get_u64("seed", 42)?;
+    let combined = repro::combine::combine_sets(method, &refs, t_out, seed)?;
+    eprintln!(
+        "combined {} machines → {} draws via {}",
+        refs.len(),
+        combined.len(),
+        method.name()
+    );
+    let out = args.get("out").unwrap_or("combined.csv");
+    io::write_samples_csv(Path::new(out), &combined)?;
+    eprintln!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    if args.positional.len() != 2 {
+        return Err(Error::Config("eval needs exactly two CSV paths".into()));
+    }
+    let a = io::read_samples_csv(Path::new(&args.positional[0]))?;
+    let b = io::read_samples_csv(Path::new(&args.positional[1]))?;
+    let cap = args.get_usize("subsample", 500)?;
+    println!("{:.6e}", l2_distance_subsampled(&a, &b, cap));
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let manifest = repro::runtime::Manifest::load(Path::new(dir))?;
+    println!("{} artifacts in {dir}:", manifest.artifacts.len());
+    for a in &manifest.artifacts {
+        let n = a.param("n").unwrap_or(0);
+        println!(
+            "  {:40} kind={:9} model={:13} n={:6} inputs={} outputs={}",
+            a.name,
+            a.kind,
+            a.model,
+            n,
+            a.inputs.len(),
+            a.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn usage() -> &'static str {
+    "usage: repro <pipeline|single-chain|combine|eval|info> [flags]\n\
+     \n\
+     pipeline      --model M --n N --d D --machines M --samples T \\\n\
+                   --method NAME --seed S [--threads K] [--out FILE] \\\n\
+                   [--use-runtime true --artifacts DIR] [--config FILE]\n\
+     single-chain  --model M --n N --d D --samples T [--out FILE]\n\
+     combine       --method NAME [--t T] [--out FILE] m0.csv m1.csv …\n\
+     eval          [--subsample K] a.csv b.csv\n\
+     info          [--artifacts DIR]"
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        eprintln!("{}", usage());
+        return ExitCode::FAILURE;
+    };
+    let args = match Args::parse(&argv[1..]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", usage());
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd.as_str() {
+        "pipeline" => cmd_pipeline(&args),
+        "single-chain" => cmd_single_chain(&args),
+        "combine" => cmd_combine(&args),
+        "eval" => cmd_eval(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown command '{other}'"))),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,418 @@
+//! Dense row-major matrices + the factorizations the combiners need.
+
+use crate::error::{Error, Result};
+
+/// Dense row-major `rows × cols` matrix of f64.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    data: Vec<f64>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Diagonal matrix from a slice.
+    pub fn diag(d: &[f64]) -> Self {
+        let mut m = Mat::zeros(d.len(), d.len());
+        for (i, &v) in d.iter().enumerate() {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    /// `v * I_n`.
+    pub fn scaled_identity(n: usize, v: f64) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    pub fn from_vec(data: Vec<f64>, rows: usize, cols: usize) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "buffer {} != {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(Mat { data, rows, cols })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// `self + other`.
+    pub fn add(&self, other: &Mat) -> Result<Mat> {
+        self.check_same_shape(other)?;
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Ok(Mat { data, rows: self.rows, cols: self.cols })
+    }
+
+    /// `self * s` (scalar).
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat {
+            data: self.data.iter().map(|v| v * s).collect(),
+            rows: self.rows,
+            cols: self.cols,
+        }
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, v: &[f64]) -> Result<Vec<f64>> {
+        if v.len() != self.cols {
+            return Err(Error::Shape(format!(
+                "matvec: {}x{} * {}",
+                self.rows,
+                self.cols,
+                v.len()
+            )));
+        }
+        let mut out = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            out[i] = dot(self.row(i), v);
+        }
+        Ok(out)
+    }
+
+    /// Matrix-matrix product.
+    pub fn matmul(&self, other: &Mat) -> Result<Mat> {
+        if self.cols != other.rows {
+            return Err(Error::Shape(format!(
+                "matmul: {}x{} * {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] += a * other[(k, j)];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Symmetrize in place: `(A + Aᵀ)/2` — guards against fp drift before
+    /// Cholesky.
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = v;
+                self[(j, i)] = v;
+            }
+        }
+    }
+
+    fn check_same_shape(&self, other: &Mat) -> Result<()> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Err(Error::Shape(format!(
+                "{}x{} vs {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `y += a * x`.
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// Squared euclidean distance.
+#[inline]
+pub fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Lower-triangular Cholesky factor `L` with `L Lᵀ = A`.
+///
+/// `A` must be symmetric positive definite; returns `Error::NotPosDef`
+/// otherwise (with the failing pivot in the message).
+pub fn cholesky(a: &Mat) -> Result<Mat> {
+    if a.rows() != a.cols() {
+        return Err(Error::Shape("cholesky of non-square".into()));
+    }
+    let n = a.rows();
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)];
+            for k in 0..j {
+                sum -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if sum <= 0.0 || !sum.is_finite() {
+                    return Err(Error::NotPosDef(format!(
+                        "pivot {i} = {sum:.3e}"
+                    )));
+                }
+                l[(i, j)] = sum.sqrt();
+            } else {
+                l[(i, j)] = sum / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `L y = b` (forward substitution) for lower-triangular `L`.
+pub fn forward_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * y[k];
+        }
+        y[i] = s / l[(i, i)];
+    }
+    y
+}
+
+/// Solve `Lᵀ x = y` (back substitution) for lower-triangular `L`.
+pub fn backward_solve(l: &Mat, y: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// Solve `A x = b` given the Cholesky factor `L` of `A`.
+pub fn chol_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
+    backward_solve(l, &forward_solve(l, b))
+}
+
+/// Inverse of an SPD matrix via its Cholesky factor.
+pub fn chol_inverse(l: &Mat) -> Mat {
+    let n = l.rows();
+    let mut inv = Mat::zeros(n, n);
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let col = chol_solve(l, &e);
+        for i in 0..n {
+            inv[(i, j)] = col[i];
+        }
+        e[j] = 0.0;
+    }
+    // Clean up symmetry.
+    inv.symmetrize();
+    inv
+}
+
+/// `log det A` from the Cholesky factor of `A`.
+pub fn chol_logdet(l: &Mat) -> f64 {
+    (0..l.rows()).map(|i| l[(i, i)].ln()).sum::<f64>() * 2.0
+}
+
+/// Inverse of an SPD matrix (convenience: factor + invert).
+pub fn spd_inverse(a: &Mat) -> Result<Mat> {
+    Ok(chol_inverse(&cholesky(a)?))
+}
+
+/// Inverse with a diagonal jitter fallback — covariance estimates from
+/// small sample counts can be numerically semidefinite; the paper's
+/// combiners need Σ̂⁻¹ regardless. Jitter grows ×10 from `1e-10·tr/d`
+/// until the factorization succeeds (at most 12 attempts).
+pub fn spd_inverse_jittered(a: &Mat) -> Result<Mat> {
+    match spd_inverse(a) {
+        Ok(m) => Ok(m),
+        Err(_) => {
+            let n = a.rows();
+            let tr: f64 = (0..n).map(|i| a[(i, i)]).sum();
+            let mut jitter = 1e-10 * (tr / n as f64).max(1e-300);
+            for _ in 0..12 {
+                let mut aj = a.clone();
+                for i in 0..n {
+                    aj[(i, i)] += jitter;
+                }
+                if let Ok(m) = spd_inverse(&aj) {
+                    return Ok(m);
+                }
+                jitter *= 10.0;
+            }
+            Err(Error::NotPosDef("jittered inverse failed".into()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd3() -> Mat {
+        // A = B Bᵀ + I for a fixed B — guaranteed SPD.
+        let b = Mat::from_vec(
+            vec![1.0, 2.0, 0.5, -1.0, 0.3, 2.0, 0.7, 0.1, 1.5],
+            3,
+            3,
+        )
+        .unwrap();
+        let mut a = b.matmul(&b.transpose()).unwrap();
+        for i in 0..3 {
+            a[(i, i)] += 1.0;
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        let a = spd3();
+        let l = cholesky(&a).unwrap();
+        let back = l.matmul(&l.transpose()).unwrap();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((back[(i, j)] - a[(i, j)]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(vec![1.0, 2.0, 2.0, 1.0], 2, 2).unwrap();
+        assert!(matches!(cholesky(&a), Err(Error::NotPosDef(_))));
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let a = spd3();
+        let l = cholesky(&a).unwrap();
+        let b = vec![1.0, -2.0, 0.5];
+        let x = chol_solve(&l, &b);
+        let ax = a.matvec(&x).unwrap();
+        for i in 0..3 {
+            assert!((ax[i] - b[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn inverse_times_self_is_identity() {
+        let a = spd3();
+        let inv = spd_inverse(&a).unwrap();
+        let prod = a.matmul(&inv).unwrap();
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod[(i, j)] - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn logdet_matches_2x2() {
+        let a = Mat::from_vec(vec![2.0, 0.3, 0.3, 1.0], 2, 2).unwrap();
+        let l = cholesky(&a).unwrap();
+        let det: f64 = 2.0 * 1.0 - 0.3 * 0.3;
+        assert!((chol_logdet(&l) - det.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jittered_inverse_handles_singular() {
+        // Rank-1 covariance (singular).
+        let a = Mat::from_vec(vec![1.0, 1.0, 1.0, 1.0], 2, 2).unwrap();
+        let inv = spd_inverse_jittered(&a).unwrap();
+        assert!(inv.as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = spd3();
+        let i3 = Mat::identity(3);
+        assert_eq!(a.matmul(&i3).unwrap(), a);
+    }
+
+    #[test]
+    fn matvec_shape_error() {
+        let a = Mat::identity(3);
+        assert!(a.matvec(&[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Mat::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3).unwrap();
+        assert_eq!(m.transpose().transpose(), m);
+    }
+}

@@ -1,0 +1,14 @@
+//! Numeric substrate: dense linear algebra, multivariate normals,
+//! special functions and online moment accumulators.
+//!
+//! The paper's combination stage works with `d × d` covariance matrices
+//! (d ≤ ~100 in all experiments), so a straightforward dense
+//! implementation is the right tool; everything is allocation-conscious
+//! because the IMG hot loop calls into [`mvn`] per proposal.
+
+pub mod linalg;
+pub mod mvn;
+pub mod running;
+pub mod special;
+
+pub use linalg::Mat;

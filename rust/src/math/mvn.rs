@@ -1,0 +1,183 @@
+//! Multivariate normal distribution: log-pdf and sampling.
+//!
+//! Two flavours: a full-covariance [`Mvn`] (pre-factored once, used by the
+//! parametric & semiparametric combiners) and free-function isotropic
+//! helpers (used in the IMG mixture-weight hot loop, where each call must
+//! be allocation-free).
+
+use crate::error::Result;
+use crate::math::linalg::{self, Mat};
+use crate::rng::Pcg64;
+
+const LOG_2PI: f64 = 1.837_877_066_409_345_5;
+
+/// Full-covariance multivariate normal `N(μ, Σ)` with Σ pre-factored.
+#[derive(Debug, Clone)]
+pub struct Mvn {
+    mean: Vec<f64>,
+    /// Lower Cholesky factor of Σ.
+    chol: Mat,
+    /// -0.5 (d log 2π + log det Σ).
+    log_norm: f64,
+}
+
+impl Mvn {
+    /// Build from mean and covariance (factored here; jittered if Σ is
+    /// numerically semidefinite).
+    pub fn new(mean: Vec<f64>, mut cov: Mat) -> Result<Self> {
+        cov.symmetrize();
+        let chol = match linalg::cholesky(&cov) {
+            Ok(l) => l,
+            Err(_) => {
+                // Mirror spd_inverse_jittered: escalate diagonal jitter.
+                let n = cov.rows();
+                let tr: f64 = (0..n).map(|i| cov[(i, i)]).sum();
+                let mut jitter = 1e-10 * (tr / n as f64).max(1e-300);
+                let mut found = None;
+                for _ in 0..12 {
+                    let mut c = cov.clone();
+                    for i in 0..n {
+                        c[(i, i)] += jitter;
+                    }
+                    if let Ok(l) = linalg::cholesky(&c) {
+                        found = Some(l);
+                        break;
+                    }
+                    jitter *= 10.0;
+                }
+                found.ok_or_else(|| {
+                    crate::error::Error::NotPosDef("mvn covariance".into())
+                })?
+            }
+        };
+        let d = mean.len() as f64;
+        let log_norm = -0.5 * (d * LOG_2PI + linalg::chol_logdet(&chol));
+        Ok(Mvn { mean, chol, log_norm })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    pub fn mean(&self) -> &[f64] {
+        &self.mean
+    }
+
+    /// Log density at `x`.
+    pub fn logpdf(&self, x: &[f64]) -> f64 {
+        let resid: Vec<f64> =
+            x.iter().zip(&self.mean).map(|(a, b)| a - b).collect();
+        let y = linalg::forward_solve(&self.chol, &resid);
+        self.log_norm - 0.5 * linalg::dot(&y, &y)
+    }
+
+    /// Draw one sample: μ + L z, z ~ N(0, I).
+    pub fn sample(&self, rng: &mut Pcg64) -> Vec<f64> {
+        let d = self.dim();
+        let z: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let mut out = self.mean.clone();
+        for i in 0..d {
+            for k in 0..=i {
+                out[i] += self.chol[(i, k)] * z[k];
+            }
+        }
+        out
+    }
+
+    /// Draw `n` samples as a [`crate::types::SampleMatrix`].
+    pub fn sample_n(
+        &self,
+        n: usize,
+        rng: &mut Pcg64,
+    ) -> crate::types::SampleMatrix {
+        let mut out = crate::types::SampleMatrix::with_capacity(self.dim(), n);
+        for _ in 0..n {
+            out.push(&self.sample(rng));
+        }
+        out
+    }
+}
+
+/// Isotropic normal log-pdf: `log N(x | mu, var · I)` — allocation free.
+#[inline]
+pub fn iso_logpdf(x: &[f64], mu: &[f64], var: f64) -> f64 {
+    let d = x.len() as f64;
+    let sq = linalg::sq_dist(x, mu);
+    -0.5 * (d * (LOG_2PI + var.ln()) + sq / var)
+}
+
+/// Isotropic normal log-pdf with `mu = 0`.
+#[inline]
+pub fn iso_logpdf_zero_mean(x: &[f64], var: f64) -> f64 {
+    let d = x.len() as f64;
+    let sq: f64 = x.iter().map(|v| v * v).sum();
+    -0.5 * (d * (LOG_2PI + var.ln()) + sq / var)
+}
+
+/// Scalar normal log-pdf.
+#[inline]
+pub fn norm_logpdf(x: f64, mu: f64, var: f64) -> f64 {
+    let r = x - mu;
+    -0.5 * (LOG_2PI + var.ln() + r * r / var)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logpdf_matches_scalar_formula() {
+        let m = Mvn::new(vec![1.0], Mat::diag(&[4.0])).unwrap();
+        let want = norm_logpdf(2.0, 1.0, 4.0);
+        assert!((m.logpdf(&[2.0]) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logpdf_standard_2d_at_origin() {
+        let m = Mvn::new(vec![0.0, 0.0], Mat::identity(2)).unwrap();
+        assert!((m.logpdf(&[0.0, 0.0]) + LOG_2PI).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iso_matches_full() {
+        let mu = vec![0.3, -0.7, 1.1];
+        let var = 0.64;
+        let m = Mvn::new(mu.clone(), Mat::scaled_identity(3, var)).unwrap();
+        let x = [0.1, 0.2, -0.5];
+        assert!((m.logpdf(&x) - iso_logpdf(&x, &mu, var)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn correlated_logpdf_known_value() {
+        // 2-d with rho = 0.5, unit variances.
+        let cov = Mat::from_vec(vec![1.0, 0.5, 0.5, 1.0], 2, 2).unwrap();
+        let m = Mvn::new(vec![0.0, 0.0], cov).unwrap();
+        // log N([1,1]) = -log(2π√(1-ρ²)) - (x² - 2ρxy + y²)/(2(1-ρ²))
+        let rho: f64 = 0.5;
+        let det: f64 = 1.0 - rho * rho;
+        let quad = (1.0 - 2.0 * rho + 1.0) / det;
+        let want = -LOG_2PI - 0.5 * det.ln() - 0.5 * quad;
+        assert!((m.logpdf(&[1.0, 1.0]) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampling_recovers_moments() {
+        let cov = Mat::from_vec(vec![2.0, 0.8, 0.8, 1.0], 2, 2).unwrap();
+        let m = Mvn::new(vec![3.0, -1.0], cov).unwrap();
+        let mut rng = Pcg64::seed_from(7);
+        let s = m.sample_n(20_000, &mut rng);
+        let mean = s.mean();
+        assert!((mean[0] - 3.0).abs() < 0.05, "mean0 {}", mean[0]);
+        assert!((mean[1] + 1.0).abs() < 0.05, "mean1 {}", mean[1]);
+        let c = s.covariance();
+        assert!((c[(0, 0)] - 2.0).abs() < 0.1);
+        assert!((c[(0, 1)] - 0.8).abs() < 0.05);
+    }
+
+    #[test]
+    fn semidefinite_covariance_is_jittered() {
+        let cov = Mat::from_vec(vec![1.0, 1.0, 1.0, 1.0], 2, 2).unwrap();
+        let m = Mvn::new(vec![0.0, 0.0], cov).unwrap();
+        assert!(m.logpdf(&[0.5, 0.5]).is_finite());
+    }
+}

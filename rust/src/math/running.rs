@@ -1,0 +1,175 @@
+//! Online (Welford) mean/covariance accumulators.
+//!
+//! The paper (section 4, footnote 3) notes the parametric/semiparametric
+//! combiners can update their Gaussian parameters *online* as subposterior
+//! samples stream in; this module is that accumulator.
+
+use crate::math::linalg::Mat;
+
+/// Streaming mean + covariance over d-dimensional draws (Welford update).
+#[derive(Debug, Clone)]
+pub struct RunningMoments {
+    dim: usize,
+    count: usize,
+    mean: Vec<f64>,
+    /// Upper-triangular packed sum of outer products of deviations (M2).
+    m2: Mat,
+}
+
+impl RunningMoments {
+    pub fn new(dim: usize) -> Self {
+        RunningMoments {
+            dim,
+            count: 0,
+            mean: vec![0.0; dim],
+            m2: Mat::zeros(dim, dim),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Fold in one draw.
+    pub fn push(&mut self, x: &[f64]) {
+        assert_eq!(x.len(), self.dim);
+        self.count += 1;
+        let n = self.count as f64;
+        // delta = x - mean; mean += delta / n; m2 += delta ⊗ (x - mean_new)
+        let delta: Vec<f64> =
+            x.iter().zip(&self.mean).map(|(a, b)| a - b).collect();
+        for i in 0..self.dim {
+            self.mean[i] += delta[i] / n;
+        }
+        for i in 0..self.dim {
+            let d2i = x[i] - self.mean[i];
+            for j in 0..self.dim {
+                self.m2[(i, j)] += delta[j] * d2i;
+            }
+        }
+    }
+
+    pub fn mean(&self) -> &[f64] {
+        &self.mean
+    }
+
+    /// Unbiased covariance (requires ≥ 2 draws).
+    pub fn covariance(&self) -> Mat {
+        assert!(self.count >= 2, "need at least 2 draws for covariance");
+        let mut c = self.m2.scale(1.0 / (self.count as f64 - 1.0));
+        c.symmetrize();
+        c
+    }
+
+    /// Merge another accumulator (Chan et al. parallel update).
+    pub fn merge(&mut self, other: &RunningMoments) {
+        assert_eq!(self.dim, other.dim);
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        let na = self.count as f64;
+        let nb = other.count as f64;
+        let n = na + nb;
+        let delta: Vec<f64> = other
+            .mean
+            .iter()
+            .zip(&self.mean)
+            .map(|(b, a)| b - a)
+            .collect();
+        for i in 0..self.dim {
+            for j in 0..self.dim {
+                self.m2[(i, j)] += other.m2[(i, j)]
+                    + delta[i] * delta[j] * na * nb / n;
+            }
+        }
+        for i in 0..self.dim {
+            self.mean[i] += delta[i] * nb / n;
+        }
+        self.count += other.count;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::SampleMatrix;
+
+    fn batch(seed: u64, n: usize, d: usize) -> SampleMatrix {
+        let mut rng = crate::rng::Pcg64::seed_from(seed);
+        let mut s = SampleMatrix::new(d);
+        for _ in 0..n {
+            let row: Vec<f64> =
+                (0..d).map(|j| rng.normal() * (j as f64 + 1.0) + j as f64).collect();
+            s.push(&row);
+        }
+        s
+    }
+
+    #[test]
+    fn matches_batch_moments() {
+        let s = batch(1, 500, 3);
+        let mut rm = RunningMoments::new(3);
+        for row in s.rows() {
+            rm.push(row);
+        }
+        let bm = s.mean();
+        let bc = s.covariance();
+        for i in 0..3 {
+            assert!((rm.mean()[i] - bm[i]).abs() < 1e-10);
+        }
+        let rc = rm.covariance();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((rc[(i, j)] - bc[(i, j)]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_equals_concatenation() {
+        let a = batch(2, 200, 2);
+        let b = batch(3, 350, 2);
+        let mut ra = RunningMoments::new(2);
+        let mut rb = RunningMoments::new(2);
+        for r in a.rows() {
+            ra.push(r);
+        }
+        for r in b.rows() {
+            rb.push(r);
+        }
+        ra.merge(&rb);
+
+        let mut all = a.clone();
+        all.extend(&b).unwrap();
+        let m = all.mean();
+        let c = all.covariance();
+        for i in 0..2 {
+            assert!((ra.mean()[i] - m[i]).abs() < 1e-10);
+            for j in 0..2 {
+                assert!((ra.covariance()[(i, j)] - c[(i, j)]).abs() < 1e-9);
+            }
+        }
+        assert_eq!(ra.count(), 550);
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let a = batch(4, 50, 2);
+        let mut ra = RunningMoments::new(2);
+        for r in a.rows() {
+            ra.push(r);
+        }
+        let before = ra.clone();
+        ra.merge(&RunningMoments::new(2));
+        assert_eq!(ra.count(), before.count());
+        assert_eq!(ra.mean(), before.mean());
+    }
+}

@@ -1,0 +1,168 @@
+//! Conjugate Gaussian mean model — the exactness anchor.
+//!
+//! `x_i ~ N(θ, I/lik_prec)`, `θ ~ N(0, I/prior_prec)`. Both the
+//! subposterior and the full posterior are Gaussian in closed form, so
+//! the combination algorithms can be verified *exactly* (DESIGN.md §6).
+
+use super::{powered_gauss_prior, LogDensity};
+use crate::math::linalg::Mat;
+use crate::math::mvn::Mvn;
+use crate::types::SampleMatrix;
+
+const LOG_2PI: f64 = 1.837_877_066_409_345_5;
+
+/// Gaussian likelihood with unknown mean and known isotropic precision.
+#[derive(Debug, Clone)]
+pub struct GaussianMean {
+    /// Data shard, one observation per row (n × d).
+    data: SampleMatrix,
+    /// Known likelihood precision (1/σ²).
+    pub lik_prec: f64,
+    /// Prior precision τ (prior is N(0, I/τ)).
+    pub prior_prec: f64,
+    /// Prior weight 1/M (Eq. 2.1).
+    pub prior_w: f64,
+    /// Cached Σ_i x_i.
+    sum_x: Vec<f64>,
+}
+
+impl GaussianMean {
+    pub fn new(
+        data: SampleMatrix,
+        lik_prec: f64,
+        prior_prec: f64,
+        prior_w: f64,
+    ) -> Self {
+        assert!(lik_prec > 0.0 && prior_prec > 0.0 && prior_w > 0.0);
+        let d = data.dim();
+        let mut sum_x = vec![0.0; d];
+        for row in data.rows() {
+            for j in 0..d {
+                sum_x[j] += row[j];
+            }
+        }
+        GaussianMean { data, lik_prec, prior_prec, prior_w, sum_x }
+    }
+
+    pub fn n(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Closed-form subposterior `N(μ*, Σ*)`:
+    /// precision `P = n·lik_prec + prior_w·prior_prec`,
+    /// mean `μ* = lik_prec · Σx / P`.
+    pub fn exact_posterior(&self) -> Mvn {
+        let d = self.data.dim();
+        let n = self.data.len() as f64;
+        let prec = n * self.lik_prec + self.prior_w * self.prior_prec;
+        let mean: Vec<f64> =
+            self.sum_x.iter().map(|s| self.lik_prec * s / prec).collect();
+        Mvn::new(mean, Mat::scaled_identity(d, 1.0 / prec)).unwrap()
+    }
+}
+
+impl LogDensity for GaussianMean {
+    fn dim(&self) -> usize {
+        self.data.dim()
+    }
+
+    fn logp_grad(&self, theta: &[f64]) -> (f64, Vec<f64>) {
+        let d = self.data.dim();
+        let n = self.data.len() as f64;
+        // Likelihood: -lik_prec/2 Σ|x_i - θ|² + (nd/2)(log lik_prec - log 2π).
+        // Use Σ|x_i - θ|² = Σ|x_i|² - 2θ·Σx + n|θ|² — O(d) per call after
+        // caching (the data pass happens once in `new`).
+        let mut sq = 0.0;
+        for row in self.data.rows() {
+            for (xi, ti) in row.iter().zip(theta) {
+                let r = xi - ti;
+                sq += r * r;
+            }
+        }
+        let ll = -0.5 * self.lik_prec * sq
+            + 0.5 * n * d as f64 * (self.lik_prec.ln() - LOG_2PI);
+        let mut grad = vec![0.0; d];
+        for j in 0..d {
+            grad[j] = self.lik_prec * (self.sum_x[j] - n * theta[j]);
+        }
+        let lp = powered_gauss_prior(theta, self.prior_w, self.prior_prec, &mut grad);
+        (ll + lp, grad)
+    }
+
+    fn init_point(&self, _rng: &mut crate::rng::Pcg64) -> Vec<f64> {
+        // Start at the data mean — cheap and in the typical set.
+        let n = self.data.len().max(1) as f64;
+        self.sum_x.iter().map(|s| s / n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn toy(seed: u64, n: usize, d: usize) -> GaussianMean {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut s = SampleMatrix::new(d);
+        for _ in 0..n {
+            let row: Vec<f64> = (0..d).map(|_| rng.normal() + 1.5).collect();
+            s.push(&row);
+        }
+        GaussianMean::new(s, 1.0, 0.5, 0.25)
+    }
+
+    #[test]
+    fn grad_matches_finite_diff() {
+        let m = toy(1, 50, 3);
+        let theta = [0.3, -0.2, 0.9];
+        let (_, g) = m.logp_grad(&theta);
+        let eps = 1e-6;
+        for j in 0..3 {
+            let mut tp = theta;
+            tp[j] += eps;
+            let mut tm = theta;
+            tm[j] -= eps;
+            let fd = (m.logp(&tp) - m.logp(&tm)) / (2.0 * eps);
+            assert!((g[j] - fd).abs() < 1e-4, "dim {j}: {} vs {fd}", g[j]);
+        }
+    }
+
+    #[test]
+    fn mode_matches_exact_posterior_mean() {
+        let m = toy(2, 100, 2);
+        let post = m.exact_posterior();
+        // ∇ log p = 0 at the posterior mean.
+        let (_, g) = m.logp_grad(post.mean());
+        assert!(g.iter().all(|v| v.abs() < 1e-8), "grad at mode {g:?}");
+    }
+
+    #[test]
+    fn logp_shape_is_quadratic_around_mode() {
+        let m = toy(3, 80, 2);
+        let post = m.exact_posterior();
+        let mu = post.mean().to_vec();
+        let lp0 = m.logp(&mu);
+        let off: Vec<f64> = mu.iter().map(|v| v + 0.1).collect();
+        assert!(m.logp(&off) < lp0);
+    }
+
+    #[test]
+    fn prior_weight_unity_recovers_full_prior() {
+        // logp(w=1) - logp(w≈0) equals the full prior logpdf.
+        let mut rng = Pcg64::seed_from(4);
+        let mut s = SampleMatrix::new(2);
+        for _ in 0..10 {
+            s.push(&[rng.normal(), rng.normal()]);
+        }
+        let theta = [0.4, -1.0];
+        let m1 = GaussianMean::new(s.clone(), 1.0, 2.0, 1.0);
+        let m0 = GaussianMean::new(s, 1.0, 2.0, 1e-12);
+        let prior = crate::math::mvn::Mvn::new(
+            vec![0.0, 0.0],
+            Mat::scaled_identity(2, 0.5),
+        )
+        .unwrap();
+        let diff = m1.logp(&theta) - m0.logp(&theta);
+        assert!((diff - prior.logpdf(&theta)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,208 @@
+//! Gaussian mixture model over component means (paper section 8.2).
+//!
+//! `x_i ~ Σ_k π_k N(μ_k, σ² I_dim)` with known weights π and known σ².
+//! θ is the flattened (K × dim) mean matrix; the posterior is multimodal
+//! because any permutation of the component labels has equal density.
+//! [`LogDensity::symmetry_move`] applies such a permutation — the paper
+//! permutes labels before each MH step to force the sampler to visit all
+//! K! modes of each mean's marginal.
+
+use super::{powered_gauss_prior, LogDensity};
+use crate::math::special::log_sum_exp;
+use crate::rng::Pcg64;
+use crate::types::SampleMatrix;
+
+const LOG_2PI: f64 = 1.837_877_066_409_345_5;
+
+/// GMM with unknown means, known weights and isotropic variance.
+#[derive(Debug, Clone)]
+pub struct GmmMeans {
+    /// n × dim data shard.
+    x: SampleMatrix,
+    /// Log mixture weights (length K).
+    pub logw: Vec<f64>,
+    /// 1/σ².
+    pub inv_var: f64,
+    pub prior_prec: f64,
+    pub prior_w: f64,
+    /// Probability of applying a label permutation before an MCMC step.
+    pub permute_prob: f64,
+}
+
+impl GmmMeans {
+    pub fn new(
+        x: SampleMatrix,
+        logw: Vec<f64>,
+        inv_var: f64,
+        prior_prec: f64,
+        prior_w: f64,
+    ) -> Self {
+        assert!(inv_var > 0.0 && prior_prec > 0.0 && prior_w > 0.0);
+        assert!(!logw.is_empty());
+        GmmMeans {
+            x,
+            logw,
+            inv_var,
+            prior_prec,
+            prior_w,
+            permute_prob: 1.0,
+        }
+    }
+
+    pub fn n_components(&self) -> usize {
+        self.logw.len()
+    }
+
+    pub fn data_dim(&self) -> usize {
+        self.x.dim()
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.len()
+    }
+}
+
+impl LogDensity for GmmMeans {
+    fn dim(&self) -> usize {
+        self.logw.len() * self.x.dim()
+    }
+
+    fn logp_grad(&self, theta: &[f64]) -> (f64, Vec<f64>) {
+        let k = self.logw.len();
+        let dim = self.x.dim();
+        assert_eq!(theta.len(), k * dim);
+        let log_norm =
+            0.5 * dim as f64 * (LOG_2PI - self.inv_var.ln());
+        let mut ll = 0.0;
+        let mut grad = vec![0.0; k * dim];
+        let mut z = vec![0.0; k];
+        for row in self.x.rows() {
+            for c in 0..k {
+                let mu = &theta[c * dim..(c + 1) * dim];
+                let sq = crate::math::linalg::sq_dist(row, mu);
+                z[c] = self.logw[c] - 0.5 * self.inv_var * sq - log_norm;
+            }
+            let lse = log_sum_exp(&z);
+            ll += lse;
+            for c in 0..k {
+                let r = (z[c] - lse).exp(); // responsibility
+                let mu = &theta[c * dim..(c + 1) * dim];
+                let g = &mut grad[c * dim..(c + 1) * dim];
+                for j in 0..dim {
+                    g[j] += self.inv_var * r * (row[j] - mu[j]);
+                }
+            }
+        }
+        let lp = powered_gauss_prior(theta, self.prior_w, self.prior_prec, &mut grad);
+        (ll + lp, grad)
+    }
+
+    fn init_point(&self, rng: &mut Pcg64) -> Vec<f64> {
+        // Scatter initial means around random data points.
+        let k = self.logw.len();
+        let dim = self.x.dim();
+        let mut theta = vec![0.0; k * dim];
+        for c in 0..k {
+            let row = self.x.row(rng.uniform_usize(self.x.len().max(1)));
+            for j in 0..dim {
+                theta[c * dim + j] = row[j] + 0.1 * rng.normal();
+            }
+        }
+        theta
+    }
+
+    /// Random label permutation — leaves the posterior invariant.
+    fn symmetry_move(&self, theta: &mut [f64], rng: &mut Pcg64) {
+        if !rng.bernoulli(self.permute_prob) {
+            return;
+        }
+        let k = self.logw.len();
+        let dim = self.x.dim();
+        // Only exchangeable (equal-weight) blocks may be permuted.
+        let w0 = self.logw[0];
+        if self.logw.iter().any(|&w| (w - w0).abs() > 1e-12) {
+            return;
+        }
+        let perm = rng.permutation(k);
+        let old = theta.to_vec();
+        for (c, &p) in perm.iter().enumerate() {
+            theta[c * dim..(c + 1) * dim]
+                .copy_from_slice(&old[p * dim..(p + 1) * dim]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(seed: u64, n: usize, k: usize, dim: usize) -> GmmMeans {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut x = SampleMatrix::new(dim);
+        for _ in 0..n {
+            let c = rng.uniform_usize(k);
+            let row: Vec<f64> =
+                (0..dim).map(|j| 3.0 * (c + j) as f64 + rng.normal()).collect();
+            x.push(&row);
+        }
+        let logw = vec![-(k as f64).ln(); k];
+        GmmMeans::new(x, logw, 1.0, 0.1, 0.2)
+    }
+
+    #[test]
+    fn grad_matches_finite_diff() {
+        let m = toy(1, 30, 3, 2);
+        let mut rng = Pcg64::seed_from(2);
+        let theta = m.init_point(&mut rng);
+        let (_, g) = m.logp_grad(&theta);
+        let eps = 1e-6;
+        for j in 0..theta.len() {
+            let mut tp = theta.clone();
+            tp[j] += eps;
+            let mut tm = theta.clone();
+            tm[j] -= eps;
+            let fd = (m.logp(&tp) - m.logp(&tm)) / (2.0 * eps);
+            assert!((g[j] - fd).abs() < 1e-4, "dim {j}: {} vs {fd}", g[j]);
+        }
+    }
+
+    #[test]
+    fn permutation_leaves_logp_invariant() {
+        let m = toy(3, 40, 4, 2);
+        let mut rng = Pcg64::seed_from(5);
+        let theta = m.init_point(&mut rng);
+        let lp = m.logp(&theta);
+        let mut permuted = theta.clone();
+        m.symmetry_move(&mut permuted, &mut rng);
+        assert!((m.logp(&permuted) - lp).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unequal_weights_block_permutation() {
+        let mut m = toy(7, 20, 2, 2);
+        m.logw = vec![(0.7f64).ln(), (0.3f64).ln()];
+        let mut rng = Pcg64::seed_from(8);
+        let theta = vec![1.0, 2.0, 3.0, 4.0];
+        let mut t = theta.clone();
+        for _ in 0..20 {
+            m.symmetry_move(&mut t, &mut rng);
+        }
+        assert_eq!(t, theta, "permutation must be skipped for unequal weights");
+    }
+
+    #[test]
+    fn single_component_equals_gaussian_loglik() {
+        let mut x = SampleMatrix::new(2);
+        x.push(&[1.0, 0.0]);
+        x.push(&[0.0, 1.0]);
+        let m = GmmMeans::new(x.clone(), vec![0.0], 2.0, 1.0, 1e-12);
+        let theta = [0.25, -0.5];
+        let (lp, _) = m.logp_grad(&theta);
+        // Manual: Σ log N(x_i | θ, I/2).
+        let mut want = 0.0;
+        for row in x.rows() {
+            want += crate::math::mvn::iso_logpdf(row, &theta, 0.5);
+        }
+        assert!((lp - want).abs() < 1e-6, "{lp} vs {want}");
+    }
+}

@@ -1,0 +1,98 @@
+//! Target densities: the `LogDensity` trait and the paper's test models.
+//!
+//! Every model evaluates the **subposterior** of Eq. 2.1,
+//! `log p_m(θ) = prior_w · log p(θ) + log p(x^{n_m} | θ)`, where
+//! `prior_w = 1/M` and `prior_w = 1` recovers the full-data posterior.
+//! The rust implementations here are the *native backend*: they mirror
+//! the JAX L2 graphs bit-for-bit in structure (same constants, same
+//! stabilizations) so `runtime::native` and the PJRT artifacts are
+//! interchangeable — integration tests assert parity.
+
+pub mod gaussian;
+pub mod gmm;
+pub mod linreg;
+pub mod logistic;
+pub mod poisson_gamma;
+pub mod poisson_gamma_latent;
+
+pub use gaussian::GaussianMean;
+pub use gmm::GmmMeans;
+pub use linreg::LinearRegression;
+pub use logistic::LogisticRegression;
+pub use poisson_gamma::PoissonGamma;
+pub use poisson_gamma_latent::PoissonGammaLatent;
+
+use crate::rng::Pcg64;
+
+/// A differentiable (sub)posterior log-density over θ ∈ ℝᵈ.
+///
+/// Deliberately *not* `Send`/`Sync`: the PJRT-backed implementation
+/// ([`crate::runtime::XlaDensity`]) holds thread-local client handles.
+/// The threaded pipeline constructs native models inside each worker
+/// thread instead of sharing them.
+pub trait LogDensity {
+    /// Dimensionality of θ.
+    fn dim(&self) -> usize;
+
+    /// Log density (up to the same constant as the AOT artifact).
+    fn logp(&self, theta: &[f64]) -> f64 {
+        self.logp_grad(theta).0
+    }
+
+    /// Log density and gradient.
+    fn logp_grad(&self, theta: &[f64]) -> (f64, Vec<f64>);
+
+    /// A cheap, rough initial point for chains.
+    fn init_point(&self, rng: &mut Pcg64) -> Vec<f64> {
+        (0..self.dim()).map(|_| 0.1 * rng.normal()).collect()
+    }
+
+    /// Apply a posterior-invariant symmetry move in place (e.g. label
+    /// permutation for mixture models — paper section 8.2). Default: none.
+    fn symmetry_move(&self, _theta: &mut [f64], _rng: &mut Pcg64) {}
+
+    /// Optional fused leapfrog trajectory: advance `n_steps` HMC leapfrog
+    /// steps in a single evaluation. The PJRT runtime backend implements
+    /// this with one artifact execution (the L2 perf optimization);
+    /// native models return `None` and the sampler falls back to
+    /// step-by-step leapfrog over [`LogDensity::logp_grad`].
+    fn fused_trajectory(
+        &self,
+        _theta: &[f64],
+        _p: &[f64],
+        _eps: f64,
+        _n_steps: usize,
+    ) -> Option<Trajectory> {
+        None
+    }
+}
+
+/// Result of an HMC leapfrog trajectory.
+#[derive(Debug, Clone)]
+pub struct Trajectory {
+    pub theta: Vec<f64>,
+    pub p: Vec<f64>,
+    pub logp: f64,
+    pub grad: Vec<f64>,
+    /// Log-density at the trajectory start (for the MH ratio).
+    pub logp0: f64,
+}
+
+/// Shared powered-Gaussian prior: `prior_w · log N(θ | 0, I/prior_prec)`
+/// including the normalization constant (so artifacts and native agree on
+/// absolute values), plus its gradient contribution.
+pub(crate) fn powered_gauss_prior(
+    theta: &[f64],
+    prior_w: f64,
+    prior_prec: f64,
+    grad: &mut [f64],
+) -> f64 {
+    const LOG_2PI: f64 = 1.837_877_066_409_345_5;
+    let d = theta.len() as f64;
+    let sq: f64 = theta.iter().map(|t| t * t).sum();
+    let lp = -0.5 * prior_prec * sq + 0.5 * d * (prior_prec.ln() - LOG_2PI);
+    for (g, t) in grad.iter_mut().zip(theta) {
+        *g += -prior_w * prior_prec * t;
+    }
+    prior_w * lp
+}

@@ -1,0 +1,181 @@
+//! Poisson-gamma hierarchical model with EXPLICIT latent rates
+//! (paper section 8.3, as written — no marginalization).
+//!
+//! `a ~ Exp(λ)`, `b ~ Gamma(α, β)`, `q_i ~ Gamma(a, b)`,
+//! `x_i ~ Poisson(q_i t_i)`. [`crate::model::PoissonGamma`] integrates
+//! the `q_i` out analytically; this variant keeps them and is sampled
+//! with the blocked Gibbs kernel in [`crate::sampler::gibbs`]:
+//!
+//!   q_i | a, b, x  ~  Gamma(a + x_i, b + t_i)        (conjugate)
+//!   a, b | q       via random-walk MH on (log a, log b)
+//!
+//! It exists to exercise the paper's criterion (3): each machine may run
+//! *any* MCMC method — here a model-specific Gibbs sampler — and the
+//! combination stage is agnostic to it. Only (log a, log b) is reported
+//! to the leader; the latents stay on the machine (criterion 1).
+
+use crate::math::special::lgamma;
+use crate::rng::Pcg64;
+
+/// Poisson-gamma with latent rates; state is (log a, log b, q_1..q_n)
+/// but only the 2-d hyperparameter block is exposed to the coordinator.
+#[derive(Debug, Clone)]
+pub struct PoissonGammaLatent {
+    pub xs: Vec<f64>,
+    pub ts: Vec<f64>,
+    pub prior_w: f64,
+    pub lam: f64,
+    pub alpha: f64,
+    pub beta_p: f64,
+}
+
+impl PoissonGammaLatent {
+    pub fn new(
+        xs: Vec<f64>,
+        ts: Vec<f64>,
+        prior_w: f64,
+        lam: f64,
+        alpha: f64,
+        beta_p: f64,
+    ) -> Self {
+        assert_eq!(xs.len(), ts.len());
+        assert!(lam > 0.0 && alpha > 0.0 && beta_p > 0.0 && prior_w > 0.0);
+        PoissonGammaLatent { xs, ts, prior_w, lam, alpha, beta_p }
+    }
+
+    pub fn n(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// Conjugate update: redraw all q_i | a, b.
+    pub fn resample_latents(
+        &self,
+        log_a: f64,
+        log_b: f64,
+        q: &mut [f64],
+        rng: &mut Pcg64,
+    ) {
+        let a = log_a.exp();
+        let b = log_b.exp();
+        for ((qi, &x), &t) in q.iter_mut().zip(&self.xs).zip(&self.ts) {
+            *qi = rng.gamma(a + x, b + t).max(1e-300);
+        }
+    }
+
+    /// log p(log a, log b | q): the hyperparameter conditional, up to a
+    /// constant (Gamma likelihood of the q_i + powered priors +
+    /// log-transform Jacobian).
+    pub fn hyper_logp(&self, log_a: f64, log_b: f64, q: &[f64]) -> f64 {
+        let a = log_a.exp();
+        let b = log_b.exp();
+        let n = q.len() as f64;
+        let sum_log_q: f64 = q.iter().map(|v| v.ln()).sum();
+        let sum_q: f64 = q.iter().sum();
+        // Π Gamma(q_i; a, b) = b^{na} Γ(a)^{-n} (Π q_i)^{a-1} e^{-b Σ q_i}
+        let ll = n * a * b.ln() - n * lgamma(a) + (a - 1.0) * sum_log_q
+            - b * sum_q;
+        let lp_a = self.lam.ln() - self.lam * a;
+        let lp_b = self.alpha * self.beta_p.ln() - lgamma(self.alpha)
+            + (self.alpha - 1.0) * b.ln()
+            - self.beta_p * b;
+        ll + self.prior_w * (lp_a + lp_b) + log_a + log_b
+    }
+
+    /// A moment-matched initial (log a, log b, q).
+    pub fn init(&self, rng: &mut Pcg64) -> (f64, f64, Vec<f64>) {
+        let log_a = 0.1 * rng.normal();
+        let log_b = 0.1 * rng.normal();
+        let mut q = vec![1.0; self.n()];
+        self.resample_latents(log_a, log_b, &mut q, rng);
+        (log_a, log_b, q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(seed: u64, n: usize) -> PoissonGammaLatent {
+        let mut rng = Pcg64::seed_from(seed);
+        let (a, b) = (2.0, 1.5);
+        let mut xs = Vec::new();
+        let mut ts = Vec::new();
+        for _ in 0..n {
+            let t = 0.5 + rng.uniform();
+            let q = rng.gamma(a, b);
+            xs.push(rng.poisson(q * t) as f64);
+            ts.push(t);
+        }
+        PoissonGammaLatent::new(xs, ts, 1.0, 1.0, 2.0, 1.0)
+    }
+
+    #[test]
+    fn latent_conditional_moments() {
+        // q_i | a,b,x_i ~ Gamma(a+x, b+t): empirical mean must match.
+        let m = toy(1, 1);
+        let (x, t) = (m.xs[0], m.ts[0]);
+        let (a, b) = (2.0f64, 1.5f64);
+        let mut rng = Pcg64::seed_from(2);
+        let mut q = vec![1.0];
+        let mut acc = 0.0;
+        let reps = 20_000;
+        for _ in 0..reps {
+            m.resample_latents(a.ln(), b.ln(), &mut q, &mut rng);
+            acc += q[0];
+        }
+        let want = (a + x) / (b + t);
+        let got = acc / reps as f64;
+        assert!((got - want).abs() < 0.05 * want.max(0.2), "{got} vs {want}");
+    }
+
+    #[test]
+    fn hyper_logp_peaks_near_truth_given_true_latents() {
+        let m = toy(3, 2_000);
+        let mut rng = Pcg64::seed_from(4);
+        // Draw latents from the true conditional at the true (a,b).
+        let mut q = vec![1.0; m.n()];
+        m.resample_latents(2.0f64.ln(), 1.5f64.ln(), &mut q, &mut rng);
+        let at_truth = m.hyper_logp(2.0f64.ln(), 1.5f64.ln(), &q);
+        let off = m.hyper_logp(0.0, 0.0, &q);
+        assert!(at_truth > off, "{at_truth} vs {off}");
+    }
+
+    #[test]
+    fn marginalized_and_latent_models_agree_in_distribution() {
+        // The marginal p(a, b | x) is identical whether q is integrated
+        // analytically or by Monte Carlo over the conditional. Check via
+        // Rao-Blackwell: E_q[hyper_logp] tracks the marginal logp up to
+        // a θ-independent constant (compare differences between two θ).
+        let m_lat = toy(5, 800);
+        let m_marg = crate::model::PoissonGamma::new(
+            m_lat.xs.clone(),
+            m_lat.ts.clone(),
+            1.0,
+            1.0,
+            2.0,
+            1.0,
+        );
+        use crate::model::LogDensity;
+        let th1 = [2.0f64.ln(), 1.5f64.ln()];
+        let th2 = [0.4, 0.1];
+        let marg_diff = m_marg.logp(&th1) - m_marg.logp(&th2);
+        // MC estimate of the latent model's marginal via importance of
+        // the conditional at each θ: log p(θ|x) ∝ log E_q|θ[…] — here we
+        // use a crude bridge: average hyper_logp under latents drawn at
+        // that same θ plus the entropy term cancels in expectation over
+        // many draws; we only check the SIGN and rough scale.
+        let mut rng = Pcg64::seed_from(6);
+        let mut q = vec![1.0; m_lat.n()];
+        let mut avg1 = 0.0;
+        let mut avg2 = 0.0;
+        let reps = 60;
+        for _ in 0..reps {
+            m_lat.resample_latents(th1[0], th1[1], &mut q, &mut rng);
+            avg1 += m_lat.hyper_logp(th1[0], th1[1], &q) / reps as f64;
+            m_lat.resample_latents(th2[0], th2[1], &mut q, &mut rng);
+            avg2 += m_lat.hyper_logp(th2[0], th2[1], &q) / reps as f64;
+        }
+        // Both orderings must agree (θ1 is the truth, so both positive).
+        assert_eq!(marg_diff > 0.0, avg1 - avg2 > 0.0);
+    }
+}

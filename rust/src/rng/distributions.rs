@@ -1,0 +1,265 @@
+//! Distribution samplers layered on [`super::Pcg64`].
+
+use super::Pcg64;
+use crate::math::special::lgamma;
+
+impl Pcg64 {
+    /// Standard normal via the polar (Marsaglia) method with caching.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.normal_spare.take() {
+            return z;
+        }
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.normal_spare = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// N(mu, sd²).
+    #[inline]
+    pub fn normal_with(&mut self, mu: f64, sd: f64) -> f64 {
+        mu + sd * self.normal()
+    }
+
+    /// Fill a slice with iid standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.normal();
+        }
+    }
+
+    /// Exponential with rate λ.
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        assert!(lambda > 0.0);
+        -(1.0 - self.uniform()).ln() / lambda
+    }
+
+    /// Gamma(shape α, rate β) via Marsaglia-Tsang squeeze (with the
+    /// α < 1 boosting trick).
+    pub fn gamma(&mut self, alpha: f64, rate: f64) -> f64 {
+        assert!(alpha > 0.0 && rate > 0.0);
+        if alpha < 1.0 {
+            // Boost: X = gamma(α+1) * U^{1/α}.
+            let x = self.gamma(alpha + 1.0, 1.0);
+            let u: f64 = self.uniform().max(1e-300);
+            return x * u.powf(1.0 / alpha) / rate;
+        }
+        let d = alpha - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let z = self.normal();
+            let v = 1.0 + c * z;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * z.powi(4)
+                || u.ln() < 0.5 * z * z + d * (1.0 - v3 + v3.ln())
+            {
+                return d * v3 / rate;
+            }
+        }
+    }
+
+    /// Beta(a, b) from two gammas.
+    pub fn beta(&mut self, a: f64, b: f64) -> f64 {
+        let x = self.gamma(a, 1.0);
+        let y = self.gamma(b, 1.0);
+        x / (x + y)
+    }
+
+    /// Poisson(λ): Knuth product for small λ, PTRS transformed rejection
+    /// (Hörmann 1993) for large λ.
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        assert!(lambda >= 0.0);
+        if lambda == 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.uniform();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        }
+        // PTRS.
+        let b = 0.931 + 2.53 * lambda.sqrt();
+        let a = -0.059 + 0.024_83 * b;
+        let inv_alpha = 1.123_9 + 1.132_8 / (b - 3.4);
+        let v_r = 0.9277 - 3.6224 / (b - 2.0);
+        loop {
+            let u = self.uniform() - 0.5;
+            let v = self.uniform();
+            let us = 0.5 - u.abs();
+            let k = ((2.0 * a / us + b) * u + lambda + 0.434_98).floor();
+            if us >= 0.07 && v <= v_r {
+                return k as u64;
+            }
+            if k < 0.0 || (us < 0.013 && v > us) {
+                continue;
+            }
+            let lhs = (v * inv_alpha / (a / (us * us) + b)).ln();
+            let rhs = -lambda + k * lambda.ln() - lgamma(k + 1.0);
+            if lhs <= rhs {
+                return k as u64;
+            }
+        }
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Categorical draw from unnormalized non-negative weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0 && total.is_finite(), "bad weights");
+        let mut u = self.uniform() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            u -= w;
+            if u < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Uniform random permutation of 0..n (Fisher-Yates).
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = self.uniform_usize(i + 1);
+            p.swap(i, j);
+        }
+        p
+    }
+
+    /// In-place Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.uniform_usize(i + 1);
+            items.swap(i, j);
+        }
+    }
+
+    /// Dirichlet(α) draw.
+    pub fn dirichlet(&mut self, alpha: &[f64]) -> Vec<f64> {
+        let mut g: Vec<f64> = alpha.iter().map(|&a| self.gamma(a, 1.0)).collect();
+        let s: f64 = g.iter().sum();
+        for v in g.iter_mut() {
+            *v /= s;
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let m = xs.iter().sum::<f64>() / n;
+        let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1.0);
+        (m, v)
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seed_from(11);
+        let xs: Vec<f64> = (0..50_000).map(|_| rng.normal()).collect();
+        let (m, v) = moments(&xs);
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((v - 1.0).abs() < 0.03, "var {v}");
+        // Skewness ~ 0.
+        let skew = xs.iter().map(|x| x.powi(3)).sum::<f64>() / xs.len() as f64;
+        assert!(skew.abs() < 0.05);
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut rng = Pcg64::seed_from(13);
+        for &(a, r) in &[(0.5, 1.0), (2.0, 3.0), (9.0, 0.5)] {
+            let xs: Vec<f64> = (0..40_000).map(|_| rng.gamma(a, r)).collect();
+            let (m, v) = moments(&xs);
+            assert!((m - a / r).abs() < 0.05 * (a / r).max(1.0), "a={a} mean {m}");
+            assert!(
+                (v - a / (r * r)).abs() < 0.12 * (a / (r * r)).max(1.0),
+                "a={a} var {v}"
+            );
+        }
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Pcg64::seed_from(17);
+        let xs: Vec<f64> = (0..30_000).map(|_| rng.exponential(2.5)).collect();
+        let (m, _) = moments(&xs);
+        assert!((m - 0.4).abs() < 0.01);
+    }
+
+    #[test]
+    fn poisson_small_and_large_lambda() {
+        let mut rng = Pcg64::seed_from(19);
+        for &lam in &[0.5, 4.0, 35.0, 200.0] {
+            let xs: Vec<f64> =
+                (0..30_000).map(|_| rng.poisson(lam) as f64).collect();
+            let (m, v) = moments(&xs);
+            assert!((m - lam).abs() < 0.03 * lam.max(3.0), "λ={lam} mean {m}");
+            assert!((v - lam).abs() < 0.08 * lam.max(3.0), "λ={lam} var {v}");
+        }
+    }
+
+    #[test]
+    fn categorical_frequencies() {
+        let mut rng = Pcg64::seed_from(23);
+        let w = [1.0, 2.0, 7.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..20_000 {
+            counts[rng.categorical(&w)] += 1;
+        }
+        assert!((counts[2] as f64 / 20_000.0 - 0.7).abs() < 0.02);
+        assert!((counts[0] as f64 / 20_000.0 - 0.1).abs() < 0.02);
+    }
+
+    #[test]
+    fn permutation_is_bijection() {
+        let mut rng = Pcg64::seed_from(29);
+        let p = rng.permutation(100);
+        let mut seen = vec![false; 100];
+        for &i in &p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut rng = Pcg64::seed_from(31);
+        let d = rng.dirichlet(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(d.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn beta_mean() {
+        let mut rng = Pcg64::seed_from(37);
+        let xs: Vec<f64> = (0..30_000).map(|_| rng.beta(2.0, 5.0)).collect();
+        let (m, _) = moments(&xs);
+        assert!((m - 2.0 / 7.0).abs() < 0.01);
+    }
+}

@@ -1,0 +1,242 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime.
+
+use super::json::Json;
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape+dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: v.get("name")?.as_str()?.to_string(),
+            shape: v
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|s| s.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: v.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One compiled-computation artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// "logp_grad" or "hmc".
+    pub kind: String,
+    /// Model name: logistic | gmm | poisson_gamma | gaussian.
+    pub model: String,
+    /// Baked lowering constants (n, d, block_n, n_steps, …).
+    pub params: BTreeMap<String, usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+}
+
+impl ArtifactMeta {
+    fn from_json(v: &Json) -> Result<ArtifactMeta> {
+        let params = v
+            .get("params")?
+            .as_obj()?
+            .iter()
+            .map(|(k, pv)| Ok((k.clone(), pv.as_usize()?)))
+            .collect::<Result<_>>()?;
+        Ok(ArtifactMeta {
+            name: v.get("name")?.as_str()?.to_string(),
+            kind: v.get("kind")?.as_str()?.to_string(),
+            model: v.get("model")?.as_str()?.to_string(),
+            params,
+            inputs: v
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?,
+            outputs: v
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?,
+            file: v.get("file")?.as_str()?.to_string(),
+        })
+    }
+
+    /// Position of a named input.
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "artifact {} has no input '{name}'",
+                    self.name
+                ))
+            })
+    }
+
+    pub fn param(&self, key: &str) -> Result<usize> {
+        self.params.get(key).copied().ok_or_else(|| {
+            Error::Runtime(format!("artifact {} missing param '{key}'", self.name))
+        })
+    }
+}
+
+/// The full artifact directory manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let artifacts = v
+            .as_arr()?
+            .iter()
+            .map(ArtifactMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        // Names must be unique.
+        let mut names: Vec<&str> =
+            artifacts.iter().map(|a| a.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != artifacts.len() {
+            return Err(Error::Runtime("duplicate artifact names".into()));
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| Error::Runtime(format!("no artifact '{name}'")))
+    }
+
+    /// Find an artifact by model/kind and minimum padded shard size.
+    /// Returns the smallest artifact whose padded `n` fits `n_rows`.
+    pub fn find(
+        &self,
+        model: &str,
+        kind: &str,
+        n_rows: usize,
+    ) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.model == model && a.kind == kind)
+            .filter(|a| a.param("n").map(|n| n >= n_rows).unwrap_or(false))
+            .min_by_key(|a| a.param("n").unwrap_or(usize::MAX))
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "no {model}/{kind} artifact with n >= {n_rows}"
+                ))
+            })
+    }
+
+    /// Absolute HLO path of an artifact.
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"[
+      {"name": "gauss_lpg_n512_d2", "kind": "logp_grad", "model": "gaussian",
+       "params": {"n": 512, "d": 2},
+       "inputs": [
+         {"name": "x", "shape": [512, 2], "dtype": "f32"},
+         {"name": "mask", "shape": [512], "dtype": "f32"},
+         {"name": "theta", "shape": [2], "dtype": "f32"}],
+       "outputs": [
+         {"name": "logp", "shape": [], "dtype": "f32"},
+         {"name": "grad", "shape": [2], "dtype": "f32"}],
+       "file": "gauss_lpg_n512_d2.hlo.txt"},
+      {"name": "gauss_lpg_n2048_d2", "kind": "logp_grad", "model": "gaussian",
+       "params": {"n": 2048, "d": 2},
+       "inputs": [], "outputs": [], "file": "x.hlo.txt"}
+    ]"#;
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("gauss_lpg_n512_d2").unwrap();
+        assert_eq!(a.param("d").unwrap(), 2);
+        assert_eq!(a.input_index("theta").unwrap(), 2);
+        assert!(a.input_index("nope").is_err());
+        assert_eq!(a.inputs[0].element_count(), 1024);
+        assert_eq!(
+            m.hlo_path(a),
+            PathBuf::from("/tmp/a/gauss_lpg_n512_d2.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn find_picks_smallest_fitting() {
+        let m = Manifest::parse(Path::new("."), SAMPLE).unwrap();
+        let a = m.find("gaussian", "logp_grad", 100).unwrap();
+        assert_eq!(a.param("n").unwrap(), 512);
+        let b = m.find("gaussian", "logp_grad", 1000).unwrap();
+        assert_eq!(b.param("n").unwrap(), 2048);
+        assert!(m.find("gaussian", "logp_grad", 5000).is_err());
+        assert!(m.find("bogus", "logp_grad", 1).is_err());
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let dup = format!(
+            "[{0},{0}]",
+            r#"{"name": "a", "kind": "k", "model": "m", "params": {},
+                "inputs": [], "outputs": [], "file": "f"}"#
+        );
+        assert!(Manifest::parse(Path::new("."), &dup).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        // Exercises the actual artifacts/ directory when it exists (CI
+        // runs `make artifacts` first).
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.artifacts.is_empty());
+            for a in &m.artifacts {
+                assert!(m.hlo_path(a).exists(), "{} missing", a.file);
+                assert!(a.kind == "logp_grad" || a.kind == "hmc");
+            }
+        }
+    }
+}

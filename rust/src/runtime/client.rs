@@ -1,0 +1,196 @@
+//! PJRT client wrapper + compiled-executable cache.
+//!
+//! One [`RuntimeClient`] per process (or per thread — the underlying
+//! `xla::PjRtClient` is `Rc`-based and not `Send`). HLO text artifacts
+//! compile once and are cached by artifact name; compilation is the
+//! expensive step (~tens of ms), execution is the hot path.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::artifact::{ArtifactMeta, Manifest};
+use crate::error::{Error, Result};
+
+/// PJRT CPU client with a compile cache over a manifest.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl RuntimeClient {
+    /// Create a CPU client over an artifact directory.
+    pub fn cpu(artifact_dir: &std::path::Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(RuntimeClient { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn xla_client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(
+        &self,
+        meta: &ArtifactMeta,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&meta.name) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.hlo_path(meta);
+        let path_str = path.to_str().ok_or_else(|| {
+            Error::Runtime(format!("non-utf8 path {}", path.display()))
+        })?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(meta.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload an f32 tensor to the device.
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload a scalar.
+    pub fn upload_scalar(&self, v: f32) -> Result<xla::PjRtBuffer> {
+        self.upload(&[v], &[])
+    }
+
+    /// Execute an artifact with device-resident inputs; returns the flat
+    /// f32 contents of each output in order (artifacts are lowered with
+    /// `return_tuple=True`, so the single result is a tuple literal).
+    pub fn execute(
+        &self,
+        meta: &ArtifactMeta,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != meta.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "artifact {} expects {} inputs, got {}",
+                meta.name,
+                meta.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let exe = self.executable(meta)?;
+        let result = exe.execute_b(inputs)?;
+        let first = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::Runtime("no execution output".into()))?;
+        let literal = first.to_literal_sync()?;
+        let parts = literal.to_tuple()?;
+        if parts.len() != meta.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "artifact {} returned {} outputs, expected {}",
+                meta.name,
+                parts.len(),
+                meta.outputs.len()
+            )));
+        }
+        parts
+            .into_iter()
+            .map(|p| Ok(p.to_vec::<f32>()?))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Full load→compile→execute round trip on the smallest artifact.
+    /// Skipped when artifacts/ has not been generated.
+    #[test]
+    fn execute_gaussian_lpg_artifact() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = RuntimeClient::cpu(&dir).unwrap();
+        let meta = rt.manifest().get("gauss_lpg_n512_d2").unwrap().clone();
+        // inputs: x (512,2), mask (512), theta (2), lik_prec, prior_w, prior_prec
+        let n = 512;
+        let x = vec![0.5f32; n * 2];
+        let mask: Vec<f32> =
+            (0..n).map(|i| if i < 10 { 1.0 } else { 0.0 }).collect();
+        let theta = vec![0.0f32, 0.0f32];
+        let bufs = vec![
+            rt.upload(&x, &[n, 2]).unwrap(),
+            rt.upload(&mask, &[n]).unwrap(),
+            rt.upload(&theta, &[2]).unwrap(),
+            rt.upload_scalar(1.0).unwrap(),
+            rt.upload_scalar(0.5).unwrap(),
+            rt.upload_scalar(1.0).unwrap(),
+        ];
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let out = rt.execute(&meta, &refs).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), 1); // scalar logp
+        assert_eq!(out[1].len(), 2); // grad
+        // Compare against the native model.
+        let mut data = crate::types::SampleMatrix::new(2);
+        for _ in 0..10 {
+            data.push(&[0.5, 0.5]);
+        }
+        let native = crate::model::GaussianMean::new(data, 1.0, 1.0, 0.5);
+        use crate::model::LogDensity;
+        let (lp, grad) = native.logp_grad(&[0.0, 0.0]);
+        assert!(
+            (out[0][0] as f64 - lp).abs() < 1e-3 * lp.abs().max(1.0),
+            "logp {} vs native {lp}",
+            out[0][0]
+        );
+        for j in 0..2 {
+            assert!(
+                (out[1][j] as f64 - grad[j]).abs() < 1e-3 * grad[j].abs().max(1.0),
+                "grad[{j}] {} vs native {}",
+                out[1][j],
+                grad[j]
+            );
+        }
+    }
+
+    #[test]
+    fn execute_rejects_wrong_arity() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let rt = RuntimeClient::cpu(&dir).unwrap();
+        let meta = rt.manifest().get("gauss_lpg_n512_d2").unwrap().clone();
+        let b = rt.upload_scalar(1.0).unwrap();
+        assert!(rt.execute(&meta, &[&b]).is_err());
+    }
+
+    #[test]
+    fn executable_cache_reuses_compilation() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let rt = RuntimeClient::cpu(&dir).unwrap();
+        let meta = rt.manifest().get("gauss_lpg_n512_d2").unwrap().clone();
+        let a = rt.executable(&meta).unwrap();
+        let b = rt.executable(&meta).unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+    }
+}

@@ -1,0 +1,270 @@
+//! [`XlaDensity`]: a subposterior evaluated through compiled PJRT
+//! artifacts — the production hot path.
+//!
+//! The shard's data tensors (and all constant scalars) are uploaded to
+//! device buffers once at construction; each `logp_grad` call uploads
+//! only θ (d floats). When an `hmc` artifact for the same model/shape is
+//! available, [`crate::model::LogDensity::fused_trajectory`] advances a
+//! whole L-step leapfrog trajectory in ONE artifact execution instead of
+//! `2L+1` — the L2-layer optimization measured in EXPERIMENTS.md §Perf.
+
+use std::rc::Rc;
+
+use super::artifact::ArtifactMeta;
+use super::client::RuntimeClient;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::model::{LogDensity, Trajectory};
+
+/// Device-resident constant inputs keyed by input name.
+struct StaticInput {
+    name: String,
+    buffer: xla::PjRtBuffer,
+}
+
+/// A PJRT-backed subposterior.
+pub struct XlaDensity<'c> {
+    client: &'c RuntimeClient,
+    lpg: ArtifactMeta,
+    hmc: Option<ArtifactMeta>,
+    statics: Vec<StaticInput>,
+    dim: usize,
+}
+
+impl<'c> XlaDensity<'c> {
+    /// Build from a dataset shard. Finds the smallest fitting artifacts
+    /// in the manifest, pads the shard with zero-mask rows, uploads all
+    /// static inputs, and (if present) wires up the fused-HMC artifact.
+    ///
+    /// `prior_w` is 1/M per Eq. 2.1.
+    pub fn from_shard(
+        client: &'c RuntimeClient,
+        data: &Dataset,
+        idx: &[usize],
+        prior_w: f64,
+    ) -> Result<Self> {
+        let model = data.model_name();
+        let lpg = client
+            .manifest()
+            .find(model, "logp_grad", idx.len())?
+            .clone();
+        let hmc = client.manifest().find(model, "hmc", idx.len()).ok().cloned();
+        // The hmc artifact must share the padded shape with the lpg one.
+        let hmc = hmc.filter(|h| h.param("n").ok() == lpg.param("n").ok());
+        let n_pad = lpg.param("n")?;
+        if idx.len() > n_pad {
+            return Err(Error::Runtime(format!(
+                "shard of {} exceeds artifact capacity {n_pad}",
+                idx.len()
+            )));
+        }
+
+        let mut statics: Vec<StaticInput> = Vec::new();
+        let mut push = |name: &str, data: &[f32], dims: &[usize]| -> Result<()> {
+            statics.push(StaticInput {
+                name: name.to_string(),
+                buffer: client.upload(data, dims)?,
+            });
+            Ok(())
+        };
+
+        // Mask: 1 for real rows, 0 for padding.
+        let mut mask = vec![0.0f32; n_pad];
+        for i in 0..idx.len() {
+            mask[i] = 1.0;
+        }
+
+        match data {
+            Dataset::Gaussian { x, lik_prec, prior_prec } => {
+                let d = x.dim();
+                let mut xs = vec![0.0f32; n_pad * d];
+                for (r, &i) in idx.iter().enumerate() {
+                    for (j, &v) in x.row(i).iter().enumerate() {
+                        xs[r * d + j] = v as f32;
+                    }
+                }
+                push("x", &xs, &[n_pad, d])?;
+                push("mask", &mask, &[n_pad])?;
+                push("lik_prec", &[*lik_prec as f32], &[])?;
+                push("prior_w", &[prior_w as f32], &[])?;
+                push("prior_prec", &[*prior_prec as f32], &[])?;
+            }
+            Dataset::Logistic { x, y, prior_prec } => {
+                let d = x.dim();
+                let mut xs = vec![0.0f32; n_pad * d];
+                let mut ys = vec![0.0f32; n_pad];
+                for (r, &i) in idx.iter().enumerate() {
+                    for (j, &v) in x.row(i).iter().enumerate() {
+                        xs[r * d + j] = v as f32;
+                    }
+                    ys[r] = y[i] as f32;
+                }
+                push("x", &xs, &[n_pad, d])?;
+                push("y", &ys, &[n_pad])?;
+                push("mask", &mask, &[n_pad])?;
+                push("prior_w", &[prior_w as f32], &[])?;
+                push("prior_prec", &[*prior_prec as f32], &[])?;
+            }
+            Dataset::Gmm { x, logw, inv_var, prior_prec } => {
+                let d = x.dim();
+                let mut xs = vec![0.0f32; n_pad * d];
+                for (r, &i) in idx.iter().enumerate() {
+                    for (j, &v) in x.row(i).iter().enumerate() {
+                        xs[r * d + j] = v as f32;
+                    }
+                }
+                let lw: Vec<f32> = logw.iter().map(|&v| v as f32).collect();
+                push("x", &xs, &[n_pad, d])?;
+                push("mask", &mask, &[n_pad])?;
+                push("logw", &lw, &[lw.len()])?;
+                push("inv_var", &[*inv_var as f32], &[])?;
+                push("prior_w", &[prior_w as f32], &[])?;
+                push("prior_prec", &[*prior_prec as f32], &[])?;
+            }
+            Dataset::PoissonGamma { xs, ts, lam, alpha, beta_p } => {
+                let mut xv = vec![0.0f32; n_pad];
+                let mut tv = vec![1.0f32; n_pad]; // pad t=1 avoids log(0)
+                for (r, &i) in idx.iter().enumerate() {
+                    xv[r] = xs[i] as f32;
+                    tv[r] = ts[i] as f32;
+                }
+                push("xs", &xv, &[n_pad])?;
+                push("ts", &tv, &[n_pad])?;
+                push("mask", &mask, &[n_pad])?;
+                push("prior_w", &[prior_w as f32], &[])?;
+                push("lam", &[*lam as f32], &[])?;
+                push("alpha", &[*alpha as f32], &[])?;
+                push("beta_p", &[*beta_p as f32], &[])?;
+            }
+            Dataset::LinReg { .. } => {
+                return Err(Error::Runtime(
+                    "no linreg artifact (native-only model)".into(),
+                ));
+            }
+        }
+
+        // θ dimension from the artifact spec.
+        let ti = lpg.input_index("theta")?;
+        let dim = lpg.inputs[ti].element_count();
+
+        Ok(XlaDensity { client, lpg, hmc, statics, dim })
+    }
+
+    /// Whether the fused-HMC fast path is wired up.
+    pub fn has_fused_hmc(&self) -> bool {
+        self.hmc.is_some()
+    }
+
+    pub fn artifact_name(&self) -> &str {
+        &self.lpg.name
+    }
+
+    /// Assemble the input buffer list for `meta`, pulling static inputs
+    /// by name and dynamic ones from `dynamic` (name → buffer).
+    fn assemble<'b>(
+        &'b self,
+        meta: &ArtifactMeta,
+        dynamic: &'b [(&str, xla::PjRtBuffer)],
+    ) -> Result<Vec<&'b xla::PjRtBuffer>> {
+        meta.inputs
+            .iter()
+            .map(|spec| {
+                if let Some((_, b)) =
+                    dynamic.iter().find(|(n, _)| *n == spec.name)
+                {
+                    return Ok(b);
+                }
+                self.statics
+                    .iter()
+                    .find(|s| s.name == spec.name)
+                    .map(|s| &s.buffer)
+                    .ok_or_else(|| {
+                        Error::Runtime(format!(
+                            "no binding for input '{}'",
+                            spec.name
+                        ))
+                    })
+            })
+            .collect()
+    }
+
+    fn upload_theta(&self, theta: &[f64]) -> Result<xla::PjRtBuffer> {
+        let t32: Vec<f32> = theta.iter().map(|&v| v as f32).collect();
+        self.client.upload(&t32, &[self.dim])
+    }
+}
+
+impl LogDensity for XlaDensity<'_> {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn logp_grad(&self, theta: &[f64]) -> (f64, Vec<f64>) {
+        // The sampler API is infallible; runtime faults (device OOM,
+        // artifact mismatch) are programming/config errors → panic with
+        // context rather than silently corrupting the chain.
+        let run = || -> Result<(f64, Vec<f64>)> {
+            let tb = self.upload_theta(theta)?;
+            let dynamic = [("theta", tb)];
+            let inputs = self.assemble(&self.lpg, &dynamic)?;
+            let out = self.client.execute(&self.lpg, &inputs)?;
+            let lp = out[0][0] as f64;
+            let grad = out[1].iter().map(|&v| v as f64).collect();
+            Ok((lp, grad))
+        };
+        run().unwrap_or_else(|e| panic!("xla logp_grad failed: {e}"))
+    }
+
+    fn fused_trajectory(
+        &self,
+        theta: &[f64],
+        p: &[f64],
+        eps: f64,
+        n_steps: usize,
+    ) -> Option<Trajectory> {
+        let hmc = self.hmc.as_ref()?;
+        if hmc.param("n_steps").ok()? != n_steps {
+            return None; // trajectory length is baked at lowering time
+        }
+        let run = || -> Result<Trajectory> {
+            let tb = self.upload_theta(theta)?;
+            let p32: Vec<f32> = p.iter().map(|&v| v as f32).collect();
+            let pb = self.client.upload(&p32, &[self.dim])?;
+            let eb = self.client.upload_scalar(eps as f32)?;
+            let dynamic = [("theta", tb), ("p", pb), ("eps", eb)];
+            let inputs = self.assemble(hmc, &dynamic)?;
+            let out = self.client.execute(hmc, &inputs)?;
+            // outputs: theta_out, p_out, logp_out, grad_out, logp_in
+            Ok(Trajectory {
+                theta: out[0].iter().map(|&v| v as f64).collect(),
+                p: out[1].iter().map(|&v| v as f64).collect(),
+                logp: out[2][0] as f64,
+                grad: out[3].iter().map(|&v| v as f64).collect(),
+                logp0: out[4][0] as f64,
+            })
+        };
+        Some(run().unwrap_or_else(|e| panic!("xla fused_trajectory failed: {e}")))
+    }
+
+    fn init_point(&self, rng: &mut crate::rng::Pcg64) -> Vec<f64> {
+        (0..self.dim).map(|_| 0.1 * rng.normal()).collect()
+    }
+}
+
+impl std::fmt::Debug for XlaDensity<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "XlaDensity({}, fused_hmc={}, dim={})",
+            self.lpg.name,
+            self.hmc.is_some(),
+            self.dim
+        )
+    }
+}
+
+// Tests for XlaDensity live in rust/tests/integration_runtime.rs (they
+// need generated artifacts and a PJRT client).
+// Silence dead-code warnings for Rc when artifacts are absent.
+#[allow(unused)]
+fn _rc_marker(_: Rc<()>) {}

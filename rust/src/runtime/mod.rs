@@ -1,0 +1,20 @@
+//! PJRT runtime: load and execute the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO text → compile once → execute on the
+//! request path). Python is never invoked here.
+//!
+//! * [`json`] — minimal dependency-free JSON parser (the manifest format).
+//! * [`artifact`] — `artifacts/manifest.json` schema + loading.
+//! * [`client`] — PJRT CPU client wrapper + compiled-executable cache.
+//! * [`density`] — [`XlaDensity`]: a [`crate::model::LogDensity`] backed
+//!   by compiled artifacts, with the shard data pre-uploaded to device
+//!   buffers and the fused L-step HMC trajectory exposed through
+//!   [`crate::model::LogDensity::fused_trajectory`].
+
+pub mod artifact;
+pub mod client;
+pub mod density;
+pub mod json;
+
+pub use artifact::{ArtifactMeta, Manifest, TensorSpec};
+pub use client::RuntimeClient;
+pub use density::XlaDensity;

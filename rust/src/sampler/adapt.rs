@@ -1,0 +1,154 @@
+//! Step-size adaptation: Nesterov dual averaging (Hoffman & Gelman 2014,
+//! Algorithm 5) plus a simple Robbins-Monro scale adapter for RWM.
+
+/// Dual-averaging adaptation of a log step size toward a target
+/// acceptance statistic.
+#[derive(Debug, Clone)]
+pub struct DualAveraging {
+    mu: f64,
+    log_eps: f64,
+    log_eps_bar: f64,
+    h_bar: f64,
+    t: f64,
+    gamma: f64,
+    t0: f64,
+    kappa: f64,
+    target_accept: f64,
+    frozen: bool,
+}
+
+impl DualAveraging {
+    pub fn new(eps0: f64, target_accept: f64) -> Self {
+        assert!(eps0 > 0.0);
+        DualAveraging {
+            mu: (10.0 * eps0).ln(),
+            log_eps: eps0.ln(),
+            log_eps_bar: 0.0,
+            h_bar: 0.0,
+            t: 0.0,
+            gamma: 0.05,
+            t0: 10.0,
+            kappa: 0.75,
+            target_accept,
+            frozen: false,
+        }
+    }
+
+    /// Current step size.
+    pub fn eps(&self) -> f64 {
+        if self.frozen {
+            self.log_eps_bar.exp()
+        } else {
+            self.log_eps.exp()
+        }
+    }
+
+    /// Fold in an observed acceptance probability.
+    pub fn update(&mut self, accept_prob: f64) {
+        if self.frozen {
+            return;
+        }
+        self.t += 1.0;
+        let eta = 1.0 / (self.t + self.t0);
+        self.h_bar = (1.0 - eta) * self.h_bar
+            + eta * (self.target_accept - accept_prob);
+        self.log_eps = self.mu - self.t.sqrt() / self.gamma * self.h_bar;
+        let w = self.t.powf(-self.kappa);
+        self.log_eps_bar = w * self.log_eps + (1.0 - w) * self.log_eps_bar;
+    }
+
+    /// Switch to the averaged step size permanently.
+    pub fn freeze(&mut self) {
+        self.frozen = true;
+    }
+
+    pub fn frozen(&self) -> bool {
+        self.frozen
+    }
+}
+
+/// Robbins-Monro proposal-scale adapter for random-walk Metropolis,
+/// targeting the classic 0.234 acceptance rate.
+#[derive(Debug, Clone)]
+pub struct ScaleAdapter {
+    log_scale: f64,
+    t: f64,
+    target: f64,
+    frozen: bool,
+}
+
+impl ScaleAdapter {
+    pub fn new(scale0: f64, target: f64) -> Self {
+        assert!(scale0 > 0.0);
+        ScaleAdapter { log_scale: scale0.ln(), t: 0.0, target, frozen: false }
+    }
+
+    pub fn scale(&self) -> f64 {
+        self.log_scale.exp()
+    }
+
+    pub fn update(&mut self, accepted: bool) {
+        if self.frozen {
+            return;
+        }
+        self.t += 1.0;
+        let step = 1.0 / self.t.powf(0.6).max(1.0);
+        let a = if accepted { 1.0 } else { 0.0 };
+        self.log_scale += step * (a - self.target);
+    }
+
+    pub fn freeze(&mut self) {
+        self.frozen = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dual_averaging_raises_eps_when_accepting() {
+        let mut da = DualAveraging::new(0.1, 0.65);
+        for _ in 0..200 {
+            da.update(1.0); // always accepting → step too small
+        }
+        assert!(da.eps() > 0.1, "eps {}", da.eps());
+    }
+
+    #[test]
+    fn dual_averaging_lowers_eps_when_rejecting() {
+        let mut da = DualAveraging::new(0.1, 0.65);
+        for _ in 0..200 {
+            da.update(0.0);
+        }
+        assert!(da.eps() < 0.1, "eps {}", da.eps());
+    }
+
+    #[test]
+    fn freeze_stops_updates() {
+        let mut da = DualAveraging::new(0.1, 0.65);
+        for _ in 0..50 {
+            da.update(0.9);
+        }
+        da.freeze();
+        let e = da.eps();
+        for _ in 0..50 {
+            da.update(0.0);
+        }
+        assert_eq!(da.eps(), e);
+    }
+
+    #[test]
+    fn scale_adapter_converges_direction() {
+        let mut sa = ScaleAdapter::new(1.0, 0.234);
+        for _ in 0..300 {
+            sa.update(true); // always accepted → scale should grow
+        }
+        assert!(sa.scale() > 1.0);
+        let mut sb = ScaleAdapter::new(1.0, 0.234);
+        for _ in 0..300 {
+            sb.update(false);
+        }
+        assert!(sb.scale() < 1.0);
+    }
+}

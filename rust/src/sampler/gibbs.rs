@@ -1,0 +1,199 @@
+//! Blocked Gibbs sampler for the latent Poisson-gamma model — the
+//! "any MCMC method per machine" demonstration (paper criterion 3).
+//!
+//! Alternates (i) the conjugate latent update
+//! `q_i | a, b ~ Gamma(a + x_i, b + t_i)` with (ii) a random-walk MH
+//! step on the hyperparameters `(log a, log b) | q`. Only the 2-d
+//! hyperparameter block is emitted to the coordinator; the `n` latents
+//! never leave the machine.
+
+use crate::model::poisson_gamma_latent::PoissonGammaLatent;
+use crate::rng::Pcg64;
+use crate::sampler::adapt::ScaleAdapter;
+use crate::types::{SampleMatrix, SubposteriorSamples};
+use std::time::Instant;
+
+/// Gibbs chain over a [`PoissonGammaLatent`] subposterior.
+pub struct PgGibbs<'a> {
+    model: &'a PoissonGammaLatent,
+    adapter: ScaleAdapter,
+    /// MH sub-steps on the hyperparameters per latent sweep.
+    pub hyper_steps: usize,
+}
+
+impl<'a> PgGibbs<'a> {
+    pub fn new(model: &'a PoissonGammaLatent) -> Self {
+        PgGibbs {
+            model,
+            adapter: ScaleAdapter::new(0.2, 0.35),
+            hyper_steps: 3,
+        }
+    }
+
+    /// Run the chain: `n_samples` post-burn-in draws of (log a, log b).
+    pub fn run(
+        mut self,
+        machine: usize,
+        n_samples: usize,
+        burn_in: usize,
+        rng: &mut Pcg64,
+    ) -> SubposteriorSamples {
+        let start = Instant::now();
+        let (mut log_a, mut log_b, mut q) = self.model.init(rng);
+        let mut logp;
+        let mut samples = SampleMatrix::with_capacity(2, n_samples);
+        let mut draw_times = Vec::with_capacity(n_samples);
+        let mut accepts = 0usize;
+        let mut proposals = 0usize;
+        let total = burn_in + n_samples;
+        for i in 0..total {
+            // (i) conjugate latent sweep — changes the conditional, so
+            // refresh the cached hyper log-density.
+            self.model.resample_latents(log_a, log_b, &mut q, rng);
+            logp = self.model.hyper_logp(log_a, log_b, &q);
+            // (ii) MH on (log a, log b).
+            for _ in 0..self.hyper_steps {
+                let s = self.adapter.scale();
+                let prop_a = log_a + s * rng.normal();
+                let prop_b = log_b + s * rng.normal();
+                let lp_new = self.model.hyper_logp(prop_a, prop_b, &q);
+                let accepted = (lp_new - logp) >= rng.uniform().ln();
+                if accepted {
+                    log_a = prop_a;
+                    log_b = prop_b;
+                    logp = lp_new;
+                }
+                self.adapter.update(accepted);
+                if i >= burn_in {
+                    proposals += 1;
+                    accepts += usize::from(accepted);
+                }
+            }
+            if i + 1 == burn_in {
+                self.adapter.freeze();
+            }
+            if i >= burn_in {
+                samples.push(&[log_a, log_b]);
+                draw_times.push(start.elapsed().as_secs_f64());
+            }
+        }
+        SubposteriorSamples {
+            machine,
+            samples,
+            accept_rate: if proposals > 0 {
+                accepts as f64 / proposals as f64
+            } else {
+                f64::NAN
+            },
+            wall_secs: start.elapsed().as_secs_f64(),
+            draw_times,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{LogDensity, PoissonGamma};
+
+    fn toy(seed: u64, n: usize, prior_w: f64) -> PoissonGammaLatent {
+        let mut rng = Pcg64::seed_from(seed);
+        let (a, b) = (2.0, 1.5);
+        let mut xs = Vec::new();
+        let mut ts = Vec::new();
+        for _ in 0..n {
+            let t = 0.5 + rng.uniform();
+            let qv = rng.gamma(a, b);
+            xs.push(rng.poisson(qv * t) as f64);
+            ts.push(t);
+        }
+        PoissonGammaLatent::new(xs, ts, prior_w, 1.0, 2.0, 1.0)
+    }
+
+    #[test]
+    fn gibbs_recovers_hyperparameters() {
+        let m = toy(1, 4_000, 1.0);
+        let mut rng = Pcg64::seed_from(2);
+        let out = PgGibbs::new(&m).run(0, 2_500, 500, &mut rng);
+        let mean = out.samples.mean();
+        assert!((mean[0] - 2.0f64.ln()).abs() < 0.3, "log a {}", mean[0]);
+        assert!((mean[1] - 1.5f64.ln()).abs() < 0.4, "log b {}", mean[1]);
+        assert!(out.accept_rate > 0.05 && out.accept_rate < 0.95);
+    }
+
+    /// Gibbs (latent) and HMC (marginalized) target the same marginal:
+    /// their posterior means must agree.
+    #[test]
+    fn gibbs_matches_marginalized_hmc() {
+        let m_lat = toy(3, 3_000, 0.5);
+        let m_marg = PoissonGamma::new(
+            m_lat.xs.clone(),
+            m_lat.ts.clone(),
+            0.5,
+            1.0,
+            2.0,
+            1.0,
+        );
+        let mut rng = Pcg64::seed_from(4);
+        let gibbs = PgGibbs::new(&m_lat).run(0, 2_500, 500, &mut rng);
+
+        let mut rng2 = Pcg64::seed_from(5);
+        let mut state = crate::sampler::State::init(
+            &m_marg,
+            m_marg.init_point(&mut rng2),
+        );
+        let mut hmc = crate::sampler::Hmc::new(0.02, 10);
+        use crate::sampler::Sampler;
+        let mut draws = SampleMatrix::new(2);
+        for i in 0..3_000 {
+            hmc.step(&m_marg, &mut state, &mut rng2);
+            if i == 500 {
+                hmc.finalize_adaptation();
+            }
+            if i >= 500 {
+                draws.push(&state.theta);
+            }
+        }
+        let mg = gibbs.samples.mean();
+        let mh = draws.mean();
+        for j in 0..2 {
+            assert!(
+                (mg[j] - mh[j]).abs() < 0.15,
+                "dim {j}: gibbs {} vs hmc {}",
+                mg[j],
+                mh[j]
+            );
+        }
+    }
+
+    /// Gibbs subposterior draws combine like any other sampler's
+    /// (criterion 3 end-to-end).
+    #[test]
+    fn gibbs_subposteriors_combine() {
+        let mut subs = Vec::new();
+        let full = toy(7, 3_000, 1.0);
+        for mach in 0..3usize {
+            let lo = mach * 1_000;
+            let shard = PoissonGammaLatent::new(
+                full.xs[lo..lo + 1_000].to_vec(),
+                full.ts[lo..lo + 1_000].to_vec(),
+                1.0 / 3.0,
+                1.0,
+                2.0,
+                1.0,
+            );
+            let mut rng = Pcg64::seed_from(10 + mach as u64);
+            subs.push(PgGibbs::new(&shard).run(mach, 1_500, 300, &mut rng));
+        }
+        let combined = crate::combine::combine(
+            crate::combine::CombineMethod::Semiparametric,
+            &subs,
+            1_500,
+            9,
+        )
+        .unwrap();
+        let mean = combined.mean();
+        assert!((mean[0] - 2.0f64.ln()).abs() < 0.35, "log a {}", mean[0]);
+        assert!((mean[1] - 1.5f64.ln()).abs() < 0.45, "log b {}", mean[1]);
+    }
+}

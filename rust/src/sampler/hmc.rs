@@ -1,0 +1,254 @@
+//! Hamiltonian Monte Carlo with fixed trajectory length and
+//! dual-averaging step-size adaptation.
+//!
+//! The leapfrog trajectory is delegated to
+//! [`LogDensity::fused_trajectory`] when the backend provides one (the
+//! PJRT runtime evaluates all `L` steps in a single artifact execution);
+//! otherwise it falls back to `2L+1` native gradient evaluations.
+
+use super::adapt::DualAveraging;
+use super::{Sampler, State};
+use crate::model::{LogDensity, Trajectory};
+use crate::rng::Pcg64;
+
+/// Fixed-length HMC.
+pub struct Hmc {
+    da: DualAveraging,
+    pub n_leapfrog: usize,
+    /// Unit-diagonal mass matrix (inverse mass per dimension), adapted
+    /// from burn-in draw variances by the chain runner if desired.
+    inv_mass: Option<Vec<f64>>,
+}
+
+impl Hmc {
+    pub fn new(step: f64, n_leapfrog: usize) -> Self {
+        assert!(n_leapfrog > 0);
+        Hmc { da: DualAveraging::new(step, 0.65), n_leapfrog, inv_mass: None }
+    }
+
+    pub fn with_inv_mass(mut self, inv_mass: Vec<f64>) -> Self {
+        self.inv_mass = Some(inv_mass);
+        self
+    }
+
+    pub fn eps(&self) -> f64 {
+        self.da.eps()
+    }
+
+    /// Native leapfrog fallback: mirrors
+    /// `python/compile/model.py::leapfrog` exactly for unit mass;
+    /// `inv_mass` scales the position update (dθ/dt = M⁻¹p).
+    #[allow(clippy::too_many_arguments)]
+    fn leapfrog(
+        target: &dyn LogDensity,
+        theta0: &[f64],
+        p0: &[f64],
+        grad0: &[f64],
+        logp0: f64,
+        eps: f64,
+        n_steps: usize,
+        inv_mass: Option<&[f64]>,
+    ) -> Trajectory {
+        let d = theta0.len();
+        let mut theta = theta0.to_vec();
+        let mut p = p0.to_vec();
+        let mut grad = grad0.to_vec();
+        let mut logp = logp0;
+        for _ in 0..n_steps {
+            for i in 0..d {
+                p[i] += 0.5 * eps * grad[i];
+            }
+            match inv_mass {
+                None => {
+                    for i in 0..d {
+                        theta[i] += eps * p[i];
+                    }
+                }
+                Some(im) => {
+                    for i in 0..d {
+                        theta[i] += eps * im[i] * p[i];
+                    }
+                }
+            }
+            let (lp, g) = target.logp_grad(&theta);
+            logp = lp;
+            grad = g;
+            for i in 0..d {
+                p[i] += 0.5 * eps * grad[i];
+            }
+        }
+        Trajectory { theta, p, logp, grad, logp0 }
+    }
+
+    fn kinetic(&self, p: &[f64]) -> f64 {
+        match &self.inv_mass {
+            None => 0.5 * p.iter().map(|v| v * v).sum::<f64>(),
+            Some(im) => {
+                0.5 * p.iter().zip(im).map(|(v, m)| v * v * m).sum::<f64>()
+            }
+        }
+    }
+}
+
+impl Sampler for Hmc {
+    fn name(&self) -> &'static str {
+        "hmc"
+    }
+
+    fn step(
+        &mut self,
+        target: &dyn LogDensity,
+        state: &mut State,
+        rng: &mut Pcg64,
+    ) -> bool {
+        let d = state.theta.len();
+        let eps = self.da.eps();
+        // Momentum refresh: p ~ N(0, M) with M = diag(1/inv_mass).
+        let mut p = vec![0.0; d];
+        match &self.inv_mass {
+            None => rng.fill_normal(&mut p),
+            Some(im) => {
+                for (pi, m) in p.iter_mut().zip(im) {
+                    *pi = rng.normal() / m.sqrt().max(1e-12);
+                }
+            }
+        }
+        let k0 = self.kinetic(&p);
+        // The fused artifact integrates with unit mass; only use it when
+        // no mass matrix is configured.
+        let fused = if self.inv_mass.is_none() {
+            target.fused_trajectory(&state.theta, &p, eps, self.n_leapfrog)
+        } else {
+            None
+        };
+        let traj = fused.unwrap_or_else(|| {
+            Self::leapfrog(
+                target,
+                &state.theta,
+                &p,
+                &state.grad,
+                state.logp,
+                eps,
+                self.n_leapfrog,
+                self.inv_mass.as_deref(),
+            )
+        });
+        let k1 = self.kinetic(&traj.p);
+        let log_alpha = traj.logp - k1 - (state.logp - k0);
+        let accept_prob = if log_alpha.is_finite() {
+            log_alpha.exp().min(1.0)
+        } else {
+            0.0
+        };
+        let accepted =
+            traj.logp.is_finite() && log_alpha >= rng.uniform().ln();
+        if accepted {
+            state.theta = traj.theta;
+            state.logp = traj.logp;
+            state.grad = traj.grad;
+        }
+        self.da.update(accept_prob);
+        accepted
+    }
+
+    fn finalize_adaptation(&mut self) {
+        self.da.freeze();
+    }
+
+    fn adapting(&self) -> bool {
+        !self.da.frozen()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::GaussianMean;
+    use crate::types::SampleMatrix;
+
+    fn run_on_gaussian(seed: u64, n_iter: usize) -> SampleMatrix {
+        let data = SampleMatrix::new(2);
+        let target = GaussianMean::new(data, 1.0, 1.0, 1.0); // N(0, I)
+        let mut rng = Pcg64::seed_from(seed);
+        let mut state = State::init(&target, vec![2.0, -2.0]);
+        let mut sampler = Hmc::new(0.2, 8);
+        let mut draws = SampleMatrix::new(2);
+        for i in 0..n_iter {
+            sampler.step(&target, &mut state, &mut rng);
+            if i == n_iter / 5 {
+                sampler.finalize_adaptation();
+            }
+            if i >= n_iter / 5 {
+                draws.push(&state.theta);
+            }
+        }
+        draws
+    }
+
+    #[test]
+    fn recovers_standard_normal() {
+        let draws = run_on_gaussian(5, 8_000);
+        let mean = draws.mean();
+        let cov = draws.covariance();
+        assert!(mean.iter().all(|m| m.abs() < 0.08), "mean {mean:?}");
+        assert!((cov[(0, 0)] - 1.0).abs() < 0.15, "var00 {}", cov[(0, 0)]);
+        assert!((cov[(1, 1)] - 1.0).abs() < 0.15, "var11 {}", cov[(1, 1)]);
+    }
+
+    #[test]
+    fn high_acceptance_after_adaptation() {
+        let data = SampleMatrix::new(3);
+        let target = GaussianMean::new(data, 1.0, 1.0, 1.0);
+        let mut rng = Pcg64::seed_from(6);
+        let mut state = State::init(&target, vec![0.0; 3]);
+        let mut sampler = Hmc::new(0.3, 10);
+        for _ in 0..1_500 {
+            sampler.step(&target, &mut state, &mut rng);
+        }
+        sampler.finalize_adaptation();
+        let mut acc = 0;
+        for _ in 0..1_500 {
+            if sampler.step(&target, &mut state, &mut rng) {
+                acc += 1;
+            }
+        }
+        let rate = acc as f64 / 1_500.0;
+        assert!(rate > 0.5, "rate {rate}");
+    }
+
+    #[test]
+    fn leapfrog_matches_energy_conservation() {
+        let data = SampleMatrix::new(2);
+        let target = GaussianMean::new(data, 1.0, 1.0, 1.0);
+        let theta = vec![1.0, 0.5];
+        let p = vec![0.2, -0.4];
+        let (lp, g) = target.logp_grad(&theta);
+        let traj = Hmc::leapfrog(&target, &theta, &p, &g, lp, 0.01, 100, None);
+        let h0 = -lp + 0.5 * (0.2f64 * 0.2 + 0.4 * 0.4);
+        let h1 = -traj.logp
+            + 0.5 * traj.p.iter().map(|v| v * v).sum::<f64>();
+        assert!((h1 - h0).abs() < 1e-4, "ΔH = {}", (h1 - h0).abs());
+    }
+
+    #[test]
+    fn diag_mass_matrix_still_correct() {
+        let data = SampleMatrix::new(2);
+        let target = GaussianMean::new(data, 1.0, 1.0, 1.0);
+        let mut rng = Pcg64::seed_from(8);
+        let mut state = State::init(&target, vec![0.0, 0.0]);
+        let mut sampler = Hmc::new(0.2, 8).with_inv_mass(vec![0.5, 2.0]);
+        let mut draws = SampleMatrix::new(2);
+        for i in 0..10_000 {
+            sampler.step(&target, &mut state, &mut rng);
+            if i == 2_000 {
+                sampler.finalize_adaptation();
+            }
+            if i >= 2_000 {
+                draws.push(&state.theta);
+            }
+        }
+        let cov = draws.covariance();
+        assert!((cov[(0, 0)] - 1.0).abs() < 0.2, "var00 {}", cov[(0, 0)]);
+        assert!((cov[(1, 1)] - 1.0).abs() < 0.2, "var11 {}", cov[(1, 1)]);
+    }
+}

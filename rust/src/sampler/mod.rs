@@ -1,0 +1,98 @@
+//! The MCMC substrate each worker runs on its subposterior.
+//!
+//! The paper's criterion (3) is that *any* MCMC method may run on each
+//! machine; this module provides four: random-walk Metropolis ([`Rwm`]),
+//! Metropolis-adjusted Langevin ([`Mala`]), Hamiltonian Monte Carlo
+//! ([`Hmc`]) with dual-averaging step-size adaptation, and No-U-Turn
+//! ([`Nuts`]). All operate through [`crate::model::LogDensity`], so they
+//! are oblivious to whether the density is evaluated natively or through
+//! a PJRT-loaded artifact.
+
+pub mod adapt;
+pub mod chain;
+pub mod gibbs;
+pub mod hmc;
+pub mod mala;
+pub mod nuts;
+pub mod rwm;
+
+pub use chain::{Chain, ChainConfig};
+pub use hmc::Hmc;
+pub use mala::Mala;
+pub use nuts::Nuts;
+pub use rwm::Rwm;
+
+use crate::model::LogDensity;
+use crate::rng::Pcg64;
+
+/// Mutable chain state threaded through sampler steps.
+///
+/// `grad` is kept current by gradient-based samplers (MALA/HMC/NUTS);
+/// [`Rwm`] leaves it stale and only maintains `logp`.
+#[derive(Debug, Clone)]
+pub struct State {
+    pub theta: Vec<f64>,
+    pub logp: f64,
+    pub grad: Vec<f64>,
+}
+
+impl State {
+    /// Initialize from a starting point (one target evaluation).
+    pub fn init(target: &dyn LogDensity, theta: Vec<f64>) -> Self {
+        let (logp, grad) = target.logp_grad(&theta);
+        State { theta, logp, grad }
+    }
+}
+
+/// One-step transition kernel preserving the target.
+pub trait Sampler: Send {
+    fn name(&self) -> &'static str;
+
+    /// Advance the state by one step. Returns whether the proposal was
+    /// accepted. Implementations adapt internal tuning parameters while
+    /// [`Sampler::adapting`] is true.
+    fn step(
+        &mut self,
+        target: &dyn LogDensity,
+        state: &mut State,
+        rng: &mut Pcg64,
+    ) -> bool;
+
+    /// Freeze adaptation (called by the chain runner at burn-in end).
+    fn finalize_adaptation(&mut self) {}
+
+    /// Whether the sampler is still adapting.
+    fn adapting(&self) -> bool {
+        false
+    }
+}
+
+/// Factory used by the coordinator to give each worker its own sampler.
+#[derive(Debug, Clone)]
+pub enum SamplerKind {
+    Rwm { scale: f64 },
+    Mala { step: f64 },
+    Hmc { step: f64, n_leapfrog: usize },
+    Nuts { step: f64, max_depth: usize },
+}
+
+impl SamplerKind {
+    pub fn build(&self, dim: usize) -> Box<dyn Sampler> {
+        match *self {
+            SamplerKind::Rwm { scale } => Box::new(Rwm::new(scale, dim)),
+            SamplerKind::Mala { step } => Box::new(Mala::new(step)),
+            SamplerKind::Hmc { step, n_leapfrog } => {
+                Box::new(Hmc::new(step, n_leapfrog))
+            }
+            SamplerKind::Nuts { step, max_depth } => {
+                Box::new(Nuts::new(step, max_depth))
+            }
+        }
+    }
+
+    /// Sensible defaults for a given model dimension.
+    pub fn default_hmc(dim: usize) -> SamplerKind {
+        let _ = dim;
+        SamplerKind::Hmc { step: 0.1, n_leapfrog: 10 }
+    }
+}

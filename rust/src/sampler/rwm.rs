@@ -1,0 +1,109 @@
+//! Random-walk Metropolis with adaptive isotropic proposal scale.
+
+use super::adapt::ScaleAdapter;
+use super::{Sampler, State};
+use crate::model::LogDensity;
+use crate::rng::Pcg64;
+
+/// Gaussian random-walk Metropolis.
+pub struct Rwm {
+    adapter: ScaleAdapter,
+    /// Scratch proposal buffer (avoids per-step allocation).
+    proposal: Vec<f64>,
+}
+
+impl Rwm {
+    pub fn new(scale: f64, dim: usize) -> Self {
+        // 2.38/√d is the classic optimal-scaling prefactor.
+        let s = scale * 2.38 / (dim.max(1) as f64).sqrt();
+        Rwm { adapter: ScaleAdapter::new(s, 0.234), proposal: vec![0.0; dim] }
+    }
+}
+
+impl Sampler for Rwm {
+    fn name(&self) -> &'static str {
+        "rwm"
+    }
+
+    fn step(
+        &mut self,
+        target: &dyn LogDensity,
+        state: &mut State,
+        rng: &mut Pcg64,
+    ) -> bool {
+        let scale = self.adapter.scale();
+        for (p, t) in self.proposal.iter_mut().zip(&state.theta) {
+            *p = t + scale * rng.normal();
+        }
+        let logp_new = target.logp(&self.proposal);
+        let accepted = (logp_new - state.logp) >= rng.uniform().ln();
+        if accepted {
+            state.theta.copy_from_slice(&self.proposal);
+            state.logp = logp_new;
+        }
+        self.adapter.update(accepted);
+        accepted
+    }
+
+    fn finalize_adaptation(&mut self) {
+        self.adapter.freeze();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::linalg::Mat;
+    use crate::math::mvn::Mvn;
+    use crate::model::GaussianMean;
+    use crate::types::SampleMatrix;
+
+    /// RWM on a standard normal target recovers its moments.
+    #[test]
+    fn recovers_standard_normal() {
+        // Zero-data Gaussian model: posterior == prior == N(0, I).
+        let data = SampleMatrix::new(2);
+        let target = GaussianMean::new(data, 1.0, 1.0, 1.0);
+        let mut rng = Pcg64::seed_from(1);
+        let mut state = State::init(&target, vec![0.0, 0.0]);
+        let mut sampler = Rwm::new(1.0, 2);
+        let mut draws = SampleMatrix::new(2);
+        for i in 0..30_000 {
+            sampler.step(&target, &mut state, &mut rng);
+            if i == 2_000 {
+                sampler.finalize_adaptation();
+            }
+            if i >= 2_000 {
+                draws.push(&state.theta);
+            }
+        }
+        let mean = draws.mean();
+        let cov = draws.covariance();
+        assert!(mean.iter().all(|m| m.abs() < 0.1), "mean {mean:?}");
+        assert!((cov[(0, 0)] - 1.0).abs() < 0.2, "var {}", cov[(0, 0)]);
+        assert!(cov[(0, 1)].abs() < 0.1);
+        let _ = Mvn::new(vec![0.0; 2], Mat::identity(2)); // silence unused import warnings
+    }
+
+    #[test]
+    fn acceptance_rate_reasonable_after_adaptation() {
+        let data = SampleMatrix::new(3);
+        let target = GaussianMean::new(data, 1.0, 1.0, 1.0);
+        let mut rng = Pcg64::seed_from(2);
+        let mut state = State::init(&target, vec![0.0; 3]);
+        let mut sampler = Rwm::new(1.0, 3);
+        for _ in 0..3_000 {
+            sampler.step(&target, &mut state, &mut rng);
+        }
+        sampler.finalize_adaptation();
+        let mut acc = 0usize;
+        let total = 4_000;
+        for _ in 0..total {
+            if sampler.step(&target, &mut state, &mut rng) {
+                acc += 1;
+            }
+        }
+        let rate = acc as f64 / total as f64;
+        assert!((0.1..0.5).contains(&rate), "rate {rate}");
+    }
+}

@@ -1,0 +1,160 @@
+//! MCMC convergence diagnostics: autocorrelation, effective sample size,
+//! split-R̂ (Gelman-Rubin).
+
+use crate::types::SampleMatrix;
+
+/// Autocorrelation of one coordinate at lags 0..max_lag (direct method).
+pub fn autocorrelation(s: &SampleMatrix, dim: usize, max_lag: usize) -> Vec<f64> {
+    let xs: Vec<f64> = s.rows().map(|r| r[dim]).collect();
+    let n = xs.len();
+    assert!(n >= 2);
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let dev: Vec<f64> = xs.iter().map(|x| x - mean).collect();
+    let var: f64 = dev.iter().map(|d| d * d).sum::<f64>() / n as f64;
+    let max_lag = max_lag.min(n - 1);
+    let mut rho = Vec::with_capacity(max_lag + 1);
+    if var == 0.0 {
+        rho.resize(max_lag + 1, 1.0);
+        return rho;
+    }
+    for lag in 0..=max_lag {
+        let mut acc = 0.0;
+        for i in 0..(n - lag) {
+            acc += dev[i] * dev[i + lag];
+        }
+        rho.push(acc / (n as f64 * var));
+    }
+    rho
+}
+
+/// Effective sample size via Geyer's initial positive sequence estimator.
+pub fn ess(s: &SampleMatrix, dim: usize) -> f64 {
+    let n = s.len();
+    if n < 4 {
+        return n as f64;
+    }
+    let rho = autocorrelation(s, dim, (n - 1).min(1000));
+    // Sum paired autocorrelations while they stay positive.
+    let mut tau = 1.0; // = 1 + 2 Σ ρ_k
+    let mut k = 1;
+    while k + 1 < rho.len() {
+        let pair = rho[k] + rho[k + 1];
+        if pair <= 0.0 {
+            break;
+        }
+        tau += 2.0 * pair;
+        k += 2;
+    }
+    (n as f64 / tau).min(n as f64).max(1.0)
+}
+
+/// Minimum ESS across all coordinates.
+pub fn min_ess(s: &SampleMatrix) -> f64 {
+    (0..s.dim())
+        .map(|d| ess(s, d))
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// Split-R̂ over several chains for one coordinate. Values near 1
+/// indicate convergence; > 1.05 is suspect.
+pub fn split_rhat(chains: &[&SampleMatrix], dim: usize) -> f64 {
+    // Split each chain in half → 2C pseudo-chains of equal length.
+    let min_len = chains.iter().map(|c| c.len()).min().unwrap_or(0);
+    let half = min_len / 2;
+    assert!(half >= 2, "chains too short for split-rhat");
+    let mut means = Vec::new();
+    let mut vars = Vec::new();
+    for c in chains {
+        for part in 0..2 {
+            let lo = part * half;
+            let xs: Vec<f64> =
+                (lo..lo + half).map(|i| c.row(i)[dim]).collect();
+            let m = xs.iter().sum::<f64>() / half as f64;
+            let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+                / (half - 1) as f64;
+            means.push(m);
+            vars.push(v);
+        }
+    }
+    let mchains = means.len() as f64;
+    let grand = means.iter().sum::<f64>() / mchains;
+    let b = half as f64
+        * means.iter().map(|m| (m - grand) * (m - grand)).sum::<f64>()
+        / (mchains - 1.0);
+    let w = vars.iter().sum::<f64>() / mchains;
+    if w == 0.0 {
+        return 1.0;
+    }
+    let var_plus = (half as f64 - 1.0) / half as f64 * w + b / half as f64;
+    (var_plus / w).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn iid_chain(seed: u64, n: usize) -> SampleMatrix {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut s = SampleMatrix::new(1);
+        for _ in 0..n {
+            s.push(&[rng.normal()]);
+        }
+        s
+    }
+
+    fn ar1_chain(seed: u64, n: usize, phi: f64) -> SampleMatrix {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut s = SampleMatrix::new(1);
+        let mut x = 0.0;
+        for _ in 0..n {
+            x = phi * x + (1.0 - phi * phi).sqrt() * rng.normal();
+            s.push(&[x]);
+        }
+        s
+    }
+
+    #[test]
+    fn autocorr_lag0_is_one() {
+        let s = iid_chain(1, 500);
+        let rho = autocorrelation(&s, 0, 10);
+        assert!((rho[0] - 1.0).abs() < 1e-12);
+        assert!(rho[1].abs() < 0.1);
+    }
+
+    #[test]
+    fn ess_iid_near_n() {
+        let s = iid_chain(2, 4000);
+        let e = ess(&s, 0);
+        assert!(e > 2500.0, "ess {e}");
+    }
+
+    #[test]
+    fn ess_correlated_much_smaller() {
+        let s = ar1_chain(3, 4000, 0.95);
+        let e = ess(&s, 0);
+        // Theoretical τ = (1+φ)/(1-φ) = 39 → ESS ≈ 100.
+        assert!(e < 500.0, "ess {e}");
+        assert!(e > 20.0, "ess {e}");
+    }
+
+    #[test]
+    fn rhat_converged_near_one() {
+        let a = iid_chain(4, 2000);
+        let b = iid_chain(5, 2000);
+        let r = split_rhat(&[&a, &b], 0);
+        assert!((r - 1.0).abs() < 0.05, "rhat {r}");
+    }
+
+    #[test]
+    fn rhat_detects_disagreement() {
+        let a = iid_chain(6, 2000);
+        let mut b = SampleMatrix::new(1);
+        let mut rng = Pcg64::seed_from(7);
+        for _ in 0..2000 {
+            b.push(&[rng.normal() + 5.0]); // shifted chain
+        }
+        let r = split_rhat(&[&a, &b], 0);
+        assert!(r > 1.5, "rhat {r}");
+    }
+}

@@ -1,0 +1,5 @@
+//! Sample statistics: batch moments, convergence diagnostics, KDE.
+
+pub mod diagnostics;
+pub mod kde;
+pub mod moments;

@@ -1,0 +1,159 @@
+//! Batch mean / covariance / quantiles over [`SampleMatrix`].
+
+use crate::math::linalg::Mat;
+use crate::types::SampleMatrix;
+
+/// Sample mean.
+pub fn mean(s: &SampleMatrix) -> Vec<f64> {
+    let d = s.dim();
+    let mut m = vec![0.0; d];
+    for row in s.rows() {
+        for (mi, &xi) in m.iter_mut().zip(row) {
+            *mi += xi;
+        }
+    }
+    let n = s.len().max(1) as f64;
+    for mi in m.iter_mut() {
+        *mi /= n;
+    }
+    m
+}
+
+/// Unbiased sample covariance (d × d).
+pub fn covariance(s: &SampleMatrix) -> Mat {
+    let d = s.dim();
+    let n = s.len();
+    assert!(n >= 2, "need >= 2 draws for covariance");
+    let m = mean(s);
+    let mut c = Mat::zeros(d, d);
+    let mut dev = vec![0.0; d];
+    for row in s.rows() {
+        for j in 0..d {
+            dev[j] = row[j] - m[j];
+        }
+        for i in 0..d {
+            let di = dev[i];
+            for j in i..d {
+                c[(i, j)] += di * dev[j];
+            }
+        }
+    }
+    let denom = (n - 1) as f64;
+    for i in 0..d {
+        for j in i..d {
+            let v = c[(i, j)] / denom;
+            c[(i, j)] = v;
+            c[(j, i)] = v;
+        }
+    }
+    c
+}
+
+/// Per-dimension variance (diagonal of [`covariance`], computed directly).
+pub fn variances(s: &SampleMatrix) -> Vec<f64> {
+    let d = s.dim();
+    let n = s.len();
+    assert!(n >= 2);
+    let m = mean(s);
+    let mut v = vec![0.0; d];
+    for row in s.rows() {
+        for j in 0..d {
+            let dev = row[j] - m[j];
+            v[j] += dev * dev;
+        }
+    }
+    for vj in v.iter_mut() {
+        *vj /= (n - 1) as f64;
+    }
+    v
+}
+
+/// Weighted mean with non-negative weights.
+pub fn weighted_mean(s: &SampleMatrix, w: &[f64]) -> Vec<f64> {
+    assert_eq!(s.len(), w.len());
+    let d = s.dim();
+    let mut m = vec![0.0; d];
+    let mut wsum = 0.0;
+    for (row, &wi) in s.rows().zip(w) {
+        wsum += wi;
+        for j in 0..d {
+            m[j] += wi * row[j];
+        }
+    }
+    assert!(wsum > 0.0);
+    for mj in m.iter_mut() {
+        *mj /= wsum;
+    }
+    m
+}
+
+/// `q`-quantile of one coordinate (linear interpolation).
+pub fn quantile(s: &SampleMatrix, dim: usize, q: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&q));
+    let mut xs: Vec<f64> = s.rows().map(|r| r[dim]).collect();
+    assert!(!xs.is_empty());
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (xs.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        xs[lo]
+    } else {
+        let frac = pos - lo as f64;
+        xs[lo] * (1.0 - frac) + xs[hi] * frac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture() -> SampleMatrix {
+        let mut s = SampleMatrix::new(2);
+        s.push(&[1.0, 2.0]);
+        s.push(&[3.0, 4.0]);
+        s.push(&[5.0, 0.0]);
+        s
+    }
+
+    #[test]
+    fn mean_simple() {
+        assert_eq!(mean(&fixture()), vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn covariance_matches_hand_calc() {
+        let c = covariance(&fixture());
+        // devs: (-2,0),(0,2),(2,-2) → var0 = (4+0+4)/2 = 4,
+        // var1 = (0+4+4)/2 = 4, cov = (0+0-4)/2 = -2.
+        assert!((c[(0, 0)] - 4.0).abs() < 1e-12);
+        assert!((c[(1, 1)] - 4.0).abs() < 1e-12);
+        assert!((c[(0, 1)] + 2.0).abs() < 1e-12);
+        assert_eq!(c[(0, 1)], c[(1, 0)]);
+    }
+
+    #[test]
+    fn variances_match_cov_diagonal() {
+        let s = fixture();
+        let c = covariance(&s);
+        let v = variances(&s);
+        assert!((v[0] - c[(0, 0)]).abs() < 1e-12);
+        assert!((v[1] - c[(1, 1)]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_mean_downweights() {
+        let s = fixture();
+        let m = weighted_mean(&s, &[1.0, 0.0, 1.0]);
+        assert_eq!(m, vec![3.0, 1.0]);
+    }
+
+    #[test]
+    fn quantiles() {
+        let s = fixture();
+        assert_eq!(quantile(&s, 0, 0.0), 1.0);
+        assert_eq!(quantile(&s, 0, 0.5), 3.0);
+        assert_eq!(quantile(&s, 0, 1.0), 5.0);
+        assert_eq!(quantile(&s, 0, 0.25), 2.0);
+    }
+}

@@ -1,0 +1,241 @@
+//! Core data containers shared across the crate.
+
+use crate::error::{Error, Result};
+
+/// A row-major `T × d` matrix of MCMC samples (one row = one draw of θ).
+///
+/// This is the interchange type between workers, the leader, the
+/// combination algorithms and the evaluation code.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SampleMatrix {
+    data: Vec<f64>,
+    dim: usize,
+}
+
+impl SampleMatrix {
+    /// Empty matrix of draws in `dim` dimensions.
+    pub fn new(dim: usize) -> Self {
+        assert!(dim > 0, "dim must be positive");
+        SampleMatrix { data: Vec::new(), dim }
+    }
+
+    /// Empty matrix with capacity for `t` draws.
+    pub fn with_capacity(dim: usize, t: usize) -> Self {
+        assert!(dim > 0, "dim must be positive");
+        SampleMatrix { data: Vec::with_capacity(dim * t), dim }
+    }
+
+    /// Build from a flat row-major buffer.
+    pub fn from_rows(data: Vec<f64>, dim: usize) -> Result<Self> {
+        if dim == 0 || data.len() % dim != 0 {
+            return Err(Error::Shape(format!(
+                "flat buffer of {} not divisible by dim {}",
+                data.len(),
+                dim
+            )));
+        }
+        Ok(SampleMatrix { data, dim })
+    }
+
+    /// Number of draws.
+    pub fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Dimensionality of θ.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Borrow draw `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Append one draw.
+    pub fn push(&mut self, theta: &[f64]) {
+        assert_eq!(theta.len(), self.dim, "draw has wrong dimension");
+        self.data.extend_from_slice(theta);
+    }
+
+    /// Append all draws of another matrix (must agree on `dim`).
+    pub fn extend(&mut self, other: &SampleMatrix) -> Result<()> {
+        if other.dim != self.dim {
+            return Err(Error::Shape(format!(
+                "cannot extend dim {} with dim {}",
+                self.dim, other.dim
+            )));
+        }
+        self.data.extend_from_slice(&other.data);
+        Ok(())
+    }
+
+    /// Flat row-major view.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Iterator over draws.
+    pub fn rows(&self) -> impl Iterator<Item = &[f64]> {
+        self.data.chunks_exact(self.dim)
+    }
+
+    /// Keep draws `[from, len)` — used for burn-in removal.
+    pub fn split_off_burnin(&self, from: usize) -> SampleMatrix {
+        let from = from.min(self.len());
+        SampleMatrix {
+            data: self.data[from * self.dim..].to_vec(),
+            dim: self.dim,
+        }
+    }
+
+    /// Every `k`-th draw (thinning).
+    pub fn thin(&self, k: usize) -> SampleMatrix {
+        assert!(k > 0);
+        let mut out = SampleMatrix::with_capacity(self.dim, self.len() / k);
+        for i in (0..self.len()).step_by(k) {
+            out.push(self.row(i));
+        }
+        out
+    }
+
+    /// First `t` draws (or all if fewer).
+    pub fn take(&self, t: usize) -> SampleMatrix {
+        let t = t.min(self.len());
+        SampleMatrix {
+            data: self.data[..t * self.dim].to_vec(),
+            dim: self.dim,
+        }
+    }
+
+    /// Sample mean (length `dim`).
+    pub fn mean(&self) -> Vec<f64> {
+        crate::stats::moments::mean(self)
+    }
+
+    /// Sample covariance (dim × dim, unbiased).
+    pub fn covariance(&self) -> crate::math::linalg::Mat {
+        crate::stats::moments::covariance(self)
+    }
+
+    /// Project onto a subset of coordinates (e.g. the first 2-d marginal).
+    pub fn select_dims(&self, dims: &[usize]) -> Result<SampleMatrix> {
+        for &d in dims {
+            if d >= self.dim {
+                return Err(Error::Shape(format!(
+                    "dim index {d} out of range (dim={})",
+                    self.dim
+                )));
+            }
+        }
+        let mut out = SampleMatrix::with_capacity(dims.len(), self.len());
+        let mut buf = vec![0.0; dims.len()];
+        for row in self.rows() {
+            for (j, &d) in dims.iter().enumerate() {
+                buf[j] = row[d];
+            }
+            out.push(&buf);
+        }
+        Ok(out)
+    }
+}
+
+/// One machine's output: its subposterior draws plus sampler telemetry.
+#[derive(Debug, Clone)]
+pub struct SubposteriorSamples {
+    /// Worker (machine) index `m ∈ 0..M`.
+    pub machine: usize,
+    /// Post-burn-in draws from `p_m`.
+    pub samples: SampleMatrix,
+    /// Mean acceptance rate of the worker's sampler.
+    pub accept_rate: f64,
+    /// Wall-clock seconds the worker spent sampling (including burn-in).
+    pub wall_secs: f64,
+    /// Seconds after which draw `i` was available (cumulative, for the
+    /// paper's error-vs-time protocol). Length == samples.len().
+    pub draw_times: Vec<f64>,
+}
+
+impl SubposteriorSamples {
+    pub fn new(machine: usize, samples: SampleMatrix) -> Self {
+        let n = samples.len();
+        SubposteriorSamples {
+            machine,
+            samples,
+            accept_rate: f64::NAN,
+            wall_secs: 0.0,
+            draw_times: vec![0.0; n],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_row_len() {
+        let mut s = SampleMatrix::new(3);
+        assert!(s.is_empty());
+        s.push(&[1.0, 2.0, 3.0]);
+        s.push(&[4.0, 5.0, 6.0]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.row(1), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn from_rows_validates() {
+        assert!(SampleMatrix::from_rows(vec![1.0, 2.0, 3.0], 2).is_err());
+        let s = SampleMatrix::from_rows(vec![1.0, 2.0, 3.0, 4.0], 2).unwrap();
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn burnin_and_thin() {
+        let mut s = SampleMatrix::new(1);
+        for i in 0..10 {
+            s.push(&[i as f64]);
+        }
+        let b = s.split_off_burnin(4);
+        assert_eq!(b.len(), 6);
+        assert_eq!(b.row(0), &[4.0]);
+        let t = s.thin(3);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.row(1), &[3.0]);
+    }
+
+    #[test]
+    fn select_dims_projects() {
+        let mut s = SampleMatrix::new(3);
+        s.push(&[1.0, 2.0, 3.0]);
+        let p = s.select_dims(&[2, 0]).unwrap();
+        assert_eq!(p.row(0), &[3.0, 1.0]);
+        assert!(s.select_dims(&[5]).is_err());
+    }
+
+    #[test]
+    fn extend_checks_dim() {
+        let mut a = SampleMatrix::new(2);
+        let mut b = SampleMatrix::new(2);
+        b.push(&[1.0, 2.0]);
+        a.extend(&b).unwrap();
+        assert_eq!(a.len(), 1);
+        let c = SampleMatrix::new(3);
+        assert!(a.extend(&c).is_err());
+    }
+
+    #[test]
+    fn take_truncates() {
+        let mut s = SampleMatrix::new(1);
+        for i in 0..5 {
+            s.push(&[i as f64]);
+        }
+        assert_eq!(s.take(3).len(), 3);
+        assert_eq!(s.take(99).len(), 5);
+    }
+}

