@@ -6,6 +6,10 @@
 //! `REPRO_BENCH_FULL=1` for paper-scale workloads (default: scaled-down
 //! versions with the same shape).
 
+#![allow(dead_code)] // each bench uses a subset of this kit
+
+use std::io::Write;
+use std::path::Path;
 use std::time::Instant;
 
 /// True when paper-scale workloads were requested.
@@ -42,6 +46,60 @@ pub fn header(name: &str, desc: &str) {
         "scale: {}",
         if full_scale() { "FULL (paper)" } else { "scaled (REPRO_BENCH_FULL=1 for paper scale)" }
     );
+}
+
+/// One row of a machine-readable benchmark result.
+pub struct BenchRecord {
+    pub name: String,
+    pub ns_per_op: f64,
+    pub threads: usize,
+    /// Wall-clock speedup vs the 1-thread run of the same benchmark
+    /// (1.0 when single-threaded or not comparable).
+    pub speedup: f64,
+}
+
+/// Escape a string for embedding in a JSON string literal.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Hand-rolled JSON emitter (serde is unavailable offline): writes
+/// `[{"name": …, "ns_per_op": …, "threads": …, "speedup": …}, …]` so
+/// the perf trajectory in EXPERIMENTS.md §Perf can be diffed by tools.
+pub fn write_bench_json(
+    path: &Path,
+    records: &[BenchRecord],
+) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "[")?;
+    for (i, r) in records.iter().enumerate() {
+        let comma = if i + 1 < records.len() { "," } else { "" };
+        writeln!(
+            f,
+            "  {{\"name\": \"{}\", \"ns_per_op\": {:.1}, \
+             \"threads\": {}, \"speedup\": {:.3}}}{comma}",
+            json_escape(&r.name),
+            r.ns_per_op,
+            r.threads,
+            r.speedup
+        )?;
+    }
+    writeln!(f, "]")?;
+    Ok(())
 }
 
 /// Format seconds with sensible units.

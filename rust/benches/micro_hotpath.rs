@@ -7,7 +7,9 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use repro::combine::nonparametric::{nonparametric, nonparametric_naive, Img};
+use repro::combine::nonparametric::{
+    nonparametric, nonparametric_naive, nonparametric_threaded, Img,
+};
 use repro::data::{io, synth};
 use repro::math::linalg::Mat;
 use repro::math::mvn::Mvn;
@@ -143,7 +145,65 @@ fn main() -> repro::error::Result<()> {
     });
     row("nonparametric_combine_M10_T1000_d10", secs, 1);
 
+    // --- parallel combination runtime: M=10, d=10, T=100k ----------------
+    // The §Perf headline: thread-count scaling of the nonparametric
+    // combiner at paper scale (T = 100k draws per machine), with a
+    // byte-identity check across thread counts. Output draws t_out are
+    // scaled down off full mode; T stays at 100k so the shared-cache
+    // setup cost is realistic.
+    let (t_big, t_out_big) =
+        if common::full_scale() { (100_000, 100_000) } else { (100_000, 20_000) };
+    let mut rng = Pcg64::seed_from(31);
+    let big_sets: Vec<SampleMatrix> = (0..10)
+        .map(|_| {
+            Mvn::new(vec![0.0; 10], Mat::identity(10))
+                .unwrap()
+                .sample_n(t_big, &mut rng)
+        })
+        .collect();
+    let big_refs: Vec<&SampleMatrix> = big_sets.iter().collect();
+    let mut records: Vec<common::BenchRecord> = Vec::new();
+    let mut secs_1t = 0.0;
+    let mut baseline: Option<SampleMatrix> = None;
+    let mut deterministic = true;
+    for &threads in &[1usize, 2, 4, 8] {
+        let mut out = SampleMatrix::new(10);
+        let secs = common::time_median(3, || {
+            out = nonparametric_threaded(&big_refs, t_out_big, 3, threads)
+                .unwrap();
+        });
+        if threads == 1 {
+            secs_1t = secs;
+            baseline = Some(out.clone());
+        } else if let Some(base) = &baseline {
+            deterministic &= base.as_slice() == out.as_slice();
+        }
+        let speedup = if secs > 0.0 { secs_1t / secs } else { 1.0 };
+        let name = format!("nonparametric_combine_M10_T{t_big}_d10");
+        println!(
+            "{name:36} threads={threads} {:>10}   speedup {speedup:>5.2}×",
+            common::fmt_secs(secs)
+        );
+        table.push(&format!("{name}_threads{threads}"), vec![secs * 1e9]);
+        records.push(common::BenchRecord {
+            name,
+            ns_per_op: secs * 1e9,
+            threads,
+            speedup,
+        });
+    }
+    println!(
+        "parallel combine determinism across thread counts: {}",
+        if deterministic { "OK (byte-identical)" } else { "FAILED" }
+    );
+    assert!(deterministic, "thread counts must not change output");
+
     table.write_csv(Path::new("results/micro_hotpath.csv"))?;
+    common::write_bench_json(
+        Path::new("results/BENCH_combine.json"),
+        &records,
+    )?;
     println!("\nwrote results/micro_hotpath.csv");
+    println!("wrote results/BENCH_combine.json");
     Ok(())
 }

@@ -59,16 +59,19 @@ pub fn consensus_weighted(
 
     let mut out = SampleMatrix::with_capacity(dim, t_out);
     let mut acc = vec![0.0; dim];
+    // Scratch buffers reused across draws (no per-draw heap traffic).
+    let mut wr = vec![0.0; dim];
+    let mut combined = vec![0.0; dim];
     for _ in 0..t_out {
         acc.iter_mut().for_each(|v| *v = 0.0);
         for (s, est) in sets.iter().zip(&estimates) {
             let row = s.row(rng.uniform_usize(s.len()));
-            let wr = est.prec.matvec(row)?;
+            est.prec.matvec_into(row, &mut wr)?;
             for j in 0..dim {
                 acc[j] += wr[j];
             }
         }
-        let combined = w_sum_inv.matvec(&acc)?;
+        w_sum_inv.matvec_into(&acc, &mut combined)?;
         out.push(&combined);
     }
     Ok(out)

@@ -33,8 +33,17 @@ pub use pairwise::pairwise;
 pub use parametric::parametric;
 pub use semiparametric::{semiparametric, semiparametric_nw};
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
 use crate::error::{Error, Result};
+use crate::rng::Pcg64;
 use crate::types::{SampleMatrix, SubposteriorSamples};
+
+/// Rows per block when building combine-stage caches (norms, whitening):
+/// large enough that the inner reduction runs over a long contiguous
+/// slice, small enough to stay in L1.
+const CACHE_BLOCK_ROWS: usize = 64;
 
 /// Which combination algorithm to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -100,8 +109,21 @@ pub fn combine(
     t_out: usize,
     seed: u64,
 ) -> Result<SampleMatrix> {
+    combine_threaded(method, subs, t_out, seed, 1)
+}
+
+/// [`combine`] with an explicit combine-stage thread count (`0` = all
+/// available cores). Output is byte-identical for a fixed seed
+/// regardless of `threads` — parallelism only changes wall-clock.
+pub fn combine_threaded(
+    method: CombineMethod,
+    subs: &[SubposteriorSamples],
+    t_out: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<SampleMatrix> {
     let sets: Vec<&SampleMatrix> = subs.iter().map(|s| &s.samples).collect();
-    combine_sets(method, &sets, t_out, seed)
+    combine_sets_threaded(method, &sets, t_out, seed, threads)
 }
 
 /// Like [`combine`] but over bare sample sets.
@@ -111,21 +133,254 @@ pub fn combine_sets(
     t_out: usize,
     seed: u64,
 ) -> Result<SampleMatrix> {
+    combine_sets_threaded(method, sets, t_out, seed, 1)
+}
+
+/// [`combine_sets`] with an explicit combine-stage thread count (`0` =
+/// all available cores). Deterministic for a fixed seed at any thread
+/// count.
+pub fn combine_sets_threaded(
+    method: CombineMethod,
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<SampleMatrix> {
     validate_sets(sets)?;
+    let threads = resolve_threads(threads);
     match method {
         CombineMethod::Parametric => parametric(sets, t_out, seed),
-        CombineMethod::Nonparametric => nonparametric(sets, t_out, seed),
-        CombineMethod::Semiparametric => semiparametric(sets, t_out, seed),
-        CombineMethod::SemiparametricNw => {
-            semiparametric_nw(sets, t_out, seed)
+        CombineMethod::Nonparametric => {
+            nonparametric::nonparametric_threaded(sets, t_out, seed, threads)
         }
-        CombineMethod::Pairwise => pairwise(sets, t_out, seed),
+        CombineMethod::Semiparametric => {
+            semiparametric::semiparametric_threaded(sets, t_out, seed, threads)
+        }
+        CombineMethod::SemiparametricNw => {
+            semiparametric::semiparametric_nw_threaded(
+                sets, t_out, seed, threads,
+            )
+        }
+        CombineMethod::Pairwise => {
+            pairwise::pairwise_threaded(sets, t_out, seed, threads)
+        }
         CombineMethod::SubpostAvg => subpost_avg(sets, t_out, seed),
         CombineMethod::SubpostPool => Ok(subpost_pool(sets)?.take(t_out)),
         CombineMethod::ConsensusWeighted => {
             consensus_weighted(sets, t_out, seed)
         }
     }
+}
+
+/// Resolve a requested combine-stage thread count: `0` means "all
+/// available cores", anything else is taken as-is.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+/// Run `f(0), …, f(n-1)` on up to `threads` scoped worker threads and
+/// return the results in index order.
+///
+/// Work is handed out through an atomic counter (no per-task spawn), so
+/// coarse tasks of uneven size pack LPT-style onto the pool. `f(i)`
+/// must not depend on scheduling — every caller here passes tasks that
+/// are pure functions of the index plus read-only shared state, which
+/// is what makes the parallel combiner's output independent of the
+/// thread count.
+pub(crate) fn par_map_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.clamp(1, n.max(1));
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+    let slots: Mutex<Vec<Option<T>>> =
+        Mutex::new((0..n).map(|_| None).collect());
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                slots.lock().unwrap()[i] = Some(v);
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|slot| slot.expect("every index was processed"))
+        .collect()
+}
+
+/// Restart schedule shared by the IMG-based combiners: chunk sizes
+/// `(kept, warmup)` summing to exactly `t_out` kept draws.
+///
+/// Chunks grow geometrically from `chunk0` but are capped at
+/// `max(chunk0, t_out / 8)`, so the plan always splinters into enough
+/// independent chains to occupy a thread pool (longest chain ≤ ~12.5%
+/// of the work) while the cap itself grows linearly in `t_out` — every
+/// non-tail chunk anneals its bandwidth down to `O((t_out/8)^{-1/(4+d)})`,
+/// which → 0 as `t_out` → ∞, preserving asymptotic exactness. Each
+/// chunk discards the first 20% as per-restart warmup.
+///
+/// The plan is a pure function of `(t_out, chunk0)` — never of the
+/// thread count — which is one half of the determinism contract (the
+/// other half being per-chunk RNG streams, [`crate::rng::Pcg64::split_n`]).
+pub(crate) fn restart_plan(
+    t_out: usize,
+    chunk0: usize,
+) -> Vec<(usize, usize)> {
+    let mut plan = Vec::new();
+    if t_out == 0 {
+        return plan;
+    }
+    // cap ≥ chunk0, so it only ever binds during geometric growth.
+    let cap = (t_out / 8).max(chunk0.max(1));
+    let mut chunk = chunk0.max(1);
+    let mut remaining = t_out;
+    while remaining > 0 {
+        let n = chunk.min(remaining);
+        plan.push((n, n / 5));
+        remaining -= n;
+        chunk = chunk.saturating_mul(2).min(cap);
+    }
+    plan
+}
+
+/// Default first-chunk size of the restart schedule.
+pub(crate) const RESTART_CHUNK0: usize = 500;
+/// Default index sweeps per emitted draw in the IMG-based combiners.
+pub(crate) const RESTART_SWEEPS: usize = 3;
+
+/// Orchestrate the restart plan for `t_out` draws: split one RNG
+/// stream per chunk off `seed`, run `chain(keep, warmup, rng)` for
+/// each chunk `threads`-wide, and concatenate the parts in plan order.
+///
+/// This is the single copy of the determinism-critical schedule shared
+/// by the nonparametric and semiparametric combiners: both the plan
+/// ([`restart_plan`]) and the per-chunk streams ([`Pcg64::split_n`])
+/// are pure functions of `(t_out, seed)`, never of the thread count.
+pub(crate) fn run_restart_chains<F>(
+    dim: usize,
+    t_out: usize,
+    chunk0: usize,
+    seed: u64,
+    threads: usize,
+    chain: F,
+) -> Result<SampleMatrix>
+where
+    F: Fn(usize, usize, Pcg64) -> Result<SampleMatrix> + Sync,
+{
+    let plan = restart_plan(t_out, chunk0);
+    let mut root = Pcg64::seed_from(seed);
+    let rngs = root.split_n(plan.len());
+    let parts = par_map_indexed(plan.len(), threads, |i| {
+        let (keep, warmup) = plan[i];
+        chain(keep, warmup, rngs[i].clone())
+    })
+    .into_iter()
+    .collect::<Result<Vec<SampleMatrix>>>()?;
+    let mut out = SampleMatrix::with_capacity(dim, t_out);
+    for part in &parts {
+        out.push_rows(part.as_slice());
+    }
+    Ok(out.take(t_out))
+}
+
+/// Precomputed, read-only state shared by every IMG chain of one
+/// combine call: whitened per-machine draws, the whitening scales, and
+/// per-draw squared norms (the O(1) `Q_t` update cache).
+///
+/// Built once per combine — in parallel across machines — then
+/// borrowed read-only by all restart chains (scoped worker threads need
+/// no `Arc`), instead of being recomputed per chain as the sequential
+/// implementation did. Deliberately not `Clone`: a copy would
+/// duplicate all whitened draws (O(TMd)); share by borrow instead.
+#[derive(Debug)]
+pub struct CombineContext {
+    sets: Vec<SampleMatrix>,
+    scales: Vec<f64>,
+    norms: Vec<Vec<f64>>,
+}
+
+impl CombineContext {
+    /// Whiten all machines and cache per-draw squared norms, fanning the
+    /// per-machine work (O(Td) each) across `threads` workers.
+    pub fn prepare(sets: &[&SampleMatrix], threads: usize) -> Self {
+        assert!(!sets.is_empty(), "no subposterior sample sets");
+        let scales = whitening_scales(sets);
+        let per_machine: Vec<(SampleMatrix, Vec<f64>)> =
+            par_map_indexed(sets.len(), threads, |m| {
+                let w = whiten_one(sets[m], &scales);
+                let n = row_norms(&w);
+                (w, n)
+            });
+        let mut whitened = Vec::with_capacity(per_machine.len());
+        let mut norms = Vec::with_capacity(per_machine.len());
+        for (w, n) in per_machine {
+            whitened.push(w);
+            norms.push(n);
+        }
+        CombineContext { sets: whitened, scales, norms }
+    }
+
+    /// Number of machines M.
+    pub fn machines(&self) -> usize {
+        self.sets.len()
+    }
+
+    /// Dimensionality of θ.
+    pub fn dim(&self) -> usize {
+        self.sets[0].dim()
+    }
+
+    /// Whitened per-machine sample sets.
+    pub fn sets(&self) -> &[SampleMatrix] {
+        &self.sets
+    }
+
+    /// Per-dimension whitening scales (see [`whitening_scales`]).
+    pub fn scales(&self) -> &[f64] {
+        &self.scales
+    }
+
+    /// `|θ^m_t|²` per machine per draw, in whitened coordinates.
+    pub fn norms(&self) -> &[Vec<f64>] {
+        &self.norms
+    }
+}
+
+/// Scatter `D_t = Q_t − |S_t|²/M` (≥ 0 up to fp noise) — the single
+/// copy of the IMG weight statistic shared by the nonparametric and
+/// semiparametric inner loops.
+#[inline]
+pub(crate) fn scatter(sq_sum: f64, sum: &[f64], m: f64) -> f64 {
+    let s2: f64 = sum.iter().map(|v| v * v).sum();
+    (sq_sum - s2 / m).max(0.0)
+}
+
+/// Per-draw squared norms of one sample set, reduced block-at-a-time
+/// over contiguous memory ([`SampleMatrix::rows_chunked`]).
+pub(crate) fn row_norms(set: &SampleMatrix) -> Vec<f64> {
+    let d = set.dim();
+    let mut norms = Vec::with_capacity(set.len());
+    for block in set.rows_chunked(CACHE_BLOCK_ROWS) {
+        for row in block.chunks_exact(d) {
+            norms.push(row.iter().map(|v| v * v).sum::<f64>());
+        }
+    }
+    norms
 }
 
 /// Per-dimension whitening scale shared by all machines: the average
@@ -161,20 +416,28 @@ pub(crate) fn whitening_scales(sets: &[&SampleMatrix]) -> Vec<f64> {
 }
 
 /// Divide every draw's coordinate j by `scales[j]`.
-pub(crate) fn whiten(sets: &[&SampleMatrix], scales: &[f64]) -> Vec<SampleMatrix> {
-    sets.iter()
-        .map(|set| {
-            let mut out = SampleMatrix::with_capacity(set.dim(), set.len());
-            let mut buf = vec![0.0; set.dim()];
-            for row in set.rows() {
-                for (j, (&v, &s)) in row.iter().zip(scales).enumerate() {
-                    buf[j] = v / s;
-                }
-                out.push(&buf);
-            }
-            out
-        })
-        .collect()
+pub(crate) fn whiten(
+    sets: &[&SampleMatrix],
+    scales: &[f64],
+) -> Vec<SampleMatrix> {
+    sets.iter().map(|set| whiten_one(set, scales)).collect()
+}
+
+/// Whiten one machine's draws, block-at-a-time into a flat scratch
+/// buffer (single bulk append per block instead of a push per row).
+pub(crate) fn whiten_one(set: &SampleMatrix, scales: &[f64]) -> SampleMatrix {
+    let d = set.dim();
+    let inv: Vec<f64> = scales.iter().map(|s| 1.0 / s).collect();
+    let mut out = SampleMatrix::with_capacity(d, set.len());
+    let mut buf: Vec<f64> = Vec::with_capacity(CACHE_BLOCK_ROWS * d);
+    for block in set.rows_chunked(CACHE_BLOCK_ROWS) {
+        buf.clear();
+        for row in block.chunks_exact(d) {
+            buf.extend(row.iter().zip(&inv).map(|(&v, &s)| v * s));
+        }
+        out.push_rows(&buf);
+    }
+    out
 }
 
 /// Multiply every draw's coordinate j by `scales[j]` (inverse of
@@ -238,5 +501,108 @@ mod tests {
         let a = SampleMatrix::from_rows(vec![1.0, 2.0], 2).unwrap();
         let b = SampleMatrix::new(2);
         assert!(validate_sets(&[&a, &b]).is_err());
+    }
+
+    #[test]
+    fn restart_plan_covers_exactly_t_out() {
+        for t_out in [0usize, 1, 7, 499, 500, 501, 1000, 8000, 100_000] {
+            let plan = restart_plan(t_out, 500);
+            let kept: usize = plan.iter().map(|&(n, _)| n).sum();
+            assert_eq!(kept, t_out, "t_out {t_out}");
+            for &(n, warmup) in &plan {
+                assert!(n >= 1);
+                assert_eq!(warmup, n / 5);
+            }
+        }
+    }
+
+    #[test]
+    fn restart_plan_caps_longest_chain() {
+        // Longest chain bounded so a thread pool can pack the plan:
+        // ≤ max(chunk0, t_out/8).
+        for t_out in [10_000usize, 100_000] {
+            let plan = restart_plan(t_out, 500);
+            let longest = plan.iter().map(|&(n, _)| n).max().unwrap();
+            assert!(
+                longest <= (t_out / 8).max(500),
+                "t_out {t_out}: longest chunk {longest}"
+            );
+            assert!(plan.len() >= 8, "t_out {t_out}: {} chunks", plan.len());
+        }
+    }
+
+    #[test]
+    fn restart_plan_small_t_matches_legacy_schedule() {
+        // Below the cap the schedule is the seed's geometric one.
+        assert_eq!(restart_plan(1000, 500), vec![(500, 100), (500, 100)]);
+        assert_eq!(restart_plan(300, 500), vec![(300, 60)]);
+    }
+
+    #[test]
+    fn par_map_indexed_is_order_preserving_any_threads() {
+        for threads in [1usize, 2, 5, 16] {
+            let out = par_map_indexed(37, threads, |i| i * i);
+            assert_eq!(out.len(), 37);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i * i, "threads {threads}");
+            }
+        }
+        assert!(par_map_indexed(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn combine_context_matches_sequential_whitening() {
+        let mut rng = crate::rng::Pcg64::seed_from(5);
+        let sets: Vec<SampleMatrix> = (0..3)
+            .map(|_| {
+                let mut s = SampleMatrix::new(2);
+                for _ in 0..97 {
+                    s.push(&[rng.normal() * 2.0, 1.0 + rng.normal()]);
+                }
+                s
+            })
+            .collect();
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let seq = CombineContext::prepare(&refs, 1);
+        let par = CombineContext::prepare(&refs, 4);
+        assert_eq!(seq.scales(), par.scales());
+        for m in 0..3 {
+            assert_eq!(seq.sets()[m], par.sets()[m]);
+            assert_eq!(seq.norms()[m], par.norms()[m]);
+        }
+        // Norms really are the whitened squared norms.
+        for (row, norm) in seq.sets()[0].rows().zip(&seq.norms()[0]) {
+            let want: f64 = row.iter().map(|v| v * v).sum();
+            assert!((want - norm).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn threaded_dispatch_matches_single_thread() {
+        let mut rng = crate::rng::Pcg64::seed_from(9);
+        let sets: Vec<SampleMatrix> = (0..4)
+            .map(|_| {
+                let mut s = SampleMatrix::new(2);
+                for _ in 0..150 {
+                    s.push(&[rng.normal(), rng.normal()]);
+                }
+                s
+            })
+            .collect();
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        for &method in &[
+            CombineMethod::Nonparametric,
+            CombineMethod::Semiparametric,
+            CombineMethod::Pairwise,
+        ] {
+            let a = combine_sets_threaded(method, &refs, 700, 13, 1).unwrap();
+            let b = combine_sets_threaded(method, &refs, 700, 13, 4).unwrap();
+            assert_eq!(
+                a.as_slice(),
+                b.as_slice(),
+                "{} not thread-count invariant",
+                method.name()
+            );
+        }
     }
 }

@@ -21,14 +21,30 @@
 //! O(dM²) — this is the L3 hot-path optimization measured in
 //! EXPERIMENTS.md §Perf. The scatter is recomputed exactly every few
 //! hundred accepted swaps to stop fp drift.
+//!
+//! ## Parallel runtime
+//!
+//! The restart chunks of the annealed chain are *independent* IMG
+//! chains: each gets a fresh `t·`, its own bandwidth schedule and — in
+//! [`nonparametric_threaded`] — its own [`Pcg64`] stream split off the
+//! root seed ([`Pcg64::split_n`]). Chains share one read-only
+//! [`CombineContext`] (whitening + squared-norm cache, built once in
+//! parallel across machines) by borrow and run concurrently on a
+//! scoped worker pool; outputs are concatenated in chunk order. Because
+//! both the restart plan and the per-chunk streams are pure functions of
+//! `(t_out, seed)`, the combined draws are byte-identical for a fixed
+//! seed at any thread count.
 
+use std::borrow::Cow;
+
+use super::CombineContext;
 use crate::error::Result;
 use crate::rng::Pcg64;
 use crate::stats::kde::annealed_bandwidth;
 use crate::types::SampleMatrix;
 
 /// Draw `t_out` samples from the nonparametric density-product estimate
-/// (Algorithm 1). Runs in whitened coordinates (see
+/// (Algorithm 1) on a single thread. Runs in whitened coordinates (see
 /// [`super::whitening_scales`]) so the annealed bandwidth is relative to
 /// the subposterior scale.
 pub fn nonparametric(
@@ -36,15 +52,30 @@ pub fn nonparametric(
     t_out: usize,
     seed: u64,
 ) -> Result<SampleMatrix> {
-    let scales = super::whitening_scales(sets);
-    let whitened = super::whiten(sets, &scales);
-    let refs: Vec<&SampleMatrix> = whitened.iter().collect();
-    let mut img = Img::new(&refs);
-    // Restarted, multi-sweep IMG (see Img::run_restarts): fresh t·
-    // draws bound the freeze as h anneals, extra sweeps decorrelate.
-    let mut out =
-        img.run_restarts(t_out, 500, 3, &mut Pcg64::seed_from(seed));
-    super::unwhiten(&mut out, &scales);
+    nonparametric_threaded(sets, t_out, seed, 1)
+}
+
+/// [`nonparametric`] with the restart chains fanned across `threads`
+/// workers (`0` = all cores). Byte-identical output for a fixed seed at
+/// any thread count.
+pub fn nonparametric_threaded(
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<SampleMatrix> {
+    super::validate_sets(sets)?;
+    let threads = super::resolve_threads(threads);
+    let ctx = CombineContext::prepare(sets, threads);
+    let mut out = run_restarts_parallel(
+        &ctx,
+        t_out,
+        super::RESTART_CHUNK0,
+        super::RESTART_SWEEPS,
+        seed,
+        threads,
+    )?;
+    super::unwhiten(&mut out, ctx.scales());
     Ok(out)
 }
 
@@ -59,9 +90,49 @@ pub fn nonparametric_absolute_h(
     Ok(img.run(t_out, &mut Pcg64::seed_from(seed)))
 }
 
+/// Run the restart plan for `t_out` draws as independent IMG chains
+/// over a shared [`CombineContext`], `threads`-wide. Returns draws in
+/// whitened coordinates (callers unwhiten).
+///
+/// Restarting and extra sweeps both leave each chain's target
+/// unchanged; they counter the freeze of the annealed index chain on
+/// well-separated subposteriors (the paper's own low-acceptance caveat,
+/// section 3.2). Chunk sizes follow [`super::restart_plan`]: geometric
+/// growth capped at `t_out/8` so the longest chain never dominates
+/// wall-clock, with the first 20% of each chunk discarded as
+/// per-restart warmup. The cap grows linearly in `t_out`, so every
+/// non-tail chunk's annealed bandwidth still → 0 as `t_out` → ∞:
+/// asymptotic exactness is preserved.
+pub fn run_restarts_parallel(
+    ctx: &CombineContext,
+    t_out: usize,
+    chunk0: usize,
+    sweeps: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<SampleMatrix> {
+    super::run_restart_chains(
+        ctx.dim(),
+        t_out,
+        chunk0,
+        seed,
+        threads,
+        |keep, warmup, mut rng| {
+            let mut img = Img::with_context(ctx);
+            Ok(img
+                .run_sweeps(keep + warmup, sweeps, &mut rng)
+                .split_off_burnin(warmup))
+        },
+    )
+}
+
 /// IMG sampler state over M subposterior sample sets.
+///
+/// Holds only the per-chain mutable state (indices, running sums,
+/// telemetry); the sample sets and the squared-norm cache are borrowed,
+/// so many chains can share one [`CombineContext`] without copying.
 pub struct Img<'a> {
-    sets: &'a [&'a SampleMatrix],
+    sets: Vec<&'a SampleMatrix>,
     dim: usize,
     /// Current component indices t_m.
     indices: Vec<usize>,
@@ -69,8 +140,9 @@ pub struct Img<'a> {
     sum: Vec<f64>,
     /// Q_t = Σ_m |θ^m_{t_m}|².
     sq_sum: f64,
-    /// Precomputed |θ^m_t|² per machine per draw.
-    norms: Vec<Vec<f64>>,
+    /// Precomputed |θ^m_t|² per machine per draw — borrowed from a
+    /// shared [`CombineContext`], or owned when built standalone.
+    norms: Cow<'a, [Vec<f64>]>,
     /// Accepted swaps since the last exact recompute.
     since_recompute: usize,
     /// Telemetry: proposals and acceptances.
@@ -79,17 +151,34 @@ pub struct Img<'a> {
 }
 
 impl<'a> Img<'a> {
+    /// Standalone chain over caller-provided sets (norms computed here).
     pub fn new(sets: &'a [&'a SampleMatrix]) -> Self {
         assert!(!sets.is_empty());
+        let norms: Vec<Vec<f64>> =
+            sets.iter().map(|s| super::row_norms(s)).collect();
+        Self::from_parts(sets.to_vec(), Cow::Owned(norms))
+    }
+
+    /// Chain sharing a precomputed read-only [`CombineContext`] — the
+    /// multi-chain path; no per-chain norm recomputation.
+    pub fn with_context(ctx: &'a CombineContext) -> Self {
+        Self::from_parts(
+            ctx.sets().iter().collect(),
+            Cow::Borrowed(ctx.norms()),
+        )
+    }
+
+    fn from_parts(
+        sets: Vec<&'a SampleMatrix>,
+        norms: Cow<'a, [Vec<f64>]>,
+    ) -> Self {
+        assert!(!sets.is_empty());
         let dim = sets[0].dim();
-        let norms: Vec<Vec<f64>> = sets
-            .iter()
-            .map(|s| s.rows().map(|r| r.iter().map(|v| v * v).sum()).collect())
-            .collect();
+        let machines = sets.len();
         let mut img = Img {
             sets,
             dim,
-            indices: vec![0; sets.len()],
+            indices: vec![0; machines],
             sum: vec![0.0; dim],
             sq_sum: 0.0,
             norms,
@@ -120,46 +209,6 @@ impl<'a> Img<'a> {
         self.since_recompute = 0;
     }
 
-    /// Scatter D_t = Q_t - |S_t|²/M (≥ 0 up to fp noise).
-    #[inline]
-    fn scatter(sq_sum: f64, sum: &[f64], m: f64) -> f64 {
-        let s2: f64 = sum.iter().map(|v| v * v).sum();
-        (sq_sum - s2 / m).max(0.0)
-    }
-
-    /// Algorithm 1 with restarts: independent IMG chains of `chunk`
-    /// draws each (fresh `t·` per chunk, bandwidth re-annealed), with
-    /// `sweeps` full index sweeps per emitted draw.
-    ///
-    /// Restarting and extra sweeps both leave each chain's target
-    /// unchanged; they counter the freeze of the annealed index chain on
-    /// well-separated subposteriors (the paper's own low-acceptance
-    /// caveat, section 3.2). `chunk = t_out, sweeps = 1` recovers the
-    /// algorithm exactly as printed.
-    /// Chunks grow geometrically (500, 1000, 2000, …) and the first 20%
-    /// of each chunk is discarded as per-restart warmup, so the pooled
-    /// output's bandwidth-inflation vanishes as T → ∞ (the final chunk
-    /// dominates and its h has annealed to (T/2)^{-1/(4+d)} → 0):
-    /// asymptotic exactness is preserved.
-    pub fn run_restarts(
-        &mut self,
-        t_out: usize,
-        chunk0: usize,
-        sweeps: usize,
-        rng: &mut Pcg64,
-    ) -> SampleMatrix {
-        let mut chunk = chunk0.clamp(1, t_out.max(1));
-        let mut out = SampleMatrix::with_capacity(self.dim, t_out);
-        while out.len() < t_out {
-            let n = chunk.min(t_out - out.len());
-            let warmup = n / 5;
-            let part = self.run_sweeps(n + warmup, sweeps, rng);
-            out.extend(&part.split_off_burnin(warmup)).expect("dims agree");
-            chunk = chunk.saturating_mul(2);
-        }
-        out.take(t_out)
-    }
-
     /// Run Algorithm 1 for `t_out` outer iterations, drawing one
     /// combined sample per iteration.
     pub fn run(&mut self, t_out: usize, rng: &mut Pcg64) -> SampleMatrix {
@@ -167,6 +216,10 @@ impl<'a> Img<'a> {
     }
 
     /// [`Img::run`] with `sweeps` index sweeps per emitted draw.
+    ///
+    /// The inner loop is allocation-free: proposal evaluation works on
+    /// the cached `(S_t, Q_t)` pair and the shared norm table, and the
+    /// emitted draw reuses one scratch vector.
     pub fn run_sweeps(
         &mut self,
         t_out: usize,
@@ -175,7 +228,7 @@ impl<'a> Img<'a> {
     ) -> SampleMatrix {
         let m = self.sets.len() as f64;
         // Line 1: draw t· uniformly.
-        for (idx, s) in self.indices.iter_mut().zip(self.sets) {
+        for (idx, s) in self.indices.iter_mut().zip(&self.sets) {
             *idx = rng.uniform_usize(s.len());
         }
         self.recompute();
@@ -186,7 +239,7 @@ impl<'a> Img<'a> {
             // Line 3: anneal the bandwidth.
             let h = annealed_bandwidth(i, self.dim);
             let h2 = h * h;
-            let mut d_cur = Self::scatter(self.sq_sum, &self.sum, m);
+            let mut d_cur = super::scatter(self.sq_sum, &self.sum, m);
             // Lines 4-11: `sweeps` IMG sweeps over machines.
             for mach_sweep in 0..(self.sets.len() * sweeps.max(1)) {
                 let mach = mach_sweep % self.sets.len();
@@ -223,7 +276,7 @@ impl<'a> Img<'a> {
                     self.since_recompute += 1;
                     if self.since_recompute >= 512 {
                         self.recompute();
-                        d_cur = Self::scatter(self.sq_sum, &self.sum, m);
+                        d_cur = super::scatter(self.sq_sum, &self.sum, m);
                     }
                 }
             }
@@ -250,6 +303,12 @@ impl<'a> Img<'a> {
 /// Naive reference implementation of Algorithm 1 with O(dM) weight
 /// evaluation per proposal (recomputes θ̄ and the full product). Used by
 /// tests to validate the O(d) fast path and by the perf ablation bench.
+///
+/// Proposals swap the candidate index in place and restore it on reject
+/// (no `indices.clone()` per proposal), and the scatter evaluation uses
+/// a reusable mean buffer — the reference stays O(dM) per proposal but
+/// heap-allocation-free, so the ablation bench isolates the algorithmic
+/// O(dM) → O(d) gap rather than allocator traffic.
 pub fn nonparametric_naive(
     sets: &[&SampleMatrix],
     t_out: usize,
@@ -267,9 +326,14 @@ pub fn nonparametric_naive(
     let mut indices: Vec<usize> =
         sets.iter().map(|s| rng.uniform_usize(s.len())).collect();
 
-    // Full O(dM) scatter: D_t = Σ_m |θ^m - θ̄|².
-    let scatter = |idx: &[usize]| -> f64 {
-        let mut mean = vec![0.0; dim];
+    // Full O(dM) scatter: D_t = Σ_m |θ^m - θ̄|², via a scratch mean.
+    fn scatter_full(
+        sets: &[&SampleMatrix],
+        idx: &[usize],
+        mean: &mut [f64],
+        m: f64,
+    ) -> f64 {
+        mean.iter_mut().for_each(|v| *v = 0.0);
         for (mach, s) in sets.iter().enumerate() {
             for (j, v) in s.row(idx[mach]).iter().enumerate() {
                 mean[j] += v / m;
@@ -277,25 +341,31 @@ pub fn nonparametric_naive(
         }
         let mut d = 0.0;
         for (mach, s) in sets.iter().enumerate() {
-            d += crate::math::linalg::sq_dist(s.row(idx[mach]), &mean);
+            d += crate::math::linalg::sq_dist(s.row(idx[mach]), mean);
         }
         d
-    };
+    }
 
+    let mut mean = vec![0.0; dim];
     let mut out = SampleMatrix::with_capacity(dim, t_out);
     let mut theta = vec![0.0; dim];
+    let mut d_cur = scatter_full(sets, &indices, &mut mean, m);
     for i in 1..=t_out {
         let h = annealed_bandwidth(i, dim);
         let h2 = h * h;
         for mach in 0..m_count {
-            let mut cand = indices.clone();
-            cand[mach] = rng.uniform_usize(sets[mach].len());
-            let log_ratio = -(scatter(&cand) - scatter(&indices)) / (2.0 * h2);
+            let old_idx = indices[mach];
+            // Swap the candidate in, evaluate, restore on reject.
+            indices[mach] = rng.uniform_usize(sets[mach].len());
+            let d_new = scatter_full(sets, &indices, &mut mean, m);
+            let log_ratio = -(d_new - d_cur) / (2.0 * h2);
             if log_ratio >= 0.0 || rng.uniform().ln() < log_ratio {
-                indices = cand;
+                d_cur = d_new;
+            } else {
+                indices[mach] = old_idx;
             }
         }
-        let mut mean = vec![0.0; dim];
+        mean.iter_mut().for_each(|v| *v = 0.0);
         for (mach, s) in sets.iter().enumerate() {
             for (j, v) in s.row(indices[mach]).iter().enumerate() {
                 mean[j] += v / m;
@@ -377,6 +447,47 @@ mod tests {
                     naive.row(i)[j]
                 );
             }
+        }
+    }
+
+    /// A chain sharing a [`CombineContext`] is bit-identical to a
+    /// standalone chain over the same whitened sets — the context cache
+    /// only moves work, never changes it.
+    #[test]
+    fn context_chain_matches_standalone() {
+        let mus = vec![vec![0.0; 3], vec![0.3; 3], vec![-0.3; 3]];
+        let sets = gaussian_sets(12, &mus, 1.0, 250);
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let ctx = crate::combine::CombineContext::prepare(&refs, 2);
+        let wsets = ctx.sets().to_vec();
+        let wrefs: Vec<&SampleMatrix> = wsets.iter().collect();
+
+        let mut a = Img::with_context(&ctx);
+        let out_a = a.run_sweeps(300, 2, &mut Pcg64::seed_from(44));
+        let mut b = Img::new(&wrefs);
+        let out_b = b.run_sweeps(300, 2, &mut Pcg64::seed_from(44));
+        assert_eq!(out_a.as_slice(), out_b.as_slice());
+        assert_eq!(a.proposals, b.proposals);
+        assert_eq!(a.accepts, b.accepts);
+    }
+
+    /// Parallel restart runtime: byte-identical output for a fixed seed
+    /// at 1, 2, and 4 threads.
+    #[test]
+    fn threaded_output_independent_of_thread_count() {
+        let mus = vec![vec![0.5, -0.5], vec![1.0, 0.0]];
+        let sets = gaussian_sets(21, &mus, 1.0, 400);
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let base = nonparametric_threaded(&refs, 1500, 7, 1).unwrap();
+        assert_eq!(base.len(), 1500);
+        for threads in [2usize, 4] {
+            let out =
+                nonparametric_threaded(&refs, 1500, 7, threads).unwrap();
+            assert_eq!(
+                base.as_slice(),
+                out.as_slice(),
+                "threads {threads} diverged"
+            );
         }
     }
 

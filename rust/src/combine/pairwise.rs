@@ -6,37 +6,41 @@
 //! in pairs, then combine the pair-outputs in pairs, and so on —
 //! ⌈log₂ M⌉ rounds, O(dTM) total work, and each IMG run only ever sees
 //! M̃ = 2 components.
+//!
+//! ## Parallel reduction
+//!
+//! The merges within one tree level are independent, so
+//! [`pairwise_threaded`] runs them concurrently and splits any leftover
+//! workers into each merge's own restart-chain pool (Wang et al.'s
+//! partition-tree recombination parallelizes the same structure). Merge
+//! seeds are drawn from the root stream *before* the level fans out, so
+//! the reduction is byte-identical for a fixed seed at any thread
+//! count.
 
-use super::nonparametric::nonparametric;
+use super::nonparametric::nonparametric_threaded;
 use crate::error::Result;
 use crate::rng::Pcg64;
 use crate::types::SampleMatrix;
 
-/// Combine M subposterior sample sets by repeated pairing.
+/// Combine M subposterior sample sets by repeated pairing, single
+/// threaded.
 pub fn pairwise(
     sets: &[&SampleMatrix],
     t_out: usize,
     seed: u64,
 ) -> Result<SampleMatrix> {
-    super::validate_sets(sets)?;
-    let mut rng = Pcg64::seed_from(seed);
-    let mut current: Vec<SampleMatrix> =
-        sets.iter().map(|s| (*s).clone()).collect();
-    while current.len() > 1 {
-        let mut next = Vec::with_capacity(current.len().div_ceil(2));
-        let mut iter = current.chunks(2);
-        for chunk in &mut iter {
-            if chunk.len() == 2 {
-                let pair: Vec<&SampleMatrix> = vec![&chunk[0], &chunk[1]];
-                next.push(nonparametric(&pair, t_out, rng.next_u64())?);
-            } else {
-                // Odd one out: carried to the next round unchanged.
-                next.push(chunk[0].clone());
-            }
-        }
-        current = next;
-    }
-    Ok(current.pop().unwrap().take(t_out))
+    pairwise_threaded(sets, t_out, seed, 1)
+}
+
+/// [`pairwise`] with each tree level's merges (and their restart
+/// chains) fanned across `threads` workers (`0` = all cores).
+pub fn pairwise_threaded(
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<SampleMatrix> {
+    reduce_tree(sets, 2, t_out, seed, threads)
 }
 
 /// Number of pair-combination invocations performed for M machines
@@ -55,22 +59,62 @@ pub fn grouped(
     t_out: usize,
     seed: u64,
 ) -> Result<SampleMatrix> {
+    reduce_tree(sets, group_size, t_out, seed, 1)
+}
+
+/// [`grouped`] with a combine-stage thread count.
+pub fn grouped_threaded(
+    sets: &[&SampleMatrix],
+    group_size: usize,
+    t_out: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<SampleMatrix> {
+    reduce_tree(sets, group_size, t_out, seed, threads)
+}
+
+fn reduce_tree(
+    sets: &[&SampleMatrix],
+    group_size: usize,
+    t_out: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<SampleMatrix> {
     super::validate_sets(sets)?;
     assert!(group_size >= 2, "group size must be >= 2");
+    let threads = super::resolve_threads(threads);
     let mut rng = Pcg64::seed_from(seed);
     let mut current: Vec<SampleMatrix> =
         sets.iter().map(|s| (*s).clone()).collect();
     while current.len() > 1 {
-        let mut next = Vec::with_capacity(current.len().div_ceil(group_size));
-        for chunk in current.chunks(group_size) {
-            if chunk.len() >= 2 {
-                let group: Vec<&SampleMatrix> = chunk.iter().collect();
-                next.push(nonparametric(&group, t_out, rng.next_u64())?);
-            } else {
-                next.push(chunk[0].clone());
-            }
-        }
-        current = next;
+        let chunks: Vec<&[SampleMatrix]> =
+            current.chunks(group_size).collect();
+        // Merge seeds come off the root stream sequentially, before any
+        // merge runs — the schedule is scheduling-independent. Odd
+        // leftovers carry to the next round unchanged and draw no seed.
+        let seeds: Vec<Option<u64>> = chunks
+            .iter()
+            .map(|c| if c.len() >= 2 { Some(rng.next_u64()) } else { None })
+            .collect();
+        let merges = seeds.iter().filter(|s| s.is_some()).count();
+        // Split workers: up to `merges` concurrent merges at this
+        // level, remaining parallelism goes into each merge's own
+        // restart-chain pool. Round the inner pool up so no worker
+        // idles when `merges` does not divide `threads` (e.g. M=10,
+        // threads=8 → 5 merges × 2 chain workers, not 5 × 1); the
+        // slight oversubscription is cheaper than idle cores.
+        let outer = threads.clamp(1, merges.max(1));
+        let inner = threads.div_ceil(outer).max(1);
+        let next: Vec<Result<SampleMatrix>> =
+            super::par_map_indexed(chunks.len(), outer, |i| match seeds[i] {
+                Some(merge_seed) => {
+                    let group: Vec<&SampleMatrix> =
+                        chunks[i].iter().collect();
+                    nonparametric_threaded(&group, t_out, merge_seed, inner)
+                }
+                None => Ok(chunks[i][0].clone()),
+            });
+        current = next.into_iter().collect::<Result<Vec<SampleMatrix>>>()?;
     }
     Ok(current.pop().unwrap().take(t_out))
 }
@@ -147,6 +191,27 @@ mod tests {
         // Product of 6 unit-variance gaussians → var 1/6.
         let v = out.covariance()[(0, 0)];
         assert!((v - 1.0 / 6.0).abs() < 0.12, "var {v}");
+    }
+
+    /// Whole-tree determinism: the reduction is byte-identical at 1, 2
+    /// and 4 threads (merges reordered across workers, same seeds).
+    #[test]
+    fn threaded_tree_independent_of_thread_count() {
+        let sets =
+            gaussian_sets(11, &[0.6, 0.8, 1.0, 1.2, 1.4], 1.0, 500);
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let base = pairwise_threaded(&refs, 900, 13, 1).unwrap();
+        for threads in [2usize, 4] {
+            let out = pairwise_threaded(&refs, 900, 13, threads).unwrap();
+            assert_eq!(
+                base.as_slice(),
+                out.as_slice(),
+                "threads {threads} diverged"
+            );
+        }
+        let gbase = grouped_threaded(&refs, 3, 900, 14, 1).unwrap();
+        let gpar = grouped_threaded(&refs, 3, 900, 14, 4).unwrap();
+        assert_eq!(gbase.as_slice(), gpar.as_slice());
     }
 
     #[test]

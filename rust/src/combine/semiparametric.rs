@@ -18,11 +18,21 @@
 //! tends to the nonparametric procedure as h → 0 and is likewise
 //! asymptotically exact.
 //!
+//! ## Setup and runtime parallelism
+//!
 //! The per-machine parametric log-densities `log N(θ^m_t | μ̂_m, Σ̂_m)`
-//! are precomputed once (O(TMd²)), so an IMG proposal costs O(d) for the
-//! `w` part + O(1) for the denominator + O(d²) for the numerator term.
+//! are precomputed once — this O(TMd²) table is the single most
+//! expensive setup step and fans out trivially one machine per task, as
+//! do the per-machine Gaussian fits and the whitening/norm caches
+//! ([`super::CombineContext`]). The restart chunks of the IMG chain are
+//! then independent chains with split RNG streams, exactly as in
+//! [`super::nonparametric`]: shared read-only state by borrow,
+//! byte-identical output for a fixed seed at any thread count. An IMG
+//! proposal costs O(d) for the `w` part + O(1) for the denominator +
+//! O(d²) for the numerator term, with zero heap allocation.
 
-use super::gaussian_product::{fit_and_product, GaussianEstimate};
+use super::gaussian_product::GaussianEstimate;
+use super::CombineContext;
 use crate::error::Result;
 use crate::math::linalg::{self, Mat};
 use crate::math::mvn::Mvn;
@@ -31,13 +41,24 @@ use crate::stats::kde::annealed_bandwidth;
 use crate::types::SampleMatrix;
 
 /// Draw `t_out` samples from the semiparametric density-product estimate
-/// (full weights `W_t`).
+/// (full weights `W_t`) on a single thread.
 pub fn semiparametric(
     sets: &[&SampleMatrix],
     t_out: usize,
     seed: u64,
 ) -> Result<SampleMatrix> {
-    run_semiparametric(sets, t_out, seed, true)
+    run_semiparametric(sets, t_out, seed, true, 1)
+}
+
+/// [`semiparametric`] with setup and restart chains fanned across
+/// `threads` workers (`0` = all cores). Deterministic at any count.
+pub fn semiparametric_threaded(
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<SampleMatrix> {
+    run_semiparametric(sets, t_out, seed, true, threads)
 }
 
 /// Variant 2: nonparametric weights `w_t`, semiparametric components.
@@ -46,7 +67,33 @@ pub fn semiparametric_nw(
     t_out: usize,
     seed: u64,
 ) -> Result<SampleMatrix> {
-    run_semiparametric(sets, t_out, seed, false)
+    run_semiparametric(sets, t_out, seed, false, 1)
+}
+
+/// [`semiparametric_nw`] with a combine-stage thread count.
+pub fn semiparametric_nw_threaded(
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<SampleMatrix> {
+    run_semiparametric(sets, t_out, seed, false, threads)
+}
+
+/// Read-only state shared by every restart chain of one combine call.
+struct SemiShared<'a> {
+    ctx: &'a CombineContext,
+    /// log N(θ^m_t | μ̂_m, Σ̂_m) per machine per draw (O(TMd²) table).
+    param_lp: Vec<Vec<f64>>,
+    /// Σ̂_M.
+    cov_m: Mat,
+    /// μ̂_M.
+    mu_m: Vec<f64>,
+    /// Σ̂_M⁻¹ μ̂_M.
+    prec_mu: Vec<f64>,
+    /// Σ̂_M⁻¹ = Σ_m Σ̂_m⁻¹.
+    prec_sum: Mat,
+    full_weights: bool,
 }
 
 fn run_semiparametric(
@@ -54,121 +101,149 @@ fn run_semiparametric(
     t_out: usize,
     seed: u64,
     full_weights: bool,
+    threads: usize,
 ) -> Result<SampleMatrix> {
     // Whitened coordinates (bandwidth relative to subposterior scale;
     // see super::whitening_scales). The estimator is equivariant under
     // this diagonal map, including its parametric factor.
-    let scales = super::whitening_scales(sets);
-    let whitened = super::whiten(sets, &scales);
-    let sets_w: Vec<&SampleMatrix> = whitened.iter().collect();
-    let sets = &sets_w[..];
-    let mut rng = Pcg64::seed_from(seed);
-    let m_count = sets.len();
-    let m = m_count as f64;
-    let dim = sets[0].dim();
+    super::validate_sets(sets)?;
+    let threads = super::resolve_threads(threads);
+    let ctx = CombineContext::prepare(sets, threads);
+    let dim = ctx.dim();
+    let m_count = ctx.machines();
 
-    // Parametric fits + product Gaussian N(μ̂_M, Σ̂_M).
-    let (estimates, _product) = fit_and_product(sets)?;
+    // Parametric fits N(μ̂_m, Σ̂_m) — O(Td²) per machine, one task each.
+    let estimates: Vec<GaussianEstimate> =
+        super::par_map_indexed(m_count, threads, |m| {
+            GaussianEstimate::fit(&ctx.sets()[m])
+        })
+        .into_iter()
+        .collect::<Result<_>>()?;
+
+    // Product Gaussian N(μ̂_M, Σ̂_M) pieces (small, sequential).
     let mut prec_sum = Mat::zeros(dim, dim);
     for est in &estimates {
         prec_sum = prec_sum.add(&est.prec)?;
     }
     let cov_m = linalg::spd_inverse_jittered(&prec_sum)?; // Σ̂_M
-    let mu_m = cov_m.matvec(&{
-        let mut acc = vec![0.0; dim];
-        for est in &estimates {
-            let pm = est.prec.matvec(&est.mean)?;
-            for j in 0..dim {
-                acc[j] += pm[j];
-            }
+    let mut acc = vec![0.0; dim];
+    for est in &estimates {
+        let pm = est.prec.matvec(&est.mean)?;
+        for j in 0..dim {
+            acc[j] += pm[j];
         }
-        acc
-    })?; // μ̂_M
+    }
+    let mu_m = cov_m.matvec(&acc)?; // μ̂_M
     let prec_mu = prec_sum.matvec(&mu_m)?; // Σ̂_M⁻¹ μ̂_M
 
-    // Precompute log N(θ^m_t | μ̂_m, Σ̂_m) per machine per draw.
-    let param_lp: Vec<Vec<f64>> = sets
-        .iter()
-        .zip(&estimates)
-        .map(|(s, est)| {
-            let mvn = est.mvn()?;
-            Ok(s.rows().map(|r| mvn.logpdf(r)).collect())
+    // The O(TMd²) parametric log-density table, one machine per task.
+    let param_lp: Vec<Vec<f64>> =
+        super::par_map_indexed(m_count, threads, |m| -> Result<Vec<f64>> {
+            let mvn = estimates[m].mvn()?;
+            let mut scratch = vec![0.0; dim];
+            Ok(ctx.sets()[m]
+                .rows()
+                .map(|r| mvn.logpdf_with(r, &mut scratch))
+                .collect())
         })
+        .into_iter()
         .collect::<Result<_>>()?;
 
-    // Squared norms for the O(d) w_t updates (as in Algorithm 1).
-    let norms: Vec<Vec<f64>> = sets
-        .iter()
-        .map(|s| s.rows().map(|r| r.iter().map(|v| v * v).sum()).collect())
-        .collect();
-
-    // IMG state (initialized per restart chunk below).
-    let mut indices: Vec<usize> = vec![0; sets.len()];
-    let mut sum = vec![0.0; dim];
-    let mut sq_sum;
-    let mut lp_denom; // Σ_m log N(θ^m | μ̂_m, Σ̂_m)
-
-    let scatter = |sq: f64, s: &[f64]| -> f64 {
-        let s2: f64 = s.iter().map(|v| v * v).sum();
-        (sq - s2 / m).max(0.0)
+    let shared = SemiShared {
+        ctx: &ctx,
+        param_lp,
+        cov_m,
+        mu_m,
+        prec_mu,
+        prec_sum,
+        full_weights,
     };
 
-    let mut out = SampleMatrix::with_capacity(dim, t_out);
+    // Independent restart chains with split RNG streams — the same
+    // schedule, and the same single copy of the orchestration
+    // (`super::run_restart_chains`), as the nonparametric combiner.
+    let mut out = super::run_restart_chains(
+        dim,
+        t_out,
+        super::RESTART_CHUNK0,
+        seed,
+        threads,
+        |keep, warmup, rng| run_chain(&shared, keep, warmup, rng),
+    )?;
+    super::unwhiten(&mut out, ctx.scales());
+    Ok(out)
+}
+
+/// One restart chain: `keep + warmup` annealed IMG iterations over the
+/// shared state, first `warmup` draws discarded. All per-proposal work
+/// runs on reused scratch buffers — no heap traffic in the inner loop.
+fn run_chain(
+    sh: &SemiShared<'_>,
+    keep: usize,
+    warmup: usize,
+    mut rng: Pcg64,
+) -> Result<SampleMatrix> {
+    let dim = sh.ctx.dim();
+    let m_count = sh.ctx.machines();
+    let m = m_count as f64;
+    let sets = sh.ctx.sets();
+    let norms = sh.ctx.norms();
+    let sweeps = super::RESTART_SWEEPS;
+
+    // IMG state.
+    let mut indices: Vec<usize> = vec![0; m_count];
+    let mut sum = vec![0.0; dim];
+    let mut sq_sum = 0.0;
+    // Scratch buffers reused across all proposals and draws.
     let mut theta_bar = vec![0.0; dim];
-    // Restart schedule mirroring Img::run_restarts: geometric chunks
-    // with fresh t· and per-chunk warmup, bounding the annealed index
-    // chain's freeze while keeping asymptotic exactness.
-    let mut chunk = 500usize.clamp(1, t_out.max(1));
-    let sweeps = 3usize;
-    'outer: loop {
-        let n = chunk.min(t_out - out.len());
-        let warmup = n / 5;
-        // Fresh t· for this chunk.
-        for (mach, s) in sets.iter().enumerate() {
-            indices[mach] = rng.uniform_usize(s.len());
+    let mut bar_new = vec![0.0; dim];
+    let mut mean_vec = vec![0.0; dim];
+    let mut lp_scratch = vec![0.0; dim];
+
+    // Fresh t· for this chain.
+    for (mach, s) in sets.iter().enumerate() {
+        indices[mach] = rng.uniform_usize(s.len());
+    }
+    for (mach, s) in sets.iter().enumerate() {
+        for (j, v) in s.row(indices[mach]).iter().enumerate() {
+            sum[j] += v;
         }
-        sum.iter_mut().for_each(|v| *v = 0.0);
-        sq_sum = 0.0;
-        lp_denom = 0.0;
-        for (mach, s) in sets.iter().enumerate() {
-            for (j, v) in s.row(indices[mach]).iter().enumerate() {
-                sum[j] += v;
-            }
-            sq_sum += norms[mach][indices[mach]];
-            lp_denom += param_lp[mach][indices[mach]];
-        }
-    for i in 1..=(n + warmup) {
+        sq_sum += norms[mach][indices[mach]];
+    }
+
+    let mut out = SampleMatrix::with_capacity(dim, keep);
+    for i in 1..=(keep + warmup) {
         let h = annealed_bandwidth(i, dim);
         let h2 = h * h;
 
         // Per-iteration factorizations (h is fixed within the sweep):
         // numerator Gaussian N(· | μ̂_M, Σ̂_M + h²/M I) and component
         // covariance Σ_t = (M/h² I + Σ̂_M⁻¹)⁻¹.
-        let mut num_cov = cov_m.clone();
+        let mut num_cov = sh.cov_m.clone();
         for j in 0..dim {
             num_cov[(j, j)] += h2 / m;
         }
-        let num_mvn = Mvn::new(mu_m.clone(), num_cov)?;
-        let mut comp_prec = prec_sum.clone();
+        let num_mvn = Mvn::new(sh.mu_m.clone(), num_cov)?;
+        let mut comp_prec = sh.prec_sum.clone();
         for j in 0..dim {
             comp_prec[(j, j)] += m / h2;
         }
         let comp_cov = linalg::spd_inverse_jittered(&comp_prec)?;
 
-        let mut d_cur = scatter(sq_sum, &sum);
+        let mut d_cur = super::scatter(sq_sum, &sum, m);
         for j in 0..dim {
             theta_bar[j] = sum[j] / m;
         }
         // Current total log weight pieces.
-        let mut log_num_cur = if full_weights {
-            num_mvn.logpdf(&theta_bar)
+        let mut log_num_cur = if sh.full_weights {
+            num_mvn.logpdf_with(&theta_bar, &mut lp_scratch)
         } else {
             0.0
         };
 
         for mach_sweep in 0..(m_count * sweeps) {
             let mach = mach_sweep % m_count;
-            let set = sets[mach];
+            let set = &sets[mach];
             let old_idx = indices[mach];
             let new_idx = rng.uniform_usize(set.len());
             if new_idx == old_idx {
@@ -181,34 +256,30 @@ fn run_semiparametric(
                 let sj = sum[j] - old_row[j] + new_row[j];
                 s2_new += sj * sj;
             }
-            let q_new =
-                sq_sum - norms[mach][old_idx] + norms[mach][new_idx];
+            let q_new = sq_sum - norms[mach][old_idx] + norms[mach][new_idx];
             let d_new = (q_new - s2_new / m).max(0.0);
             // log w ratio (nonparametric part).
             let mut log_ratio = -(d_new - d_cur) / (2.0 * h2);
             let mut log_num_new = 0.0;
-            if full_weights {
+            if sh.full_weights {
                 // Numerator: N(θ̄_c | μ̂_M, Σ̂_M + h²/M I).
-                let mut bar_new = vec![0.0; dim];
                 for j in 0..dim {
                     bar_new[j] = (sum[j] - old_row[j] + new_row[j]) / m;
                 }
-                log_num_new = num_mvn.logpdf(&bar_new);
+                log_num_new = num_mvn.logpdf_with(&bar_new, &mut lp_scratch);
                 log_ratio += log_num_new - log_num_cur;
                 // Denominator (inverted): - [lp(new) - lp(old)].
                 log_ratio -=
-                    param_lp[mach][new_idx] - param_lp[mach][old_idx];
+                    sh.param_lp[mach][new_idx] - sh.param_lp[mach][old_idx];
             }
             if log_ratio >= 0.0 || rng.uniform().ln() < log_ratio {
                 for j in 0..dim {
                     sum[j] += new_row[j] - old_row[j];
                 }
                 sq_sum = q_new;
-                lp_denom +=
-                    param_lp[mach][new_idx] - param_lp[mach][old_idx];
                 indices[mach] = new_idx;
                 d_cur = d_new;
-                if full_weights {
+                if sh.full_weights {
                     log_num_cur = log_num_new;
                 }
             }
@@ -216,14 +287,10 @@ fn run_semiparametric(
 
         // Draw θ_i ~ N(μ_t, Σ_t) for the current component.
         for j in 0..dim {
-            theta_bar[j] = sum[j] / m;
-        }
-        let mut mean_vec = vec![0.0; dim];
-        for j in 0..dim {
-            mean_vec[j] = m / h2 * theta_bar[j] + prec_mu[j];
+            mean_vec[j] = m / h2 * (sum[j] / m) + sh.prec_mu[j];
         }
         let comp_mean = comp_cov.matvec(&mean_vec)?;
-        let comp = Mvn::new(comp_mean, comp_cov.clone())?;
+        let comp = Mvn::new(comp_mean, comp_cov)?;
         if i > warmup {
             out.push(&comp.sample(&mut rng));
         } else {
@@ -231,14 +298,6 @@ fn run_semiparametric(
             let _ = comp.sample(&mut rng);
         }
     }
-        if out.len() >= t_out {
-            break 'outer;
-        }
-        chunk = chunk.saturating_mul(2);
-    }
-    let _ = lp_denom; // maintained for clarity; ratio uses increments
-    let _: &[GaussianEstimate] = &estimates;
-    super::unwhiten(&mut out, &scales);
     Ok(out)
 }
 
@@ -316,6 +375,26 @@ mod tests {
                 a.mean()[j],
                 b.mean()[j]
             );
+        }
+    }
+
+    /// Byte-identical output for a fixed seed at 1, 2 and 4 threads,
+    /// for both weight variants.
+    #[test]
+    fn threaded_output_independent_of_thread_count() {
+        let mus = vec![vec![0.2, -0.2], vec![0.6, 0.2]];
+        let sets = gaussian_sets(9, &mus, 1.0, 400);
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let base_full = semiparametric_threaded(&refs, 1200, 17, 1).unwrap();
+        let base_nw = semiparametric_nw_threaded(&refs, 1200, 17, 1).unwrap();
+        assert_eq!(base_full.len(), 1200);
+        for threads in [2usize, 4] {
+            let full =
+                semiparametric_threaded(&refs, 1200, 17, threads).unwrap();
+            let nw =
+                semiparametric_nw_threaded(&refs, 1200, 17, threads).unwrap();
+            assert_eq!(base_full.as_slice(), full.as_slice());
+            assert_eq!(base_nw.as_slice(), nw.as_slice());
         }
     }
 }

@@ -33,6 +33,11 @@ pub struct PipelineConfig {
     pub t_out: usize,
     /// OS threads to use for workers (defaults to machines).
     pub threads: usize,
+    /// OS threads for the leader's combination stage (restart chains,
+    /// pairwise tree merges, setup caches). `0` = all available cores.
+    /// Output is byte-identical for a fixed seed at any value — this
+    /// knob only trades wall-clock.
+    pub combine_threads: usize,
     /// Evaluate the subposterior through the PJRT runtime instead of the
     /// native backend (requires artifacts/).
     pub use_runtime: bool,
@@ -99,6 +104,8 @@ impl PipelineConfig {
                 Error::Parse(format!("bad usize for t_out: {v}"))
             })?),
         };
+        b.combine_threads =
+            parse_usize("combine_threads", b.combine_threads)?;
         if let Some(v) = get("use_runtime") {
             b.use_runtime = v == "true" || v == "1";
         }
@@ -159,6 +166,7 @@ pub struct PipelineConfigBuilder {
     method: CombineMethod,
     t_out: Option<usize>,
     threads: Option<usize>,
+    combine_threads: usize,
     use_runtime: bool,
     artifact_dir: String,
 }
@@ -176,6 +184,7 @@ impl PipelineConfigBuilder {
             method: CombineMethod::Semiparametric,
             t_out: None,
             threads: None,
+            combine_threads: 0,
             use_runtime: false,
             artifact_dir: "artifacts".to_string(),
         }
@@ -226,6 +235,12 @@ impl PipelineConfigBuilder {
         self
     }
 
+    /// Combine-stage thread count; `0` (the default) uses all cores.
+    pub fn combine_threads(mut self, t: usize) -> Self {
+        self.combine_threads = t;
+        self
+    }
+
     pub fn use_runtime(mut self, b: bool) -> Self {
         self.use_runtime = b;
         self
@@ -251,6 +266,7 @@ impl PipelineConfigBuilder {
             method: self.method,
             t_out: self.t_out.unwrap_or(t),
             threads: self.threads.unwrap_or(self.machines),
+            combine_threads: self.combine_threads,
             use_runtime: self.use_runtime,
             artifact_dir: self.artifact_dir,
         }
@@ -268,6 +284,7 @@ mod tests {
         assert_eq!(c.burn_in, 200);
         assert_eq!(c.t_out, 1000);
         assert_eq!(c.threads, 10);
+        assert_eq!(c.combine_threads, 0); // auto: all cores
     }
 
     #[test]
@@ -280,6 +297,7 @@ samples_per_machine = 500
 method = nonparametric
 sampler = hmc:0.05,20
 seed = 7
+combine_threads = 4
 use_runtime = true
 artifact_dir = my_artifacts
 ";
@@ -288,6 +306,7 @@ artifact_dir = my_artifacts
         assert_eq!(c.machines, 20);
         assert_eq!(c.method.name(), "nonparametric");
         assert_eq!(c.seed, 7);
+        assert_eq!(c.combine_threads, 4);
         assert!(c.use_runtime);
         assert_eq!(c.artifact_dir, "my_artifacts");
         match c.sampler {

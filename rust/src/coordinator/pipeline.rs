@@ -150,8 +150,16 @@ fn finish_run(
     t0: Instant,
 ) -> Result<PipelineOutput> {
     let tc = Instant::now();
-    let combined =
-        combine::combine(cfg.method, &subposteriors, cfg.t_out, cfg.seed ^ 0x5EED)?;
+    // Combine-stage parallelism (cfg.combine_threads, 0 = all cores):
+    // deterministic for a fixed seed at any thread count, so the knob
+    // only affects wall-clock.
+    let combined = combine::combine_threaded(
+        cfg.method,
+        &subposteriors,
+        cfg.t_out,
+        cfg.seed ^ 0x5EED,
+        cfg.combine_threads,
+    )?;
     let combine_secs = tc.elapsed().as_secs_f64();
 
     let timing = ClusterTiming::from_run(&subposteriors, combine_secs);
@@ -242,6 +250,29 @@ mod tests {
             assert_eq!(sa.samples.as_slice(), sb.samples.as_slice());
         }
         assert_eq!(a.combined.as_slice(), b.combined.as_slice());
+    }
+
+    /// The combine stage must be byte-identical whatever thread count
+    /// the leader is given (1, 4, or auto) — including through the full
+    /// pipeline with an IMG-based method.
+    #[test]
+    fn combine_threads_do_not_change_output() {
+        let data = synth::gaussian(1200, 2, 12);
+        let make = |combine_threads: usize| {
+            let mut c = cfg(3, 300);
+            c.method = CombineMethod::Nonparametric;
+            c.combine_threads = combine_threads;
+            run_native(&c, &data).unwrap()
+        };
+        let base = make(1);
+        for t in [4usize, 0] {
+            let out = make(t);
+            assert_eq!(
+                base.combined.as_slice(),
+                out.combined.as_slice(),
+                "combine_threads {t} diverged"
+            );
+        }
     }
 
     #[test]

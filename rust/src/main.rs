@@ -107,6 +107,11 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
                     Error::Config(format!("bad --threads: {t}"))
                 })?);
             }
+            if let Some(t) = args.get("combine-threads") {
+                b = b.combine_threads(t.parse().map_err(|_| {
+                    Error::Config(format!("bad --combine-threads: {t}"))
+                })?);
+            }
             if args.get("use-runtime") == Some("true") {
                 b = b.use_runtime(true);
             }
@@ -213,7 +218,10 @@ fn cmd_combine(args: &Args) -> Result<()> {
         CombineMethod::parse(args.get("method").unwrap_or("semiparametric"))?;
     let t_out = args.get_usize("t", refs[0].len())?;
     let seed = args.get_u64("seed", 42)?;
-    let combined = repro::combine::combine_sets(method, &refs, t_out, seed)?;
+    let threads = args.get_usize("combine-threads", 0)?;
+    let combined = repro::combine::combine_sets_threaded(
+        method, &refs, t_out, seed, threads,
+    )?;
     eprintln!(
         "combined {} machines → {} draws via {}",
         refs.len(),
@@ -260,10 +268,12 @@ fn usage() -> &'static str {
     "usage: repro <pipeline|single-chain|combine|eval|info> [flags]\n\
      \n\
      pipeline      --model M --n N --d D --machines M --samples T \\\n\
-                   --method NAME --seed S [--threads K] [--out FILE] \\\n\
+                   --method NAME --seed S [--threads K] \\\n\
+                   [--combine-threads K] [--out FILE] \\\n\
                    [--use-runtime true --artifacts DIR] [--config FILE]\n\
      single-chain  --model M --n N --d D --samples T [--out FILE]\n\
-     combine       --method NAME [--t T] [--out FILE] m0.csv m1.csv …\n\
+     combine       --method NAME [--t T] [--combine-threads K] \\\n\
+                   [--out FILE] m0.csv m1.csv …\n\
      eval          [--subsample K] a.csv b.csv\n\
      info          [--artifacts DIR]"
 }

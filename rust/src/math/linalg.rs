@@ -91,19 +91,27 @@ impl Mat {
 
     /// Matrix-vector product.
     pub fn matvec(&self, v: &[f64]) -> Result<Vec<f64>> {
-        if v.len() != self.cols {
+        let mut out = vec![0.0; self.rows];
+        self.matvec_into(v, &mut out)?;
+        Ok(out)
+    }
+
+    /// Matrix-vector product into a caller-provided buffer — the
+    /// allocation-free variant for per-draw hot loops.
+    pub fn matvec_into(&self, v: &[f64], out: &mut [f64]) -> Result<()> {
+        if v.len() != self.cols || out.len() != self.rows {
             return Err(Error::Shape(format!(
-                "matvec: {}x{} * {}",
+                "matvec: {}x{} * {} -> {}",
                 self.rows,
                 self.cols,
-                v.len()
+                v.len(),
+                out.len()
             )));
         }
-        let mut out = vec![0.0; self.rows];
         for i in 0..self.rows {
             out[i] = dot(self.row(i), v);
         }
-        Ok(out)
+        Ok(())
     }
 
     /// Matrix-matrix product.
@@ -244,6 +252,21 @@ pub fn forward_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
         y[i] = s / l[(i, i)];
     }
     y
+}
+
+/// Solve `L y = b` in place (`b` becomes `y`) — the allocation-free
+/// twin of [`forward_solve`] for per-proposal hot loops. Arithmetic is
+/// identical (same order of operations), so results match bit-for-bit.
+pub fn forward_solve_in_place(l: &Mat, b: &mut [f64]) {
+    let n = l.rows();
+    debug_assert_eq!(b.len(), n);
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * b[k];
+        }
+        b[i] = s / l[(i, i)];
+    }
 }
 
 /// Solve `Lᵀ x = y` (back substitution) for lower-triangular `L`.

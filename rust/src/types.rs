@@ -63,6 +63,21 @@ impl SampleMatrix {
         self.data.extend_from_slice(theta);
     }
 
+    /// Append draws from a flat row-major buffer (a whole number of
+    /// rows). Bulk counterpart of [`SampleMatrix::push`]: one memcpy
+    /// instead of a row-at-a-time loop, used when concatenating
+    /// per-chain outputs in the parallel combiner.
+    pub fn push_rows(&mut self, flat: &[f64]) {
+        assert_eq!(
+            flat.len() % self.dim,
+            0,
+            "flat buffer of {} is not whole rows of dim {}",
+            flat.len(),
+            self.dim
+        );
+        self.data.extend_from_slice(flat);
+    }
+
     /// Append all draws of another matrix (must agree on `dim`).
     pub fn extend(&mut self, other: &SampleMatrix) -> Result<()> {
         if other.dim != self.dim {
@@ -83,6 +98,20 @@ impl SampleMatrix {
     /// Iterator over draws.
     pub fn rows(&self) -> impl Iterator<Item = &[f64]> {
         self.data.chunks_exact(self.dim)
+    }
+
+    /// Iterate over blocks of up to `rows_per_chunk` consecutive draws,
+    /// each yielded as one flat row-major slice (the final block may be
+    /// shorter). Reductions over a long contiguous slice (sums, squared
+    /// norms, scatter updates) vectorize where a per-row `row(i)` loop
+    /// re-derives bounds every iteration; the combine-stage caches are
+    /// built through this.
+    pub fn rows_chunked(
+        &self,
+        rows_per_chunk: usize,
+    ) -> impl Iterator<Item = &[f64]> {
+        assert!(rows_per_chunk > 0, "rows_per_chunk must be positive");
+        self.data.chunks(self.dim * rows_per_chunk)
     }
 
     /// Keep draws `[from, len)` — used for burn-in removal.
@@ -216,6 +245,35 @@ mod tests {
         let p = s.select_dims(&[2, 0]).unwrap();
         assert_eq!(p.row(0), &[3.0, 1.0]);
         assert!(s.select_dims(&[5]).is_err());
+    }
+
+    #[test]
+    fn rows_chunked_covers_all_rows() {
+        let mut s = SampleMatrix::new(2);
+        for i in 0..5 {
+            s.push(&[i as f64, -(i as f64)]);
+        }
+        let blocks: Vec<&[f64]> = s.rows_chunked(2).collect();
+        assert_eq!(blocks.len(), 3); // 2 + 2 + 1 rows
+        assert_eq!(blocks[0], &[0.0, -0.0, 1.0, -1.0]);
+        assert_eq!(blocks[2], &[4.0, -4.0]);
+        let total: usize = blocks.iter().map(|b| b.len()).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn push_rows_bulk_appends() {
+        let mut s = SampleMatrix::new(2);
+        s.push_rows(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "whole rows")]
+    fn push_rows_rejects_partial_rows() {
+        let mut s = SampleMatrix::new(2);
+        s.push_rows(&[1.0, 2.0, 3.0]);
     }
 
     #[test]
