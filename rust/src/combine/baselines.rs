@@ -37,6 +37,13 @@ pub fn subpost_avg(
     Ok(out)
 }
 
+/// Per-chunk draw count of the threaded consensus combiner. The
+/// per-draw loop is embarrassingly parallel, so draws are emitted in
+/// fixed chunks, each with its own RNG stream split off the root seed:
+/// the chunk plan is a pure function of `t_out`, never of the thread
+/// count, which makes the output byte-identical at any parallelism.
+const CONSENSUS_CHUNK: usize = 1024;
+
 /// Consensus Monte Carlo (Scott et al. 2013): covariance-weighted
 /// averaging, `θ = (Σ W_m)⁻¹ Σ W_m θ^m` with `W_m = Σ̂_m⁻¹`.
 pub fn consensus_weighted(
@@ -44,8 +51,19 @@ pub fn consensus_weighted(
     t_out: usize,
     seed: u64,
 ) -> Result<SampleMatrix> {
+    consensus_weighted_threaded(sets, t_out, seed, 1)
+}
+
+/// [`consensus_weighted`] with the per-draw loop fanned over `threads`
+/// workers ([`super::par_map_indexed`]). Deterministic for a fixed seed
+/// at any thread count.
+pub fn consensus_weighted_threaded(
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<SampleMatrix> {
     super::validate_sets(sets)?;
-    let mut rng = Pcg64::seed_from(seed);
     let dim = sets[0].dim();
     let estimates: Vec<GaussianEstimate> = sets
         .iter()
@@ -57,14 +75,40 @@ pub fn consensus_weighted(
     }
     let w_sum_inv = linalg::spd_inverse_jittered(&w_sum)?;
 
+    let n_chunks = (t_out + CONSENSUS_CHUNK - 1) / CONSENSUS_CHUNK;
+    let mut root = Pcg64::seed_from(seed);
+    let rngs = root.split_n(n_chunks);
+    let parts = super::par_map_indexed(n_chunks, threads.max(1), |c| {
+        let n = CONSENSUS_CHUNK.min(t_out - c * CONSENSUS_CHUNK);
+        consensus_chunk(sets, &estimates, &w_sum_inv, n, rngs[c].clone())
+    })
+    .into_iter()
+    .collect::<Result<Vec<SampleMatrix>>>()?;
+
     let mut out = SampleMatrix::with_capacity(dim, t_out);
+    for part in &parts {
+        out.push_rows(part.as_slice());
+    }
+    Ok(out)
+}
+
+/// One chunk of consensus draws with its own RNG stream.
+fn consensus_chunk(
+    sets: &[&SampleMatrix],
+    estimates: &[GaussianEstimate],
+    w_sum_inv: &Mat,
+    n: usize,
+    mut rng: Pcg64,
+) -> Result<SampleMatrix> {
+    let dim = sets[0].dim();
+    let mut out = SampleMatrix::with_capacity(dim, n);
     let mut acc = vec![0.0; dim];
     // Scratch buffers reused across draws (no per-draw heap traffic).
     let mut wr = vec![0.0; dim];
     let mut combined = vec![0.0; dim];
-    for _ in 0..t_out {
+    for _ in 0..n {
         acc.iter_mut().for_each(|v| *v = 0.0);
-        for (s, est) in sets.iter().zip(&estimates) {
+        for (s, est) in sets.iter().zip(estimates) {
             let row = s.row(rng.uniform_usize(s.len()));
             est.prec.matvec_into(row, &mut wr)?;
             for j in 0..dim {
@@ -165,6 +209,29 @@ mod tests {
         // Pooling a bimodal pair has variance > either component.
         let v = pooled.covariance()[(0, 0)];
         assert!(v > 1.0, "var {v}");
+    }
+
+    /// The chunked per-draw fan-out must be byte-identical at any
+    /// thread count (including a `t_out` that is not a multiple of the
+    /// chunk size, exercising the ragged tail chunk).
+    #[test]
+    fn consensus_threaded_is_thread_count_invariant() {
+        let sets = gaussian_sets(9, &[vec![0.0, 1.0], vec![2.0, -1.0]], 1.0, 400);
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        for t_out in [500usize, 2048, 2500] {
+            let base =
+                consensus_weighted_threaded(&refs, t_out, 11, 1).unwrap();
+            assert_eq!(base.len(), t_out);
+            for threads in [2usize, 4, 16] {
+                let out = consensus_weighted_threaded(&refs, t_out, 11, threads)
+                    .unwrap();
+                assert_eq!(
+                    base.as_slice(),
+                    out.as_slice(),
+                    "threads {threads}, t_out {t_out} diverged"
+                );
+            }
+        }
     }
 
     #[test]

@@ -24,7 +24,8 @@ pub mod parametric;
 pub mod semiparametric;
 
 pub use baselines::{
-    consensus_weighted, duplicate_chains_pool, subpost_avg, subpost_pool,
+    consensus_weighted, consensus_weighted_threaded, duplicate_chains_pool,
+    subpost_avg, subpost_pool,
 };
 pub use gaussian_product::{gaussian_product, GaussianEstimate};
 pub use nonparametric::nonparametric;
@@ -167,7 +168,7 @@ pub fn combine_sets_threaded(
         CombineMethod::SubpostAvg => subpost_avg(sets, t_out, seed),
         CombineMethod::SubpostPool => Ok(subpost_pool(sets)?.take(t_out)),
         CombineMethod::ConsensusWeighted => {
-            consensus_weighted(sets, t_out, seed)
+            consensus_weighted_threaded(sets, t_out, seed, threads)
         }
     }
 }
@@ -594,6 +595,7 @@ mod tests {
             CombineMethod::Nonparametric,
             CombineMethod::Semiparametric,
             CombineMethod::Pairwise,
+            CombineMethod::ConsensusWeighted,
         ] {
             let a = combine_sets_threaded(method, &refs, 700, 13, 1).unwrap();
             let b = combine_sets_threaded(method, &refs, 700, 13, 4).unwrap();

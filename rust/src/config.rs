@@ -31,7 +31,10 @@ pub struct PipelineConfig {
     pub method: CombineMethod,
     /// Combined draws to emit (defaults to samples_per_machine).
     pub t_out: usize,
-    /// OS threads to use for workers (defaults to machines).
+    /// OS threads to use for workers (defaults to machines). Applies
+    /// to the in-thread path only: in `process_mode` every machine is
+    /// its own OS process and all M run concurrently, exactly like the
+    /// paper's cluster.
     pub threads: usize,
     /// OS threads for the leader's combination stage (restart chains,
     /// pairwise tree merges, setup caches). `0` = all available cores.
@@ -43,6 +46,14 @@ pub struct PipelineConfig {
     pub use_runtime: bool,
     /// Artifact directory for `use_runtime`.
     pub artifact_dir: String,
+    /// Run each worker in its own OS process instead of an in-process
+    /// thread (`coordinator::pipeline::run_process`). Byte-identical to
+    /// thread mode for a fixed seed.
+    pub process_mode: bool,
+    /// Worker executable for `process_mode`. Empty means "this
+    /// executable" (`std::env::current_exe`), which is right for the
+    /// CLI; library embedders and tests point it at the `repro` binary.
+    pub worker_bin: String,
 }
 
 impl PipelineConfig {
@@ -112,6 +123,12 @@ impl PipelineConfig {
         if let Some(v) = get("artifact_dir") {
             b.artifact_dir = v;
         }
+        if let Some(v) = get("process_mode") {
+            b.process_mode = v == "true" || v == "1";
+        }
+        if let Some(v) = get("worker_bin") {
+            b.worker_bin = v;
+        }
         Ok(b.build())
     }
 
@@ -120,7 +137,9 @@ impl PipelineConfig {
     }
 }
 
-fn parse_sampler(s: &str) -> Result<SamplerKind> {
+/// Parse a sampler spec string — also the wire format process-mode
+/// worker manifests carry, so it is public alongside [`sampler_spec`].
+pub fn parse_sampler(s: &str) -> Result<SamplerKind> {
     // Formats: "hmc:eps,L" | "nuts:eps,maxdepth" | "rwm:scale" | "mala:eps"
     let (name, args) = match s.split_once(':') {
         Some((n, a)) => (n, a),
@@ -153,6 +172,23 @@ fn parse_sampler(s: &str) -> Result<SamplerKind> {
     }
 }
 
+/// Render a [`SamplerKind`] as the spec string [`parse_sampler`]
+/// accepts. Floats use `{:e}` (shortest round-trip), so
+/// `parse_sampler(&sampler_spec(k))` reproduces `k` bit-exactly — the
+/// property the process-mode worker manifest relies on.
+pub fn sampler_spec(kind: &SamplerKind) -> String {
+    match *kind {
+        SamplerKind::Hmc { step, n_leapfrog } => {
+            format!("hmc:{step:e},{n_leapfrog}")
+        }
+        SamplerKind::Nuts { step, max_depth } => {
+            format!("nuts:{step:e},{max_depth}")
+        }
+        SamplerKind::Rwm { scale } => format!("rwm:{scale:e}"),
+        SamplerKind::Mala { step } => format!("mala:{step:e}"),
+    }
+}
+
 /// Builder for [`PipelineConfig`].
 #[derive(Debug, Clone)]
 pub struct PipelineConfigBuilder {
@@ -169,6 +205,8 @@ pub struct PipelineConfigBuilder {
     combine_threads: usize,
     use_runtime: bool,
     artifact_dir: String,
+    process_mode: bool,
+    worker_bin: String,
 }
 
 impl PipelineConfigBuilder {
@@ -187,6 +225,8 @@ impl PipelineConfigBuilder {
             combine_threads: 0,
             use_runtime: false,
             artifact_dir: "artifacts".to_string(),
+            process_mode: false,
+            worker_bin: String::new(),
         }
     }
 
@@ -246,6 +286,18 @@ impl PipelineConfigBuilder {
         self
     }
 
+    /// Run workers as OS processes (see `PipelineConfig::process_mode`).
+    pub fn process_mode(mut self, b: bool) -> Self {
+        self.process_mode = b;
+        self
+    }
+
+    /// Worker executable for process mode (empty = this executable).
+    pub fn worker_bin(mut self, path: &str) -> Self {
+        self.worker_bin = path.to_string();
+        self
+    }
+
     pub fn artifact_dir(mut self, d: &str) -> Self {
         self.artifact_dir = d.to_string();
         self
@@ -258,7 +310,10 @@ impl PipelineConfigBuilder {
             machines: self.machines,
             samples_per_machine: t,
             burn_in: self.burn_in.unwrap_or(t / 5),
-            thin: self.thin,
+            // Clamp here, not only in the setter: `from_str_cfg` writes
+            // the field directly, and `thin = 0` would divide by zero
+            // in the worker loop.
+            thin: self.thin.max(1),
             seed: self.seed,
             sampler: self
                 .sampler
@@ -269,6 +324,8 @@ impl PipelineConfigBuilder {
             combine_threads: self.combine_threads,
             use_runtime: self.use_runtime,
             artifact_dir: self.artifact_dir,
+            process_mode: self.process_mode,
+            worker_bin: self.worker_bin,
         }
     }
 }
@@ -285,6 +342,44 @@ mod tests {
         assert_eq!(c.t_out, 1000);
         assert_eq!(c.threads, 10);
         assert_eq!(c.combine_threads, 0); // auto: all cores
+        assert!(!c.process_mode);
+        assert!(c.worker_bin.is_empty()); // empty = current executable
+    }
+
+    #[test]
+    fn sampler_spec_roundtrips_bit_exactly() {
+        let kinds = [
+            SamplerKind::Hmc { step: 0.1, n_leapfrog: 10 },
+            SamplerKind::Nuts { step: 1.0 / 3.0, max_depth: 7 },
+            SamplerKind::Rwm { scale: 2.5e-8 },
+            SamplerKind::Mala { step: 0.025 },
+        ];
+        for k in &kinds {
+            let spec = sampler_spec(k);
+            let back = parse_sampler(&spec).unwrap();
+            assert_eq!(
+                format!("{k:?}"),
+                format!("{back:?}"),
+                "spec '{spec}' did not round-trip"
+            );
+        }
+    }
+
+    #[test]
+    fn cfg_file_thin_zero_clamped() {
+        let c = PipelineConfig::from_str_cfg("model = gaussian\nthin = 0\n")
+            .unwrap();
+        assert_eq!(c.thin, 1);
+    }
+
+    #[test]
+    fn cfg_file_process_mode_keys() {
+        let c = PipelineConfig::from_str_cfg(
+            "model = gaussian\nprocess_mode = true\nworker_bin = /usr/bin/repro\n",
+        )
+        .unwrap();
+        assert!(c.process_mode);
+        assert_eq!(c.worker_bin, "/usr/bin/repro");
     }
 
     #[test]

@@ -1,19 +1,32 @@
 //! End-to-end pipeline: partition → parallel subposterior sampling →
 //! streaming → combination.
+//!
+//! Two worker runtimes share the leader/combiner stack: [`run_native`]
+//! (OS threads in this process) and [`run_process`] (one OS process per
+//! machine, draws streamed back over length-prefixed ndjson pipes —
+//! see [`crate::coordinator::transport`]). Both derive worker RNGs as
+//! `Pcg64::seed_from(seed).split(m)`, so their outputs are
+//! byte-identical for the same config.
 
+use std::io::{BufReader, Read};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::channel;
+use std::sync::mpsc::{channel, Sender};
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::combine;
-use crate::config::PipelineConfig;
+use crate::config::{self, PipelineConfig};
 use crate::coordinator::metrics::RunMetrics;
 use crate::coordinator::partition::Partitioner;
 use crate::coordinator::timing::ClusterTiming;
+use crate::coordinator::transport::{
+    FrameReader, WireMsg, WorkerManifest, WorkerSummary,
+};
 use crate::coordinator::worker::{run_worker, DrawMsg};
 use crate::coordinator::Leader;
-use crate::data::Dataset;
+use crate::data::{io, Dataset};
 use crate::error::{Error, Result};
 use crate::model::LogDensity;
 use crate::rng::Pcg64;
@@ -49,6 +62,10 @@ pub fn run_native(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutput
     let (tx, rx) = channel::<DrawMsg>();
     let results: Mutex<Vec<Option<SubposteriorSamples>>> =
         Mutex::new((0..cfg.machines).map(|_| None).collect());
+    // First real error hit inside a worker thread; surfaced after the
+    // scope instead of the misleading "worker died" the abandoned
+    // machines would otherwise produce.
+    let worker_err: Mutex<Option<Error>> = Mutex::new(None);
     let next_machine = AtomicUsize::new(0);
     let n_threads = cfg.threads.clamp(1, cfg.machines);
     let rng_slots: Vec<Mutex<Option<Pcg64>>> =
@@ -60,6 +77,7 @@ pub fn run_native(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutput
             let tx = tx.clone();
             let shards = &shards;
             let results = &results;
+            let worker_err = &worker_err;
             let next_machine = &next_machine;
             let rng_slots = &rng_slots;
             scope.spawn(move || {
@@ -71,7 +89,13 @@ pub fn run_native(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutput
                     let target = match data.subposterior(&shards[m], prior_w)
                     {
                         Ok(t) => t,
-                        Err(_) => break, // validated above; unreachable
+                        Err(e) => {
+                            let mut slot = worker_err.lock().unwrap();
+                            if slot.is_none() {
+                                *slot = Some(e);
+                            }
+                            break;
+                        }
                     };
                     let rng = rng_slots[m].lock().unwrap().take().unwrap();
                     let sampler = cfg.sampler.build(target.dim());
@@ -93,6 +117,9 @@ pub fn run_native(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutput
         leader.drain(&rx)?;
         Ok(())
     })?;
+    if let Some(e) = worker_err.into_inner().unwrap() {
+        return Err(e);
+    }
 
     let subposteriors: Vec<SubposteriorSamples> = results
         .into_inner()
@@ -102,6 +129,282 @@ pub fn run_native(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutput
         .collect::<Result<_>>()?;
 
     finish_run(cfg, subposteriors, leader.scalars_received, t0)
+}
+
+/// Scratch-directory sequence number: keeps concurrent `run_process`
+/// calls in one process (e.g. the test harness) from colliding.
+static SCRATCH_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+fn scratch_dir(seed: u64) -> Result<PathBuf> {
+    let seq = SCRATCH_SEQ.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!(
+        "repro_workers_{}_{}_{}",
+        std::process::id(),
+        seed,
+        seq
+    ));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+/// Run the pipeline with one OS **process** per machine — the paper's
+/// actual deployment shape ("machines communicate only at the final
+/// combination stage"), and the prerequisite for multi-host runners.
+///
+/// The leader spills each shard plus a [`WorkerManifest`] to a scratch
+/// directory, spawns `<worker-bin> worker --manifest …` per machine,
+/// and drains every child's stdout frame stream through the same
+/// [`Leader`]/`OnlineCombiner` the in-thread path uses. Workers derive
+/// their RNG streams from the same root-seed `split(m)` schedule, and
+/// draws cross the pipe through bit-exact float serialization, so the
+/// output is **byte-identical to [`run_native`]** for the same config.
+///
+/// All M processes run concurrently — a "machine" in process mode *is*
+/// a processor, so `cfg.threads` (the in-process worker-pool cap)
+/// deliberately does not apply here. The first failure anywhere
+/// cancels the remaining children instead of letting them sample into
+/// a doomed run, and the root-cause error is the one surfaced.
+///
+/// Degrades cleanly: with `cfg.process_mode` off this is exactly
+/// [`run_native`]. An empty `cfg.worker_bin` means "this executable"
+/// (the CLI case); tests point it at the `repro` binary explicitly.
+pub fn run_process(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutput> {
+    if !cfg.process_mode {
+        return run_native(cfg, data);
+    }
+    let shards =
+        Partitioner::Contiguous.split(data.len(), cfg.machines, cfg.seed)?;
+    let prior_w = 1.0 / cfg.machines as f64;
+    let dim = data.param_dim();
+    let t0 = Instant::now();
+
+    let worker_bin: PathBuf = if cfg.worker_bin.is_empty() {
+        std::env::current_exe()?
+    } else {
+        PathBuf::from(&cfg.worker_bin)
+    };
+    let scratch = scratch_dir(cfg.seed)?;
+
+    let spawn_one = |m: usize, shard: &[usize]| -> Result<Child> {
+        let shard_path = scratch.join(format!("shard_{m}.json"));
+        io::write_shard_json(&shard_path, &data.select(shard)?)?;
+        let manifest = WorkerManifest {
+            machine: m,
+            machines: cfg.machines,
+            seed: cfg.seed,
+            samples: cfg.samples_per_machine,
+            burn_in: cfg.burn_in,
+            thin: cfg.thin,
+            prior_weight: prior_w,
+            sampler: config::sampler_spec(&cfg.sampler),
+            shard_path: shard_path.to_string_lossy().into_owned(),
+            dim,
+        };
+        let manifest_path = scratch.join(format!("worker_{m}.json"));
+        manifest.save(&manifest_path)?;
+        Command::new(&worker_bin)
+            .arg("worker")
+            .arg("--manifest")
+            .arg(&manifest_path)
+            .stdin(Stdio::null())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .map_err(|e| {
+                Error::Runtime(format!(
+                    "spawning worker {m} ({}): {e}",
+                    worker_bin.display()
+                ))
+            })
+    };
+    let mut children: Vec<Mutex<Child>> = Vec::with_capacity(cfg.machines);
+    for (m, shard) in shards.iter().enumerate() {
+        match spawn_one(m, shard) {
+            Ok(c) => children.push(Mutex::new(c)),
+            Err(e) => {
+                // Don't leak the children already running.
+                for c in &children {
+                    let mut c = c.lock().unwrap();
+                    c.kill().ok();
+                    c.wait().ok();
+                }
+                std::fs::remove_dir_all(&scratch).ok();
+                return Err(e);
+            }
+        }
+    }
+
+    let (tx, rx) = channel::<DrawMsg>();
+    let results: Mutex<Vec<Option<SubposteriorSamples>>> =
+        Mutex::new((0..cfg.machines).map(|_| None).collect());
+    // First root-cause failure; set by whichever reader thread trips
+    // it, which also cancels every other child (fail fast). Every
+    // drain_child error path records here, so a `None` result slot
+    // below always comes with a root_err to surface.
+    let root_err: Mutex<Option<Error>> = Mutex::new(None);
+    let mut leader = Leader::new(cfg.machines, dim);
+    let drained = std::thread::scope(|scope| -> Result<()> {
+        for m in 0..children.len() {
+            let tx = tx.clone();
+            let children = &children;
+            let results = &results;
+            let root_err = &root_err;
+            scope.spawn(move || {
+                if let Ok(out) = drain_child(m, children, dim, &tx, root_err)
+                {
+                    results.lock().unwrap()[m] = Some(out);
+                }
+            });
+        }
+        drop(tx);
+        leader.drain(&rx)?;
+        Ok(())
+    });
+    std::fs::remove_dir_all(&scratch).ok();
+    drained?;
+    if let Some(e) = root_err.into_inner().unwrap() {
+        return Err(e);
+    }
+
+    let subposteriors: Vec<SubposteriorSamples> = results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.ok_or_else(|| Error::Runtime("worker died".into())))
+        .collect::<Result<_>>()?;
+
+    finish_run(cfg, subposteriors, leader.scalars_received, t0)
+}
+
+/// Consume one child's frame stream: forward every draw into the
+/// leader's channel, rebuild the machine's [`SubposteriorSamples`] from
+/// the stream plus the final summary frame, and turn a non-zero exit
+/// into the child's own stderr rather than a generic failure. On any
+/// failure the root cause is recorded in `root_err` (first writer wins)
+/// and every sibling child is killed, so the run fails fast instead of
+/// letting healthy workers finish a doomed run.
+fn drain_child(
+    machine: usize,
+    children: &[Mutex<Child>],
+    dim: usize,
+    tx: &Sender<DrawMsg>,
+    root_err: &Mutex<Option<Error>>,
+) -> Result<SubposteriorSamples> {
+    // Record the root cause (unless a sibling already failed first),
+    // cancel everyone, reap our own child, and build this thread's
+    // error. Children killed here hit EOF on their readers, which land
+    // in the non-success exit path below — also routed through this
+    // helper, where `root_err` is already taken so the original cause
+    // survives.
+    let fail_all = |msg: String| -> Error {
+        {
+            let mut slot = root_err.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(Error::Runtime(msg.clone()));
+            }
+        }
+        for c in children {
+            c.lock().unwrap().kill().ok();
+        }
+        children[machine].lock().unwrap().wait().ok();
+        Error::Runtime(msg)
+    };
+
+    let stdout = children[machine].lock().unwrap().stdout.take();
+    let Some(stdout) = stdout else {
+        return Err(fail_all(format!("worker {machine}: no stdout pipe")));
+    };
+    // Drain stderr concurrently from the start: a child that fills the
+    // OS pipe buffer with (say) a long panic backtrace would otherwise
+    // block in that write, never close stdout, and deadlock this
+    // thread inside read_frame. Detached on purpose — on the fail_all
+    // paths the kill closes the pipe and the drainer exits on its own.
+    let stderr = children[machine].lock().unwrap().stderr.take();
+    let stderr_drain = stderr.map(|mut se| {
+        std::thread::spawn(move || {
+            let mut text = String::new();
+            se.read_to_string(&mut text).ok();
+            text
+        })
+    });
+    let mut frames = FrameReader::new(BufReader::new(stdout));
+    let mut samples = SampleMatrix::new(dim);
+    let mut draw_times = Vec::new();
+    let mut summary: Option<WorkerSummary> = None;
+    loop {
+        let payload = match frames.read_frame() {
+            Ok(Some(p)) => p,
+            Ok(None) => break,
+            Err(e) => {
+                return Err(fail_all(format!(
+                    "worker {machine}: bad frame: {e}"
+                )))
+            }
+        };
+        let msg = match WireMsg::decode(&payload) {
+            Ok(m) => m,
+            Err(e) => {
+                return Err(fail_all(format!(
+                    "worker {machine}: bad message: {e}"
+                )))
+            }
+        };
+        match msg {
+            WireMsg::Draw(d) => {
+                if d.machine != machine || d.theta.len() != dim {
+                    return Err(fail_all(format!(
+                        "worker {machine}: draw for machine {} with dim {}",
+                        d.machine,
+                        d.theta.len()
+                    )));
+                }
+                samples.push(&d.theta);
+                draw_times.push(d.elapsed);
+                // Leader hung up → keep draining (mirrors thread mode).
+                let _ = tx.send(d);
+            }
+            WireMsg::Summary(s) => summary = Some(s),
+        }
+    }
+    // stdout hit EOF, so the child is exiting: collect what it said on
+    // stderr, then reap. The frame loop above holds no child lock, so
+    // a failing sibling's kill sweep is never blocked on this thread.
+    let stderr_text = stderr_drain
+        .and_then(|h| h.join().ok())
+        .unwrap_or_default();
+    let status = match children[machine].lock().unwrap().wait() {
+        Ok(s) => s,
+        Err(e) => {
+            return Err(fail_all(format!("worker {machine}: wait: {e}")))
+        }
+    };
+    if !status.success() {
+        return Err(fail_all(format!(
+            "worker {machine} exited with {status}: {}",
+            stderr_text.trim()
+        )));
+    }
+    let summary = match summary {
+        Some(s) if s.machine == machine => s,
+        Some(s) => {
+            return Err(fail_all(format!(
+                "worker {machine}: summary for machine {}",
+                s.machine
+            )))
+        }
+        None => {
+            return Err(fail_all(format!(
+                "worker {machine}: stream ended without a summary frame"
+            )))
+        }
+    };
+    Ok(SubposteriorSamples {
+        machine,
+        samples,
+        accept_rate: summary.accept_rate,
+        wall_secs: summary.wall_secs,
+        draw_times,
+    })
 }
 
 /// Run the pipeline over pre-built subposterior models, sequentially on
@@ -273,6 +576,35 @@ mod tests {
                 "combine_threads {t} diverged"
             );
         }
+    }
+
+    /// RNG-stream contract: `run_native` (threads) and `run_sequential`
+    /// both derive worker m's generator as `root.split(m)` from the
+    /// same root seed, so the two paths must produce byte-identical
+    /// subposterior draws (the process path is locked to the same
+    /// contract in `rust/tests/process_pipeline.rs`, which spawns real
+    /// child processes).
+    #[test]
+    fn native_and_sequential_share_worker_rng_streams() {
+        let data = synth::gaussian(900, 2, 13);
+        let c = cfg(3, 120);
+        let native = run_native(&c, &data).unwrap();
+        let shards =
+            Partitioner::Contiguous.split(900, 3, c.seed).unwrap();
+        let models: Vec<Box<dyn LogDensity>> = shards
+            .iter()
+            .map(|idx| data.subposterior(idx, 1.0 / 3.0).unwrap())
+            .collect();
+        let seq = run_sequential(&c, models).unwrap();
+        for (a, b) in native.subposteriors.iter().zip(&seq.subposteriors) {
+            assert_eq!(
+                a.samples.as_slice(),
+                b.samples.as_slice(),
+                "machine {} diverged between thread and sequential paths",
+                a.machine
+            );
+        }
+        assert_eq!(native.combined.as_slice(), seq.combined.as_slice());
     }
 
     #[test]

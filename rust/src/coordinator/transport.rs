@@ -1,0 +1,408 @@
+//! Process-mode wire protocol: length-prefixed ndjson frames.
+//!
+//! A worker process streams its draws to the leader over stdout as a
+//! sequence of frames, each `"<decimal byte length>\n<json payload>\n"`.
+//! The length prefix lets the leader slice payloads without scanning
+//! for delimiters inside them; the trailing newline keeps the stream
+//! greppable when captured to a file. Payloads are [`WireMsg`]s — every
+//! draw ([`crate::coordinator::worker::DrawMsg`]) followed by one final
+//! [`WorkerSummary`] carrying the telemetry that is not per-draw.
+//!
+//! Floats cross the boundary through [`Json`]'s shortest-round-trip
+//! rendering, so a draw decoded by the leader is bit-identical to the
+//! one the worker produced — process mode inherits the thread-mode
+//! determinism guarantee byte-for-byte.
+
+use std::io::{BufRead, Read, Write};
+use std::path::Path;
+
+use crate::coordinator::worker::DrawMsg;
+use crate::error::{Error, Result};
+use crate::runtime::json::{self, Json};
+
+/// Largest frame the leader will accept (a draw is O(d) floats; this
+/// bounds memory against a corrupt or hostile length prefix).
+const MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
+
+/// Write one frame: decimal payload length, newline, payload, newline.
+/// Flushes so the leader sees draws as they are produced, not when the
+/// worker's buffer happens to fill.
+pub fn write_frame<W: Write>(w: &mut W, payload: &str) -> std::io::Result<()> {
+    writeln!(w, "{}", payload.len())?;
+    w.write_all(payload.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()
+}
+
+/// Longest accepted length-prefix line: a valid `usize` is ≤ 20
+/// digits, so anything longer means the stream is not frame-framed
+/// (e.g. `--worker-bin` points at a binary that prints prose). Bounding
+/// the prefix read keeps leader memory bounded even on a newline-free
+/// garbage stream.
+const MAX_PREFIX_BYTES: usize = 24;
+
+/// Incremental frame reader over any buffered byte stream.
+pub struct FrameReader<R: BufRead> {
+    inner: R,
+}
+
+impl<R: BufRead> FrameReader<R> {
+    pub fn new(inner: R) -> Self {
+        FrameReader { inner }
+    }
+
+    /// Read the bounded length-prefix line, or `None` at clean EOF.
+    fn read_prefix(&mut self) -> Result<Option<String>> {
+        let mut line = Vec::with_capacity(MAX_PREFIX_BYTES);
+        let mut byte = [0u8; 1];
+        loop {
+            let n = self.inner.read(&mut byte).map_err(Error::Io)?;
+            if n == 0 {
+                return if line.is_empty() {
+                    Ok(None)
+                } else {
+                    Err(Error::Parse(
+                        "truncated frame length prefix".into(),
+                    ))
+                };
+            }
+            if byte[0] == b'\n' {
+                break;
+            }
+            if line.len() >= MAX_PREFIX_BYTES {
+                return Err(Error::Parse(
+                    "frame length prefix too long (not a frame stream?)"
+                        .into(),
+                ));
+            }
+            line.push(byte[0]);
+        }
+        Ok(Some(String::from_utf8_lossy(&line).into_owned()))
+    }
+
+    /// Read the next frame's payload, or `None` at clean end-of-stream.
+    pub fn read_frame(&mut self) -> Result<Option<String>> {
+        let Some(prefix) = self.read_prefix()? else {
+            return Ok(None);
+        };
+        let len: usize = prefix.trim().parse().map_err(|_| {
+            Error::Parse(format!(
+                "bad frame length prefix {:?}",
+                prefix.trim()
+            ))
+        })?;
+        if len > MAX_FRAME_BYTES {
+            return Err(Error::Parse(format!("frame of {len} bytes too large")));
+        }
+        let mut buf = vec![0u8; len + 1]; // payload + trailing newline
+        self.inner.read_exact(&mut buf).map_err(Error::Io)?;
+        if buf.pop() != Some(b'\n') {
+            return Err(Error::Parse("frame missing trailing newline".into()));
+        }
+        String::from_utf8(buf)
+            .map(Some)
+            .map_err(|_| Error::Parse("frame payload is not utf-8".into()))
+    }
+}
+
+/// End-of-run telemetry a worker cannot attach to any single draw.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerSummary {
+    pub machine: usize,
+    /// Mean acceptance rate (NaN when no post-burn-in steps ran; crosses
+    /// the wire as JSON `null`).
+    pub accept_rate: f64,
+    pub wall_secs: f64,
+}
+
+/// One decoded frame payload.
+#[derive(Debug, Clone)]
+pub enum WireMsg {
+    Draw(DrawMsg),
+    Summary(WorkerSummary),
+}
+
+/// Encode one float for the wire. Finite values go through [`Json`]'s
+/// bit-exact number rendering; non-finite values (which JSON numbers
+/// cannot carry) become the string tokens `"inf"` / `"-inf"` / `"nan"`
+/// so a diverged chain's ±∞ survives the pipe as ±∞, not as a silent
+/// NaN — keeping process mode value-identical to thread mode even off
+/// the happy path.
+fn wire_f64(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else if v.is_nan() {
+        Json::Str("nan".into())
+    } else if v > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
+}
+
+/// Inverse of [`wire_f64`]. Also accepts `null` (what a non-finite
+/// float rendered as before it had a token) as NaN for leniency.
+fn f64_from_wire(j: &Json) -> Result<f64> {
+    match j {
+        Json::Null => Ok(f64::NAN),
+        Json::Str(s) => match s.as_str() {
+            "nan" => Ok(f64::NAN),
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            other => {
+                Err(Error::Parse(format!("bad float token '{other}'")))
+            }
+        },
+        other => other.as_f64(),
+    }
+}
+
+/// Encode a draw as a frame payload.
+pub fn encode_draw(msg: &DrawMsg) -> String {
+    json::obj(vec![
+        ("type", Json::Str("draw".into())),
+        ("machine", Json::Num(msg.machine as f64)),
+        ("theta", Json::Arr(msg.theta.iter().map(|&v| wire_f64(v)).collect())),
+        ("elapsed", wire_f64(msg.elapsed)),
+        ("last", Json::Bool(msg.last)),
+    ])
+    .render()
+}
+
+/// Encode a worker summary as a frame payload.
+pub fn encode_summary(s: &WorkerSummary) -> String {
+    json::obj(vec![
+        ("type", Json::Str("summary".into())),
+        ("machine", Json::Num(s.machine as f64)),
+        ("accept_rate", wire_f64(s.accept_rate)),
+        ("wall_secs", wire_f64(s.wall_secs)),
+    ])
+    .render()
+}
+
+impl WireMsg {
+    pub fn decode(text: &str) -> Result<WireMsg> {
+        let j = Json::parse(text)?;
+        match j.get("type")?.as_str()? {
+            "draw" => Ok(WireMsg::Draw(DrawMsg {
+                machine: j.get("machine")?.as_usize()?,
+                theta: j
+                    .get("theta")?
+                    .as_arr()?
+                    .iter()
+                    .map(f64_from_wire)
+                    .collect::<Result<_>>()?,
+                elapsed: f64_from_wire(j.get("elapsed")?)?,
+                last: j.get("last")?.as_bool()?,
+            })),
+            "summary" => Ok(WireMsg::Summary(WorkerSummary {
+                machine: j.get("machine")?.as_usize()?,
+                accept_rate: f64_from_wire(j.get("accept_rate")?)?,
+                wall_secs: f64_from_wire(j.get("wall_secs")?)?,
+            })),
+            other => {
+                Err(Error::Parse(format!("unknown wire message type '{other}'")))
+            }
+        }
+    }
+}
+
+/// Everything a worker process needs to reproduce its in-thread twin:
+/// which machine it is, the shared run geometry, the root seed its RNG
+/// stream is split from, the sampler spec, and where its spilled shard
+/// lives. Written by the leader next to the shard file; the `worker`
+/// CLI subcommand loads it as its sole input.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerManifest {
+    pub machine: usize,
+    pub machines: usize,
+    /// Root seed — the worker derives `Pcg64::seed_from(seed).split(m)`
+    /// exactly as the in-thread path does. Serialized as a string so
+    /// u64 seeds above 2^53 survive the f64-based JSON number grammar.
+    pub seed: u64,
+    pub samples: usize,
+    pub burn_in: usize,
+    pub thin: usize,
+    pub prior_weight: f64,
+    /// Sampler spec in [`crate::config::parse_sampler`] syntax.
+    pub sampler: String,
+    pub shard_path: String,
+    /// Expected parameter dimension (validated against the shard).
+    pub dim: usize,
+}
+
+impl WorkerManifest {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("machine", Json::Num(self.machine as f64)),
+            ("machines", Json::Num(self.machines as f64)),
+            ("seed", Json::Str(self.seed.to_string())),
+            ("samples", Json::Num(self.samples as f64)),
+            ("burn_in", Json::Num(self.burn_in as f64)),
+            ("thin", Json::Num(self.thin as f64)),
+            ("prior_weight", Json::Num(self.prior_weight)),
+            ("sampler", Json::Str(self.sampler.clone())),
+            ("shard_path", Json::Str(self.shard_path.clone())),
+            ("dim", Json::Num(self.dim as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let seed = j.get("seed")?.as_str()?;
+        Ok(WorkerManifest {
+            machine: j.get("machine")?.as_usize()?,
+            machines: j.get("machines")?.as_usize()?,
+            seed: seed.parse().map_err(|_| {
+                Error::Parse(format!("bad u64 seed '{seed}'"))
+            })?,
+            samples: j.get("samples")?.as_usize()?,
+            burn_in: j.get("burn_in")?.as_usize()?,
+            thin: j.get("thin")?.as_usize()?,
+            prior_weight: j.get("prior_weight")?.as_f64()?,
+            sampler: j.get("sampler")?.as_str()?.to_string(),
+            shard_path: j.get("shard_path")?.as_str()?.to_string(),
+            dim: j.get("dim")?.as_usize()?,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().render())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn draw(machine: usize, theta: Vec<f64>, last: bool) -> DrawMsg {
+        DrawMsg { machine, theta, elapsed: 0.125, last }
+    }
+
+    #[test]
+    fn frame_roundtrip_over_byte_stream() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, "hello").unwrap();
+        write_frame(&mut buf, "").unwrap();
+        write_frame(&mut buf, "{\"k\":[1,2]}").unwrap();
+        let mut r = FrameReader::new(BufReader::new(buf.as_slice()));
+        assert_eq!(r.read_frame().unwrap().unwrap(), "hello");
+        assert_eq!(r.read_frame().unwrap().unwrap(), "");
+        assert_eq!(r.read_frame().unwrap().unwrap(), "{\"k\":[1,2]}");
+        assert!(r.read_frame().unwrap().is_none());
+        assert!(r.read_frame().unwrap().is_none()); // EOF is sticky
+    }
+
+    #[test]
+    fn frame_reader_rejects_garbage() {
+        let mut r = FrameReader::new(BufReader::new(&b"notalen\nxx\n"[..]));
+        assert!(r.read_frame().is_err());
+        // Length longer than the remaining stream → io error.
+        let mut r = FrameReader::new(BufReader::new(&b"100\nshort\n"[..]));
+        assert!(r.read_frame().is_err());
+        // Payload not followed by newline.
+        let mut r = FrameReader::new(BufReader::new(&b"2\nabX"[..]));
+        assert!(r.read_frame().is_err());
+    }
+
+    /// A non-frame stream (e.g. `--worker-bin` pointing at a chatty
+    /// binary) must fail fast with bounded memory, even with no
+    /// newline in sight.
+    #[test]
+    fn frame_reader_bounds_prefix_on_newline_free_garbage() {
+        let garbage = vec![b'x'; 4096];
+        let mut r = FrameReader::new(BufReader::new(garbage.as_slice()));
+        let err = r.read_frame().unwrap_err();
+        assert!(err.to_string().contains("prefix too long"), "{err}");
+        // Truncated prefix (EOF before newline) is also an error, not
+        // a clean end-of-stream.
+        let mut r = FrameReader::new(BufReader::new(&b"123"[..]));
+        assert!(r.read_frame().is_err());
+    }
+
+    #[test]
+    fn draw_roundtrip_is_bit_exact() {
+        let msg = draw(3, vec![0.1, -1.0 / 3.0, 1e-300, -0.0], true);
+        let decoded = match WireMsg::decode(&encode_draw(&msg)).unwrap() {
+            WireMsg::Draw(d) => d,
+            other => panic!("wrong variant {other:?}"),
+        };
+        assert_eq!(decoded.machine, 3);
+        assert!(decoded.last);
+        assert_eq!(decoded.theta.len(), msg.theta.len());
+        for (a, b) in msg.theta.iter().zip(&decoded.theta) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(msg.elapsed.to_bits(), decoded.elapsed.to_bits());
+    }
+
+    /// Non-finite floats have no JSON number form; the wire carries
+    /// them as tokens so ±∞ survives as ±∞ (not a silent NaN).
+    #[test]
+    fn draw_roundtrip_preserves_nonfinite_values() {
+        let msg = draw(
+            0,
+            vec![f64::INFINITY, f64::NEG_INFINITY, f64::NAN, 1.5],
+            false,
+        );
+        let decoded = match WireMsg::decode(&encode_draw(&msg)).unwrap() {
+            WireMsg::Draw(d) => d,
+            other => panic!("wrong variant {other:?}"),
+        };
+        assert_eq!(decoded.theta[0], f64::INFINITY);
+        assert_eq!(decoded.theta[1], f64::NEG_INFINITY);
+        assert!(decoded.theta[2].is_nan());
+        assert_eq!(decoded.theta[3], 1.5);
+    }
+
+    #[test]
+    fn summary_roundtrip_preserves_nan_accept_rate() {
+        let s = WorkerSummary {
+            machine: 1,
+            accept_rate: f64::NAN,
+            wall_secs: 2.5,
+        };
+        match WireMsg::decode(&encode_summary(&s)).unwrap() {
+            WireMsg::Summary(back) => {
+                assert_eq!(back.machine, 1);
+                assert!(back.accept_rate.is_nan());
+                assert_eq!(back.wall_secs, 2.5);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_rejects_unknown_type() {
+        assert!(WireMsg::decode("{\"type\":\"nope\"}").is_err());
+        assert!(WireMsg::decode("not json").is_err());
+    }
+
+    #[test]
+    fn manifest_file_roundtrip_with_large_seed() {
+        let m = WorkerManifest {
+            machine: 2,
+            machines: 8,
+            seed: u64::MAX - 1, // not representable as f64
+            samples: 1000,
+            burn_in: 0,
+            thin: 3,
+            prior_weight: 1.0 / 8.0,
+            sampler: "hmc:1e-1,10".into(),
+            shard_path: "/tmp/shard_2.json".into(),
+            dim: 4,
+        };
+        let dir = std::env::temp_dir().join("repro_transport_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("worker_2.json");
+        m.save(&path).unwrap();
+        let back = WorkerManifest::load(&path).unwrap();
+        assert_eq!(m, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -32,28 +32,74 @@ pub struct DrawMsg {
 pub fn run_worker(
     machine: usize,
     target: &dyn LogDensity,
+    sampler: Box<dyn Sampler>,
+    n_samples: usize,
+    burn_in: usize,
+    thin: usize,
+    rng: Pcg64,
+    tx: Option<&Sender<DrawMsg>>,
+) -> SubposteriorSamples {
+    run_worker_with(
+        machine,
+        target,
+        sampler,
+        n_samples,
+        burn_in,
+        thin,
+        rng,
+        // A send failure means the leader hung up; the worker keeps
+        // sampling (its local copy is still returned).
+        &mut |msg: &DrawMsg| {
+            if let Some(tx) = tx {
+                let _ = tx.send(msg.clone());
+            }
+        },
+    )
+}
+
+/// [`run_worker`] with a caller-supplied sink for the streamed draws —
+/// the process-mode worker writes each message straight onto its stdout
+/// frame stream instead of into an in-process channel.
+#[allow(clippy::too_many_arguments)]
+pub fn run_worker_with(
+    machine: usize,
+    target: &dyn LogDensity,
     mut sampler: Box<dyn Sampler>,
     n_samples: usize,
     burn_in: usize,
     thin: usize,
     mut rng: Pcg64,
-    tx: Option<&Sender<DrawMsg>>,
+    emit: &mut dyn FnMut(&DrawMsg),
 ) -> SubposteriorSamples {
     let start = Instant::now();
     let dim = target.dim();
+    // `thin = 0` from a direct library caller would divide by zero in
+    // the retention check below; treat it as "no thinning".
+    let thin = thin.max(1);
     let mut state = State::init(target, target.init_point(&mut rng));
-    let total = burn_in + n_samples * thin;
+    // The last retained draw lands at burn_in + (n_samples-1)·thin, so
+    // stop there: the `thin - 1` iterations beyond it are pure waste
+    // that would also inflate `wall_secs` fed into `ClusterTiming`.
+    let total = if n_samples == 0 {
+        burn_in
+    } else {
+        burn_in + (n_samples - 1) * thin + 1
+    };
     let mut samples = SampleMatrix::with_capacity(dim, n_samples);
     let mut draw_times = Vec::with_capacity(n_samples);
     let mut accepts = 0usize;
     let mut post = 0usize;
 
     for i in 0..total {
-        target.symmetry_move(&mut state.theta, &mut rng);
-        let accepted = sampler.step(target, &mut state, &mut rng);
-        if i + 1 == burn_in {
+        // Freeze adaptation before the first post-burn-in step — also
+        // when `burn_in == 0`, where the retained draws start at i = 0
+        // (an adaptive sampler mutating its step size during retained
+        // draws breaks detailed balance).
+        if i == burn_in {
             sampler.finalize_adaptation();
         }
+        target.symmetry_move(&mut state.theta, &mut rng);
+        let accepted = sampler.step(target, &mut state, &mut rng);
         if i >= burn_in {
             post += 1;
             accepts += usize::from(accepted);
@@ -61,19 +107,20 @@ pub fn run_worker(
                 let elapsed = start.elapsed().as_secs_f64();
                 samples.push(&state.theta);
                 draw_times.push(elapsed);
-                if let Some(tx) = tx {
-                    // A send failure means the leader hung up; the worker
-                    // keeps sampling (its local copy is still returned).
-                    let _ = tx.send(DrawMsg {
-                        machine,
-                        theta: state.theta.clone(),
-                        elapsed,
-                        last: samples.len() == n_samples,
-                    });
-                }
+                emit(&DrawMsg {
+                    machine,
+                    theta: state.theta.clone(),
+                    elapsed,
+                    last: samples.len() == n_samples,
+                });
             }
         }
     }
+    assert_eq!(
+        samples.len(),
+        n_samples,
+        "tightened loop bound must retain exactly n_samples draws"
+    );
 
     SubposteriorSamples {
         machine,
@@ -92,9 +139,127 @@ pub fn run_worker(
 mod tests {
     use super::*;
     use crate::model::GaussianMean;
-    use crate::sampler::SamplerKind;
+    use crate::sampler::{Sampler, SamplerKind, State};
     use crate::types::SampleMatrix;
+    use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::mpsc::channel;
+    use std::sync::Arc;
+
+    /// Records how many steps had run when `finalize_adaptation` fired
+    /// (and in total), so tests can pin down the freeze point exactly.
+    struct ProbeSampler {
+        steps: usize,
+        total_steps: Arc<AtomicUsize>,
+        steps_at_finalize: Arc<AtomicUsize>,
+    }
+
+    impl ProbeSampler {
+        fn boxed() -> (Box<dyn Sampler>, Arc<AtomicUsize>, Arc<AtomicUsize>) {
+            let total = Arc::new(AtomicUsize::new(0));
+            let at_finalize = Arc::new(AtomicUsize::new(usize::MAX));
+            let probe = ProbeSampler {
+                steps: 0,
+                total_steps: Arc::clone(&total),
+                steps_at_finalize: Arc::clone(&at_finalize),
+            };
+            (Box::new(probe), total, at_finalize)
+        }
+    }
+
+    impl Sampler for ProbeSampler {
+        fn name(&self) -> &'static str {
+            "probe"
+        }
+
+        fn step(
+            &mut self,
+            _target: &dyn crate::model::LogDensity,
+            _state: &mut State,
+            _rng: &mut Pcg64,
+        ) -> bool {
+            self.steps += 1;
+            self.total_steps.store(self.steps, Ordering::SeqCst);
+            true
+        }
+
+        fn finalize_adaptation(&mut self) {
+            self.steps_at_finalize.store(self.steps, Ordering::SeqCst);
+        }
+    }
+
+    fn gaussian_target() -> GaussianMean {
+        GaussianMean::new(SampleMatrix::new(1), 1.0, 1.0, 1.0)
+    }
+
+    /// Regression: with `burn_in = 0` adaptation must freeze before the
+    /// very first (retained) step — the seed's `i + 1 == burn_in` check
+    /// never fired, so adaptive samplers kept mutating their step size
+    /// during the retained draws.
+    #[test]
+    fn adaptation_frozen_before_first_retained_draw_with_zero_burnin() {
+        let target = gaussian_target();
+        let (probe, _total, at_finalize) = ProbeSampler::boxed();
+        let out = run_worker(
+            0,
+            &target,
+            probe,
+            20,
+            0,
+            1,
+            Pcg64::seed_from(4),
+            None,
+        );
+        assert_eq!(out.samples.len(), 20);
+        assert_eq!(
+            at_finalize.load(Ordering::SeqCst),
+            0,
+            "finalize_adaptation must run before step 0 when burn_in == 0"
+        );
+    }
+
+    #[test]
+    fn adaptation_frozen_exactly_at_burnin_end() {
+        let target = gaussian_target();
+        let (probe, _total, at_finalize) = ProbeSampler::boxed();
+        run_worker(0, &target, probe, 10, 7, 1, Pcg64::seed_from(5), None);
+        assert_eq!(at_finalize.load(Ordering::SeqCst), 7);
+    }
+
+    /// Regression: the loop used to run `burn_in + n·thin` steps, but
+    /// the last retained draw lands at `burn_in + (n-1)·thin`, wasting
+    /// `thin - 1` trailing iterations (and inflating `wall_secs`).
+    #[test]
+    fn thinned_worker_takes_no_wasted_trailing_steps() {
+        let target = gaussian_target();
+        let (probe, total, _at_finalize) = ProbeSampler::boxed();
+        let out = run_worker(
+            0,
+            &target,
+            probe,
+            5,
+            4,
+            3,
+            Pcg64::seed_from(6),
+            None,
+        );
+        // Draw count is unchanged by the tightened bound…
+        assert_eq!(out.samples.len(), 5);
+        assert_eq!(out.draw_times.len(), 5);
+        // …but the step count is exactly burn_in + (n-1)·thin + 1 = 17,
+        // not the seed's burn_in + n·thin = 19.
+        assert_eq!(total.load(Ordering::SeqCst), 17);
+    }
+
+    #[test]
+    fn zero_samples_runs_burnin_only() {
+        let target = gaussian_target();
+        let (probe, total, _at_finalize) = ProbeSampler::boxed();
+        let out =
+            run_worker(0, &target, probe, 0, 6, 2, Pcg64::seed_from(7), None);
+        assert_eq!(out.samples.len(), 0);
+        assert!(out.accept_rate.is_nan());
+        assert_eq!(total.load(Ordering::SeqCst), 6);
+    }
 
     #[test]
     fn worker_streams_every_draw() {

@@ -1,6 +1,10 @@
-//! CSV I/O for sample matrices and experiment result tables.
+//! CSV I/O for sample matrices and experiment result tables, plus the
+//! JSON shard spill/load pair process-mode workers exchange with the
+//! leader.
 
+use crate::data::Dataset;
 use crate::error::{Error, Result};
+use crate::runtime::json::{self, Json};
 use crate::types::SampleMatrix;
 use std::io::Write;
 use std::path::Path;
@@ -51,6 +55,142 @@ pub fn read_samples_csv(path: &Path) -> Result<SampleMatrix> {
         out.push(&buf);
     }
     Ok(out)
+}
+
+/// Spill a dataset (typically one machine's shard, built with
+/// [`Dataset::select`]) to a single JSON file: the model kind, its
+/// scalar metadata, and the flat row-major observation buffer. Floats
+/// cross the file through [`Json::render`]'s shortest-round-trip
+/// formatting, so [`read_shard_json`] reproduces every value
+/// bit-exactly — the foundation of the process-mode byte-identity
+/// guarantee.
+pub fn write_shard_json(path: &Path, data: &Dataset) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, shard_to_json(data).render())?;
+    Ok(())
+}
+
+/// Load a dataset spilled by [`write_shard_json`].
+pub fn read_shard_json(path: &Path) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)?;
+    shard_from_json(&Json::parse(&text)?)
+}
+
+fn matrix_to_json(x: &SampleMatrix) -> Json {
+    json::obj(vec![
+        ("dim", Json::Num(x.dim() as f64)),
+        ("data", json::num_arr(x.as_slice())),
+    ])
+}
+
+fn matrix_from_json(j: &Json) -> Result<SampleMatrix> {
+    SampleMatrix::from_rows(
+        json::f64_vec(j.get("data")?)?,
+        j.get("dim")?.as_usize()?,
+    )
+}
+
+fn shard_to_json(data: &Dataset) -> Json {
+    let kind = ("kind", Json::Str(data.model_name().into()));
+    match data {
+        Dataset::Gaussian { x, lik_prec, prior_prec } => json::obj(vec![
+            kind,
+            ("x", matrix_to_json(x)),
+            ("lik_prec", Json::Num(*lik_prec)),
+            ("prior_prec", Json::Num(*prior_prec)),
+        ]),
+        Dataset::Logistic { x, y, prior_prec } => json::obj(vec![
+            kind,
+            ("x", matrix_to_json(x)),
+            ("y", json::num_arr(y)),
+            ("prior_prec", Json::Num(*prior_prec)),
+        ]),
+        Dataset::Gmm { x, logw, inv_var, prior_prec } => json::obj(vec![
+            kind,
+            ("x", matrix_to_json(x)),
+            ("logw", json::num_arr(logw)),
+            ("inv_var", Json::Num(*inv_var)),
+            ("prior_prec", Json::Num(*prior_prec)),
+        ]),
+        Dataset::PoissonGamma { xs, ts, lam, alpha, beta_p } => {
+            json::obj(vec![
+                kind,
+                ("xs", json::num_arr(xs)),
+                ("ts", json::num_arr(ts)),
+                ("lam", Json::Num(*lam)),
+                ("alpha", Json::Num(*alpha)),
+                ("beta_p", Json::Num(*beta_p)),
+            ])
+        }
+        Dataset::LinReg { x, y, lik_prec, prior_prec } => json::obj(vec![
+            kind,
+            ("x", matrix_to_json(x)),
+            ("y", json::num_arr(y)),
+            ("lik_prec", Json::Num(*lik_prec)),
+            ("prior_prec", Json::Num(*prior_prec)),
+        ]),
+    }
+}
+
+fn check_len(name: &str, got: usize, want: usize) -> Result<()> {
+    if got != want {
+        return Err(Error::Parse(format!(
+            "shard field '{name}' has {got} entries, expected {want}"
+        )));
+    }
+    Ok(())
+}
+
+fn shard_from_json(j: &Json) -> Result<Dataset> {
+    match j.get("kind")?.as_str()? {
+        "gaussian" => Ok(Dataset::Gaussian {
+            x: matrix_from_json(j.get("x")?)?,
+            lik_prec: j.get("lik_prec")?.as_f64()?,
+            prior_prec: j.get("prior_prec")?.as_f64()?,
+        }),
+        "logistic" => {
+            let x = matrix_from_json(j.get("x")?)?;
+            let y = json::f64_vec(j.get("y")?)?;
+            check_len("y", y.len(), x.len())?;
+            Ok(Dataset::Logistic {
+                x,
+                y,
+                prior_prec: j.get("prior_prec")?.as_f64()?,
+            })
+        }
+        "gmm" => Ok(Dataset::Gmm {
+            x: matrix_from_json(j.get("x")?)?,
+            logw: json::f64_vec(j.get("logw")?)?,
+            inv_var: j.get("inv_var")?.as_f64()?,
+            prior_prec: j.get("prior_prec")?.as_f64()?,
+        }),
+        "poisson_gamma" => {
+            let xs = json::f64_vec(j.get("xs")?)?;
+            let ts = json::f64_vec(j.get("ts")?)?;
+            check_len("ts", ts.len(), xs.len())?;
+            Ok(Dataset::PoissonGamma {
+                xs,
+                ts,
+                lam: j.get("lam")?.as_f64()?,
+                alpha: j.get("alpha")?.as_f64()?,
+                beta_p: j.get("beta_p")?.as_f64()?,
+            })
+        }
+        "linreg" => {
+            let x = matrix_from_json(j.get("x")?)?;
+            let y = json::f64_vec(j.get("y")?)?;
+            check_len("y", y.len(), x.len())?;
+            Ok(Dataset::LinReg {
+                x,
+                y,
+                lik_prec: j.get("lik_prec")?.as_f64()?,
+                prior_prec: j.get("prior_prec")?.as_f64()?,
+            })
+        }
+        other => Err(Error::Parse(format!("unknown dataset kind '{other}'"))),
+    }
 }
 
 /// Generic row-oriented results table (e.g. error-vs-time curves).
@@ -146,6 +286,53 @@ mod tests {
         assert!(read_samples_csv(&path).is_err());
         std::fs::write(&path, "d0\nnot_a_number\n").unwrap();
         assert!(read_samples_csv(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_json_roundtrips_every_model_bit_exactly() {
+        use crate::data::synth;
+        let dir = std::env::temp_dir().join("repro_shard_io_test");
+        let idx: Vec<usize> = (5..37).collect();
+        let datasets = [
+            synth::gaussian(60, 2, 1),
+            synth::logistic(60, 3, 2),
+            synth::gmm(60, 2, 2, 4.0, 3),
+            synth::poisson_gamma(60, 4),
+            synth::linreg(60, 2, 5),
+        ];
+        for (i, ds) in datasets.iter().enumerate() {
+            let shard = ds.select(&idx).unwrap();
+            let path = dir.join(format!("shard_{i}.json"));
+            write_shard_json(&path, &shard).unwrap();
+            let back = read_shard_json(&path).unwrap();
+            // Debug formatting prints floats with shortest-round-trip
+            // digits, so equal strings ⇔ bit-identical contents.
+            assert_eq!(
+                format!("{shard:?}"),
+                format!("{back:?}"),
+                "{} shard diverged through JSON",
+                ds.model_name()
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_json_rejects_malformed() {
+        let dir = std::env::temp_dir().join("repro_shard_io_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.json");
+        std::fs::write(&path, "{\"kind\":\"warp\"}").unwrap();
+        assert!(read_shard_json(&path).is_err());
+        // Mismatched label length must be caught at load, not at panic.
+        std::fs::write(
+            &path,
+            "{\"kind\":\"logistic\",\"x\":{\"dim\":1,\"data\":[1,2]},\
+             \"y\":[1],\"prior_prec\":1}",
+        )
+        .unwrap();
+        assert!(read_shard_json(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -138,6 +138,66 @@ impl Dataset {
         let idx: Vec<usize> = (0..self.len()).collect();
         self.subposterior(&idx, 1.0)
     }
+
+    /// Extract the observation subset `idx` as a standalone dataset
+    /// with the same model metadata — the shard a process-mode worker
+    /// receives. `select(idx).subposterior(0..len, w)` builds the
+    /// identical model to `self.subposterior(idx, w)`, which is what
+    /// lets a worker process reproduce its in-thread twin bit-exactly.
+    pub fn select(&self, idx: &[usize]) -> Result<Dataset> {
+        if idx.is_empty() {
+            return Err(Error::Config("empty shard".into()));
+        }
+        match self {
+            Dataset::Gaussian { x, lik_prec, prior_prec } => {
+                Ok(Dataset::Gaussian {
+                    x: select_rows(x, idx)?,
+                    lik_prec: *lik_prec,
+                    prior_prec: *prior_prec,
+                })
+            }
+            Dataset::Logistic { x, y, prior_prec } => {
+                let xs = select_rows(x, idx)?;
+                Ok(Dataset::Logistic {
+                    x: xs,
+                    y: idx.iter().map(|&i| y[i]).collect(),
+                    prior_prec: *prior_prec,
+                })
+            }
+            Dataset::Gmm { x, logw, inv_var, prior_prec } => {
+                Ok(Dataset::Gmm {
+                    x: select_rows(x, idx)?,
+                    logw: logw.clone(),
+                    inv_var: *inv_var,
+                    prior_prec: *prior_prec,
+                })
+            }
+            Dataset::PoissonGamma { xs, ts, lam, alpha, beta_p } => {
+                if let Some(&bad) = idx.iter().find(|&&i| i >= xs.len()) {
+                    return Err(Error::Shape(format!(
+                        "row index {bad} out of range ({})",
+                        xs.len()
+                    )));
+                }
+                Ok(Dataset::PoissonGamma {
+                    xs: idx.iter().map(|&i| xs[i]).collect(),
+                    ts: idx.iter().map(|&i| ts[i]).collect(),
+                    lam: *lam,
+                    alpha: *alpha,
+                    beta_p: *beta_p,
+                })
+            }
+            Dataset::LinReg { x, y, lik_prec, prior_prec } => {
+                let xs = select_rows(x, idx)?;
+                Ok(Dataset::LinReg {
+                    x: xs,
+                    y: idx.iter().map(|&i| y[i]).collect(),
+                    lik_prec: *lik_prec,
+                    prior_prec: *prior_prec,
+                })
+            }
+        }
+    }
 }
 
 /// Extract rows by index.
@@ -182,6 +242,39 @@ mod tests {
     fn empty_shard_rejected() {
         let g = synth::gaussian(10, 2, 1);
         assert!(g.subposterior(&[], 0.5).is_err());
+    }
+
+    #[test]
+    fn select_subset_builds_identical_subposterior() {
+        let g = synth::gaussian(120, 2, 1);
+        let l = synth::logistic(120, 3, 2);
+        let m = synth::gmm(120, 3, 2, 3.0, 3);
+        let p = synth::poisson_gamma(120, 4);
+        let r = synth::linreg(120, 2, 5);
+        let idx: Vec<usize> = (17..93).collect();
+        for ds in [&g, &l, &m, &p, &r] {
+            let direct = ds.subposterior(&idx, 0.25).unwrap();
+            let shard = ds.select(&idx).unwrap();
+            assert_eq!(shard.len(), idx.len(), "{}", ds.model_name());
+            let all: Vec<usize> = (0..shard.len()).collect();
+            let via = shard.subposterior(&all, 0.25).unwrap();
+            let theta = vec![0.3; direct.dim()];
+            let (lp_a, g_a) = direct.logp_grad(&theta);
+            let (lp_b, g_b) = via.logp_grad(&theta);
+            assert_eq!(lp_a.to_bits(), lp_b.to_bits(), "{}", ds.model_name());
+            for (a, b) in g_a.iter().zip(&g_b) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}", ds.model_name());
+            }
+        }
+    }
+
+    #[test]
+    fn select_bounds_and_empty_checked() {
+        let g = synth::gaussian(10, 2, 1);
+        assert!(g.select(&[]).is_err());
+        assert!(g.select(&[99]).is_err());
+        let p = synth::poisson_gamma(10, 2);
+        assert!(p.select(&[11]).is_err());
     }
 
     #[test]

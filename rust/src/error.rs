@@ -2,6 +2,10 @@
 
 use std::fmt;
 
+// Offline stub standing in for the real PJRT bindings (see
+// `runtime/xla_shim.rs` for how to swap in the vendored crate).
+use crate::runtime::xla_shim as xla;
+
 /// Errors produced anywhere in the library.
 #[derive(Debug)]
 pub enum Error {

@@ -6,6 +6,9 @@
 //!   combine       combine subposterior sample CSVs into posterior draws
 //!   eval          L2 distance between two sample CSVs
 //!   info          inspect an artifact directory
+//!   worker        (hidden) process-mode worker: load a shard manifest,
+//!                 sample, stream frames on stdout — spawned by
+//!                 `pipeline --process-mode true`, not by hand
 //!
 //! Examples:
 //!   repro pipeline --model logistic --n 50000 --d 50 --machines 10 \
@@ -115,6 +118,12 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
             if args.get("use-runtime") == Some("true") {
                 b = b.use_runtime(true);
             }
+            if args.get("process-mode") == Some("true") {
+                b = b.process_mode(true);
+            }
+            if let Some(w) = args.get("worker-bin") {
+                b = b.worker_bin(w);
+            }
             if let Some(d) = args.get("artifacts") {
                 b = b.artifact_dir(d);
             }
@@ -135,6 +144,8 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     );
     let out = if cfg.use_runtime {
         run_runtime_pipeline(&cfg, &data)?
+    } else if cfg.process_mode {
+        pipeline::run_process(&cfg, &data)?
     } else {
         pipeline::run_native(&cfg, &data)?
     };
@@ -245,6 +256,81 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Hidden process-mode worker (spawned by `pipeline --process-mode
+/// true`): load the manifest + spilled shard, derive the same
+/// `root.split(m)` RNG stream the in-thread path uses, sample, and
+/// stream each draw as a length-prefixed ndjson frame on stdout,
+/// followed by one summary frame. Errors go to stderr + a non-zero
+/// exit; the leader attaches them to the failing machine.
+fn cmd_worker(args: &Args) -> Result<()> {
+    use repro::coordinator::transport::{
+        encode_draw, encode_summary, write_frame, WorkerManifest,
+        WorkerSummary,
+    };
+    use repro::coordinator::worker::{run_worker_with, DrawMsg};
+    use repro::rng::Pcg64;
+
+    let manifest_path = args
+        .get("manifest")
+        .ok_or_else(|| Error::Config("worker needs --manifest".into()))?;
+    let wm = WorkerManifest::load(Path::new(manifest_path))?;
+    if wm.machine >= wm.machines {
+        return Err(Error::Config(format!(
+            "machine {} out of range ({} machines)",
+            wm.machine, wm.machines
+        )));
+    }
+    let data = io::read_shard_json(Path::new(&wm.shard_path))?;
+    let idx: Vec<usize> = (0..data.len()).collect();
+    let target = data.subposterior(&idx, wm.prior_weight)?;
+    if target.dim() != wm.dim {
+        return Err(Error::Config(format!(
+            "shard dim {} != manifest dim {}",
+            target.dim(),
+            wm.dim
+        )));
+    }
+
+    // Same stream derivation as the in-thread path: split 0..machines
+    // off the root generator sequentially, keep stream m.
+    let mut root = Pcg64::seed_from(wm.seed);
+    let rng = root.split_n(wm.machines).swap_remove(wm.machine);
+    let sampler = repro::config::parse_sampler(&wm.sampler)?
+        .build(target.dim());
+
+    let stdout = std::io::stdout();
+    let mut out = std::io::BufWriter::new(stdout.lock());
+    let machine = wm.machine;
+    let result = run_worker_with(
+        wm.machine,
+        target.as_ref(),
+        sampler,
+        wm.samples,
+        wm.burn_in,
+        wm.thin,
+        rng,
+        &mut |msg: &DrawMsg| {
+            if let Err(e) = write_frame(&mut out, &encode_draw(msg)) {
+                // The frame stream is this process's only output: with
+                // the pipe gone (leader died or canceled the run) the
+                // rest of the chain is wasted work — bail out now
+                // rather than sampling draws nobody will read.
+                eprintln!("worker {machine}: stdout stream closed: {e}");
+                std::process::exit(1);
+            }
+        },
+    );
+    write_frame(
+        &mut out,
+        &encode_summary(&WorkerSummary {
+            machine: wm.machine,
+            accept_rate: result.accept_rate,
+            wall_secs: result.wall_secs,
+        }),
+    )?;
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     let dir = args.get("artifacts").unwrap_or("artifacts");
     let manifest = repro::runtime::Manifest::load(Path::new(dir))?;
@@ -270,6 +356,7 @@ fn usage() -> &'static str {
      pipeline      --model M --n N --d D --machines M --samples T \\\n\
                    --method NAME --seed S [--threads K] \\\n\
                    [--combine-threads K] [--out FILE] \\\n\
+                   [--process-mode true [--worker-bin PATH]] \\\n\
                    [--use-runtime true --artifacts DIR] [--config FILE]\n\
      single-chain  --model M --n N --d D --samples T [--out FILE]\n\
      combine       --method NAME [--t T] [--combine-threads K] \\\n\
@@ -297,6 +384,8 @@ fn main() -> ExitCode {
         "combine" => cmd_combine(&args),
         "eval" => cmd_eval(&args),
         "info" => cmd_info(&args),
+        // Hidden: spawned by `pipeline --process-mode true`.
+        "worker" => cmd_worker(&args),
         "help" | "--help" | "-h" => {
             println!("{}", usage());
             Ok(())

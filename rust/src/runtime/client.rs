@@ -10,6 +10,9 @@ use std::collections::HashMap;
 use std::rc::Rc;
 
 use super::artifact::{ArtifactMeta, Manifest};
+// Offline stub standing in for the real PJRT bindings (see
+// `runtime/xla_shim.rs` for how to swap in the vendored crate).
+use super::xla_shim as xla;
 use crate::error::{Error, Result};
 
 /// PJRT CPU client with a compile cache over a manifest.

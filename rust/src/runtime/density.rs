@@ -12,6 +12,9 @@ use std::rc::Rc;
 
 use super::artifact::ArtifactMeta;
 use super::client::RuntimeClient;
+// Offline stub standing in for the real PJRT bindings (see
+// `runtime/xla_shim.rs` for how to swap in the vendored crate).
+use super::xla_shim as xla;
 use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::model::{LogDensity, Trajectory};

@@ -1,8 +1,14 @@
-//! Minimal JSON parser — just enough for `artifacts/manifest.json`.
+//! Minimal JSON parser and emitter — enough for
+//! `artifacts/manifest.json` plus the process-mode wire format (draw
+//! frames, worker manifests, shard spills).
 //!
 //! No external crates are available offline, so this implements the JSON
 //! grammar (RFC 8259 minus `\u` surrogate pairs beyond the BMP) in ~200
 //! lines. Numbers parse as f64; integer access checks convertibility.
+//! [`Json::render`] emits floats with Rust's shortest-round-trip
+//! formatting, so `parse(render(x))` reproduces every finite f64
+//! bit-exactly — the property the process-mode byte-identity guarantee
+//! rests on.
 
 use crate::error::{Error, Result};
 use std::collections::BTreeMap;
@@ -66,12 +72,108 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            other => Err(Error::Parse(format!("expected bool, got {other:?}"))),
+        }
+    }
+
     /// Object field access with a helpful error.
     pub fn get(&self, key: &str) -> Result<&Json> {
         self.as_obj()?
             .get(key)
             .ok_or_else(|| Error::Parse(format!("missing field '{key}'")))
     }
+
+    /// Serialize back to JSON text (no insignificant whitespace).
+    ///
+    /// Numbers use Rust's shortest-round-trip float formatting
+    /// (integer-valued magnitudes below 2^53 print as plain integers,
+    /// everything else as `{:e}`), so parsing the output reproduces
+    /// every finite f64 bit-exactly. Non-finite numbers have no JSON
+    /// representation and render as `null`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => render_num(*v, out),
+            Json::Str(s) => render_str(s, out),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(o) => {
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    render_str(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn render_num(v: f64, out: &mut String) {
+    use std::fmt::Write;
+    if !v.is_finite() {
+        out.push_str("null");
+    } else if v.fract() == 0.0 && v.abs() < 9.007_199_254_740_992e15 {
+        let _ = write!(out, "{v:.0}");
+    } else {
+        let _ = write!(out, "{v:e}");
+    }
+}
+
+fn render_str(s: &str, out: &mut String) {
+    use std::fmt::Write;
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Build an object from `(key, value)` pairs.
+pub fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Number array from an f64 slice.
+pub fn num_arr(values: &[f64]) -> Json {
+    Json::Arr(values.iter().map(|&v| Json::Num(v)).collect())
+}
+
+/// Extract a `Vec<f64>` from a JSON array of numbers.
+pub fn f64_vec(j: &Json) -> Result<Vec<f64>> {
+    j.as_arr()?.iter().map(Json::as_f64).collect()
 }
 
 struct Parser<'a> {
@@ -323,6 +425,56 @@ mod tests {
         ] {
             assert!(Json::parse(bad).is_err(), "should reject {bad:?}");
         }
+    }
+
+    #[test]
+    fn render_roundtrips_floats_bit_exactly() {
+        for v in [
+            0.1,
+            1.0 / 3.0,
+            -0.0,
+            2.0,
+            1e-300,
+            -1.234_567_890_123_456_7e108,
+            9.007_199_254_740_993e15, // 2^53 + 1-ish: forced to {:e}
+            f64::MAX,
+            f64::MIN_POSITIVE,
+        ] {
+            let text = Json::Num(v).render();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(v.to_bits(), back.to_bits(), "{v} → {text} → {back}");
+        }
+    }
+
+    #[test]
+    fn render_nonfinite_as_null() {
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+    }
+
+    #[test]
+    fn render_parse_roundtrip_structures() {
+        let v = obj(vec![
+            ("name", Json::Str("a\"b\\c\nd → ∞".into())),
+            ("flag", Json::Bool(true)),
+            ("nothing", Json::Null),
+            ("xs", num_arr(&[1.0, 0.25, -3.5])),
+            ("nested", obj(vec![("k", Json::Num(7.0))])),
+        ]);
+        let back = Json::parse(&v.render()).unwrap();
+        assert_eq!(v, back);
+        assert_eq!(f64_vec(back.get("xs").unwrap()).unwrap(), vec![
+            1.0, 0.25, -3.5
+        ]);
+        assert!(back.get("flag").unwrap().as_bool().unwrap());
+        assert!(f64_vec(back.get("name").unwrap()).is_err());
+    }
+
+    #[test]
+    fn integer_valued_floats_render_plain() {
+        assert_eq!(Json::Num(42.0).render(), "42");
+        assert_eq!(Json::Num(-7.0).render(), "-7");
+        assert_eq!(Json::parse("42").unwrap().as_usize().unwrap(), 42);
     }
 
     #[test]

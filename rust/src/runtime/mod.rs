@@ -14,6 +14,7 @@ pub mod artifact;
 pub mod client;
 pub mod density;
 pub mod json;
+pub mod xla_shim;
 
 pub use artifact::{ArtifactMeta, Manifest, TensorSpec};
 pub use client::RuntimeClient;

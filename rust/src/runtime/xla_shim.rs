@@ -1,0 +1,132 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The crate is dependency-free by design (see Cargo.toml): no PJRT
+//! bindings exist offline, yet [`super::client`] and [`super::density`]
+//! are written against the real `xla` crate's API so they can bind to
+//! it when it is vendored. This shim provides the same surface with
+//! every fallible entry point failing fast, so the whole crate — in
+//! particular the native sampling/combination paths, which never touch
+//! PJRT — builds and tests everywhere. With the shim in place,
+//! `RuntimeClient::cpu` returns a clear "runtime unavailable" error at
+//! run time instead of the build failing to resolve `xla::*`.
+//!
+//! To enable the real runtime, vendor the bindings and swap the
+//! `use crate::runtime::xla_shim as xla;` aliases in
+//! `error.rs` / `runtime/client.rs` / `runtime/density.rs` for
+//! `use xla;`.
+
+use std::fmt;
+
+/// Mirrors the real bindings' `xla::Error`.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(
+        "PJRT/XLA runtime not available in this build (offline stub; \
+         vendor the xla bindings to enable --use-runtime)"
+            .to_string(),
+    ))
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+
+    pub fn buffer_from_host_buffer(
+        &self,
+        _data: &[f32],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(
+        &self,
+        _inputs: &[&PjRtBuffer],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// Host-side literal value.
+pub struct Literal;
+
+impl Literal {
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable()
+    }
+}
+
+/// XLA computation graph.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_fast_with_clear_message() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("not available"));
+        let err2 = HloModuleProto::from_text_file("x.hlo").unwrap_err();
+        assert!(err2.to_string().contains("stub"));
+    }
+}

@@ -1,0 +1,118 @@
+//! Process-mode pipeline integration: spawns real worker OS processes
+//! through the `repro` binary (cargo builds it for us and exports its
+//! path as `CARGO_BIN_EXE_repro`) and checks byte-identity with the
+//! in-thread path — the whole-pipeline extension of PR 1's combine
+//! determinism guarantee.
+
+use repro::combine::CombineMethod;
+use repro::config::PipelineConfig;
+use repro::coordinator::pipeline;
+use repro::data::synth;
+
+fn process_cfg(
+    model: &str,
+    machines: usize,
+    t: usize,
+    method: CombineMethod,
+) -> PipelineConfig {
+    let mut c = PipelineConfig::builder(model)
+        .machines(machines)
+        .samples_per_machine(t)
+        .method(method)
+        .seed(17)
+        .build();
+    c.process_mode = true;
+    c.worker_bin = env!("CARGO_BIN_EXE_repro").to_string();
+    c
+}
+
+fn assert_byte_identical(
+    proc_out: &pipeline::PipelineOutput,
+    thread_out: &pipeline::PipelineOutput,
+) {
+    assert_eq!(proc_out.subposteriors.len(), thread_out.subposteriors.len());
+    for (a, b) in proc_out.subposteriors.iter().zip(&thread_out.subposteriors)
+    {
+        assert_eq!(
+            a.samples.as_slice(),
+            b.samples.as_slice(),
+            "machine {} draws diverged across the process boundary",
+            a.machine
+        );
+        // The stream-rebuilt telemetry is complete on the process side.
+        assert_eq!(a.draw_times.len(), a.samples.len());
+        assert!(a.accept_rate.is_finite());
+    }
+    assert_eq!(
+        proc_out.combined.as_slice(),
+        thread_out.combined.as_slice(),
+        "combined output diverged between process and thread mode"
+    );
+    assert_eq!(
+        proc_out.metrics.scalars_transferred,
+        thread_out.metrics.scalars_transferred,
+        "leader must stream-ingest the same O(dTM) scalars in both modes"
+    );
+}
+
+#[test]
+fn process_mode_is_byte_identical_to_thread_mode() {
+    let data = synth::gaussian(1_500, 2, 3);
+    let pc = process_cfg("gaussian", 3, 200, CombineMethod::Semiparametric);
+    let proc_out = pipeline::run_process(&pc, &data).unwrap();
+    let mut tc = pc.clone();
+    tc.process_mode = false;
+    let thread_out = pipeline::run_native(&tc, &data).unwrap();
+    assert_byte_identical(&proc_out, &thread_out);
+}
+
+/// A second model family exercises the logistic shard serde path and a
+/// different combiner.
+#[test]
+fn process_mode_logistic_matches_thread_mode() {
+    let data = synth::logistic(1_200, 3, 9);
+    let pc = process_cfg("logistic", 2, 150, CombineMethod::Parametric);
+    let proc_out = pipeline::run_process(&pc, &data).unwrap();
+    let mut tc = pc.clone();
+    tc.process_mode = false;
+    let thread_out = pipeline::run_native(&tc, &data).unwrap();
+    assert_byte_identical(&proc_out, &thread_out);
+}
+
+/// The adaptation-freeze regression interacts with process mode too:
+/// with `burn_in = 0` both paths must freeze before the first retained
+/// draw and still agree byte-for-byte.
+#[test]
+fn process_mode_with_zero_burnin_matches_thread_mode() {
+    let data = synth::gaussian(800, 1, 5);
+    let mut pc = process_cfg("gaussian", 2, 120, CombineMethod::Parametric);
+    pc.burn_in = 0;
+    let proc_out = pipeline::run_process(&pc, &data).unwrap();
+    let mut tc = pc.clone();
+    tc.process_mode = false;
+    let thread_out = pipeline::run_native(&tc, &data).unwrap();
+    assert_byte_identical(&proc_out, &thread_out);
+}
+
+#[test]
+fn process_mode_off_degrades_to_thread_path() {
+    let data = synth::gaussian(600, 1, 5);
+    let mut c = process_cfg("gaussian", 2, 100, CombineMethod::Parametric);
+    c.process_mode = false;
+    let out = pipeline::run_process(&c, &data).unwrap();
+    assert_eq!(out.subposteriors.len(), 2);
+    assert_eq!(out.combined.len(), 100);
+}
+
+#[test]
+fn missing_worker_binary_surfaces_spawn_error() {
+    let data = synth::gaussian(600, 1, 5);
+    let mut c = process_cfg("gaussian", 2, 50, CombineMethod::Parametric);
+    c.worker_bin = "/nonexistent/repro-worker-binary".into();
+    let err = pipeline::run_process(&c, &data).unwrap_err();
+    let text = err.to_string();
+    assert!(
+        text.contains("spawning worker"),
+        "error should name the spawn failure, got: {text}"
+    );
+}
