@@ -10,6 +10,9 @@ mod common;
 use repro::combine::nonparametric::{
     nonparametric, nonparametric_naive, nonparametric_threaded, Img,
 };
+use repro::combine::semiparametric::{
+    semiparametric_threaded, semiparametric_threaded_uncached,
+};
 use repro::data::{io, synth};
 use repro::math::linalg::Mat;
 use repro::math::mvn::Mvn;
@@ -21,6 +24,7 @@ use std::path::Path;
 fn main() -> repro::error::Result<()> {
     common::header("micro_hotpath", "per-component hot-path timings");
     let mut table = io::Table::new(&["ns_per_op"]);
+    let mut records: Vec<common::BenchRecord> = Vec::new();
     let mut row = |name: &str, total_secs: f64, ops: usize| {
         let ns = total_secs * 1e9 / ops as f64;
         println!("{name:42} {ns:>12.0} ns/op");
@@ -130,6 +134,86 @@ fn main() -> repro::error::Result<()> {
         println!("(artifacts/ missing — runtime rows skipped; run `make artifacts`)");
     }
 
+    // --- semiparametric combine: annealed factorization cache ------------
+    // Cached vs uncached at d ≥ 20, where the per-iteration O(d³)
+    // factorizations dominate the O(d²) IMG sweep work. Byte-identity
+    // of the two paths is asserted here, and CI's bench-smoke job fails
+    // this binary if the cache ever stops beating the uncached baseline
+    // measured in the same run.
+    {
+        let (m, d, t_sub, t_out) = (8usize, 24usize, 400usize, 2_000usize);
+        let mut rng = Pcg64::seed_from(17);
+        let sets: Vec<SampleMatrix> = (0..m)
+            .map(|_| {
+                Mvn::new(vec![0.0; d], Mat::identity(d))
+                    .unwrap()
+                    .sample_n(t_sub, &mut rng)
+            })
+            .collect();
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let mut cached_out = SampleMatrix::new(d);
+        let secs_cached = common::time_median(3, || {
+            cached_out = semiparametric_threaded(&refs, t_out, 5, 1).unwrap();
+        });
+        let mut uncached_out = SampleMatrix::new(d);
+        let secs_uncached = common::time_median(3, || {
+            uncached_out =
+                semiparametric_threaded_uncached(&refs, t_out, 5, 1).unwrap();
+        });
+        assert_eq!(
+            cached_out.as_slice(),
+            uncached_out.as_slice(),
+            "factorization cache changed the combined draws"
+        );
+        let speedup = secs_uncached / secs_cached;
+        row(
+            &format!("semiparametric_combine_uncached_M{m}_d{d}"),
+            secs_uncached,
+            1,
+        );
+        row(
+            &format!("semiparametric_combine_cached_M{m}_d{d}"),
+            secs_cached,
+            1,
+        );
+        let secs_cached4 = common::time_median(3, || {
+            std::hint::black_box(
+                semiparametric_threaded(&refs, t_out, 5, 4).unwrap(),
+            );
+        });
+        println!(
+            "factorization-cache speedup (M={m}, d={d}, t_out={t_out}): \
+             {speedup:.1}×  (cached @4 threads: {})",
+            common::fmt_secs(secs_cached4)
+        );
+        records.push(common::BenchRecord {
+            name: format!("semiparametric_combine_M{m}_T{t_sub}_d{d}_uncached"),
+            ns_per_op: secs_uncached * 1e9,
+            threads: 1,
+            speedup: 1.0,
+        });
+        records.push(common::BenchRecord {
+            name: format!("semiparametric_combine_M{m}_T{t_sub}_d{d}_cached"),
+            ns_per_op: secs_cached * 1e9,
+            threads: 1,
+            speedup,
+        });
+        records.push(common::BenchRecord {
+            name: format!("semiparametric_combine_M{m}_T{t_sub}_d{d}_cached"),
+            ns_per_op: secs_cached4 * 1e9,
+            threads: 4,
+            speedup: secs_uncached / secs_cached4,
+        });
+        assert!(
+            secs_cached < secs_uncached,
+            "cached semiparametric combine ({}) must beat the uncached \
+             baseline ({}) — the factorization cache stopped paying for \
+             itself",
+            common::fmt_secs(secs_cached),
+            common::fmt_secs(secs_uncached)
+        );
+    }
+
     // --- combine end-to-end at working sizes -----------------------------
     let mut rng = Pcg64::seed_from(9);
     let sets: Vec<SampleMatrix> = (0..10)
@@ -162,7 +246,6 @@ fn main() -> repro::error::Result<()> {
         })
         .collect();
     let big_refs: Vec<&SampleMatrix> = big_sets.iter().collect();
-    let mut records: Vec<common::BenchRecord> = Vec::new();
     let mut secs_1t = 0.0;
     let mut baseline: Option<SampleMatrix> = None;
     let mut deterministic = true;

@@ -42,7 +42,7 @@ pub fn gaussian_product(estimates: &[GaussianEstimate]) -> Result<Mvn> {
     let mut prec_sum = Mat::zeros(d, d);
     let mut weighted_mean_sum = vec![0.0; d];
     for est in estimates {
-        prec_sum = prec_sum.add(&est.prec)?;
+        prec_sum.add_assign(&est.prec)?;
         let pm = est.prec.matvec(&est.mean)?;
         for j in 0..d {
             weighted_mean_sum[j] += pm[j];

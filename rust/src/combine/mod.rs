@@ -264,6 +264,19 @@ pub(crate) const RESTART_CHUNK0: usize = 500;
 /// Default index sweeps per emitted draw in the IMG-based combiners.
 pub(crate) const RESTART_SWEEPS: usize = 3;
 
+/// Longest chain in the restart plan, in annealed iterations
+/// (`keep + warmup`) — the number of per-iteration factorizations the
+/// semiparametric [`semiparametric::AnnealCache`] must cover so every
+/// chain hits the cache on every iteration. A pure function of
+/// `(t_out, chunk0)`, like the plan itself.
+pub(crate) fn max_chain_len(t_out: usize, chunk0: usize) -> usize {
+    restart_plan(t_out, chunk0)
+        .iter()
+        .map(|&(keep, warmup)| keep + warmup)
+        .max()
+        .unwrap_or(0)
+}
+
 /// Orchestrate the restart plan for `t_out` draws: split one RNG
 /// stream per chunk off `seed`, run `chain(keep, warmup, rng)` for
 /// each chunk `threads`-wide, and concatenate the parts in plan order.
@@ -313,6 +326,12 @@ pub struct CombineContext {
     sets: Vec<SampleMatrix>,
     scales: Vec<f64>,
     norms: Vec<Vec<f64>>,
+    /// Per-iteration factorizations of the annealed bandwidth schedule,
+    /// shared read-only by every restart chain. Installed by the
+    /// semiparametric setup (it needs the Gaussian product pieces);
+    /// `None` for combiners that don't use dense components, or for
+    /// uncached reference runs.
+    anneal: Option<semiparametric::AnnealCache>,
 }
 
 impl CombineContext {
@@ -333,7 +352,23 @@ impl CombineContext {
             whitened.push(w);
             norms.push(n);
         }
-        CombineContext { sets: whitened, scales, norms }
+        CombineContext { sets: whitened, scales, norms, anneal: None }
+    }
+
+    /// Install the annealed-schedule factorization cache. Must happen
+    /// before the restart chains fan out (the context is still
+    /// exclusively owned by the combine setup at that point); chains
+    /// then read it by shared borrow like the rest of the context.
+    pub fn install_anneal_cache(
+        &mut self,
+        cache: semiparametric::AnnealCache,
+    ) {
+        self.anneal = Some(cache);
+    }
+
+    /// The installed factorization cache, if any.
+    pub fn anneal_cache(&self) -> Option<&semiparametric::AnnealCache> {
+        self.anneal.as_ref()
     }
 
     /// Number of machines M.
@@ -360,6 +395,87 @@ impl CombineContext {
     pub fn norms(&self) -> &[Vec<f64>] {
         &self.norms
     }
+
+    /// The degenerate-input policy of [`validate_sets`] for entry
+    /// points that start from a prepared context: every machine must
+    /// still have samples (dims are equal by construction here).
+    pub fn validate_non_empty(&self) -> Result<()> {
+        for (m, s) in self.sets.iter().enumerate() {
+            ensure_machine_non_empty(m, s)?;
+        }
+        Ok(())
+    }
+}
+
+/// Prepare one [`CombineContext`] per group, fanning the per-set work of
+/// *all* groups — the variance pass behind [`whitening_scales`] and the
+/// whiten/norm pass — across one `threads`-wide pool.
+///
+/// This is the pairwise tree's per-level path: a level's merges each
+/// used to build their own context inside their slice of the worker
+/// pool, serializing the O(Td)-per-set setup whenever a level had fewer
+/// merges than workers (the root merge always does). Whitening
+/// level-wide instead keeps every worker busy regardless of tree shape.
+/// Each returned context is bit-identical to
+/// `CombineContext::prepare(group, _)`: same scales (the per-set
+/// variance accumulation order within a group is unchanged), same
+/// per-set whitening and norms.
+pub(crate) fn prepare_contexts(
+    groups: &[Vec<&SampleMatrix>],
+    threads: usize,
+) -> Vec<CombineContext> {
+    // Flat (group, machine) task list over every set at this level.
+    let flat: Vec<(usize, usize)> = groups
+        .iter()
+        .enumerate()
+        .flat_map(|(g, sets)| (0..sets.len()).map(move |m| (g, m)))
+        .collect();
+
+    // Per-set variance pass, fanned level-wide, then reduced per group
+    // through the same scale arithmetic as `whitening_scales`
+    // (`scales_from_variances` — single copy, set order preserved).
+    let variances: Vec<Option<Vec<f64>>> =
+        par_map_indexed(flat.len(), threads, |k| {
+            let (g, m) = flat[k];
+            set_variances(groups[g][m])
+        });
+    let mut scales: Vec<Vec<f64>> = Vec::with_capacity(groups.len());
+    let mut offset = 0usize;
+    for sets in groups {
+        scales.push(scales_from_variances(
+            sets[0].dim(),
+            &variances[offset..offset + sets.len()],
+        ));
+        offset += sets.len();
+    }
+
+    // Whiten + norm every set, again level-wide.
+    let per_set: Vec<(SampleMatrix, Vec<f64>)> =
+        par_map_indexed(flat.len(), threads, |k| {
+            let (g, m) = flat[k];
+            let w = whiten_one(groups[g][m], &scales[g]);
+            let n = row_norms(&w);
+            (w, n)
+        });
+
+    let mut contexts = Vec::with_capacity(groups.len());
+    let mut it = per_set.into_iter();
+    for (g, sets) in groups.iter().enumerate() {
+        let mut whitened = Vec::with_capacity(sets.len());
+        let mut norms = Vec::with_capacity(sets.len());
+        for _ in 0..sets.len() {
+            let (w, n) = it.next().expect("one entry per set");
+            whitened.push(w);
+            norms.push(n);
+        }
+        contexts.push(CombineContext {
+            sets: whitened,
+            scales: scales[g].clone(),
+            norms,
+            anneal: None,
+        });
+    }
+    contexts
 }
 
 /// Scatter `D_t = Q_t − |S_t|²/M` (≥ 0 up to fp noise) — the single
@@ -396,14 +512,29 @@ pub(crate) fn row_norms(set: &SampleMatrix) -> Vec<f64> {
 /// linear transform under which every density-product estimator here is
 /// exactly equivariant, so Theorem 5.3's rates are unchanged.
 pub(crate) fn whitening_scales(sets: &[&SampleMatrix]) -> Vec<f64> {
-    let d = sets[0].dim();
+    let vars: Vec<Option<Vec<f64>>> = sets
+        .iter()
+        .map(|set| set_variances(set))
+        .collect();
+    scales_from_variances(sets[0].dim(), &vars)
+}
+
+/// Per-set variances for the whitening pass, or `None` for sets too
+/// small to have any (< 2 draws) — those are skipped by the scale
+/// reduction.
+fn set_variances(set: &SampleMatrix) -> Option<Vec<f64>> {
+    (set.len() >= 2).then(|| crate::stats::moments::variances(set))
+}
+
+/// Reduce precomputed per-set variances to whitening scales — the
+/// single copy of the scale arithmetic (mean of per-set sds per
+/// coordinate, floored at 1e-12) shared by [`whitening_scales`] and the
+/// level-wide [`prepare_contexts`], whose outputs must stay
+/// bit-identical.
+fn scales_from_variances(d: usize, vars: &[Option<Vec<f64>>]) -> Vec<f64> {
     let mut s = vec![0.0; d];
     let mut counted = 0usize;
-    for set in sets {
-        if set.len() < 2 {
-            continue;
-        }
-        let v = crate::stats::moments::variances(set);
+    for v in vars.iter().flatten() {
         for j in 0..d {
             s[j] += v[j].sqrt();
         }
@@ -469,9 +600,19 @@ pub(crate) fn validate_sets(sets: &[&SampleMatrix]) -> Result<()> {
                 s.dim()
             )));
         }
-        if s.is_empty() {
-            return Err(Error::Config(format!("machine {m} has no samples")));
-        }
+        ensure_machine_non_empty(m, s)?;
+    }
+    Ok(())
+}
+
+/// Single copy of the empty-machine rejection shared by
+/// [`validate_sets`] and [`CombineContext::validate_non_empty`].
+pub(crate) fn ensure_machine_non_empty(
+    m: usize,
+    s: &SampleMatrix,
+) -> Result<()> {
+    if s.is_empty() {
+        return Err(Error::Config(format!("machine {m} has no samples")));
     }
     Ok(())
 }
@@ -575,6 +716,52 @@ mod tests {
         for (row, norm) in seq.sets()[0].rows().zip(&seq.norms()[0]) {
             let want: f64 = row.iter().map(|v| v * v).sum();
             assert!((want - norm).abs() < 1e-12);
+        }
+    }
+
+    /// The level-wide context builder is bit-identical to preparing
+    /// each group on its own, at any thread count — including groups
+    /// containing a single-draw set (variance pass skipped).
+    #[test]
+    fn prepare_contexts_matches_per_group_prepare() {
+        let mut rng = crate::rng::Pcg64::seed_from(17);
+        let sets: Vec<SampleMatrix> = (0..5)
+            .map(|m| {
+                let mut s = SampleMatrix::new(2);
+                let n = if m == 4 { 1 } else { 80 };
+                for _ in 0..n {
+                    s.push(&[rng.normal() * (m + 1) as f64, rng.normal()]);
+                }
+                s
+            })
+            .collect();
+        let groups: Vec<Vec<&SampleMatrix>> = vec![
+            vec![&sets[0], &sets[1]],
+            vec![&sets[2], &sets[3], &sets[4]],
+        ];
+        for threads in [1usize, 2, 4] {
+            let level = prepare_contexts(&groups, threads);
+            assert_eq!(level.len(), 2);
+            for (ctx, group) in level.iter().zip(&groups) {
+                let solo = CombineContext::prepare(group, 1);
+                assert_eq!(ctx.scales(), solo.scales());
+                for m in 0..group.len() {
+                    assert_eq!(ctx.sets()[m], solo.sets()[m]);
+                    assert_eq!(ctx.norms()[m], solo.norms()[m]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn max_chain_len_matches_plan() {
+        for t_out in [0usize, 1, 300, 1000, 8000, 100_000] {
+            let want = restart_plan(t_out, RESTART_CHUNK0)
+                .iter()
+                .map(|&(k, w)| k + w)
+                .max()
+                .unwrap_or(0);
+            assert_eq!(max_chain_len(t_out, RESTART_CHUNK0), want);
         }
     }
 

@@ -67,8 +67,28 @@ pub fn nonparametric_threaded(
     super::validate_sets(sets)?;
     let threads = super::resolve_threads(threads);
     let ctx = CombineContext::prepare(sets, threads);
+    nonparametric_with_context(&ctx, t_out, seed, threads)
+}
+
+/// Run the nonparametric combiner over an already-prepared
+/// [`CombineContext`] — the per-level entry point of the pairwise tree,
+/// which whitens all of a level's merge groups up front and then runs
+/// each merge over its prepared context. Byte-identical to
+/// [`nonparametric_threaded`] over the same sets: the context build is
+/// itself thread-count invariant, so only where it happens moves.
+pub fn nonparametric_with_context(
+    ctx: &CombineContext,
+    t_out: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<SampleMatrix> {
+    // Same degenerate-input policy as the plain entry point's
+    // validate_sets: an empty machine must stay an error, not a silent
+    // empty result.
+    ctx.validate_non_empty()?;
+    let threads = super::resolve_threads(threads);
     let mut out = run_restarts_parallel(
-        &ctx,
+        ctx,
         t_out,
         super::RESTART_CHUNK0,
         super::RESTART_SWEEPS,

@@ -109,8 +109,22 @@ impl OnlineCombiner {
         t_out: usize,
         seed: u64,
     ) -> Result<SampleMatrix> {
+        self.combined_draws_threaded(method, t_out, seed, 1)
+    }
+
+    /// [`OnlineCombiner::combined_draws`] with a combine-stage thread
+    /// count (`0` = all cores) — the streaming leader gets the same
+    /// threaded/cached combine runtime as the batch path, with the same
+    /// contract: byte-identical draws for a fixed seed at any count.
+    pub fn combined_draws_threaded(
+        &self,
+        method: CombineMethod,
+        t_out: usize,
+        seed: u64,
+        threads: usize,
+    ) -> Result<SampleMatrix> {
         let refs: Vec<&SampleMatrix> = self.buffers.iter().collect();
-        combine::combine_sets(method, &refs, t_out, seed)
+        combine::combine_sets_threaded(method, &refs, t_out, seed, threads)
     }
 }
 
@@ -162,6 +176,32 @@ mod tests {
         let e1 = (first.mean()[0] - 1.0).abs();
         let e2 = (second.mean()[0] - 1.0).abs();
         assert!(e2 < e1 + 0.05, "e1={e1} e2={e2}");
+    }
+
+    /// The streaming leader's threaded combine path is byte-identical
+    /// to the serial one at any thread count, for an IMG-based method.
+    #[test]
+    fn threaded_draws_match_serial() {
+        let mut oc = OnlineCombiner::new(3, 1);
+        feed(&mut oc, 11, &[0.8, 1.0, 1.2], 400);
+        let base = oc
+            .combined_draws(CombineMethod::Semiparametric, 900, 6)
+            .unwrap();
+        for threads in [2usize, 4, 0] {
+            let out = oc
+                .combined_draws_threaded(
+                    CombineMethod::Semiparametric,
+                    900,
+                    6,
+                    threads,
+                )
+                .unwrap();
+            assert_eq!(
+                base.as_slice(),
+                out.as_slice(),
+                "threads {threads} diverged"
+            );
+        }
     }
 
     #[test]

@@ -16,8 +16,18 @@
 //! seeds are drawn from the root stream *before* the level fans out, so
 //! the reduction is byte-identical for a fixed seed at any thread
 //! count.
+//!
+//! Each level's [`super::CombineContext`]s (whitening + norm caches)
+//! are built *once per level* before the merges run
+//! ([`super::prepare_contexts`]): the per-set O(Td) variance and
+//! whitening passes of every merge at the level fan across the full
+//! worker pool, instead of each merge re-whitening inside its own —
+//! possibly single-worker — slice of the pool. The contexts are
+//! bit-identical to the ones the merges used to build themselves, so
+//! the tree's output is unchanged.
 
-use super::nonparametric::nonparametric_threaded;
+use super::nonparametric::nonparametric_with_context;
+use super::CombineContext;
 use crate::error::Result;
 use crate::rng::Pcg64;
 use crate::types::SampleMatrix;
@@ -97,6 +107,22 @@ fn reduce_tree(
             .map(|c| if c.len() >= 2 { Some(rng.next_u64()) } else { None })
             .collect();
         let merges = seeds.iter().filter(|s| s.is_some()).count();
+        // Per-level context hoist: whiten every merge group once, with
+        // the per-set work of the whole level fanned across the full
+        // thread budget, before any merge runs.
+        let merge_idx: Vec<usize> =
+            (0..chunks.len()).filter(|&i| seeds[i].is_some()).collect();
+        let groups: Vec<Vec<&SampleMatrix>> = merge_idx
+            .iter()
+            .map(|&i| chunks[i].iter().collect())
+            .collect();
+        let mut contexts: Vec<Option<CombineContext>> =
+            (0..chunks.len()).map(|_| None).collect();
+        for (&slot, ctx) in
+            merge_idx.iter().zip(super::prepare_contexts(&groups, threads))
+        {
+            contexts[slot] = Some(ctx);
+        }
         // Split workers: up to `merges` concurrent merges at this
         // level, remaining parallelism goes into each merge's own
         // restart-chain pool. Round the inner pool up so no worker
@@ -106,13 +132,15 @@ fn reduce_tree(
         let outer = threads.clamp(1, merges.max(1));
         let inner = threads.div_ceil(outer).max(1);
         let next: Vec<Result<SampleMatrix>> =
-            super::par_map_indexed(chunks.len(), outer, |i| match seeds[i] {
-                Some(merge_seed) => {
-                    let group: Vec<&SampleMatrix> =
-                        chunks[i].iter().collect();
-                    nonparametric_threaded(&group, t_out, merge_seed, inner)
+            super::par_map_indexed(chunks.len(), outer, |i| {
+                match (&contexts[i], seeds[i]) {
+                    (Some(ctx), Some(merge_seed)) => {
+                        nonparametric_with_context(
+                            ctx, t_out, merge_seed, inner,
+                        )
+                    }
+                    _ => Ok(chunks[i][0].clone()),
                 }
-                None => Ok(chunks[i][0].clone()),
             });
         current = next.into_iter().collect::<Result<Vec<SampleMatrix>>>()?;
     }

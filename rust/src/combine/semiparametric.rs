@@ -30,15 +30,39 @@
 //! byte-identical output for a fixed seed at any thread count. An IMG
 //! proposal costs O(d) for the `w` part + O(1) for the denominator +
 //! O(d²) for the numerator term, with zero heap allocation.
+//!
+//! ## Annealed-schedule factorization cache
+//!
+//! The bandwidth schedule `h_i = i^{-1/(4+d)}` depends only on the
+//! local iteration index, so the per-iteration dense factorizations —
+//! the numerator Gaussian `N(μ̂_M, Σ̂_M + h²/M I)` (Cholesky) and the
+//! component covariance `Σ_t = (M/h² I + Σ̂_M⁻¹)⁻¹` (inverse +
+//! Cholesky) — are identical across every restart chain. The
+//! [`AnnealCache`] computes them once per combine call, in parallel
+//! across iteration indices, and every chain reads them back as O(d²)
+//! lookups; without the cache each chain paid O(d³) plus several d×d
+//! heap allocations per iteration. The cache is a pure function of the
+//! iteration index and the Gaussian product pieces, so cached and
+//! uncached runs ([`semiparametric_threaded_uncached`]) are
+//! byte-identical; a memory budget caps the number of cached
+//! iterations, and iterations past the cap transparently fall back to
+//! the same per-iteration computation.
 
 use super::gaussian_product::GaussianEstimate;
 use super::CombineContext;
 use crate::error::Result;
 use crate::math::linalg::{self, Mat};
-use crate::math::mvn::Mvn;
+use crate::math::mvn::{self, Mvn};
 use crate::rng::Pcg64;
 use crate::stats::kde::annealed_bandwidth;
 use crate::types::SampleMatrix;
+
+/// Default memory budget for the [`AnnealCache`], in bytes. Each cached
+/// iteration holds two (three with full weights) d×d matrices, so the
+/// budget caps the cache at `budget / (≈3·8·d²)` iterations; chains
+/// longer than that recompute the tail iterations in place, exactly as
+/// the uncached path does.
+const ANNEAL_CACHE_BUDGET: usize = 256 << 20;
 
 /// Draw `t_out` samples from the semiparametric density-product estimate
 /// (full weights `W_t`) on a single thread.
@@ -47,7 +71,7 @@ pub fn semiparametric(
     t_out: usize,
     seed: u64,
 ) -> Result<SampleMatrix> {
-    run_semiparametric(sets, t_out, seed, true, 1)
+    run_semiparametric(sets, t_out, seed, true, 1, Some(ANNEAL_CACHE_BUDGET))
 }
 
 /// [`semiparametric`] with setup and restart chains fanned across
@@ -58,7 +82,29 @@ pub fn semiparametric_threaded(
     seed: u64,
     threads: usize,
 ) -> Result<SampleMatrix> {
-    run_semiparametric(sets, t_out, seed, true, threads)
+    run_semiparametric(
+        sets,
+        t_out,
+        seed,
+        true,
+        threads,
+        Some(ANNEAL_CACHE_BUDGET),
+    )
+}
+
+/// [`semiparametric_threaded`] with the annealed factorization cache
+/// disabled: every restart chain recomputes the per-iteration
+/// factorizations, exactly as the pre-cache implementation did.
+/// Byte-identical to the cached path for a fixed seed — kept as the
+/// perf baseline for `benches/micro_hotpath.rs` and as the reference
+/// in the cache regression tests.
+pub fn semiparametric_threaded_uncached(
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<SampleMatrix> {
+    run_semiparametric(sets, t_out, seed, true, threads, None)
 }
 
 /// Variant 2: nonparametric weights `w_t`, semiparametric components.
@@ -67,7 +113,14 @@ pub fn semiparametric_nw(
     t_out: usize,
     seed: u64,
 ) -> Result<SampleMatrix> {
-    run_semiparametric(sets, t_out, seed, false, 1)
+    run_semiparametric(
+        sets,
+        t_out,
+        seed,
+        false,
+        1,
+        Some(ANNEAL_CACHE_BUDGET),
+    )
 }
 
 /// [`semiparametric_nw`] with a combine-stage thread count.
@@ -77,7 +130,25 @@ pub fn semiparametric_nw_threaded(
     seed: u64,
     threads: usize,
 ) -> Result<SampleMatrix> {
-    run_semiparametric(sets, t_out, seed, false, threads)
+    run_semiparametric(
+        sets,
+        t_out,
+        seed,
+        false,
+        threads,
+        Some(ANNEAL_CACHE_BUDGET),
+    )
+}
+
+/// [`semiparametric_nw_threaded`] without the factorization cache —
+/// see [`semiparametric_threaded_uncached`].
+pub fn semiparametric_nw_threaded_uncached(
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<SampleMatrix> {
+    run_semiparametric(sets, t_out, seed, false, threads, None)
 }
 
 /// Read-only state shared by every restart chain of one combine call.
@@ -96,19 +167,131 @@ struct SemiShared<'a> {
     full_weights: bool,
 }
 
+/// Factorizations for one annealed iteration `i` — everything in the
+/// per-iteration prologue and draw of [`run_chain`] that depends only
+/// on `h_i` and the shared Gaussian product pieces, never on chain
+/// state.
+#[derive(Debug)]
+pub(crate) struct IterFactors {
+    /// Numerator Gaussian `N(· | μ̂_M, Σ̂_M + h²/M I)`, pre-factored.
+    /// `None` for the nonparametric-weight variant, which never
+    /// evaluates it (the pre-cache code built it anyway — pure waste).
+    num_mvn: Option<Mvn>,
+    /// Component covariance `Σ_t = (M/h² I + Σ̂_M⁻¹)⁻¹`.
+    comp_cov: Mat,
+    /// Lower Cholesky factor of `Σ_t` (via [`mvn::covariance_cholesky`],
+    /// i.e. exactly the factor `Mvn::new` would compute per draw).
+    comp_chol: Mat,
+}
+
+/// Compute [`IterFactors`] for iteration `i` — the single copy of the
+/// per-iteration arithmetic, used both to build the [`AnnealCache`] and
+/// as the in-place fallback for uncached runs or iterations past the
+/// cache's memory budget. Bit-identical either way: same diagonal
+/// bumps, same jittered inverse, same covariance Cholesky the pre-cache
+/// `Mvn::new` calls performed.
+fn iter_factors(
+    cov_m: &Mat,
+    prec_sum: &Mat,
+    mu_m: &[f64],
+    m: f64,
+    full_weights: bool,
+    i: usize,
+) -> Result<IterFactors> {
+    let dim = mu_m.len();
+    let h = annealed_bandwidth(i, dim);
+    let h2 = h * h;
+    // Numerator Gaussian N(· | μ̂_M, Σ̂_M + h²/M I).
+    let num_mvn = if full_weights {
+        let mut num_cov = cov_m.clone();
+        num_cov.add_diagonal(h2 / m);
+        Some(Mvn::new(mu_m.to_vec(), num_cov)?)
+    } else {
+        None
+    };
+    // Component covariance Σ_t = (M/h² I + Σ̂_M⁻¹)⁻¹, inverted in place.
+    let mut comp_cov = prec_sum.clone();
+    comp_cov.add_diagonal(m / h2);
+    linalg::spd_inverse_jittered_in_place(&mut comp_cov)?;
+    let comp_chol = mvn::covariance_cholesky(comp_cov.clone())?;
+    Ok(IterFactors { num_mvn, comp_cov, comp_chol })
+}
+
+/// Shared per-iteration factorization table over the annealed bandwidth
+/// schedule (see the module docs). Built once per combine call — in
+/// parallel across iteration indices, under the combine-stage thread
+/// count — then installed into the [`CombineContext`] and read by every
+/// restart chain.
+#[derive(Debug)]
+pub struct AnnealCache {
+    /// Slot `i - 1` holds iteration `i`'s factorizations.
+    factors: Vec<IterFactors>,
+    full_weights: bool,
+}
+
+impl AnnealCache {
+    /// Factor the first `iters` iterations of the annealed schedule,
+    /// truncated to `budget_bytes` of cached matrices, fanning the
+    /// per-iteration O(d³) work across `threads` workers.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn build(
+        cov_m: &Mat,
+        prec_sum: &Mat,
+        mu_m: &[f64],
+        m: f64,
+        full_weights: bool,
+        iters: usize,
+        budget_bytes: usize,
+        threads: usize,
+    ) -> Result<AnnealCache> {
+        let dim = mu_m.len();
+        let mats = if full_weights { 3 } else { 2 };
+        let per_entry =
+            (mats * dim * dim + 2 * dim) * std::mem::size_of::<f64>();
+        let n = iters.min((budget_bytes / per_entry.max(1)).max(1));
+        let factors = super::par_map_indexed(n, threads, |k| {
+            iter_factors(cov_m, prec_sum, mu_m, m, full_weights, k + 1)
+        })
+        .into_iter()
+        .collect::<Result<_>>()?;
+        Ok(AnnealCache { factors, full_weights })
+    }
+
+    /// Cached factorizations for iteration `i` (1-based), or `None`
+    /// past the budget cap — callers fall back to [`iter_factors`].
+    pub(crate) fn entry(&self, i: usize) -> Option<&IterFactors> {
+        self.factors.get(i.wrapping_sub(1))
+    }
+
+    /// Number of cached iterations.
+    pub fn len(&self) -> usize {
+        self.factors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.factors.is_empty()
+    }
+
+    /// Whether the cache carries the full-weight numerator Gaussians.
+    pub fn full_weights(&self) -> bool {
+        self.full_weights
+    }
+}
+
 fn run_semiparametric(
     sets: &[&SampleMatrix],
     t_out: usize,
     seed: u64,
     full_weights: bool,
     threads: usize,
+    cache_budget: Option<usize>,
 ) -> Result<SampleMatrix> {
     // Whitened coordinates (bandwidth relative to subposterior scale;
     // see super::whitening_scales). The estimator is equivariant under
     // this diagonal map, including its parametric factor.
     super::validate_sets(sets)?;
     let threads = super::resolve_threads(threads);
-    let ctx = CombineContext::prepare(sets, threads);
+    let mut ctx = CombineContext::prepare(sets, threads);
     let dim = ctx.dim();
     let m_count = ctx.machines();
 
@@ -123,7 +306,7 @@ fn run_semiparametric(
     // Product Gaussian N(μ̂_M, Σ̂_M) pieces (small, sequential).
     let mut prec_sum = Mat::zeros(dim, dim);
     for est in &estimates {
-        prec_sum = prec_sum.add(&est.prec)?;
+        prec_sum.add_assign(&est.prec)?;
     }
     let cov_m = linalg::spd_inverse_jittered(&prec_sum)?; // Σ̂_M
     let mut acc = vec![0.0; dim];
@@ -148,6 +331,24 @@ fn run_semiparametric(
         })
         .into_iter()
         .collect::<Result<_>>()?;
+
+    // Annealed-schedule factorization cache: one entry per iteration of
+    // the longest restart chain, built in parallel, shared read-only by
+    // every chain. `None` budget = the uncached reference path.
+    if let Some(budget) = cache_budget {
+        let iters = super::max_chain_len(t_out, super::RESTART_CHUNK0);
+        let cache = AnnealCache::build(
+            &cov_m,
+            &prec_sum,
+            &mu_m,
+            m_count as f64,
+            full_weights,
+            iters,
+            budget,
+            threads,
+        )?;
+        ctx.install_anneal_cache(cache);
+    }
 
     let shared = SemiShared {
         ctx: &ctx,
@@ -176,7 +377,10 @@ fn run_semiparametric(
 
 /// One restart chain: `keep + warmup` annealed IMG iterations over the
 /// shared state, first `warmup` draws discarded. All per-proposal work
-/// runs on reused scratch buffers — no heap traffic in the inner loop.
+/// runs on reused scratch buffers — no heap traffic in the inner loop —
+/// and the per-iteration dense factorizations come from the shared
+/// [`AnnealCache`] as O(d²) lookups (recomputed in place only on an
+/// uncached run or past the cache's memory budget).
 fn run_chain(
     sh: &SemiShared<'_>,
     keep: usize,
@@ -189,6 +393,14 @@ fn run_chain(
     let sets = sh.ctx.sets();
     let norms = sh.ctx.norms();
     let sweeps = super::RESTART_SWEEPS;
+    let cache = sh.ctx.anneal_cache();
+    if let Some(c) = cache {
+        debug_assert_eq!(
+            c.full_weights(),
+            sh.full_weights,
+            "anneal cache variant mismatch"
+        );
+    }
 
     // IMG state.
     let mut indices: Vec<usize> = vec![0; m_count];
@@ -199,6 +411,9 @@ fn run_chain(
     let mut bar_new = vec![0.0; dim];
     let mut mean_vec = vec![0.0; dim];
     let mut lp_scratch = vec![0.0; dim];
+    let mut comp_mean = vec![0.0; dim];
+    let mut z_scratch = vec![0.0; dim];
+    let mut draw = vec![0.0; dim];
 
     // Fresh t· for this chain.
     for (mach, s) in sets.iter().enumerate() {
@@ -217,28 +432,31 @@ fn run_chain(
         let h2 = h * h;
 
         // Per-iteration factorizations (h is fixed within the sweep):
-        // numerator Gaussian N(· | μ̂_M, Σ̂_M + h²/M I) and component
-        // covariance Σ_t = (M/h² I + Σ̂_M⁻¹)⁻¹.
-        let mut num_cov = sh.cov_m.clone();
-        for j in 0..dim {
-            num_cov[(j, j)] += h2 / m;
-        }
-        let num_mvn = Mvn::new(sh.mu_m.clone(), num_cov)?;
-        let mut comp_prec = sh.prec_sum.clone();
-        for j in 0..dim {
-            comp_prec[(j, j)] += m / h2;
-        }
-        let comp_cov = linalg::spd_inverse_jittered(&comp_prec)?;
+        // cache hit → O(d²) of lookups; miss → the pre-cache O(d³)
+        // computation, bit-identical (single copy in `iter_factors`).
+        let mut fresh = None;
+        let factors: &IterFactors = match cache.and_then(|c| c.entry(i)) {
+            Some(f) => f,
+            None => fresh.insert(iter_factors(
+                &sh.cov_m,
+                &sh.prec_sum,
+                &sh.mu_m,
+                m,
+                sh.full_weights,
+                i,
+            )?),
+        };
+        // `full_weights` ⟺ the numerator Gaussian was built.
+        let num_mvn = factors.num_mvn.as_ref();
 
         let mut d_cur = super::scatter(sq_sum, &sum, m);
         for j in 0..dim {
             theta_bar[j] = sum[j] / m;
         }
         // Current total log weight pieces.
-        let mut log_num_cur = if sh.full_weights {
-            num_mvn.logpdf_with(&theta_bar, &mut lp_scratch)
-        } else {
-            0.0
+        let mut log_num_cur = match num_mvn {
+            Some(nm) => nm.logpdf_with(&theta_bar, &mut lp_scratch),
+            None => 0.0,
         };
 
         for mach_sweep in 0..(m_count * sweeps) {
@@ -261,12 +479,12 @@ fn run_chain(
             // log w ratio (nonparametric part).
             let mut log_ratio = -(d_new - d_cur) / (2.0 * h2);
             let mut log_num_new = 0.0;
-            if sh.full_weights {
+            if let Some(nm) = num_mvn {
                 // Numerator: N(θ̄_c | μ̂_M, Σ̂_M + h²/M I).
                 for j in 0..dim {
                     bar_new[j] = (sum[j] - old_row[j] + new_row[j]) / m;
                 }
-                log_num_new = num_mvn.logpdf_with(&bar_new, &mut lp_scratch);
+                log_num_new = nm.logpdf_with(&bar_new, &mut lp_scratch);
                 log_ratio += log_num_new - log_num_cur;
                 // Denominator (inverted): - [lp(new) - lp(old)].
                 log_ratio -=
@@ -279,23 +497,29 @@ fn run_chain(
                 sq_sum = q_new;
                 indices[mach] = new_idx;
                 d_cur = d_new;
-                if sh.full_weights {
+                if num_mvn.is_some() {
                     log_num_cur = log_num_new;
                 }
             }
         }
 
-        // Draw θ_i ~ N(μ_t, Σ_t) for the current component.
+        // Draw θ_i ~ N(μ_t, Σ_t) for the current component, through the
+        // pre-factored Σ_t Cholesky — allocation-free, and during
+        // warmup the RNG stream still advances uniformly (same d
+        // normals as an emitted draw).
         for j in 0..dim {
             mean_vec[j] = m / h2 * (sum[j] / m) + sh.prec_mu[j];
         }
-        let comp_mean = comp_cov.matvec(&mean_vec)?;
-        let comp = Mvn::new(comp_mean, comp_cov)?;
+        factors.comp_cov.matvec_into(&mean_vec, &mut comp_mean)?;
+        mvn::chol_sample_into(
+            &comp_mean,
+            &factors.comp_chol,
+            &mut rng,
+            &mut z_scratch,
+            &mut draw,
+        );
         if i > warmup {
-            out.push(&comp.sample(&mut rng));
-        } else {
-            // Keep the RNG stream advancing uniformly through warmup.
-            let _ = comp.sample(&mut rng);
+            out.push(&draw);
         }
     }
     Ok(out)
@@ -376,6 +600,77 @@ mod tests {
                 b.mean()[j]
             );
         }
+    }
+
+    /// Cached and uncached paths are byte-identical — the cache only
+    /// moves the per-iteration factorizations, never changes them.
+    #[test]
+    fn cache_matches_uncached_reference() {
+        let mus = vec![vec![0.3, -0.1, 0.2], vec![0.7, 0.1, 0.4]];
+        let sets = gaussian_sets(31, &mus, 1.0, 300);
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let cached = semiparametric_threaded(&refs, 900, 5, 2).unwrap();
+        let uncached =
+            semiparametric_threaded_uncached(&refs, 900, 5, 2).unwrap();
+        assert_eq!(cached.as_slice(), uncached.as_slice());
+        let cached_nw = semiparametric_nw_threaded(&refs, 900, 5, 2).unwrap();
+        let uncached_nw =
+            semiparametric_nw_threaded_uncached(&refs, 900, 5, 2).unwrap();
+        assert_eq!(cached_nw.as_slice(), uncached_nw.as_slice());
+    }
+
+    /// A cache capped far below the chain length (1-entry budget) falls
+    /// back to in-place recomputation past the cap with identical
+    /// output — the budget is a memory knob, never a result knob.
+    #[test]
+    fn tiny_cache_budget_falls_back_identically() {
+        let mus = vec![vec![0.2, -0.2], vec![0.5, 0.1]];
+        let sets = gaussian_sets(33, &mus, 1.0, 250);
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let full =
+            run_semiparametric(&refs, 800, 9, true, 2, Some(usize::MAX))
+                .unwrap();
+        let tiny = run_semiparametric(&refs, 800, 9, true, 2, Some(1))
+            .unwrap();
+        let none = run_semiparametric(&refs, 800, 9, true, 2, None).unwrap();
+        assert_eq!(full.as_slice(), tiny.as_slice());
+        assert_eq!(full.as_slice(), none.as_slice());
+    }
+
+    /// Budget arithmetic: the cache covers the longest chain when the
+    /// budget allows, truncates (but stays non-empty) when it doesn't,
+    /// and skips the numerator Gaussian for the nw variant.
+    #[test]
+    fn cache_build_respects_budget_and_variant() {
+        let iters = crate::combine::max_chain_len(800, 500);
+        assert!(iters > 0);
+        let dim = 2;
+        let prec_sum = Mat::scaled_identity(dim, 2.0);
+        let cov_m = Mat::scaled_identity(dim, 0.5);
+        let mu_m = vec![0.1, -0.3];
+        let full = AnnealCache::build(
+            &cov_m, &prec_sum, &mu_m, 2.0, true, iters, usize::MAX, 2,
+        )
+        .unwrap();
+        assert_eq!(full.len(), iters);
+        assert!(full.full_weights());
+        assert!(full.factors[0].num_mvn.is_some());
+        assert!(full.entry(iters).is_some());
+        assert!(full.entry(iters + 1).is_none());
+        assert!(full.entry(0).is_none(), "iterations are 1-based");
+
+        let capped = AnnealCache::build(
+            &cov_m, &prec_sum, &mu_m, 2.0, true, iters, 1, 1,
+        )
+        .unwrap();
+        assert_eq!(capped.len(), 1, "1-byte budget still caches entry 1");
+
+        let nw = AnnealCache::build(
+            &cov_m, &prec_sum, &mu_m, 2.0, false, 4, usize::MAX, 1,
+        )
+        .unwrap();
+        assert!(!nw.full_weights());
+        assert!(nw.factors.iter().all(|f| f.num_mvn.is_none()));
     }
 
     /// Byte-identical output for a fixed seed at 1, 2 and 4 threads,

@@ -12,6 +12,10 @@ use crate::types::SampleMatrix;
 pub struct Leader {
     combiner: OnlineCombiner,
     finished: Vec<bool>,
+    /// Combine-stage thread count for [`Leader::draws`] (`0` = all
+    /// cores). Output is byte-identical at any count, so this only
+    /// changes wall-clock.
+    combine_threads: usize,
     /// Max worker-local elapsed time seen so far (cluster clock).
     pub max_elapsed: f64,
     /// Scalars received (d per draw) — the paper's O(dTM) communication.
@@ -23,9 +27,18 @@ impl Leader {
         Leader {
             combiner: OnlineCombiner::new(machines, dim),
             finished: vec![false; machines],
+            combine_threads: 1,
             max_elapsed: 0.0,
             scalars_received: 0,
         }
+    }
+
+    /// Set the combine-stage thread count used by [`Leader::draws`]
+    /// (`0` = all cores). The pipeline wires its `combine_threads`
+    /// config through here so mid-stream combination requests run on
+    /// the same parallel runtime as the final combine.
+    pub fn set_combine_threads(&mut self, threads: usize) {
+        self.combine_threads = threads;
     }
 
     /// Ingest one message.
@@ -62,14 +75,19 @@ impl Leader {
     }
 
     /// Current full-posterior draws by any method over what has streamed
-    /// in so far.
+    /// in so far, on the configured combine-stage thread pool.
     pub fn draws(
         &self,
         method: CombineMethod,
         t_out: usize,
         seed: u64,
     ) -> Result<SampleMatrix> {
-        self.combiner.combined_draws(method, t_out, seed)
+        self.combiner.combined_draws_threaded(
+            method,
+            t_out,
+            seed,
+            self.combine_threads,
+        )
     }
 }
 
@@ -79,6 +97,26 @@ mod tests {
 
     fn msg(machine: usize, v: f64, last: bool) -> DrawMsg {
         DrawMsg { machine, theta: vec![v], elapsed: v.abs(), last }
+    }
+
+    #[test]
+    fn threaded_draws_are_thread_count_invariant() {
+        use crate::combine::CombineMethod;
+        let mut rng = crate::rng::Pcg64::seed_from(3);
+        let mut serial = Leader::new(2, 1);
+        let mut threaded = Leader::new(2, 1);
+        threaded.set_combine_threads(4);
+        for i in 0..300 {
+            for m in 0..2 {
+                let d = msg(m, rng.normal() + m as f64, i == 299);
+                serial.ingest(&d).unwrap();
+                threaded.ingest(&d).unwrap();
+            }
+        }
+        let a = serial.draws(CombineMethod::Nonparametric, 500, 5).unwrap();
+        let b =
+            threaded.draws(CombineMethod::Nonparametric, 500, 5).unwrap();
+        assert_eq!(a.as_slice(), b.as_slice());
     }
 
     #[test]

@@ -72,6 +72,7 @@ pub fn run_native(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutput
         worker_rngs.into_iter().map(|r| Mutex::new(Some(r))).collect();
 
     let mut leader = Leader::new(cfg.machines, dim);
+    leader.set_combine_threads(cfg.combine_threads);
     std::thread::scope(|scope| -> Result<()> {
         for _ in 0..n_threads {
             let tx = tx.clone();
@@ -243,6 +244,7 @@ pub fn run_process(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutpu
     // below always comes with a root_err to surface.
     let root_err: Mutex<Option<Error>> = Mutex::new(None);
     let mut leader = Leader::new(cfg.machines, dim);
+    leader.set_combine_threads(cfg.combine_threads);
     let drained = std::thread::scope(|scope| -> Result<()> {
         for m in 0..children.len() {
             let tx = tx.clone();

@@ -80,6 +80,27 @@ impl Mat {
         Ok(Mat { data, rows: self.rows, cols: self.cols })
     }
 
+    /// `self += other`, in place — the allocation-free twin of
+    /// [`Mat::add`] for accumulation loops (the per-machine precision
+    /// sums), replacing an O(M)-reallocation fold with one buffer.
+    /// Element arithmetic is identical to [`Mat::add`].
+    pub fn add_assign(&mut self, other: &Mat) -> Result<()> {
+        self.check_same_shape(other)?;
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        Ok(())
+    }
+
+    /// `self[(j, j)] += v` for every j — the annealed-schedule diagonal
+    /// bump (`+ h²/M I`, `+ M/h² I`) without cloning the matrix.
+    pub fn add_diagonal(&mut self, v: f64) {
+        assert_eq!(self.rows, self.cols, "add_diagonal of non-square");
+        for i in 0..self.rows {
+            self[(i, i)] += v;
+        }
+    }
+
     /// `self * s` (scalar).
     pub fn scale(&self, s: f64) -> Mat {
         Mat {
@@ -292,6 +313,16 @@ pub fn chol_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
 pub fn chol_inverse(l: &Mat) -> Mat {
     let n = l.rows();
     let mut inv = Mat::zeros(n, n);
+    chol_inverse_into(l, &mut inv);
+    inv
+}
+
+/// [`chol_inverse`] into a caller-owned `n × n` matrix — every element
+/// is overwritten, so the buffer need not be zeroed. Bit-identical
+/// columns (same solves, same symmetrization).
+pub fn chol_inverse_into(l: &Mat, inv: &mut Mat) {
+    let n = l.rows();
+    debug_assert!(inv.rows() == n && inv.cols() == n);
     let mut e = vec![0.0; n];
     for j in 0..n {
         e[j] = 1.0;
@@ -303,7 +334,6 @@ pub fn chol_inverse(l: &Mat) -> Mat {
     }
     // Clean up symmetry.
     inv.symmetrize();
-    inv
 }
 
 /// `log det A` from the Cholesky factor of `A`.
@@ -321,8 +351,32 @@ pub fn spd_inverse(a: &Mat) -> Result<Mat> {
 /// combiners need Σ̂⁻¹ regardless. Jitter grows ×10 from `1e-10·tr/d`
 /// until the factorization succeeds (at most 12 attempts).
 pub fn spd_inverse_jittered(a: &Mat) -> Result<Mat> {
-    match spd_inverse(a) {
-        Ok(m) => Ok(m),
+    Ok(chol_inverse(&jittered_cholesky(a)?))
+}
+
+/// In-place twin of [`spd_inverse_jittered`]: replaces `a` by its
+/// (jittered) SPD inverse, writing the result back into `a`'s buffer
+/// instead of allocating the output. Both versions factor through
+/// [`jittered_cholesky`], so they are bit-identical; callers that
+/// still need the input clone first.
+pub fn spd_inverse_jittered_in_place(a: &mut Mat) -> Result<()> {
+    let l = jittered_cholesky(a)?;
+    chol_inverse_into(&l, a);
+    Ok(())
+}
+
+/// Cholesky with the shared diagonal-jitter escalation policy: try `A`
+/// as-is, then retry with `A + jitter·I` for `jitter` growing ×10 from
+/// `1e-10·tr/n`, at most 12 attempts (each from a fresh clone of `A`).
+///
+/// This is the *single copy* of the conditioning fallback behind
+/// [`spd_inverse_jittered`], [`spd_inverse_jittered_in_place`] and
+/// [`crate::math::mvn::covariance_cholesky`] — the combine layer's
+/// byte-identity contracts depend on all of them escalating
+/// identically, so keep the policy here.
+pub fn jittered_cholesky(a: &Mat) -> Result<Mat> {
+    match cholesky(a) {
+        Ok(l) => Ok(l),
         Err(_) => {
             let n = a.rows();
             let tr: f64 = (0..n).map(|i| a[(i, i)]).sum();
@@ -332,12 +386,12 @@ pub fn spd_inverse_jittered(a: &Mat) -> Result<Mat> {
                 for i in 0..n {
                     aj[(i, i)] += jitter;
                 }
-                if let Ok(m) = spd_inverse(&aj) {
-                    return Ok(m);
+                if let Ok(l) = cholesky(&aj) {
+                    return Ok(l);
                 }
                 jitter *= 10.0;
             }
-            Err(Error::NotPosDef("jittered inverse failed".into()))
+            Err(Error::NotPosDef("jittered cholesky failed".into()))
         }
     }
 }
@@ -418,6 +472,44 @@ mod tests {
         let a = Mat::from_vec(vec![1.0, 1.0, 1.0, 1.0], 2, 2).unwrap();
         let inv = spd_inverse_jittered(&a).unwrap();
         assert!(inv.as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn in_place_jittered_inverse_is_bit_identical() {
+        // SPD fast path and the singular jitter path both match the
+        // out-of-place version exactly.
+        for a in [
+            spd3(),
+            Mat::from_vec(vec![1.0, 1.0, 1.0, 1.0], 2, 2).unwrap(),
+        ] {
+            let want = spd_inverse_jittered(&a).unwrap();
+            let mut got = a.clone();
+            spd_inverse_jittered_in_place(&mut got).unwrap();
+            assert_eq!(want.as_slice(), got.as_slice());
+        }
+    }
+
+    #[test]
+    fn add_assign_matches_add() {
+        let a = spd3();
+        let b = Mat::scaled_identity(3, 0.7);
+        let want = a.add(&b).unwrap();
+        let mut got = a.clone();
+        got.add_assign(&b).unwrap();
+        assert_eq!(want.as_slice(), got.as_slice());
+        // Shape mismatch is an error, not a panic.
+        assert!(got.add_assign(&Mat::identity(2)).is_err());
+    }
+
+    #[test]
+    fn add_diagonal_matches_manual_bump() {
+        let mut a = spd3();
+        let mut want = a.clone();
+        for i in 0..3 {
+            want[(i, i)] += 2.5;
+        }
+        a.add_diagonal(2.5);
+        assert_eq!(a.as_slice(), want.as_slice());
     }
 
     #[test]

@@ -24,35 +24,26 @@ pub struct Mvn {
 impl Mvn {
     /// Build from mean and covariance (factored here; jittered if Σ is
     /// numerically semidefinite).
-    pub fn new(mean: Vec<f64>, mut cov: Mat) -> Result<Self> {
-        cov.symmetrize();
-        let chol = match linalg::cholesky(&cov) {
-            Ok(l) => l,
-            Err(_) => {
-                // Mirror spd_inverse_jittered: escalate diagonal jitter.
-                let n = cov.rows();
-                let tr: f64 = (0..n).map(|i| cov[(i, i)]).sum();
-                let mut jitter = 1e-10 * (tr / n as f64).max(1e-300);
-                let mut found = None;
-                for _ in 0..12 {
-                    let mut c = cov.clone();
-                    for i in 0..n {
-                        c[(i, i)] += jitter;
-                    }
-                    if let Ok(l) = linalg::cholesky(&c) {
-                        found = Some(l);
-                        break;
-                    }
-                    jitter *= 10.0;
-                }
-                found.ok_or_else(|| {
-                    crate::error::Error::NotPosDef("mvn covariance".into())
-                })?
-            }
-        };
+    pub fn new(mean: Vec<f64>, cov: Mat) -> Result<Self> {
+        Ok(Self::from_cholesky(mean, covariance_cholesky(cov)?))
+    }
+
+    /// Build from a pre-computed lower Cholesky factor of Σ — the
+    /// factorization-cache path: the semiparametric combiner factors
+    /// each annealed component covariance once and rebuilds the per-draw
+    /// `Mvn` in O(d) from the cached factor. `Mvn::new(mean, cov)` is
+    /// exactly `from_cholesky(mean, covariance_cholesky(cov))`.
+    pub fn from_cholesky(mean: Vec<f64>, chol: Mat) -> Self {
+        debug_assert_eq!(chol.rows(), mean.len());
+        debug_assert_eq!(chol.cols(), mean.len());
         let d = mean.len() as f64;
         let log_norm = -0.5 * (d * LOG_2PI + linalg::chol_logdet(&chol));
-        Ok(Mvn { mean, chol, log_norm })
+        Mvn { mean, chol, log_norm }
+    }
+
+    /// The lower Cholesky factor of Σ.
+    pub fn chol(&self) -> &Mat {
+        &self.chol
     }
 
     pub fn dim(&self) -> usize {
@@ -84,27 +75,80 @@ impl Mvn {
     /// Draw one sample: μ + L z, z ~ N(0, I).
     pub fn sample(&self, rng: &mut Pcg64) -> Vec<f64> {
         let d = self.dim();
-        let z: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
-        let mut out = self.mean.clone();
-        for i in 0..d {
-            for k in 0..=i {
-                out[i] += self.chol[(i, k)] * z[k];
-            }
-        }
+        let mut z = vec![0.0; d];
+        let mut out = vec![0.0; d];
+        self.sample_into(rng, &mut z, &mut out);
         out
     }
 
-    /// Draw `n` samples as a [`crate::types::SampleMatrix`].
+    /// [`Mvn::sample`] with caller-owned scratch (`z`) and output
+    /// buffers — allocation-free, for per-draw hot loops. Bit-identical
+    /// to [`Mvn::sample`]: same RNG consumption (`dim` normals) and
+    /// same accumulation order.
+    pub fn sample_into(
+        &self,
+        rng: &mut Pcg64,
+        z: &mut [f64],
+        out: &mut [f64],
+    ) {
+        chol_sample_into(&self.mean, &self.chol, rng, z, out);
+    }
+
+    /// Draw `n` samples as a [`crate::types::SampleMatrix`], reusing one
+    /// scratch pair across all draws (no per-draw allocation).
     pub fn sample_n(
         &self,
         n: usize,
         rng: &mut Pcg64,
     ) -> crate::types::SampleMatrix {
-        let mut out = crate::types::SampleMatrix::with_capacity(self.dim(), n);
+        let d = self.dim();
+        let mut out = crate::types::SampleMatrix::with_capacity(d, n);
+        let mut z = vec![0.0; d];
+        let mut draw = vec![0.0; d];
         for _ in 0..n {
-            out.push(&self.sample(rng));
+            self.sample_into(rng, &mut z, &mut draw);
+            out.push(&draw);
         }
         out
+    }
+}
+
+/// Lower Cholesky factor of a covariance matrix with the [`Mvn::new`]
+/// conditioning policy: symmetrize first, then the shared
+/// diagonal-jitter escalation ([`linalg::jittered_cholesky`]) if Σ is
+/// numerically semidefinite. Factored out so the semiparametric
+/// annealed-schedule cache can pre-factor component covariances with
+/// exactly the arithmetic `Mvn::new` would have applied per draw.
+pub fn covariance_cholesky(mut cov: Mat) -> Result<Mat> {
+    cov.symmetrize();
+    linalg::jittered_cholesky(&cov)
+}
+
+/// Draw `mean + L z`, `z ~ N(0, I)`, into a caller-owned buffer with
+/// caller-owned normal scratch — the allocation-free primitive behind
+/// [`Mvn::sample_into`], used directly by the semiparametric IMG loop
+/// where the mean changes per draw but the Cholesky factor is cached
+/// per annealed iteration. Consumes exactly `mean.len()` normals in
+/// the same order as [`Mvn::sample`] and matches it bit-for-bit.
+pub fn chol_sample_into(
+    mean: &[f64],
+    chol: &Mat,
+    rng: &mut Pcg64,
+    z: &mut [f64],
+    out: &mut [f64],
+) {
+    let d = mean.len();
+    debug_assert_eq!(z.len(), d);
+    debug_assert_eq!(out.len(), d);
+    debug_assert_eq!(chol.rows(), d);
+    for zi in z.iter_mut() {
+        *zi = rng.normal();
+    }
+    out.copy_from_slice(mean);
+    for i in 0..d {
+        for k in 0..=i {
+            out[i] += chol[(i, k)] * z[k];
+        }
     }
 }
 
@@ -199,5 +243,50 @@ mod tests {
         let cov = Mat::from_vec(vec![1.0, 1.0, 1.0, 1.0], 2, 2).unwrap();
         let m = Mvn::new(vec![0.0, 0.0], cov).unwrap();
         assert!(m.logpdf(&[0.5, 0.5]).is_finite());
+    }
+
+    #[test]
+    fn from_cholesky_matches_new() {
+        let cov = Mat::from_vec(vec![2.0, 0.7, 0.7, 1.5], 2, 2).unwrap();
+        let mean = vec![0.4, -0.2];
+        let a = Mvn::new(mean.clone(), cov.clone()).unwrap();
+        let chol = covariance_cholesky(cov).unwrap();
+        let b = Mvn::from_cholesky(mean, chol);
+        assert_eq!(a.chol().as_slice(), b.chol().as_slice());
+        assert_eq!(a.logpdf(&[1.0, 2.0]), b.logpdf(&[1.0, 2.0]));
+        let mut r1 = Pcg64::seed_from(3);
+        let mut r2 = Pcg64::seed_from(3);
+        assert_eq!(a.sample(&mut r1), b.sample(&mut r2));
+    }
+
+    #[test]
+    fn sample_into_is_bit_identical_and_stream_equal() {
+        let cov = Mat::from_vec(vec![2.0, 0.8, 0.8, 1.0], 2, 2).unwrap();
+        let m = Mvn::new(vec![3.0, -1.0], cov).unwrap();
+        let mut r1 = Pcg64::seed_from(11);
+        let mut r2 = Pcg64::seed_from(11);
+        let mut z = vec![0.0; 2];
+        let mut out = vec![0.0; 2];
+        for _ in 0..50 {
+            let a = m.sample(&mut r1);
+            m.sample_into(&mut r2, &mut z, &mut out);
+            assert_eq!(a, out);
+        }
+        // Identical RNG consumption: the streams stay in lockstep.
+        assert_eq!(r1.uniform(), r2.uniform());
+    }
+
+    #[test]
+    fn chol_sample_into_decouples_mean_from_factor() {
+        let cov = Mat::from_vec(vec![1.5, 0.4, 0.4, 1.1], 2, 2).unwrap();
+        let chol = covariance_cholesky(cov.clone()).unwrap();
+        let mean = vec![5.0, -3.0];
+        let via_mvn = Mvn::new(mean.clone(), cov).unwrap();
+        let mut r1 = Pcg64::seed_from(7);
+        let mut r2 = Pcg64::seed_from(7);
+        let mut z = vec![0.0; 2];
+        let mut out = vec![0.0; 2];
+        chol_sample_into(&mean, &chol, &mut r1, &mut z, &mut out);
+        assert_eq!(via_mvn.sample(&mut r2), out);
     }
 }

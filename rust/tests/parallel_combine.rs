@@ -4,13 +4,15 @@
 //! reference implementations exactly in agreement with the fast paths.
 
 use repro::combine::nonparametric::{
-    nonparametric_naive, nonparametric_threaded, Img,
+    nonparametric_naive, nonparametric_threaded, nonparametric_with_context,
+    Img,
 };
 use repro::combine::pairwise::pairwise_threaded;
 use repro::combine::semiparametric::{
-    semiparametric_nw_threaded, semiparametric_threaded,
+    semiparametric_nw_threaded, semiparametric_nw_threaded_uncached,
+    semiparametric_threaded, semiparametric_threaded_uncached,
 };
-use repro::combine::{self, CombineMethod};
+use repro::combine::{self, CombineMethod, OnlineCombiner};
 use repro::math::linalg::Mat;
 use repro::math::mvn::Mvn;
 use repro::rng::Pcg64;
@@ -113,6 +115,105 @@ fn fast_path_still_matches_naive_after_refactor() {
             assert!(
                 (a - b).abs() < 1e-8,
                 "draw {i} dim {j}: fast {a} vs naive {b}"
+            );
+        }
+    }
+}
+
+/// Regression pin for the annealed-schedule factorization cache: the
+/// cached semiparametric paths (both weight variants) are byte-identical
+/// to the uncached reference — which recomputes every per-iteration
+/// factorization exactly as the pre-cache implementation did — for a
+/// fixed seed at 1, 2 and 4 threads.
+#[test]
+fn factorization_cache_is_byte_identical_to_uncached() {
+    let sets = gaussian_sets(57, 3, 4, 350);
+    let refs: Vec<&SampleMatrix> = sets.iter().collect();
+    let t_out = 1200; // several restart chunks, annealed schedules shared
+    let ref_full = semiparametric_threaded_uncached(&refs, t_out, 19, 1)
+        .unwrap();
+    let ref_nw = semiparametric_nw_threaded_uncached(&refs, t_out, 19, 1)
+        .unwrap();
+    for threads in [1usize, 2, 4] {
+        let full = semiparametric_threaded(&refs, t_out, 19, threads)
+            .unwrap();
+        let nw = semiparametric_nw_threaded(&refs, t_out, 19, threads)
+            .unwrap();
+        assert_eq!(
+            ref_full.as_slice(),
+            full.as_slice(),
+            "cached semiparametric diverged at threads={threads}"
+        );
+        assert_eq!(
+            ref_nw.as_slice(),
+            nw.as_slice(),
+            "cached semiparametricNW diverged at threads={threads}"
+        );
+    }
+}
+
+/// The pairwise tree's per-level context path: running the
+/// nonparametric combiner over a pre-built context equals the plain
+/// entry point, and the context build itself is thread-count invariant.
+#[test]
+fn per_level_context_matches_plain_entry_point() {
+    let sets = gaussian_sets(61, 2, 3, 400);
+    let refs: Vec<&SampleMatrix> = sets.iter().collect();
+    let want = nonparametric_threaded(&refs, 900, 29, 1).unwrap();
+    for ctx_threads in [1usize, 3] {
+        let ctx = combine::CombineContext::prepare(&refs, ctx_threads);
+        for run_threads in [1usize, 4] {
+            let got =
+                nonparametric_with_context(&ctx, 900, 29, run_threads)
+                    .unwrap();
+            assert_eq!(
+                want.as_slice(),
+                got.as_slice(),
+                "ctx_threads={ctx_threads} run_threads={run_threads}"
+            );
+        }
+    }
+}
+
+/// The context entry point keeps the plain entry point's
+/// degenerate-input policy: an empty machine is an error, not a silent
+/// empty result.
+#[test]
+fn with_context_rejects_empty_machine() {
+    let a = SampleMatrix::from_rows(vec![1.0, 2.0], 2).unwrap();
+    let b = SampleMatrix::new(2);
+    let refs = vec![&a, &b];
+    let ctx = combine::CombineContext::prepare(&refs, 1);
+    assert!(nonparametric_with_context(&ctx, 10, 1, 1).is_err());
+}
+
+/// The streaming combiner's threaded path obeys the same determinism
+/// contract as the batch combiners, for every IMG-based method.
+#[test]
+fn online_combiner_threaded_is_thread_count_invariant() {
+    let sets = gaussian_sets(63, 3, 2, 300);
+    let mut oc = OnlineCombiner::new(3, 2);
+    for i in 0..300 {
+        for (m, s) in sets.iter().enumerate() {
+            oc.push(m, s.row(i)).unwrap();
+        }
+    }
+    for &method in &[
+        CombineMethod::Nonparametric,
+        CombineMethod::Semiparametric,
+        CombineMethod::SemiparametricNw,
+        CombineMethod::Pairwise,
+    ] {
+        let base = oc.combined_draws(method, 700, 31).unwrap();
+        for threads in [4usize, 0] {
+            let out = oc
+                .combined_draws_threaded(method, 700, 31, threads)
+                .unwrap();
+            assert_eq!(
+                base.as_slice(),
+                out.as_slice(),
+                "{} diverged at threads={threads}",
+                method.name()
             );
         }
     }
