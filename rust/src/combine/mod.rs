@@ -32,7 +32,9 @@ pub use nonparametric::nonparametric;
 pub use online::OnlineCombiner;
 pub use pairwise::pairwise;
 pub use parametric::parametric;
-pub use semiparametric::{semiparametric, semiparametric_nw};
+pub use semiparametric::{
+    semiparametric, semiparametric_nw, DEFAULT_ANNEAL_CACHE_BUDGET,
+};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -147,6 +149,49 @@ pub fn combine_sets_threaded(
     seed: u64,
     threads: usize,
 ) -> Result<SampleMatrix> {
+    combine_sets_tuned(
+        method,
+        sets,
+        t_out,
+        seed,
+        threads,
+        DEFAULT_ANNEAL_CACHE_BUDGET,
+    )
+}
+
+/// [`combine_threaded`] with an explicit annealed-factorization-cache
+/// budget in bytes (the `combine_cache_budget_mb` config knob). The
+/// budget only applies to the semiparametric methods; every method is
+/// byte-identical for a fixed seed at any budget and thread count.
+pub fn combine_tuned(
+    method: CombineMethod,
+    subs: &[SubposteriorSamples],
+    t_out: usize,
+    seed: u64,
+    threads: usize,
+    cache_budget_bytes: usize,
+) -> Result<SampleMatrix> {
+    let sets: Vec<&SampleMatrix> = subs.iter().map(|s| &s.samples).collect();
+    combine_sets_tuned(
+        method,
+        &sets,
+        t_out,
+        seed,
+        threads,
+        cache_budget_bytes,
+    )
+}
+
+/// [`combine_sets_threaded`] with an explicit cache budget — see
+/// [`combine_tuned`].
+pub fn combine_sets_tuned(
+    method: CombineMethod,
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+    threads: usize,
+    cache_budget_bytes: usize,
+) -> Result<SampleMatrix> {
     validate_sets(sets)?;
     let threads = resolve_threads(threads);
     match method {
@@ -155,11 +200,21 @@ pub fn combine_sets_threaded(
             nonparametric::nonparametric_threaded(sets, t_out, seed, threads)
         }
         CombineMethod::Semiparametric => {
-            semiparametric::semiparametric_threaded(sets, t_out, seed, threads)
+            semiparametric::semiparametric_threaded_budgeted(
+                sets,
+                t_out,
+                seed,
+                threads,
+                cache_budget_bytes,
+            )
         }
         CombineMethod::SemiparametricNw => {
-            semiparametric::semiparametric_nw_threaded(
-                sets, t_out, seed, threads,
+            semiparametric::semiparametric_nw_threaded_budgeted(
+                sets,
+                t_out,
+                seed,
+                threads,
+                cache_budget_bytes,
             )
         }
         CombineMethod::Pairwise => {

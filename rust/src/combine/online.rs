@@ -123,8 +123,35 @@ impl OnlineCombiner {
         seed: u64,
         threads: usize,
     ) -> Result<SampleMatrix> {
+        self.combined_draws_tuned(
+            method,
+            t_out,
+            seed,
+            threads,
+            combine::DEFAULT_ANNEAL_CACHE_BUDGET,
+        )
+    }
+
+    /// [`OnlineCombiner::combined_draws_threaded`] with an explicit
+    /// annealed-factorization-cache budget in bytes — same guarantee:
+    /// byte-identical draws at any thread count and budget.
+    pub fn combined_draws_tuned(
+        &self,
+        method: CombineMethod,
+        t_out: usize,
+        seed: u64,
+        threads: usize,
+        cache_budget_bytes: usize,
+    ) -> Result<SampleMatrix> {
         let refs: Vec<&SampleMatrix> = self.buffers.iter().collect();
-        combine::combine_sets_threaded(method, &refs, t_out, seed, threads)
+        combine::combine_sets_tuned(
+            method,
+            &refs,
+            t_out,
+            seed,
+            threads,
+            cache_budget_bytes,
+        )
     }
 }
 

@@ -61,8 +61,11 @@ use crate::types::SampleMatrix;
 /// iteration holds two (three with full weights) d×d matrices, so the
 /// budget caps the cache at `budget / (≈3·8·d²)` iterations; chains
 /// longer than that recompute the tail iterations in place, exactly as
-/// the uncached path does.
-const ANNEAL_CACHE_BUDGET: usize = 256 << 20;
+/// the uncached path does. Overridable per run via the
+/// `combine_cache_budget_mb` config key / CLI flag (ROADMAP rung (b):
+/// d ≳ 100 workloads want a bigger budget, memory-tight leaders a
+/// smaller one; output is byte-identical at any value).
+pub const DEFAULT_ANNEAL_CACHE_BUDGET: usize = 256 << 20;
 
 /// Draw `t_out` samples from the semiparametric density-product estimate
 /// (full weights `W_t`) on a single thread.
@@ -71,7 +74,14 @@ pub fn semiparametric(
     t_out: usize,
     seed: u64,
 ) -> Result<SampleMatrix> {
-    run_semiparametric(sets, t_out, seed, true, 1, Some(ANNEAL_CACHE_BUDGET))
+    run_semiparametric(
+        sets,
+        t_out,
+        seed,
+        true,
+        1,
+        Some(DEFAULT_ANNEAL_CACHE_BUDGET),
+    )
 }
 
 /// [`semiparametric`] with setup and restart chains fanned across
@@ -82,13 +92,33 @@ pub fn semiparametric_threaded(
     seed: u64,
     threads: usize,
 ) -> Result<SampleMatrix> {
+    semiparametric_threaded_budgeted(
+        sets,
+        t_out,
+        seed,
+        threads,
+        DEFAULT_ANNEAL_CACHE_BUDGET,
+    )
+}
+
+/// [`semiparametric_threaded`] with an explicit [`AnnealCache`] memory
+/// budget in bytes. Byte-identical to the default-budget (and the
+/// uncached) path at any value — a tiny budget only shrinks the cache
+/// and recomputes the tail in place.
+pub fn semiparametric_threaded_budgeted(
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+    threads: usize,
+    cache_budget_bytes: usize,
+) -> Result<SampleMatrix> {
     run_semiparametric(
         sets,
         t_out,
         seed,
         true,
         threads,
-        Some(ANNEAL_CACHE_BUDGET),
+        Some(cache_budget_bytes),
     )
 }
 
@@ -119,7 +149,7 @@ pub fn semiparametric_nw(
         seed,
         false,
         1,
-        Some(ANNEAL_CACHE_BUDGET),
+        Some(DEFAULT_ANNEAL_CACHE_BUDGET),
     )
 }
 
@@ -130,13 +160,31 @@ pub fn semiparametric_nw_threaded(
     seed: u64,
     threads: usize,
 ) -> Result<SampleMatrix> {
+    semiparametric_nw_threaded_budgeted(
+        sets,
+        t_out,
+        seed,
+        threads,
+        DEFAULT_ANNEAL_CACHE_BUDGET,
+    )
+}
+
+/// [`semiparametric_nw_threaded`] with an explicit cache budget — see
+/// [`semiparametric_threaded_budgeted`].
+pub fn semiparametric_nw_threaded_budgeted(
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+    threads: usize,
+    cache_budget_bytes: usize,
+) -> Result<SampleMatrix> {
     run_semiparametric(
         sets,
         t_out,
         seed,
         false,
         threads,
-        Some(ANNEAL_CACHE_BUDGET),
+        Some(cache_budget_bytes),
     )
 }
 

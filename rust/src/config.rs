@@ -6,6 +6,7 @@
 //! documented key list rather than TOML.
 
 use crate::combine::CombineMethod;
+use crate::data::io::ShardFormat;
 use crate::error::{Error, Result};
 use crate::sampler::SamplerKind;
 use std::collections::BTreeMap;
@@ -54,6 +55,27 @@ pub struct PipelineConfig {
     /// executable" (`std::env::current_exe`), which is right for the
     /// CLI; library embedders and tests point it at the `repro` binary.
     pub worker_bin: String,
+    /// Socket-transport worker endpoints: comma-separated `host:port`
+    /// list of `repro serve` daemons. Non-empty switches the pipeline
+    /// to socket mode (overrides `process_mode`); the W endpoints are
+    /// oversubscribed when W < machines. Byte-identical to thread mode
+    /// for a fixed seed at any W.
+    pub workers: String,
+    /// Concurrent worker processes in process mode (`0` = one per
+    /// machine, PR 2's behaviour). Fewer slots than machines
+    /// oversubscribes: the M shard-manifests queue and are assigned to
+    /// processes as they free up — output is unchanged, only the
+    /// peak process count drops.
+    pub worker_slots: usize,
+    /// Spill format for process/socket-mode shards (`json` | `binary`).
+    /// Binary skips float↔decimal conversion for very large N; workers
+    /// autodetect, so the two ends never need to agree in advance.
+    pub shard_format: ShardFormat,
+    /// Memory budget (MiB) for the semiparametric combiner's annealed
+    /// factorization cache. Output is byte-identical at any value —
+    /// iterations past the cap fall back to in-place recomputation —
+    /// so this only trades memory for combine-stage speed. Default 256.
+    pub combine_cache_budget_mb: usize,
 }
 
 impl PipelineConfig {
@@ -129,6 +151,17 @@ impl PipelineConfig {
         if let Some(v) = get("worker_bin") {
             b.worker_bin = v;
         }
+        if let Some(v) = get("workers") {
+            b.workers = v;
+        }
+        b.worker_slots = parse_usize("worker_slots", b.worker_slots)?;
+        if let Some(v) = get("shard_format") {
+            b.shard_format = ShardFormat::parse(&v)?;
+        }
+        b.combine_cache_budget_mb = parse_usize(
+            "combine_cache_budget_mb",
+            b.combine_cache_budget_mb,
+        )?;
         Ok(b.build())
     }
 
@@ -207,6 +240,10 @@ pub struct PipelineConfigBuilder {
     artifact_dir: String,
     process_mode: bool,
     worker_bin: String,
+    workers: String,
+    worker_slots: usize,
+    shard_format: ShardFormat,
+    combine_cache_budget_mb: usize,
 }
 
 impl PipelineConfigBuilder {
@@ -227,6 +264,10 @@ impl PipelineConfigBuilder {
             artifact_dir: "artifacts".to_string(),
             process_mode: false,
             worker_bin: String::new(),
+            workers: String::new(),
+            worker_slots: 0,
+            shard_format: ShardFormat::Json,
+            combine_cache_budget_mb: 256,
         }
     }
 
@@ -298,6 +339,33 @@ impl PipelineConfigBuilder {
         self
     }
 
+    /// Socket worker endpoints, comma-separated `host:port` list
+    /// (empty = no socket transport).
+    pub fn workers(mut self, spec: &str) -> Self {
+        self.workers = spec.to_string();
+        self
+    }
+
+    /// Concurrent worker processes in process mode (0 = one per
+    /// machine). W < machines oversubscribes without changing output.
+    pub fn worker_slots(mut self, w: usize) -> Self {
+        self.worker_slots = w;
+        self
+    }
+
+    /// Spill format for process/socket-mode shards.
+    pub fn shard_format(mut self, f: ShardFormat) -> Self {
+        self.shard_format = f;
+        self
+    }
+
+    /// Annealed factorization cache budget in MiB (identical output at
+    /// any value).
+    pub fn combine_cache_budget_mb(mut self, mb: usize) -> Self {
+        self.combine_cache_budget_mb = mb;
+        self
+    }
+
     pub fn artifact_dir(mut self, d: &str) -> Self {
         self.artifact_dir = d.to_string();
         self
@@ -326,6 +394,10 @@ impl PipelineConfigBuilder {
             artifact_dir: self.artifact_dir,
             process_mode: self.process_mode,
             worker_bin: self.worker_bin,
+            workers: self.workers,
+            worker_slots: self.worker_slots,
+            shard_format: self.shard_format,
+            combine_cache_budget_mb: self.combine_cache_budget_mb,
         }
     }
 }
@@ -380,6 +452,36 @@ mod tests {
         .unwrap();
         assert!(c.process_mode);
         assert_eq!(c.worker_bin, "/usr/bin/repro");
+        // Distributed-runtime defaults: no socket workers, one process
+        // per machine, JSON spills, 256 MiB anneal cache.
+        assert!(c.workers.is_empty());
+        assert_eq!(c.worker_slots, 0);
+        assert_eq!(c.shard_format, ShardFormat::Json);
+        assert_eq!(c.combine_cache_budget_mb, 256);
+    }
+
+    #[test]
+    fn cfg_file_distributed_keys() {
+        let c = PipelineConfig::from_str_cfg(
+            "model = gaussian\n\
+             workers = 10.0.0.1:7001, 10.0.0.2:7001\n\
+             worker_slots = 3\n\
+             shard_format = binary\n\
+             combine_cache_budget_mb = 64\n",
+        )
+        .unwrap();
+        assert_eq!(c.workers, "10.0.0.1:7001, 10.0.0.2:7001");
+        assert_eq!(c.worker_slots, 3);
+        assert_eq!(c.shard_format, ShardFormat::Binary);
+        assert_eq!(c.combine_cache_budget_mb, 64);
+        assert!(PipelineConfig::from_str_cfg(
+            "model = gaussian\nshard_format = yaml\n"
+        )
+        .is_err());
+        assert!(PipelineConfig::from_str_cfg(
+            "model = gaussian\ncombine_cache_budget_mb = lots\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -3,7 +3,9 @@
 
 use std::sync::mpsc::Receiver;
 
-use crate::combine::{CombineMethod, OnlineCombiner};
+use crate::combine::{
+    CombineMethod, OnlineCombiner, DEFAULT_ANNEAL_CACHE_BUDGET,
+};
 use crate::coordinator::worker::DrawMsg;
 use crate::error::Result;
 use crate::types::SampleMatrix;
@@ -16,6 +18,9 @@ pub struct Leader {
     /// cores). Output is byte-identical at any count, so this only
     /// changes wall-clock.
     combine_threads: usize,
+    /// Annealed-factorization-cache budget in bytes for
+    /// [`Leader::draws`]; byte-identical output at any value.
+    combine_cache_budget: usize,
     /// Max worker-local elapsed time seen so far (cluster clock).
     pub max_elapsed: f64,
     /// Scalars received (d per draw) — the paper's O(dTM) communication.
@@ -28,6 +33,7 @@ impl Leader {
             combiner: OnlineCombiner::new(machines, dim),
             finished: vec![false; machines],
             combine_threads: 1,
+            combine_cache_budget: DEFAULT_ANNEAL_CACHE_BUDGET,
             max_elapsed: 0.0,
             scalars_received: 0,
         }
@@ -39,6 +45,14 @@ impl Leader {
     /// the same parallel runtime as the final combine.
     pub fn set_combine_threads(&mut self, threads: usize) {
         self.combine_threads = threads;
+    }
+
+    /// Set the annealed-factorization-cache budget (bytes) used by
+    /// [`Leader::draws`] — the pipeline wires `combine_cache_budget_mb`
+    /// through here. A tiny budget falls back to in-place
+    /// recomputation with bit-identical output.
+    pub fn set_combine_cache_budget(&mut self, bytes: usize) {
+        self.combine_cache_budget = bytes;
     }
 
     /// Ingest one message.
@@ -82,11 +96,12 @@ impl Leader {
         t_out: usize,
         seed: u64,
     ) -> Result<SampleMatrix> {
-        self.combiner.combined_draws_threaded(
+        self.combiner.combined_draws_tuned(
             method,
             t_out,
             seed,
             self.combine_threads,
+            self.combine_cache_budget,
         )
     }
 }

@@ -2,26 +2,32 @@
 //!
 //! Topology: a [`partition::Partitioner`] splits the N observations onto
 //! M logical machines; [`worker`] runs one independent MCMC chain per
-//! machine — on an OS thread ([`pipeline::run_native`]) or in its own
-//! OS process ([`pipeline::run_process`], the `worker` CLI subcommand)
-//! with zero inter-worker communication — the "embarrassingly parallel"
-//! property; draws stream unidirectionally (mpsc channel in-thread,
-//! length-prefixed ndjson pipes via [`transport`] cross-process) to the
-//! [`leader`], which folds them into an online combiner and produces
-//! full-posterior draws on demand; [`pipeline`] wires the stages
-//! end-to-end from a [`crate::config::PipelineConfig`]; [`timing`]
-//! converts measured per-worker wall-clocks into the paper's
-//! cluster-time accounting.
+//! machine — on an OS thread ([`pipeline::run_native`]), in its own OS
+//! process, or on a remote `repro serve` daemon ([`serve`]) — with zero
+//! inter-worker communication, the "embarrassingly parallel" property;
+//! draws stream unidirectionally (mpsc channel in-thread,
+//! length-prefixed ndjson frames over a pluggable [`transport`] —
+//! stdout pipes or TCP sockets — out-of-process) to the [`leader`],
+//! which folds them into an online combiner and produces full-posterior
+//! draws on demand; [`pipeline`] wires the stages end-to-end from a
+//! [`crate::config::PipelineConfig`], oversubscribing W < M worker
+//! endpoints without changing a byte of output; [`timing`] converts
+//! measured per-worker wall-clocks into the paper's cluster-time
+//! accounting.
 
 pub mod leader;
 pub mod metrics;
 pub mod partition;
 pub mod pipeline;
+pub mod serve;
 pub mod timing;
 pub mod transport;
 pub mod worker;
 
 pub use leader::Leader;
 pub use partition::Partitioner;
-pub use pipeline::{run_native, run_process, PipelineOutput};
+pub use pipeline::{
+    run_native, run_process, run_with_transport, PipelineOutput, RunDir,
+};
 pub use timing::ClusterTiming;
+pub use transport::{PipeTransport, SocketTransport, Transport};

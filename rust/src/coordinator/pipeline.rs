@@ -1,17 +1,20 @@
 //! End-to-end pipeline: partition → parallel subposterior sampling →
 //! streaming → combination.
 //!
-//! Two worker runtimes share the leader/combiner stack: [`run_native`]
-//! (OS threads in this process) and [`run_process`] (one OS process per
-//! machine, draws streamed back over length-prefixed ndjson pipes —
-//! see [`crate::coordinator::transport`]). Both derive worker RNGs as
-//! `Pcg64::seed_from(seed).split(m)`, so their outputs are
-//! byte-identical for the same config.
+//! Three worker runtimes share the leader/combiner stack:
+//! [`run_native`] (OS threads in this process) and
+//! [`run_with_transport`] over any
+//! [`Transport`](crate::coordinator::transport::Transport) —
+//! [`PipeTransport`] (one child process per assignment, PR 2's process
+//! mode) or [`SocketTransport`] (`repro serve` daemons dialed over
+//! TCP). [`run_process`] picks the transport from the config. Every
+//! runtime derives worker m's RNG as `Pcg64::seed_from(seed).split(m)`
+//! — from the *machine index*, never the executing endpoint — so the
+//! retained draws are byte-identical for the same config regardless of
+//! worker count W, assignment order, or transport.
 
-use std::io::{BufReader, Read};
-use std::path::PathBuf;
-use std::process::{Child, Command, Stdio};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -22,7 +25,8 @@ use crate::coordinator::metrics::RunMetrics;
 use crate::coordinator::partition::Partitioner;
 use crate::coordinator::timing::ClusterTiming;
 use crate::coordinator::transport::{
-    FrameReader, WireMsg, WorkerManifest, WorkerSummary,
+    PipeTransport, SocketTransport, Transport, WireMsg, WorkerManifest,
+    WorkerSummary,
 };
 use crate::coordinator::worker::{run_worker, DrawMsg};
 use crate::coordinator::Leader;
@@ -43,6 +47,13 @@ pub struct PipelineOutput {
     pub metrics: RunMetrics,
     /// Paper-style cluster-time model.
     pub timing: ClusterTiming,
+    /// Scratch run directory of a process/socket-mode run (shard spills
+    /// + worker manifests), `None` for in-thread runs. Owning it here
+    /// keeps the spill files inspectable for the lifetime of the
+    /// output; the directory is removed when the output drops — and on
+    /// every early-error path, where the pipeline's local binding
+    /// drops.
+    pub run_dir: Option<RunDir>,
 }
 
 /// Run the full embarrassingly-parallel pipeline with native (pure-rust)
@@ -73,6 +84,7 @@ pub fn run_native(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutput
 
     let mut leader = Leader::new(cfg.machines, dim);
     leader.set_combine_threads(cfg.combine_threads);
+    leader.set_combine_cache_budget(cache_budget_bytes(cfg));
     std::thread::scope(|scope| -> Result<()> {
         for _ in 0..n_threads {
             let tx = tx.clone();
@@ -132,63 +144,123 @@ pub fn run_native(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutput
     finish_run(cfg, subposteriors, leader.scalars_received, t0)
 }
 
-/// Scratch-directory sequence number: keeps concurrent `run_process`
-/// calls in one process (e.g. the test harness) from colliding.
+/// Scratch-directory sequence number: keeps concurrent transport runs
+/// in one process (e.g. the test harness) from colliding.
 static SCRATCH_SEQ: AtomicUsize = AtomicUsize::new(0);
 
-fn scratch_dir(seed: u64) -> Result<PathBuf> {
-    let seq = SCRATCH_SEQ.fetch_add(1, Ordering::Relaxed);
-    let dir = std::env::temp_dir().join(format!(
-        "repro_workers_{}_{}_{}",
-        std::process::id(),
-        seed,
-        seq
-    ));
-    std::fs::create_dir_all(&dir)?;
-    Ok(dir)
+/// Tempdir-style scratch directory for one process/socket-mode run:
+/// shard spills and worker manifests live here, at a pid + seed +
+/// sequence-unique path under the OS temp root (never derived from the
+/// worker binary's location, which may have no usable parent at all).
+/// Removed recursively on drop; on success the [`PipelineOutput`] owns
+/// it, so cleanup happens when the caller is done with the output.
+#[derive(Debug)]
+pub struct RunDir {
+    path: PathBuf,
 }
 
-/// Run the pipeline with one OS **process** per machine — the paper's
-/// actual deployment shape ("machines communicate only at the final
-/// combination stage"), and the prerequisite for multi-host runners.
+impl RunDir {
+    fn create(seed: u64) -> Result<RunDir> {
+        let seq = SCRATCH_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "repro_run_{}_{}_{}",
+            std::process::id(),
+            seed,
+            seq
+        ));
+        std::fs::create_dir_all(&path)?;
+        Ok(RunDir { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for RunDir {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.path).ok();
+    }
+}
+
+/// The configured anneal-cache budget in bytes.
+fn cache_budget_bytes(cfg: &PipelineConfig) -> usize {
+    cfg.combine_cache_budget_mb.saturating_mul(1 << 20)
+}
+
+/// Run the pipeline with out-of-process workers, choosing the transport
+/// from the config: socket mode when `cfg.workers` names `repro serve`
+/// endpoints, else pipe mode when `cfg.process_mode` is set (one child
+/// process per assignment, at most `cfg.worker_slots` concurrently —
+/// `0` = one per machine), else the in-thread [`run_native`] path.
 ///
-/// The leader spills each shard plus a [`WorkerManifest`] to a scratch
-/// directory, spawns `<worker-bin> worker --manifest …` per machine,
-/// and drains every child's stdout frame stream through the same
-/// [`Leader`]/`OnlineCombiner` the in-thread path uses. Workers derive
-/// their RNG streams from the same root-seed `split(m)` schedule, and
-/// draws cross the pipe through bit-exact float serialization, so the
-/// output is **byte-identical to [`run_native`]** for the same config.
-///
-/// All M processes run concurrently — a "machine" in process mode *is*
-/// a processor, so `cfg.threads` (the in-process worker-pool cap)
-/// deliberately does not apply here. The first failure anywhere
-/// cancels the remaining children instead of letting them sample into
-/// a doomed run, and the root-cause error is the one surfaced.
-///
-/// Degrades cleanly: with `cfg.process_mode` off this is exactly
-/// [`run_native`]. An empty `cfg.worker_bin` means "this executable"
-/// (the CLI case); tests point it at the `repro` binary explicitly.
+/// All three are **byte-identical** for a fixed seed — asserted by
+/// `rust/tests/process_pipeline.rs` and `rust/tests/socket_pipeline.rs`
+/// against real child processes and real localhost daemons.
 pub fn run_process(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutput> {
+    if !cfg.workers.is_empty() {
+        let transport = SocketTransport::from_spec(&cfg.workers)?;
+        return run_with_transport(cfg, data, &transport);
+    }
     if !cfg.process_mode {
         return run_native(cfg, data);
     }
+    let worker_bin: PathBuf = if cfg.worker_bin.is_empty() {
+        std::env::current_exe()?
+    } else {
+        PathBuf::from(&cfg.worker_bin)
+    };
+    let slots = if cfg.worker_slots == 0 {
+        cfg.machines
+    } else {
+        cfg.worker_slots
+    };
+    let transport = PipeTransport::new(worker_bin, slots);
+    run_with_transport(cfg, data, &transport)
+}
+
+/// Run the pipeline over any [`Transport`] — the paper's actual
+/// deployment shape ("machines communicate only at the final
+/// combination stage"), generalized from PR 2's one-child-per-machine
+/// process mode.
+///
+/// The leader spills each machine's shard (in `cfg.shard_format`) plus
+/// a [`WorkerManifest`] into a fresh [`RunDir`], then schedules the M
+/// manifests onto the transport's W endpoints. When W < M the
+/// endpoints are **oversubscribed**: manifests queue and are assigned
+/// to whichever endpoint frees up first. Because machine m's RNG
+/// stream is `root.split(m)` — a function of the manifest, not the
+/// endpoint — the retained draws are byte-identical to [`run_native`]
+/// regardless of W, assignment order, or transport.
+///
+/// The first failure anywhere fails fast: it stops further
+/// assignments, cancels every in-flight worker through
+/// [`Transport::cancel_all`] (pipe children are killed; socket daemons
+/// abort their chains at the next failed draw write), and surfaces as
+/// the run's root-cause error.
+pub fn run_with_transport(
+    cfg: &PipelineConfig,
+    data: &Dataset,
+    transport: &dyn Transport,
+) -> Result<PipelineOutput> {
     let shards =
         Partitioner::Contiguous.split(data.len(), cfg.machines, cfg.seed)?;
     let prior_w = 1.0 / cfg.machines as f64;
     let dim = data.param_dim();
     let t0 = Instant::now();
 
-    let worker_bin: PathBuf = if cfg.worker_bin.is_empty() {
-        std::env::current_exe()?
-    } else {
-        PathBuf::from(&cfg.worker_bin)
-    };
-    let scratch = scratch_dir(cfg.seed)?;
-
-    let spawn_one = |m: usize, shard: &[usize]| -> Result<Child> {
-        let shard_path = scratch.join(format!("shard_{m}.json"));
-        io::write_shard_json(&shard_path, &data.select(shard)?)?;
+    // Spill every shard + manifest up front: assignments are pulled off
+    // a queue by whichever endpoint frees up first, so all files must
+    // exist before the first connection.
+    let run_dir = RunDir::create(cfg.seed)?;
+    let mut manifests = Vec::with_capacity(cfg.machines);
+    let mut manifest_paths = Vec::with_capacity(cfg.machines);
+    for (m, shard) in shards.iter().enumerate() {
+        let shard_path = run_dir.path().join(format!(
+            "shard_{m}.{}",
+            cfg.shard_format.extension()
+        ));
+        io::write_shard(&shard_path, &data.select(shard)?, cfg.shard_format)?;
         let manifest = WorkerManifest {
             machine: m,
             machines: cfg.machines,
@@ -201,60 +273,74 @@ pub fn run_process(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutpu
             shard_path: shard_path.to_string_lossy().into_owned(),
             dim,
         };
-        let manifest_path = scratch.join(format!("worker_{m}.json"));
+        let manifest_path = run_dir.path().join(format!("worker_{m}.json"));
         manifest.save(&manifest_path)?;
-        Command::new(&worker_bin)
-            .arg("worker")
-            .arg("--manifest")
-            .arg(&manifest_path)
-            .stdin(Stdio::null())
-            .stdout(Stdio::piped())
-            .stderr(Stdio::piped())
-            .spawn()
-            .map_err(|e| {
-                Error::Runtime(format!(
-                    "spawning worker {m} ({}): {e}",
-                    worker_bin.display()
-                ))
-            })
-    };
-    let mut children: Vec<Mutex<Child>> = Vec::with_capacity(cfg.machines);
-    for (m, shard) in shards.iter().enumerate() {
-        match spawn_one(m, shard) {
-            Ok(c) => children.push(Mutex::new(c)),
-            Err(e) => {
-                // Don't leak the children already running.
-                for c in &children {
-                    let mut c = c.lock().unwrap();
-                    c.kill().ok();
-                    c.wait().ok();
-                }
-                std::fs::remove_dir_all(&scratch).ok();
-                return Err(e);
-            }
-        }
+        manifests.push(manifest);
+        manifest_paths.push(manifest_path);
     }
 
+    let slots = transport.slots().clamp(1, cfg.machines);
     let (tx, rx) = channel::<DrawMsg>();
     let results: Mutex<Vec<Option<SubposteriorSamples>>> =
         Mutex::new((0..cfg.machines).map(|_| None).collect());
-    // First root-cause failure; set by whichever reader thread trips
-    // it, which also cancels every other child (fail fast). Every
-    // drain_child error path records here, so a `None` result slot
-    // below always comes with a root_err to surface.
+    // First root-cause failure (first writer wins); setting `abort`
+    // stops every endpoint loop from pulling further assignments, so a
+    // doomed run fails after at most one in-flight job per endpoint. A
+    // `None` result slot below therefore always comes with a root_err
+    // to surface.
     let root_err: Mutex<Option<Error>> = Mutex::new(None);
+    let abort = AtomicBool::new(false);
+    let next_machine = AtomicUsize::new(0);
     let mut leader = Leader::new(cfg.machines, dim);
     leader.set_combine_threads(cfg.combine_threads);
+    leader.set_combine_cache_budget(cache_budget_bytes(cfg));
     let drained = std::thread::scope(|scope| -> Result<()> {
-        for m in 0..children.len() {
+        for slot in 0..slots {
             let tx = tx.clone();
-            let children = &children;
+            let manifests = &manifests;
+            let manifest_paths = &manifest_paths;
             let results = &results;
             let root_err = &root_err;
+            let abort = &abort;
+            let next_machine = &next_machine;
             scope.spawn(move || {
-                if let Ok(out) = drain_child(m, children, dim, &tx, root_err)
-                {
-                    results.lock().unwrap()[m] = Some(out);
+                // One endpoint's assignment loop: pull queued machines
+                // until the queue is empty or the run is aborted.
+                while !abort.load(Ordering::SeqCst) {
+                    let m = next_machine.fetch_add(1, Ordering::SeqCst);
+                    if m >= manifests.len() {
+                        break;
+                    }
+                    match run_assignment(
+                        transport,
+                        slot,
+                        &manifests[m],
+                        &manifest_paths[m],
+                        dim,
+                        &tx,
+                    ) {
+                        Ok(out) => {
+                            results.lock().unwrap()[m] = Some(out);
+                        }
+                        Err(e) => {
+                            {
+                                let mut first = root_err.lock().unwrap();
+                                if first.is_none() {
+                                    *first = Some(e);
+                                }
+                            }
+                            abort.store(true, Ordering::SeqCst);
+                            // Fail fast: kill every in-flight sibling
+                            // (pipe children die outright; socket
+                            // daemons abort at their next draw write)
+                            // instead of letting healthy workers finish
+                            // a doomed run. Their threads surface
+                            // secondary errors, but first-write-wins
+                            // keeps this one as the root cause.
+                            transport.cancel_all();
+                            break;
+                        }
+                    }
                 }
             });
         }
@@ -262,7 +348,6 @@ pub fn run_process(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutpu
         leader.drain(&rx)?;
         Ok(())
     });
-    std::fs::remove_dir_all(&scratch).ok();
     drained?;
     if let Some(e) = root_err.into_inner().unwrap() {
         return Err(e);
@@ -275,86 +360,47 @@ pub fn run_process(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutpu
         .map(|o| o.ok_or_else(|| Error::Runtime("worker died".into())))
         .collect::<Result<_>>()?;
 
-    finish_run(cfg, subposteriors, leader.scalars_received, t0)
+    let mut out =
+        finish_run(cfg, subposteriors, leader.scalars_received, t0)?;
+    out.run_dir = Some(run_dir);
+    Ok(out)
 }
 
-/// Consume one child's frame stream: forward every draw into the
-/// leader's channel, rebuild the machine's [`SubposteriorSamples`] from
-/// the stream plus the final summary frame, and turn a non-zero exit
-/// into the child's own stderr rather than a generic failure. On any
-/// failure the root cause is recorded in `root_err` (first writer wins)
-/// and every sibling child is killed, so the run fails fast instead of
-/// letting healthy workers finish a doomed run.
-fn drain_child(
-    machine: usize,
-    children: &[Mutex<Child>],
+/// Execute one manifest on one transport endpoint: open the
+/// connection, forward every draw into the leader's channel, rebuild
+/// the machine's [`SubposteriorSamples`] from the stream plus the
+/// final summary frame, and surface worker-side diagnostics (exit
+/// status + stderr for pipe children, in-band error frames for socket
+/// daemons). On an error return the connection has been dropped, which
+/// cancels a still-running pipe child.
+fn run_assignment(
+    transport: &dyn Transport,
+    slot: usize,
+    manifest: &WorkerManifest,
+    manifest_path: &Path,
     dim: usize,
     tx: &Sender<DrawMsg>,
-    root_err: &Mutex<Option<Error>>,
 ) -> Result<SubposteriorSamples> {
-    // Record the root cause (unless a sibling already failed first),
-    // cancel everyone, reap our own child, and build this thread's
-    // error. Children killed here hit EOF on their readers, which land
-    // in the non-success exit path below — also routed through this
-    // helper, where `root_err` is already taken so the original cause
-    // survives.
-    let fail_all = |msg: String| -> Error {
-        {
-            let mut slot = root_err.lock().unwrap();
-            if slot.is_none() {
-                *slot = Some(Error::Runtime(msg.clone()));
-            }
-        }
-        for c in children {
-            c.lock().unwrap().kill().ok();
-        }
-        children[machine].lock().unwrap().wait().ok();
-        Error::Runtime(msg)
-    };
-
-    let stdout = children[machine].lock().unwrap().stdout.take();
-    let Some(stdout) = stdout else {
-        return Err(fail_all(format!("worker {machine}: no stdout pipe")));
-    };
-    // Drain stderr concurrently from the start: a child that fills the
-    // OS pipe buffer with (say) a long panic backtrace would otherwise
-    // block in that write, never close stdout, and deadlock this
-    // thread inside read_frame. Detached on purpose — on the fail_all
-    // paths the kill closes the pipe and the drainer exits on its own.
-    let stderr = children[machine].lock().unwrap().stderr.take();
-    let stderr_drain = stderr.map(|mut se| {
-        std::thread::spawn(move || {
-            let mut text = String::new();
-            se.read_to_string(&mut text).ok();
-            text
-        })
-    });
-    let mut frames = FrameReader::new(BufReader::new(stdout));
+    let machine = manifest.machine;
+    let mut conn = transport.connect(slot, manifest, manifest_path)?;
     let mut samples = SampleMatrix::new(dim);
     let mut draw_times = Vec::new();
     let mut summary: Option<WorkerSummary> = None;
     loop {
-        let payload = match frames.read_frame() {
-            Ok(Some(p)) => p,
+        let msg = match conn.recv() {
+            Ok(Some(msg)) => msg,
             Ok(None) => break,
             Err(e) => {
-                return Err(fail_all(format!(
-                    "worker {machine}: bad frame: {e}"
-                )))
-            }
-        };
-        let msg = match WireMsg::decode(&payload) {
-            Ok(m) => m,
-            Err(e) => {
-                return Err(fail_all(format!(
-                    "worker {machine}: bad message: {e}"
-                )))
+                return Err(Error::Runtime(format!(
+                    "worker {machine} ({} transport): bad frame: {e}",
+                    transport.name()
+                )));
             }
         };
         match msg {
             WireMsg::Draw(d) => {
                 if d.machine != machine || d.theta.len() != dim {
-                    return Err(fail_all(format!(
+                    return Err(Error::Runtime(format!(
                         "worker {machine}: draw for machine {} with dim {}",
                         d.machine,
                         d.theta.len()
@@ -365,41 +411,31 @@ fn drain_child(
                 // Leader hung up → keep draining (mirrors thread mode).
                 let _ = tx.send(d);
             }
-            WireMsg::Summary(s) => summary = Some(s),
+            WireMsg::Summary(s) => {
+                if s.machine != machine {
+                    return Err(Error::Runtime(format!(
+                        "worker {machine}: summary for machine {}",
+                        s.machine
+                    )));
+                }
+                summary = Some(s);
+            }
+            WireMsg::Error { machine: from, message } => {
+                return Err(Error::Runtime(format!(
+                    "worker {from}: remote failure: {message}"
+                )));
+            }
         }
     }
-    // stdout hit EOF, so the child is exiting: collect what it said on
-    // stderr, then reap. The frame loop above holds no child lock, so
-    // a failing sibling's kill sweep is never blocked on this thread.
-    let stderr_text = stderr_drain
-        .and_then(|h| h.join().ok())
-        .unwrap_or_default();
-    let status = match children[machine].lock().unwrap().wait() {
-        Ok(s) => s,
-        Err(e) => {
-            return Err(fail_all(format!("worker {machine}: wait: {e}")))
-        }
-    };
-    if !status.success() {
-        return Err(fail_all(format!(
-            "worker {machine} exited with {status}: {}",
-            stderr_text.trim()
-        )));
-    }
-    let summary = match summary {
-        Some(s) if s.machine == machine => s,
-        Some(s) => {
-            return Err(fail_all(format!(
-                "worker {machine}: summary for machine {}",
-                s.machine
-            )))
-        }
-        None => {
-            return Err(fail_all(format!(
-                "worker {machine}: stream ended without a summary frame"
-            )))
-        }
-    };
+    // Clean end-of-stream: let the endpoint report exit diagnostics
+    // (a crashed pipe child surfaces its stderr here) before the
+    // missing-summary check, so the root cause wins.
+    conn.finish()?;
+    let summary = summary.ok_or_else(|| {
+        Error::Runtime(format!(
+            "worker {machine}: stream ended without a summary frame"
+        ))
+    })?;
     Ok(SubposteriorSamples {
         machine,
         samples,
@@ -455,15 +491,17 @@ fn finish_run(
     t0: Instant,
 ) -> Result<PipelineOutput> {
     let tc = Instant::now();
-    // Combine-stage parallelism (cfg.combine_threads, 0 = all cores):
-    // deterministic for a fixed seed at any thread count, so the knob
-    // only affects wall-clock.
-    let combined = combine::combine_threaded(
+    // Combine-stage parallelism (cfg.combine_threads, 0 = all cores)
+    // and anneal-cache budget (cfg.combine_cache_budget_mb):
+    // deterministic for a fixed seed at any value of either, so both
+    // knobs only affect wall-clock/memory.
+    let combined = combine::combine_tuned(
         cfg.method,
         &subposteriors,
         cfg.t_out,
         cfg.seed ^ 0x5EED,
         cfg.combine_threads,
+        cache_budget_bytes(cfg),
     )?;
     let combine_secs = tc.elapsed().as_secs_f64();
 
@@ -478,7 +516,13 @@ fn finish_run(
         combine_secs,
         total_secs: t0.elapsed().as_secs_f64(),
     };
-    Ok(PipelineOutput { subposteriors, combined, metrics, timing })
+    Ok(PipelineOutput {
+        subposteriors,
+        combined,
+        metrics,
+        timing,
+        run_dir: None,
+    })
 }
 
 /// Run a single full-data chain (the `regularChain` baseline).
@@ -629,5 +673,211 @@ mod tests {
         assert_eq!(out.samples.len(), 300);
         let mean = out.samples.mean();
         assert!((mean[0] - 1.0).abs() < 0.15, "mean {:?}", mean);
+    }
+
+    /// Satellite gate: a tiny configured anneal-cache budget must fall
+    /// back to in-place recomputation with **bit-identical** combined
+    /// output — the budget is a memory knob, never a result knob — all
+    /// the way from the config key through the pipeline.
+    #[test]
+    fn tiny_combine_cache_budget_is_bit_identical_through_pipeline() {
+        let data = synth::gaussian(1000, 2, 21);
+        let make = |budget_mb: usize| {
+            let mut c = cfg(3, 250);
+            c.method = CombineMethod::Semiparametric;
+            c.combine_cache_budget_mb = budget_mb;
+            run_native(&c, &data).unwrap()
+        };
+        let default = make(256);
+        let tiny = make(0); // floor: a single cached entry
+        assert_eq!(
+            default.combined.as_slice(),
+            tiny.combined.as_slice(),
+            "cache budget changed the combined draws"
+        );
+    }
+
+    #[test]
+    fn run_dir_removes_itself_on_drop() {
+        let rd = RunDir::create(123).unwrap();
+        let path = rd.path().to_path_buf();
+        std::fs::write(path.join("spill.bin"), b"x").unwrap();
+        assert!(path.is_dir());
+        drop(rd);
+        assert!(!path.exists(), "RunDir must clean up recursively");
+    }
+
+    // ---- transport-scheduler unit tests over an in-memory transport ----
+
+    use crate::coordinator::transport::{
+        Transport, WireMsg, WorkerConnection, WorkerSummary,
+    };
+    use std::collections::VecDeque;
+
+    /// Per-machine scripted wire streams, taken once each.
+    type ScriptedStreams = Mutex<Vec<Option<Vec<WireMsg>>>>;
+
+    /// In-memory transport: each machine's wire stream is scripted.
+    /// Exercises the oversubscription scheduler without spawning
+    /// processes (the real endpoints are covered by the
+    /// `process_pipeline` / `socket_pipeline` integration tests).
+    struct MockTransport {
+        slots: usize,
+        streams: ScriptedStreams,
+    }
+
+    impl MockTransport {
+        fn new(slots: usize, streams: Vec<Vec<WireMsg>>) -> MockTransport {
+            MockTransport {
+                slots,
+                streams: Mutex::new(
+                    streams.into_iter().map(Some).collect(),
+                ),
+            }
+        }
+    }
+
+    struct MockConnection {
+        msgs: VecDeque<WireMsg>,
+    }
+
+    impl WorkerConnection for MockConnection {
+        fn recv(&mut self) -> Result<Option<WireMsg>> {
+            Ok(self.msgs.pop_front())
+        }
+
+        fn finish(&mut self) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    impl Transport for MockTransport {
+        fn name(&self) -> &'static str {
+            "mock"
+        }
+
+        fn slots(&self) -> usize {
+            self.slots
+        }
+
+        fn connect(
+            &self,
+            _slot: usize,
+            manifest: &WorkerManifest,
+            _manifest_path: &Path,
+        ) -> Result<Box<dyn WorkerConnection>> {
+            let msgs = self.streams.lock().unwrap()[manifest.machine]
+                .take()
+                .expect("machine assigned twice");
+            Ok(Box::new(MockConnection { msgs: msgs.into() }))
+        }
+    }
+
+    /// Scripted healthy stream for one machine: `t` slightly varying
+    /// 1-d draws plus a summary.
+    fn scripted_stream(machine: usize, t: usize) -> Vec<WireMsg> {
+        let mut msgs: Vec<WireMsg> = (0..t)
+            .map(|i| {
+                WireMsg::Draw(DrawMsg {
+                    machine,
+                    theta: vec![machine as f64 + 0.25 * i as f64],
+                    elapsed: 0.01 * (i + 1) as f64,
+                    last: i + 1 == t,
+                })
+            })
+            .collect();
+        msgs.push(WireMsg::Summary(WorkerSummary {
+            machine,
+            accept_rate: 0.5,
+            wall_secs: 0.25,
+        }));
+        msgs
+    }
+
+    /// One endpoint, four machines: the scheduler must queue all four
+    /// manifests onto the single slot and reassemble every machine's
+    /// stream intact.
+    #[test]
+    fn oversubscribed_single_slot_runs_all_machines() {
+        let data = synth::gaussian(400, 1, 31);
+        let c = cfg(4, 5);
+        let transport = MockTransport::new(
+            1,
+            (0..4).map(|m| scripted_stream(m, 5)).collect(),
+        );
+        let out = run_with_transport(&c, &data, &transport).unwrap();
+        assert_eq!(out.subposteriors.len(), 4);
+        for (m, s) in out.subposteriors.iter().enumerate() {
+            assert_eq!(s.machine, m);
+            assert_eq!(s.samples.len(), 5);
+            assert_eq!(s.samples.row(0)[0], m as f64);
+            assert_eq!(s.draw_times.len(), 5);
+            assert_eq!(s.accept_rate, 0.5);
+        }
+        assert_eq!(out.metrics.scalars_transferred, 4 * 5);
+        let run_dir =
+            out.run_dir.as_ref().expect("transport runs own a RunDir");
+        let path = run_dir.path().to_path_buf();
+        assert!(
+            path.join("shard_0.json").is_file(),
+            "spills live until the output drops"
+        );
+        drop(out);
+        assert!(!path.exists(), "RunDir cleaned up with the output");
+    }
+
+    /// A stream that ends without a summary frame is a structured
+    /// scheduler error naming the machine.
+    #[test]
+    fn stream_without_summary_is_an_error() {
+        let data = synth::gaussian(200, 1, 32);
+        let c = cfg(2, 3);
+        let mut streams: Vec<Vec<WireMsg>> =
+            (0..2).map(|m| scripted_stream(m, 3)).collect();
+        streams[1].pop(); // drop machine 1's summary
+        let transport = MockTransport::new(2, streams);
+        let err = run_with_transport(&c, &data, &transport).unwrap_err();
+        assert!(
+            err.to_string().contains("without a summary frame"),
+            "{err}"
+        );
+    }
+
+    /// An in-band worker error frame (the socket daemons' failure path)
+    /// surfaces as the run's root cause.
+    #[test]
+    fn remote_error_frame_surfaces_as_root_cause() {
+        let data = synth::gaussian(200, 1, 33);
+        let c = cfg(2, 3);
+        let streams = vec![
+            scripted_stream(0, 3),
+            vec![WireMsg::Error {
+                machine: 1,
+                message: "shard unreadable".into(),
+            }],
+        ];
+        let transport = MockTransport::new(2, streams);
+        let err = run_with_transport(&c, &data, &transport).unwrap_err();
+        let text = err.to_string();
+        assert!(
+            text.contains("remote failure") && text.contains("shard unreadable"),
+            "{text}"
+        );
+    }
+
+    /// A draw tagged for the wrong machine (an endpoint mixing up
+    /// streams) must fail the run, not corrupt another machine's chain.
+    #[test]
+    fn cross_machine_draw_is_rejected() {
+        let data = synth::gaussian(200, 1, 34);
+        let c = cfg(2, 3);
+        let mut wrong = scripted_stream(0, 3);
+        if let WireMsg::Draw(d) = &mut wrong[1] {
+            d.machine = 1;
+        }
+        let transport =
+            MockTransport::new(2, vec![wrong, scripted_stream(1, 3)]);
+        let err = run_with_transport(&c, &data, &transport).unwrap_err();
+        assert!(err.to_string().contains("draw for machine"), "{err}");
     }
 }

@@ -1,0 +1,468 @@
+//! Worker-daemon side of the socket transport, plus the single copy of
+//! manifest execution shared by every worker entrypoint.
+//!
+//! `repro serve --listen <addr>` runs [`serve`]: bind a TCP listener,
+//! announce the bound address (`LISTENING <addr>` on stdout — the
+//! leader-side tooling and tests parse this to support `:0` ephemeral
+//! ports), then accept one connection at a time. Each connection is one
+//! job: the first inbound frame is a [`WorkerManifest`], the outbound
+//! stream is the exact frame sequence a pipe-mode worker writes on
+//! stdout (every draw, then one summary), after which the daemon closes
+//! the connection — the clean-EOF success signal the leader's
+//! [`SocketTransport`](crate::coordinator::transport::SocketTransport)
+//! expects. Job failures are reported in-band as `error` frames since a
+//! remote daemon has no stderr the leader could collect.
+//!
+//! [`run_manifest`] is the shared execution path: the pipe-mode
+//! `worker` CLI subcommand drives it with a stdout sink, [`serve`] with
+//! a socket sink. Both therefore derive the worker RNG stream the same
+//! way (`root.split(m)`), load shards through the same format
+//! autodetection, and emit bit-identical frames — which is what keeps
+//! socket ≡ process ≡ thread draws byte-for-byte.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::path::Path;
+use std::time::Duration;
+
+use crate::config;
+use crate::coordinator::transport::{
+    encode_draw, encode_error, encode_summary, write_frame, FrameReader,
+    WorkerManifest, WorkerSummary, DEFAULT_MAX_FRAME_BYTES,
+};
+use crate::coordinator::worker::{run_worker_with, DrawMsg};
+use crate::data::io;
+use crate::error::{Error, Result};
+use crate::rng::Pcg64;
+use crate::runtime::json::Json;
+
+/// Execute one worker manifest end-to-end: load the shard (JSON or
+/// binary, autodetected), build the subposterior target, derive the
+/// `root.split(m)` RNG stream, sample, and push every frame payload
+/// (draws, then the final summary) through `sink`.
+///
+/// A sink failure mid-run aborts the chain immediately — with the peer
+/// gone, the remaining iterations are dead compute, and a daemon stuck
+/// finishing an orphaned job could not serve its next connection — and
+/// the job returns an error instead of a summary. Sinks that prefer to
+/// exit the whole process (the pipe-mode worker, whose only purpose is
+/// its stdout stream) can do so from inside the sink instead.
+pub fn run_manifest<F>(wm: &WorkerManifest, sink: &mut F) -> Result<()>
+where
+    F: FnMut(&str) -> std::io::Result<()>,
+{
+    if wm.machine >= wm.machines {
+        return Err(Error::Config(format!(
+            "machine {} out of range ({} machines)",
+            wm.machine, wm.machines
+        )));
+    }
+    let data = io::read_shard(Path::new(&wm.shard_path))?;
+    let idx: Vec<usize> = (0..data.len()).collect();
+    let target = data.subposterior(&idx, wm.prior_weight)?;
+    if target.dim() != wm.dim {
+        return Err(Error::Config(format!(
+            "shard dim {} != manifest dim {}",
+            target.dim(),
+            wm.dim
+        )));
+    }
+
+    // Same stream derivation as the in-thread path: split 0..machines
+    // off the root generator sequentially, keep stream m.
+    let mut root = Pcg64::seed_from(wm.seed);
+    let rng = root.split_n(wm.machines).swap_remove(wm.machine);
+    let sampler =
+        config::parse_sampler(&wm.sampler)?.build(target.dim());
+
+    let mut broken = false;
+    let result = run_worker_with(
+        wm.machine,
+        target.as_ref(),
+        sampler,
+        wm.samples,
+        wm.burn_in,
+        wm.thin,
+        rng,
+        &mut |msg: &DrawMsg| {
+            if sink(&encode_draw(msg)).is_err() {
+                broken = true;
+            }
+            !broken
+        },
+    );
+    if broken {
+        return Err(Error::Runtime(format!(
+            "worker {}: draw stream closed mid-run",
+            wm.machine
+        )));
+    }
+    sink(&encode_summary(&WorkerSummary {
+        machine: wm.machine,
+        accept_rate: result.accept_rate,
+        wall_secs: result.wall_secs,
+    }))?;
+    Ok(())
+}
+
+/// Options for [`serve`].
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Exit after this many jobs (`None` = serve until killed). Lets
+    /// tests and CI smoke runs shut daemons down deterministically.
+    pub max_jobs: Option<usize>,
+    /// Frame cap for inbound manifest frames.
+    pub max_frame_bytes: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            max_jobs: None,
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+        }
+    }
+}
+
+/// Run the worker daemon: bind `addr`, announce `LISTENING <addr>` on
+/// `announce`, then serve jobs one connection at a time. A failed job
+/// is reported to that job's leader in-band (and to the daemon's
+/// stderr); the daemon itself stays up for the next connection.
+pub fn serve(
+    addr: &str,
+    opts: &ServeOptions,
+    announce: &mut dyn Write,
+) -> Result<()> {
+    let listener = TcpListener::bind(addr).map_err(|e| {
+        Error::Runtime(format!("binding worker daemon to {addr}: {e}"))
+    })?;
+    let local = listener.local_addr().map_err(Error::Io)?;
+    writeln!(announce, "LISTENING {local}")?;
+    announce.flush()?;
+    let mut served = 0usize;
+    for conn in listener.incoming() {
+        let stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("serve: accept: {e}");
+                continue;
+            }
+        };
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "<unknown>".into());
+        if let Err(e) = handle_conn(stream, opts.max_frame_bytes) {
+            eprintln!("serve: job from {peer} failed: {e}");
+        }
+        served += 1;
+        if opts.max_jobs.is_some_and(|cap| served >= cap) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// How long a freshly accepted connection may take to deliver its
+/// manifest frame. The daemon serves one connection at a time, so
+/// without this bound a single idle connection (port scanner, health
+/// check, half-open leader) would wedge the accept loop forever; a
+/// timed-out connection is dropped and the daemon moves on. A real
+/// leader sends the manifest immediately after connecting — even when
+/// its connection waited in the accept backlog, the frame is already
+/// buffered by the time the daemon reads — so 30 s is generous.
+const MANIFEST_READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One job: read the manifest frame, stream the run back, close.
+fn handle_conn(stream: TcpStream, max_frame_bytes: usize) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    // Only the manifest read is bounded: after it, the daemon only
+    // writes, so no further read can block the loop.
+    stream.set_read_timeout(Some(MANIFEST_READ_TIMEOUT)).ok();
+    let reader = stream.try_clone().map_err(Error::Io)?;
+    let mut frames =
+        FrameReader::with_max_frame(BufReader::new(reader), max_frame_bytes);
+    let payload = frames.read_frame()?.ok_or_else(|| {
+        Error::Runtime("connection closed before a manifest frame".into())
+    })?;
+    let wm = WorkerManifest::from_json(&Json::parse(&payload)?)?;
+    let mut out = BufWriter::new(stream.try_clone().map_err(Error::Io)?);
+    let run = run_manifest(&wm, &mut |frame: &str| {
+        write_frame(&mut out, frame)
+    });
+    if let Err(e) = &run {
+        // Best-effort in-band failure report; if the leader is already
+        // gone this write fails too, which is fine.
+        let _ = write_frame(&mut out, &encode_error(wm.machine, &e.to_string()));
+    }
+    out.flush().ok();
+    // Half-close is enough for the leader to see EOF, but shutting both
+    // directions also unblocks a leader mid-write.
+    stream.shutdown(Shutdown::Both).ok();
+    run
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::transport::WireMsg;
+    use crate::data::synth;
+
+    fn spill_manifest(
+        dir: &Path,
+        machine: usize,
+        machines: usize,
+        format: io::ShardFormat,
+    ) -> WorkerManifest {
+        let data = synth::gaussian(300, 2, 11);
+        let idx: Vec<usize> = (machine * 100..(machine + 1) * 100).collect();
+        let shard = data.select(&idx).unwrap();
+        let shard_path = dir.join(format!("shard_{machine}.dat"));
+        io::write_shard(&shard_path, &shard, format).unwrap();
+        WorkerManifest {
+            machine,
+            machines,
+            seed: 9,
+            samples: 25,
+            burn_in: 5,
+            thin: 1,
+            prior_weight: 1.0 / machines as f64,
+            sampler: "rwm:1e0".into(),
+            shard_path: shard_path.to_string_lossy().into_owned(),
+            dim: 2,
+        }
+    }
+
+    /// The frame sequence out of `run_manifest` is the wire contract:
+    /// exactly `samples` draw frames, then one summary frame, all
+    /// decodable, all for the right machine — and identical whether the
+    /// shard was spilled as JSON or binary.
+    #[test]
+    fn run_manifest_emits_draws_then_summary_for_both_formats() {
+        let dir = std::env::temp_dir().join("repro_serve_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut streams: Vec<Vec<String>> = Vec::new();
+        for format in [io::ShardFormat::Json, io::ShardFormat::Binary] {
+            let wm = spill_manifest(&dir, 1, 3, format);
+            let mut frames: Vec<String> = Vec::new();
+            run_manifest(&wm, &mut |frame: &str| {
+                frames.push(frame.to_string());
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(frames.len(), 26);
+            for f in &frames[..25] {
+                match WireMsg::decode(f).unwrap() {
+                    WireMsg::Draw(d) => {
+                        assert_eq!(d.machine, 1);
+                        assert_eq!(d.theta.len(), 2);
+                    }
+                    other => panic!("wrong variant {other:?}"),
+                }
+            }
+            match WireMsg::decode(&frames[25]).unwrap() {
+                WireMsg::Summary(s) => assert_eq!(s.machine, 1),
+                other => panic!("wrong variant {other:?}"),
+            }
+            // Draw timings differ run to run; the draw payloads must
+            // not depend on the spill format.
+            let thetas: Vec<String> = frames[..25]
+                .iter()
+                .map(|f| match WireMsg::decode(f).unwrap() {
+                    WireMsg::Draw(d) => format!("{:?}", d.theta),
+                    _ => unreachable!(),
+                })
+                .collect();
+            streams.push(thetas);
+        }
+        assert_eq!(
+            streams[0], streams[1],
+            "draws diverged between JSON and binary shard spills"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn run_manifest_rejects_bad_machine_and_missing_shard() {
+        let dir = std::env::temp_dir().join("repro_serve_badjob_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut wm = spill_manifest(&dir, 0, 2, io::ShardFormat::Json);
+        wm.machine = 5; // out of range
+        let err = run_manifest(&wm, &mut |_f: &str| Ok(())).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        let mut wm = spill_manifest(&dir, 0, 2, io::ShardFormat::Json);
+        wm.shard_path = dir.join("nope.json").to_string_lossy().into_owned();
+        assert!(run_manifest(&wm, &mut |_f: &str| Ok(())).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A sink that dies mid-stream turns into a job error, not a
+    /// summary — the leader must never see a summary for a stream it
+    /// did not fully receive — and the chain aborts right there rather
+    /// than burning the remaining iterations as dead compute.
+    #[test]
+    fn run_manifest_aborts_on_broken_sink() {
+        let dir = std::env::temp_dir().join("repro_serve_broken_sink_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let wm = spill_manifest(&dir, 0, 2, io::ShardFormat::Binary);
+        let mut wrote = 0usize;
+        let err = run_manifest(&wm, &mut |_f: &str| {
+            wrote += 1;
+            if wrote > 3 {
+                Err(std::io::Error::new(
+                    std::io::ErrorKind::BrokenPipe,
+                    "peer gone",
+                ))
+            } else {
+                Ok(())
+            }
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("stream closed"), "{err}");
+        assert_eq!(
+            wrote, 4,
+            "chain must abort at the first failed write (3 ok + 1 failed), \
+             not keep sampling the remaining draws"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Captures the daemon's `LISTENING <addr>` announce line (which
+    /// `writeln!` may deliver across several `write` calls) and hands
+    /// the bound address to the test thread once it is complete.
+    struct Announcer {
+        buf: Vec<u8>,
+        tx: std::sync::mpsc::Sender<String>,
+        sent: bool,
+    }
+
+    impl Announcer {
+        fn channel() -> (Announcer, std::sync::mpsc::Receiver<String>) {
+            let (tx, rx) = std::sync::mpsc::channel();
+            (Announcer { buf: Vec::new(), tx, sent: false }, rx)
+        }
+    }
+
+    impl Write for Announcer {
+        fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+            self.buf.extend_from_slice(b);
+            if !self.sent {
+                if let Some(pos) = self.buf.iter().position(|&c| c == b'\n')
+                {
+                    let line = String::from_utf8_lossy(&self.buf[..pos]);
+                    if let Some(rest) = line.trim().strip_prefix("LISTENING")
+                    {
+                        let _ = self.tx.send(rest.trim().to_string());
+                        self.sent = true;
+                    }
+                }
+            }
+            Ok(b.len())
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    /// End-to-end over a real localhost socket: a daemon thread serving
+    /// one job, a client sending a manifest frame and draining frames.
+    #[test]
+    fn serve_runs_one_job_over_tcp() {
+        let dir = std::env::temp_dir().join("repro_serve_tcp_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let wm = spill_manifest(&dir, 0, 2, io::ShardFormat::Binary);
+
+        let opts = ServeOptions { max_jobs: Some(1), ..Default::default() };
+        let (mut announcer, addr_rx) = Announcer::channel();
+        let daemon = std::thread::spawn(move || {
+            serve("127.0.0.1:0", &opts, &mut announcer).unwrap();
+        });
+        let addr = addr_rx
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .expect("daemon never announced its address");
+
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        write_frame(&mut writer, &wm.to_json().render()).unwrap();
+        let mut frames = FrameReader::new(BufReader::new(stream));
+        let mut draws = 0usize;
+        let mut summaries = 0usize;
+        while let Some(payload) = frames.read_frame().unwrap() {
+            match WireMsg::decode(&payload).unwrap() {
+                WireMsg::Draw(d) => {
+                    assert_eq!(d.machine, 0);
+                    draws += 1;
+                }
+                WireMsg::Summary(s) => {
+                    assert_eq!(s.machine, 0);
+                    summaries += 1;
+                }
+                WireMsg::Error { message, .. } => {
+                    panic!("unexpected remote failure: {message}")
+                }
+            }
+        }
+        assert_eq!(draws, 25);
+        assert_eq!(summaries, 1);
+        daemon.join().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A job that fails after the connection is up (missing shard)
+    /// reaches the client as an in-band error frame, and the daemon
+    /// survives to serve the next connection.
+    #[test]
+    fn serve_reports_job_failure_in_band_and_stays_up() {
+        let dir = std::env::temp_dir().join("repro_serve_fail_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = spill_manifest(&dir, 0, 2, io::ShardFormat::Json);
+        let mut bad = good.clone();
+        bad.shard_path =
+            dir.join("missing.json").to_string_lossy().into_owned();
+
+        let opts = ServeOptions { max_jobs: Some(2), ..Default::default() };
+        let (mut announcer, addr_rx) = Announcer::channel();
+        let daemon = std::thread::spawn(move || {
+            serve("127.0.0.1:0", &opts, &mut announcer).ok();
+        });
+        let addr = addr_rx
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .expect("daemon never announced its address");
+
+        // Job 1: broken manifest → error frame.
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        write_frame(&mut writer, &bad.to_json().render()).unwrap();
+        let mut frames = FrameReader::new(BufReader::new(stream));
+        let mut saw_error = false;
+        while let Some(payload) = frames.read_frame().unwrap() {
+            if let WireMsg::Error { machine, message } =
+                WireMsg::decode(&payload).unwrap()
+            {
+                assert_eq!(machine, 0);
+                assert!(!message.is_empty());
+                saw_error = true;
+            }
+        }
+        assert!(saw_error, "job failure must arrive as an error frame");
+
+        // Job 2: the daemon is still alive and serves a good job.
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        write_frame(&mut writer, &good.to_json().render()).unwrap();
+        let mut frames = FrameReader::new(BufReader::new(stream));
+        let mut summaries = 0usize;
+        while let Some(payload) = frames.read_frame().unwrap() {
+            if matches!(
+                WireMsg::decode(&payload).unwrap(),
+                WireMsg::Summary(_)
+            ) {
+                summaries += 1;
+            }
+        }
+        assert_eq!(summaries, 1);
+        daemon.join().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

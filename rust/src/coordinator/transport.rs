@@ -1,28 +1,46 @@
-//! Process-mode wire protocol: length-prefixed ndjson frames.
+//! Leader↔worker wire protocol and pluggable transports.
 //!
-//! A worker process streams its draws to the leader over stdout as a
-//! sequence of frames, each `"<decimal byte length>\n<json payload>\n"`.
-//! The length prefix lets the leader slice payloads without scanning
-//! for delimiters inside them; the trailing newline keeps the stream
-//! greppable when captured to a file. Payloads are [`WireMsg`]s — every
-//! draw ([`crate::coordinator::worker::DrawMsg`]) followed by one final
+//! A worker streams its draws to the leader as a sequence of
+//! length-prefixed ndjson frames, each
+//! `"<decimal byte length>\n<json payload>\n"`. The length prefix lets
+//! the leader slice payloads without scanning for delimiters inside
+//! them; the trailing newline keeps the stream greppable when captured
+//! to a file. Payloads are [`WireMsg`]s — every draw
+//! ([`crate::coordinator::worker::DrawMsg`]) followed by one final
 //! [`WorkerSummary`] carrying the telemetry that is not per-draw.
+//!
+//! The byte channel underneath is pluggable via the [`Transport`]
+//! trait: [`PipeTransport`] spawns one child process per assignment and
+//! reads its stdout (PR 2's process mode), [`SocketTransport`] dials a
+//! `repro serve` worker daemon over TCP, sends the [`WorkerManifest`]
+//! as the first frame, and reads draw frames back. Both speak the exact
+//! same frame grammar, so the leader-side scheduler
+//! ([`crate::coordinator::pipeline::run_with_transport`]) is
+//! transport-agnostic.
 //!
 //! Floats cross the boundary through [`Json`]'s shortest-round-trip
 //! rendering, so a draw decoded by the leader is bit-identical to the
-//! one the worker produced — process mode inherits the thread-mode
+//! one the worker produced — every transport inherits the thread-mode
 //! determinism guarantee byte-for-byte.
 
-use std::io::{BufRead, Read, Write};
-use std::path::Path;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::path::{Path, PathBuf};
+use std::process::{Child, ChildStdout, Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::coordinator::worker::DrawMsg;
-use crate::error::{Error, Result};
+use crate::error::{Error, FrameError, Result};
 use crate::runtime::json::{self, Json};
 
-/// Largest frame the leader will accept (a draw is O(d) floats; this
-/// bounds memory against a corrupt or hostile length prefix).
-const MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
+/// Default largest frame a reader will accept (a draw is O(d) floats;
+/// this bounds memory against a corrupt or hostile length prefix).
+/// Transports carry their own cap — see [`Transport::max_frame_bytes`].
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
+
+/// Dial timeout for socket endpoints (see [`SocketTransport`]).
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Write one frame: decimal payload length, newline, payload, newline.
 /// Flushes so the leader sees draws as they are produced, not when the
@@ -41,14 +59,25 @@ pub fn write_frame<W: Write>(w: &mut W, payload: &str) -> std::io::Result<()> {
 /// garbage stream.
 const MAX_PREFIX_BYTES: usize = 24;
 
-/// Incremental frame reader over any buffered byte stream.
+/// Incremental frame reader over any buffered byte stream. Protocol
+/// violations surface as structured [`FrameError`]s (wrapped in
+/// [`Error::Frame`]) so peers can tell a corrupt prefix from an
+/// oversized frame from a mid-payload truncation.
 pub struct FrameReader<R: BufRead> {
     inner: R,
+    max_frame_bytes: usize,
 }
 
 impl<R: BufRead> FrameReader<R> {
+    /// Reader with the default frame cap.
     pub fn new(inner: R) -> Self {
-        FrameReader { inner }
+        Self::with_max_frame(inner, DEFAULT_MAX_FRAME_BYTES)
+    }
+
+    /// Reader with a transport-specific frame cap (see
+    /// [`Transport::max_frame_bytes`]).
+    pub fn with_max_frame(inner: R, max_frame_bytes: usize) -> Self {
+        FrameReader { inner, max_frame_bytes: max_frame_bytes.max(1) }
     }
 
     /// Read the bounded length-prefix line, or `None` at clean EOF.
@@ -61,19 +90,17 @@ impl<R: BufRead> FrameReader<R> {
                 return if line.is_empty() {
                     Ok(None)
                 } else {
-                    Err(Error::Parse(
-                        "truncated frame length prefix".into(),
-                    ))
+                    Err(FrameError::TruncatedPrefix.into())
                 };
             }
             if byte[0] == b'\n' {
                 break;
             }
             if line.len() >= MAX_PREFIX_BYTES {
-                return Err(Error::Parse(
-                    "frame length prefix too long (not a frame stream?)"
-                        .into(),
-                ));
+                return Err(FrameError::PrefixTooLong {
+                    limit: MAX_PREFIX_BYTES,
+                }
+                .into());
             }
             line.push(byte[0]);
         }
@@ -86,22 +113,31 @@ impl<R: BufRead> FrameReader<R> {
             return Ok(None);
         };
         let len: usize = prefix.trim().parse().map_err(|_| {
-            Error::Parse(format!(
-                "bad frame length prefix {:?}",
-                prefix.trim()
-            ))
+            Error::Frame(FrameError::BadPrefix(prefix.trim().to_string()))
         })?;
-        if len > MAX_FRAME_BYTES {
-            return Err(Error::Parse(format!("frame of {len} bytes too large")));
+        if len > self.max_frame_bytes {
+            return Err(FrameError::Oversized {
+                len,
+                max: self.max_frame_bytes,
+            }
+            .into());
         }
         let mut buf = vec![0u8; len + 1]; // payload + trailing newline
-        self.inner.read_exact(&mut buf).map_err(Error::Io)?;
+        self.inner.read_exact(&mut buf).map_err(|e| {
+            // Distinguish "the stream ended mid-payload" (a protocol
+            // violation the peer can diagnose) from a genuine I/O fault.
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                Error::Frame(FrameError::TruncatedPayload { expected: len })
+            } else {
+                Error::Io(e)
+            }
+        })?;
         if buf.pop() != Some(b'\n') {
-            return Err(Error::Parse("frame missing trailing newline".into()));
+            return Err(FrameError::MissingNewline.into());
         }
         String::from_utf8(buf)
             .map(Some)
-            .map_err(|_| Error::Parse("frame payload is not utf-8".into()))
+            .map_err(|_| FrameError::NotUtf8.into())
     }
 }
 
@@ -120,6 +156,11 @@ pub struct WorkerSummary {
 pub enum WireMsg {
     Draw(DrawMsg),
     Summary(WorkerSummary),
+    /// Worker-side failure report. Socket daemons have no stderr the
+    /// leader can collect, so a job that dies after the connection is
+    /// up reports its root cause in-band instead of just closing the
+    /// stream.
+    Error { machine: usize, message: String },
 }
 
 /// Encode one float for the wire. Finite values go through [`Json`]'s
@@ -180,6 +221,16 @@ pub fn encode_summary(s: &WorkerSummary) -> String {
     .render()
 }
 
+/// Encode a worker-side failure report as a frame payload.
+pub fn encode_error(machine: usize, message: &str) -> String {
+    json::obj(vec![
+        ("type", Json::Str("error".into())),
+        ("machine", Json::Num(machine as f64)),
+        ("message", Json::Str(message.into())),
+    ])
+    .render()
+}
+
 impl WireMsg {
     pub fn decode(text: &str) -> Result<WireMsg> {
         let j = Json::parse(text)?;
@@ -200,6 +251,10 @@ impl WireMsg {
                 accept_rate: f64_from_wire(j.get("accept_rate")?)?,
                 wall_secs: f64_from_wire(j.get("wall_secs")?)?,
             })),
+            "error" => Ok(WireMsg::Error {
+                machine: j.get("machine")?.as_usize()?,
+                message: j.get("message")?.as_str()?.to_string(),
+            }),
             other => {
                 Err(Error::Parse(format!("unknown wire message type '{other}'")))
             }
@@ -275,6 +330,373 @@ impl WorkerManifest {
     }
 }
 
+/// A live channel to one worker executing one [`WorkerManifest`].
+/// Returned by [`Transport::connect`]; consumed by the leader-side
+/// scheduler, which reads messages until end-of-stream and then calls
+/// [`WorkerConnection::finish`].
+pub trait WorkerConnection: Send {
+    /// Next decoded message, or `None` at clean end-of-stream.
+    fn recv(&mut self) -> Result<Option<WireMsg>>;
+
+    /// Called once after a *clean* end-of-stream: verify the worker
+    /// finished successfully and surface its exit diagnostics (exit
+    /// status + stderr for child processes; nothing extra for sockets,
+    /// whose failures arrive in-band as [`WireMsg::Error`] frames).
+    /// Must not be called after a `recv` error — drop the connection
+    /// instead, which cancels the worker without blocking.
+    fn finish(&mut self) -> Result<()>;
+}
+
+/// A way to run [`WorkerManifest`]s on a pool of worker endpoints.
+///
+/// A transport exposes `slots()` concurrently usable endpoints; the
+/// leader's scheduler oversubscribes when the machine count M exceeds
+/// the slot count W by queueing the M manifests and assigning them to
+/// endpoints as they free up. Per-machine RNG streams come from the
+/// root seed (`root.split(m)`), never from the endpoint, so the
+/// retained draws are byte-identical to thread mode regardless of W,
+/// arrival order, or transport.
+pub trait Transport: Sync {
+    /// Short name for diagnostics ("pipe", "socket").
+    fn name(&self) -> &'static str;
+
+    /// Number of concurrently usable worker endpoints W.
+    fn slots(&self) -> usize;
+
+    /// Start executing `manifest` on endpoint `slot` (`0..slots()`).
+    /// `manifest_path` is the leader-side spill of the same manifest;
+    /// pipe workers receive it as `--manifest`, socket workers receive
+    /// the manifest itself as the connection's first frame.
+    fn connect(
+        &self,
+        slot: usize,
+        manifest: &WorkerManifest,
+        manifest_path: &Path,
+    ) -> Result<Box<dyn WorkerConnection>>;
+
+    /// Largest frame this transport accepts from a worker.
+    fn max_frame_bytes(&self) -> usize {
+        DEFAULT_MAX_FRAME_BYTES
+    }
+
+    /// Cancel every in-flight worker this transport has started — the
+    /// scheduler's fail-fast path, called once on the run's first
+    /// failure. Pipe children are killed outright; socket connections
+    /// are shut down, which makes the daemon's next draw write fail
+    /// and abort its chain. Default: nothing to cancel.
+    fn cancel_all(&self) {}
+}
+
+/// PR 2's process mode behind the [`Transport`] trait: every
+/// assignment spawns `<worker-bin> worker --manifest <path>` and reads
+/// its stdout frame stream. `slots` bounds how many children run at
+/// once — fewer slots than machines oversubscribes.
+pub struct PipeTransport {
+    worker_bin: PathBuf,
+    slots: usize,
+    max_frame_bytes: usize,
+    /// Every child this transport has spawned, shared with the
+    /// connections draining them, so [`Transport::cancel_all`] can kill
+    /// in-flight workers from the failing thread (killing closes the
+    /// child's stdout, which unblocks the sibling's frame read).
+    children: Mutex<Vec<Arc<Mutex<Child>>>>,
+}
+
+impl PipeTransport {
+    pub fn new(worker_bin: PathBuf, slots: usize) -> PipeTransport {
+        PipeTransport {
+            worker_bin,
+            slots: slots.max(1),
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            children: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Override the per-frame byte cap (satellite knob; the default
+    /// suits draws of any realistic dimension).
+    pub fn with_max_frame_bytes(mut self, bytes: usize) -> PipeTransport {
+        self.max_frame_bytes = bytes.max(1);
+        self
+    }
+}
+
+impl Transport for PipeTransport {
+    fn name(&self) -> &'static str {
+        "pipe"
+    }
+
+    fn slots(&self) -> usize {
+        self.slots
+    }
+
+    fn connect(
+        &self,
+        _slot: usize,
+        manifest: &WorkerManifest,
+        manifest_path: &Path,
+    ) -> Result<Box<dyn WorkerConnection>> {
+        let mut child = Command::new(&self.worker_bin)
+            .arg("worker")
+            .arg("--manifest")
+            .arg(manifest_path)
+            .stdin(Stdio::null())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .map_err(|e| {
+                Error::Runtime(format!(
+                    "spawning worker {} ({}): {e}",
+                    manifest.machine,
+                    self.worker_bin.display()
+                ))
+            })?;
+        let stdout = child.stdout.take().ok_or_else(|| {
+            Error::Runtime(format!(
+                "worker {}: no stdout pipe",
+                manifest.machine
+            ))
+        })?;
+        // Drain stderr concurrently from the start: a child that fills
+        // the OS pipe buffer with (say) a long panic backtrace would
+        // otherwise block in that write, never close stdout, and
+        // deadlock the leader inside read_frame.
+        let stderr_drain = child.stderr.take().map(|mut se| {
+            std::thread::spawn(move || {
+                let mut text = String::new();
+                se.read_to_string(&mut text).ok();
+                text
+            })
+        });
+        let child = Arc::new(Mutex::new(child));
+        self.children.lock().unwrap().push(Arc::clone(&child));
+        Ok(Box::new(PipeConnection {
+            machine: manifest.machine,
+            frames: FrameReader::with_max_frame(
+                BufReader::new(stdout),
+                self.max_frame_bytes,
+            ),
+            stderr_drain,
+            child,
+            reaped: false,
+        }))
+    }
+
+    fn max_frame_bytes(&self) -> usize {
+        self.max_frame_bytes
+    }
+
+    /// Kill every child spawned so far. Already-reaped children ignore
+    /// the kill; live ones exit, closing their stdout, so the threads
+    /// draining them fall out of `recv` and reap them.
+    fn cancel_all(&self) {
+        for child in self.children.lock().unwrap().iter() {
+            child.lock().unwrap().kill().ok();
+        }
+    }
+}
+
+struct PipeConnection {
+    machine: usize,
+    frames: FrameReader<BufReader<ChildStdout>>,
+    stderr_drain: Option<std::thread::JoinHandle<String>>,
+    /// Shared with the owning [`PipeTransport`]'s cancel registry.
+    child: Arc<Mutex<Child>>,
+    reaped: bool,
+}
+
+impl WorkerConnection for PipeConnection {
+    fn recv(&mut self) -> Result<Option<WireMsg>> {
+        match self.frames.read_frame()? {
+            Some(payload) => WireMsg::decode(&payload).map(Some),
+            None => Ok(None),
+        }
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        // Stdout hit EOF, so the child is exiting: collect what it said
+        // on stderr, then reap.
+        let stderr_text = self
+            .stderr_drain
+            .take()
+            .and_then(|h| h.join().ok())
+            .unwrap_or_default();
+        let status = self.child.lock().unwrap().wait().map_err(|e| {
+            Error::Runtime(format!("worker {}: wait: {e}", self.machine))
+        })?;
+        self.reaped = true;
+        if !status.success() {
+            return Err(Error::Runtime(format!(
+                "worker {} exited with {status}: {}",
+                self.machine,
+                stderr_text.trim()
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl Drop for PipeConnection {
+    /// Dropped before a successful [`finish`](WorkerConnection::finish)
+    /// — i.e. on any leader-side error path — the child is cancelled
+    /// and reaped so a failing run never leaks worker processes.
+    fn drop(&mut self) {
+        if !self.reaped {
+            let mut child = self.child.lock().unwrap();
+            child.kill().ok();
+            child.wait().ok();
+        }
+    }
+}
+
+/// Multi-host transport: every endpoint is a `repro serve --listen`
+/// worker daemon. Each assignment opens a fresh TCP connection to the
+/// endpoint, sends the [`WorkerManifest`] as the first frame, and
+/// reads [`WireMsg`] frames back until the daemon closes the
+/// connection after its summary frame.
+///
+/// The manifest's `shard_path` is resolved on the *daemon's*
+/// filesystem, so leader and daemons must share one (same host, NFS,
+/// or a pre-distributed spill directory).
+pub struct SocketTransport {
+    addrs: Vec<String>,
+    max_frame_bytes: usize,
+    /// Clones of every in-flight connection's stream, shared so
+    /// [`Transport::cancel_all`] can shut them down from the failing
+    /// thread: the blocked reader sees EOF, and the daemon's next draw
+    /// write fails, aborting its chain.
+    live: Mutex<Vec<TcpStream>>,
+}
+
+impl SocketTransport {
+    /// One endpoint per address (`host:port`). Rejects an empty list.
+    pub fn new(addrs: Vec<String>) -> Result<SocketTransport> {
+        if addrs.is_empty() {
+            return Err(Error::Config(
+                "socket transport needs at least one worker address".into(),
+            ));
+        }
+        Ok(SocketTransport {
+            addrs,
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            live: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Parse a comma-separated `host:port,host:port,…` list (the
+    /// `--workers` CLI flag / `workers` config key).
+    pub fn from_spec(spec: &str) -> Result<SocketTransport> {
+        SocketTransport::new(
+            spec.split(',')
+                .map(|a| a.trim().to_string())
+                .filter(|a| !a.is_empty())
+                .collect(),
+        )
+    }
+
+    /// Override the per-frame byte cap.
+    pub fn with_max_frame_bytes(mut self, bytes: usize) -> SocketTransport {
+        self.max_frame_bytes = bytes.max(1);
+        self
+    }
+}
+
+impl Transport for SocketTransport {
+    fn name(&self) -> &'static str {
+        "socket"
+    }
+
+    fn slots(&self) -> usize {
+        self.addrs.len()
+    }
+
+    fn connect(
+        &self,
+        slot: usize,
+        manifest: &WorkerManifest,
+        _manifest_path: &Path,
+    ) -> Result<Box<dyn WorkerConnection>> {
+        let addr = &self.addrs[slot];
+        // Bound the dial: an unroutable endpoint should fail the run,
+        // not hang it. (A merely *busy* daemon still accepts promptly —
+        // the OS completes the handshake into the listen backlog.)
+        // Reads stay unbounded on purpose: a worker legitimately emits
+        // no frames for the whole burn-in stretch.
+        let sock_addr = addr
+            .to_socket_addrs()
+            .map_err(|e| {
+                Error::Runtime(format!(
+                    "resolving worker address {addr}: {e}"
+                ))
+            })?
+            .next()
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "worker address {addr} resolved to nothing"
+                ))
+            })?;
+        let stream =
+            TcpStream::connect_timeout(&sock_addr, CONNECT_TIMEOUT)
+                .map_err(|e| {
+                    Error::Runtime(format!(
+                        "connecting to worker {addr} for machine {}: {e}",
+                        manifest.machine
+                    ))
+                })?;
+        stream.set_nodelay(true).ok();
+        let mut writer = stream.try_clone().map_err(Error::Io)?;
+        write_frame(&mut writer, &manifest.to_json().render()).map_err(
+            |e| {
+                Error::Runtime(format!(
+                    "sending manifest for machine {} to {addr}: {e}",
+                    manifest.machine
+                ))
+            },
+        )?;
+        self.live
+            .lock()
+            .unwrap()
+            .push(stream.try_clone().map_err(Error::Io)?);
+        Ok(Box::new(SocketConnection {
+            frames: FrameReader::with_max_frame(
+                BufReader::new(stream),
+                self.max_frame_bytes,
+            ),
+        }))
+    }
+
+    fn max_frame_bytes(&self) -> usize {
+        self.max_frame_bytes
+    }
+
+    /// Shut down every connection opened so far; already-closed ones
+    /// ignore it. In-flight daemons abort their chains at the next
+    /// failed draw write.
+    fn cancel_all(&self) {
+        for stream in self.live.lock().unwrap().iter() {
+            stream.shutdown(Shutdown::Both).ok();
+        }
+    }
+}
+
+struct SocketConnection {
+    frames: FrameReader<BufReader<TcpStream>>,
+}
+
+impl WorkerConnection for SocketConnection {
+    fn recv(&mut self) -> Result<Option<WireMsg>> {
+        match self.frames.read_frame()? {
+            Some(payload) => WireMsg::decode(&payload).map(Some),
+            None => Ok(None),
+        }
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        // A clean close after the summary frame is the daemon's whole
+        // success signal; failures arrive in-band as error frames.
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -299,15 +721,76 @@ mod tests {
     }
 
     #[test]
-    fn frame_reader_rejects_garbage() {
+    fn frame_reader_rejects_garbage_with_structured_errors() {
+        use crate::error::FrameError;
+        // Corrupt (non-decimal) length prefix.
         let mut r = FrameReader::new(BufReader::new(&b"notalen\nxx\n"[..]));
-        assert!(r.read_frame().is_err());
-        // Length longer than the remaining stream → io error.
+        assert!(matches!(
+            r.read_frame().unwrap_err(),
+            Error::Frame(FrameError::BadPrefix(_))
+        ));
+        // Length longer than the remaining stream → truncated payload,
+        // not a generic io error.
         let mut r = FrameReader::new(BufReader::new(&b"100\nshort\n"[..]));
-        assert!(r.read_frame().is_err());
+        assert!(matches!(
+            r.read_frame().unwrap_err(),
+            Error::Frame(FrameError::TruncatedPayload { expected: 100 })
+        ));
         // Payload not followed by newline.
         let mut r = FrameReader::new(BufReader::new(&b"2\nabX"[..]));
-        assert!(r.read_frame().is_err());
+        assert!(matches!(
+            r.read_frame().unwrap_err(),
+            Error::Frame(FrameError::MissingNewline)
+        ));
+    }
+
+    /// The frame cap is a per-reader (transport-level) parameter, and an
+    /// oversized prefix reports both the declared length and the cap.
+    #[test]
+    fn frame_cap_is_a_reader_parameter() {
+        use crate::error::FrameError;
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, "twelve bytes").unwrap();
+        // Under the default cap the frame reads fine…
+        let mut r = FrameReader::new(BufReader::new(buf.as_slice()));
+        assert_eq!(r.read_frame().unwrap().unwrap(), "twelve bytes");
+        // …but a transport configured with a smaller cap rejects it
+        // with a structured, diagnosable error.
+        let mut r =
+            FrameReader::with_max_frame(BufReader::new(buf.as_slice()), 8);
+        match r.read_frame().unwrap_err() {
+            Error::Frame(FrameError::Oversized { len, max }) => {
+                assert_eq!(len, 12);
+                assert_eq!(max, 8);
+            }
+            other => panic!("wrong error {other:?}"),
+        }
+    }
+
+    /// A stream that dies after N well-formed draw frames yields those
+    /// N draws and then a structured truncation error — the leader can
+    /// report exactly where the worker went silent.
+    #[test]
+    fn early_eof_after_n_draws_is_structured() {
+        use crate::error::FrameError;
+        let mut buf: Vec<u8> = Vec::new();
+        for i in 0..3 {
+            write_frame(&mut buf, &encode_draw(&draw(0, vec![i as f64], false)))
+                .unwrap();
+        }
+        buf.extend_from_slice(b"17"); // prefix cut off mid-line
+        let mut r = FrameReader::new(BufReader::new(buf.as_slice()));
+        for _ in 0..3 {
+            let payload = r.read_frame().unwrap().unwrap();
+            assert!(matches!(
+                WireMsg::decode(&payload).unwrap(),
+                WireMsg::Draw(_)
+            ));
+        }
+        assert!(matches!(
+            r.read_frame().unwrap_err(),
+            Error::Frame(FrameError::TruncatedPrefix)
+        ));
     }
 
     /// A non-frame stream (e.g. `--worker-bin` pointing at a chatty
@@ -381,6 +864,60 @@ mod tests {
     fn decode_rejects_unknown_type() {
         assert!(WireMsg::decode("{\"type\":\"nope\"}").is_err());
         assert!(WireMsg::decode("not json").is_err());
+    }
+
+    #[test]
+    fn error_frame_roundtrips() {
+        let payload = encode_error(4, "shard missing: /tmp/shard_4.bin");
+        match WireMsg::decode(&payload).unwrap() {
+            WireMsg::Error { machine, message } => {
+                assert_eq!(machine, 4);
+                assert!(message.contains("shard missing"));
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn socket_transport_spec_parsing() {
+        let t = SocketTransport::from_spec(
+            "127.0.0.1:7001, 127.0.0.1:7002 ,,",
+        )
+        .unwrap();
+        assert_eq!(t.slots(), 2);
+        assert_eq!(t.name(), "socket");
+        assert!(SocketTransport::from_spec("  ,, ").is_err());
+    }
+
+    /// Dialing a dead endpoint surfaces a connect error naming both the
+    /// address and the machine, not a bare io error.
+    #[test]
+    fn socket_transport_connect_failure_is_diagnosable() {
+        // Bind-then-drop to get a port with (very likely) no listener.
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let t = SocketTransport::from_spec(&dead).unwrap();
+        let m = WorkerManifest {
+            machine: 1,
+            machines: 2,
+            seed: 3,
+            samples: 4,
+            burn_in: 0,
+            thin: 1,
+            prior_weight: 0.5,
+            sampler: "rwm:1".into(),
+            shard_path: "/tmp/none".into(),
+            dim: 1,
+        };
+        let err =
+            t.connect(0, &m, Path::new("/tmp/none.json")).unwrap_err();
+        let text = err.to_string();
+        assert!(
+            text.contains("connecting to worker") && text.contains(&dead),
+            "{text}"
+        );
     }
 
     #[test]

@@ -53,13 +53,18 @@ pub fn run_worker(
             if let Some(tx) = tx {
                 let _ = tx.send(msg.clone());
             }
+            true
         },
     )
 }
 
 /// [`run_worker`] with a caller-supplied sink for the streamed draws —
 /// the process-mode worker writes each message straight onto its stdout
-/// frame stream instead of into an in-process channel.
+/// frame stream instead of into an in-process channel. `emit` returns
+/// whether to keep sampling: a `false` (the sink's peer is gone and the
+/// rest of the chain would be dead compute — e.g. a socket worker
+/// daemon whose leader hung up) aborts the chain immediately, returning
+/// the draws retained so far.
 #[allow(clippy::too_many_arguments)]
 pub fn run_worker_with(
     machine: usize,
@@ -69,7 +74,7 @@ pub fn run_worker_with(
     burn_in: usize,
     thin: usize,
     mut rng: Pcg64,
-    emit: &mut dyn FnMut(&DrawMsg),
+    emit: &mut dyn FnMut(&DrawMsg) -> bool,
 ) -> SubposteriorSamples {
     let start = Instant::now();
     let dim = target.dim();
@@ -90,6 +95,7 @@ pub fn run_worker_with(
     let mut accepts = 0usize;
     let mut post = 0usize;
 
+    let mut aborted = false;
     for i in 0..total {
         // Freeze adaptation before the first post-burn-in step — also
         // when `burn_in == 0`, where the retained draws start at i = 0
@@ -107,18 +113,21 @@ pub fn run_worker_with(
                 let elapsed = start.elapsed().as_secs_f64();
                 samples.push(&state.theta);
                 draw_times.push(elapsed);
-                emit(&DrawMsg {
+                let keep_going = emit(&DrawMsg {
                     machine,
                     theta: state.theta.clone(),
                     elapsed,
                     last: samples.len() == n_samples,
                 });
+                if !keep_going {
+                    aborted = true;
+                    break;
+                }
             }
         }
     }
-    assert_eq!(
-        samples.len(),
-        n_samples,
+    assert!(
+        aborted || samples.len() == n_samples,
         "tightened loop bound must retain exactly n_samples draws"
     );
 

@@ -1,6 +1,18 @@
 //! CSV I/O for sample matrices and experiment result tables, plus the
-//! JSON shard spill/load pair process-mode workers exchange with the
-//! leader.
+//! shard spill/load pair process- and socket-mode workers exchange with
+//! the leader — in two formats:
+//!
+//! * **JSON** ([`write_shard_json`]): human-readable, shortest-
+//!   round-trip float rendering (PR 2's format).
+//! * **Binary** ([`write_shard_bin`]): 8-byte magic, a one-byte model
+//!   tag, little-endian `u64` dims header, then raw little-endian `f64`
+//!   rows — no float↔decimal conversion at all, so very large N shards
+//!   spill and load at memcpy speed and round-trip trivially
+//!   bit-exactly (including non-finite values).
+//!
+//! [`read_shard`] autodetects the format from the magic, so workers
+//! never need to be told which one the leader chose
+//! (`shard_format` config key).
 
 use crate::data::Dataset;
 use crate::error::{Error, Result};
@@ -8,6 +20,10 @@ use crate::runtime::json::{self, Json};
 use crate::types::SampleMatrix;
 use std::io::Write;
 use std::path::Path;
+
+/// Magic prefix of the binary shard format, version 1. Also the
+/// autodetection token: JSON shards start with `{`, never `R`.
+pub const SHARD_MAGIC: &[u8; 8] = b"RPSHRD1\n";
 
 /// Write a sample matrix as CSV with `d0,d1,...` headers.
 pub fn write_samples_csv(path: &Path, samples: &SampleMatrix) -> Result<()> {
@@ -76,6 +92,309 @@ pub fn write_shard_json(path: &Path, data: &Dataset) -> Result<()> {
 pub fn read_shard_json(path: &Path) -> Result<Dataset> {
     let text = std::fs::read_to_string(path)?;
     shard_from_json(&Json::parse(&text)?)
+}
+
+/// On-disk shard spill format (`shard_format` config key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardFormat {
+    /// Human-readable JSON with shortest-round-trip floats.
+    #[default]
+    Json,
+    /// Magic + dims header + raw little-endian `f64` payload.
+    Binary,
+}
+
+impl ShardFormat {
+    pub fn parse(s: &str) -> Result<ShardFormat> {
+        match s.trim() {
+            "json" => Ok(ShardFormat::Json),
+            "binary" | "bin" => Ok(ShardFormat::Binary),
+            other => Err(Error::Config(format!(
+                "unknown shard format '{other}' (expected json | binary)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardFormat::Json => "json",
+            ShardFormat::Binary => "binary",
+        }
+    }
+
+    /// File extension used for spills in this format.
+    pub fn extension(&self) -> &'static str {
+        match self {
+            ShardFormat::Json => "json",
+            ShardFormat::Binary => "bin",
+        }
+    }
+}
+
+/// Spill a shard in the requested format.
+pub fn write_shard(
+    path: &Path,
+    data: &Dataset,
+    format: ShardFormat,
+) -> Result<()> {
+    match format {
+        ShardFormat::Json => write_shard_json(path, data),
+        ShardFormat::Binary => write_shard_bin(path, data),
+    }
+}
+
+/// Load a shard spilled in either format, autodetected from the magic.
+pub fn read_shard(path: &Path) -> Result<Dataset> {
+    let bytes = std::fs::read(path)?;
+    if bytes.starts_with(SHARD_MAGIC) {
+        shard_from_bin(&bytes)
+    } else {
+        let text = std::str::from_utf8(&bytes).map_err(|_| {
+            Error::Parse(format!(
+                "shard {} is neither binary (bad magic) nor JSON (not \
+                 utf-8)",
+                path.display()
+            ))
+        })?;
+        shard_from_json(&Json::parse(text)?)
+    }
+}
+
+/// Spill a dataset in the binary shard format (see the module docs for
+/// the layout). Bit-exact by construction: every `f64` is written as
+/// its little-endian bytes.
+pub fn write_shard_bin(path: &Path, data: &Dataset) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, shard_to_bin(data))?;
+    Ok(())
+}
+
+/// Load a dataset spilled by [`write_shard_bin`].
+pub fn read_shard_bin(path: &Path) -> Result<Dataset> {
+    shard_from_bin(&std::fs::read(path)?)
+}
+
+/// Binary model tags (byte 8 of the file). Append-only: new models get
+/// new tags, existing tags never change meaning.
+const TAG_GAUSSIAN: u8 = 0;
+const TAG_LOGISTIC: u8 = 1;
+const TAG_GMM: u8 = 2;
+const TAG_POISSON_GAMMA: u8 = 3;
+const TAG_LINREG: u8 = 4;
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Length-prefixed f64 vector.
+fn put_f64s(buf: &mut Vec<u8>, vs: &[f64]) {
+    put_u64(buf, vs.len() as u64);
+    for &v in vs {
+        put_f64(buf, v);
+    }
+}
+
+/// Matrix header is `dim, rows` (so a reader can size-check the payload
+/// before allocating), then the flat row-major buffer.
+fn put_matrix(buf: &mut Vec<u8>, x: &SampleMatrix) {
+    put_u64(buf, x.dim() as u64);
+    put_u64(buf, x.len() as u64);
+    for &v in x.as_slice() {
+        put_f64(buf, v);
+    }
+}
+
+fn shard_to_bin(data: &Dataset) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(SHARD_MAGIC);
+    match data {
+        Dataset::Gaussian { x, lik_prec, prior_prec } => {
+            buf.push(TAG_GAUSSIAN);
+            put_matrix(&mut buf, x);
+            put_f64(&mut buf, *lik_prec);
+            put_f64(&mut buf, *prior_prec);
+        }
+        Dataset::Logistic { x, y, prior_prec } => {
+            buf.push(TAG_LOGISTIC);
+            put_matrix(&mut buf, x);
+            put_f64s(&mut buf, y);
+            put_f64(&mut buf, *prior_prec);
+        }
+        Dataset::Gmm { x, logw, inv_var, prior_prec } => {
+            buf.push(TAG_GMM);
+            put_matrix(&mut buf, x);
+            put_f64s(&mut buf, logw);
+            put_f64(&mut buf, *inv_var);
+            put_f64(&mut buf, *prior_prec);
+        }
+        Dataset::PoissonGamma { xs, ts, lam, alpha, beta_p } => {
+            buf.push(TAG_POISSON_GAMMA);
+            put_f64s(&mut buf, xs);
+            put_f64s(&mut buf, ts);
+            put_f64(&mut buf, *lam);
+            put_f64(&mut buf, *alpha);
+            put_f64(&mut buf, *beta_p);
+        }
+        Dataset::LinReg { x, y, lik_prec, prior_prec } => {
+            buf.push(TAG_LINREG);
+            put_matrix(&mut buf, x);
+            put_f64s(&mut buf, y);
+            put_f64(&mut buf, *lik_prec);
+            put_f64(&mut buf, *prior_prec);
+        }
+    }
+    buf
+}
+
+/// Bounds-checked cursor over a binary shard. Every length is verified
+/// against the remaining bytes *before* any allocation, so a corrupt
+/// header cannot trigger a huge `Vec` reservation.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).ok_or_else(|| {
+            Error::Parse("binary shard: length overflow".into())
+        })?;
+        if end > self.buf.len() {
+            return Err(Error::Parse(format!(
+                "binary shard truncated: wanted {n} bytes at offset {}, \
+                 have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<usize> {
+        let b: [u8; 8] = self.take(8)?.try_into().unwrap();
+        let v = u64::from_le_bytes(b);
+        usize::try_from(v).map_err(|_| {
+            Error::Parse(format!("binary shard: count {v} exceeds usize"))
+        })
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        let b: [u8; 8] = self.take(8)?.try_into().unwrap();
+        Ok(f64::from_le_bytes(b))
+    }
+
+    fn f64_vec(&mut self, n: usize) -> Result<Vec<f64>> {
+        let bytes = n.checked_mul(8).ok_or_else(|| {
+            Error::Parse("binary shard: length overflow".into())
+        })?;
+        let raw = self.take(bytes)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.u64()?;
+        self.f64_vec(n)
+    }
+
+    fn matrix(&mut self) -> Result<SampleMatrix> {
+        let dim = self.u64()?;
+        let rows = self.u64()?;
+        let n = dim.checked_mul(rows).ok_or_else(|| {
+            Error::Parse("binary shard: matrix size overflow".into())
+        })?;
+        if dim == 0 {
+            return Err(Error::Parse(
+                "binary shard: zero-dim matrix".into(),
+            ));
+        }
+        SampleMatrix::from_rows(self.f64_vec(n)?, dim)
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(Error::Parse(format!(
+                "binary shard: {} trailing bytes after payload",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn shard_from_bin(bytes: &[u8]) -> Result<Dataset> {
+    let mut cur = Cur { buf: bytes, pos: 0 };
+    if cur.take(SHARD_MAGIC.len())? != SHARD_MAGIC {
+        return Err(Error::Parse(
+            "binary shard: bad magic (not a shard file, or an \
+             unsupported version)"
+                .into(),
+        ));
+    }
+    let tag = cur.u8()?;
+    let data = match tag {
+        TAG_GAUSSIAN => Dataset::Gaussian {
+            x: cur.matrix()?,
+            lik_prec: cur.f64()?,
+            prior_prec: cur.f64()?,
+        },
+        TAG_LOGISTIC => {
+            let x = cur.matrix()?;
+            let y = cur.f64s()?;
+            check_len("y", y.len(), x.len())?;
+            Dataset::Logistic { x, y, prior_prec: cur.f64()? }
+        }
+        TAG_GMM => Dataset::Gmm {
+            x: cur.matrix()?,
+            logw: cur.f64s()?,
+            inv_var: cur.f64()?,
+            prior_prec: cur.f64()?,
+        },
+        TAG_POISSON_GAMMA => {
+            let xs = cur.f64s()?;
+            let ts = cur.f64s()?;
+            check_len("ts", ts.len(), xs.len())?;
+            Dataset::PoissonGamma {
+                xs,
+                ts,
+                lam: cur.f64()?,
+                alpha: cur.f64()?,
+                beta_p: cur.f64()?,
+            }
+        }
+        TAG_LINREG => {
+            let x = cur.matrix()?;
+            let y = cur.f64s()?;
+            check_len("y", y.len(), x.len())?;
+            Dataset::LinReg {
+                x,
+                y,
+                lik_prec: cur.f64()?,
+                prior_prec: cur.f64()?,
+            }
+        }
+        other => {
+            return Err(Error::Parse(format!(
+                "binary shard: unknown model tag {other}"
+            )))
+        }
+    };
+    cur.done()?;
+    Ok(data)
 }
 
 fn matrix_to_json(x: &SampleMatrix) -> Json {
@@ -334,6 +653,115 @@ mod tests {
         .unwrap();
         assert!(read_shard_json(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Acceptance gate for the binary spill format: `write_shard_bin →
+    /// read_shard` reproduces every model's shard bit-exactly, and the
+    /// same loader autodetects JSON spills of the same shard.
+    #[test]
+    fn shard_bin_roundtrips_every_model_and_autodetects() {
+        use crate::data::synth;
+        let dir = std::env::temp_dir().join("repro_shard_bin_test");
+        let idx: Vec<usize> = (5..37).collect();
+        let datasets = [
+            synth::gaussian(60, 2, 1),
+            synth::logistic(60, 3, 2),
+            synth::gmm(60, 2, 2, 4.0, 3),
+            synth::poisson_gamma(60, 4),
+            synth::linreg(60, 2, 5),
+        ];
+        for (i, ds) in datasets.iter().enumerate() {
+            let shard = ds.select(&idx).unwrap();
+            let bin_path = dir.join(format!("shard_{i}.bin"));
+            write_shard(&bin_path, &shard, ShardFormat::Binary).unwrap();
+            let back = read_shard(&bin_path).unwrap();
+            // Debug formatting prints floats with shortest-round-trip
+            // digits, so equal strings ⇔ bit-identical contents.
+            assert_eq!(
+                format!("{shard:?}"),
+                format!("{back:?}"),
+                "{} shard diverged through the binary format",
+                ds.model_name()
+            );
+            // The JSON spill of the same shard loads through the same
+            // autodetecting entry point.
+            let json_path = dir.join(format!("shard_{i}.json"));
+            write_shard(&json_path, &shard, ShardFormat::Json).unwrap();
+            let back = read_shard(&json_path).unwrap();
+            assert_eq!(format!("{shard:?}"), format!("{back:?}"));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Non-finite values have no JSON number form but are ordinary bit
+    /// patterns in the binary format.
+    #[test]
+    fn shard_bin_preserves_nonfinite_values() {
+        let dir = std::env::temp_dir().join("repro_shard_bin_nonfinite");
+        let mut x = SampleMatrix::new(2);
+        x.push(&[f64::INFINITY, -0.0]);
+        x.push(&[f64::NEG_INFINITY, f64::NAN]);
+        let shard = Dataset::Gaussian { x, lik_prec: 1.0, prior_prec: 0.5 };
+        let path = dir.join("weird.bin");
+        write_shard_bin(&path, &shard).unwrap();
+        let back = read_shard_bin(&path).unwrap();
+        let Dataset::Gaussian { x, .. } = &back else {
+            panic!("wrong model")
+        };
+        assert_eq!(x.row(0)[0], f64::INFINITY);
+        assert_eq!(x.row(0)[1].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(x.row(1)[0], f64::NEG_INFINITY);
+        assert!(x.row(1)[1].is_nan());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_bin_rejects_corruption_without_overallocating() {
+        let dir = std::env::temp_dir().join("repro_shard_bin_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut x = SampleMatrix::new(1);
+        x.push(&[1.0]);
+        let shard = Dataset::Gaussian { x, lik_prec: 1.0, prior_prec: 1.0 };
+        let path = dir.join("s.bin");
+        write_shard_bin(&path, &shard).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // Truncated mid-payload.
+        assert!(shard_from_bin(&good[..good.len() - 4]).is_err());
+        // Unknown model tag.
+        let mut bad = good.clone();
+        bad[SHARD_MAGIC.len()] = 99;
+        assert!(shard_from_bin(&bad).is_err());
+        // Trailing bytes.
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(shard_from_bin(&bad).is_err());
+        // A row count claiming far more data than the file holds must
+        // fail the bounds check before allocating.
+        let mut bad = good.clone();
+        let rows_off = SHARD_MAGIC.len() + 1 + 8; // magic + tag + dim
+        bad[rows_off..rows_off + 8]
+            .copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = shard_from_bin(&bad).unwrap_err();
+        assert!(err.to_string().contains("overflow"), "{err}");
+        // Bad magic routes JSON-ish text to the JSON parser, which
+        // rejects it too.
+        std::fs::write(&path, b"not a shard at all").unwrap();
+        assert!(read_shard(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_format_parsing() {
+        assert_eq!(ShardFormat::parse("json").unwrap(), ShardFormat::Json);
+        assert_eq!(
+            ShardFormat::parse("binary").unwrap(),
+            ShardFormat::Binary
+        );
+        assert_eq!(ShardFormat::parse("bin").unwrap(), ShardFormat::Binary);
+        assert!(ShardFormat::parse("yaml").is_err());
+        assert_eq!(ShardFormat::Binary.extension(), "bin");
+        assert_eq!(ShardFormat::default(), ShardFormat::Json);
     }
 
     #[test]

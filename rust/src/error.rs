@@ -23,6 +23,67 @@ pub enum Error {
     Io(std::io::Error),
     /// JSON / config parse error (manifest, CLI, config files).
     Parse(String),
+    /// Length-prefixed frame protocol violation (worker streams). Kept
+    /// structured so leaders and socket peers can tell a corrupt prefix
+    /// from an oversized frame from a mid-payload truncation.
+    Frame(FrameError),
+}
+
+/// Structured frame-protocol failures (see `coordinator::transport`).
+#[derive(Debug)]
+pub enum FrameError {
+    /// Stream ended inside a length-prefix line.
+    TruncatedPrefix,
+    /// Length-prefix line exceeds the longest valid `usize` rendering —
+    /// the stream is not frame-framed at all.
+    PrefixTooLong { limit: usize },
+    /// Length-prefix line is not a decimal `usize`.
+    BadPrefix(String),
+    /// Declared payload length exceeds the transport's frame cap.
+    Oversized { len: usize, max: usize },
+    /// Stream ended before the declared payload length was read.
+    TruncatedPayload { expected: usize },
+    /// Payload not followed by the terminating newline.
+    MissingNewline,
+    /// Payload bytes are not UTF-8.
+    NotUtf8,
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::TruncatedPrefix => {
+                write!(f, "truncated frame length prefix")
+            }
+            FrameError::PrefixTooLong { limit } => write!(
+                f,
+                "frame length prefix too long (> {limit} bytes; not a \
+                 frame stream?)"
+            ),
+            FrameError::BadPrefix(p) => {
+                write!(f, "bad frame length prefix {p:?}")
+            }
+            FrameError::Oversized { len, max } => write!(
+                f,
+                "frame of {len} bytes exceeds the transport cap of {max} \
+                 bytes"
+            ),
+            FrameError::TruncatedPayload { expected } => write!(
+                f,
+                "frame truncated mid-payload (expected {expected} bytes)"
+            ),
+            FrameError::MissingNewline => {
+                write!(f, "frame missing trailing newline")
+            }
+            FrameError::NotUtf8 => write!(f, "frame payload is not utf-8"),
+        }
+    }
+}
+
+impl From<FrameError> for Error {
+    fn from(e: FrameError) -> Self {
+        Error::Frame(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
@@ -37,6 +98,7 @@ impl fmt::Display for Error {
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Frame(e) => write!(f, "frame protocol error: {e}"),
         }
     }
 }

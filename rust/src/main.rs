@@ -9,6 +9,9 @@
 //!   worker        (hidden) process-mode worker: load a shard manifest,
 //!                 sample, stream frames on stdout — spawned by
 //!                 `pipeline --process-mode true`, not by hand
+//!   serve         (hidden) socket-mode worker daemon: listen on TCP,
+//!                 accept a manifest frame per connection, stream the
+//!                 run back — dialed by `pipeline --workers a,b,…`
 //!
 //! Examples:
 //!   repro pipeline --model logistic --n 50000 --d 50 --machines 10 \
@@ -124,6 +127,24 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
             if let Some(w) = args.get("worker-bin") {
                 b = b.worker_bin(w);
             }
+            if let Some(w) = args.get("workers") {
+                b = b.workers(w);
+            }
+            if let Some(w) = args.get("worker-slots") {
+                b = b.worker_slots(w.parse().map_err(|_| {
+                    Error::Config(format!("bad --worker-slots: {w}"))
+                })?);
+            }
+            if let Some(f) = args.get("shard-format") {
+                b = b.shard_format(io::ShardFormat::parse(f)?);
+            }
+            if let Some(m) = args.get("combine-cache-budget-mb") {
+                b = b.combine_cache_budget_mb(m.parse().map_err(|_| {
+                    Error::Config(format!(
+                        "bad --combine-cache-budget-mb: {m}"
+                    ))
+                })?);
+            }
             if let Some(d) = args.get("artifacts") {
                 b = b.artifact_dir(d);
             }
@@ -144,7 +165,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     );
     let out = if cfg.use_runtime {
         run_runtime_pipeline(&cfg, &data)?
-    } else if cfg.process_mode {
+    } else if cfg.process_mode || !cfg.workers.is_empty() {
         pipeline::run_process(&cfg, &data)?
     } else {
         pipeline::run_native(&cfg, &data)?
@@ -257,78 +278,47 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 /// Hidden process-mode worker (spawned by `pipeline --process-mode
-/// true`): load the manifest + spilled shard, derive the same
-/// `root.split(m)` RNG stream the in-thread path uses, sample, and
-/// stream each draw as a length-prefixed ndjson frame on stdout,
-/// followed by one summary frame. Errors go to stderr + a non-zero
-/// exit; the leader attaches them to the failing machine.
+/// true`): load the manifest, then run the shared manifest-execution
+/// path (`coordinator::serve::run_manifest` — the same code socket
+/// daemons run), streaming each frame onto stdout. Errors go to stderr
+/// + a non-zero exit; the leader attaches them to the failing machine.
 fn cmd_worker(args: &Args) -> Result<()> {
-    use repro::coordinator::transport::{
-        encode_draw, encode_summary, write_frame, WorkerManifest,
-        WorkerSummary,
-    };
-    use repro::coordinator::worker::{run_worker_with, DrawMsg};
-    use repro::rng::Pcg64;
+    use repro::coordinator::serve::run_manifest;
+    use repro::coordinator::transport::{write_frame, WorkerManifest};
 
     let manifest_path = args
         .get("manifest")
         .ok_or_else(|| Error::Config("worker needs --manifest".into()))?;
     let wm = WorkerManifest::load(Path::new(manifest_path))?;
-    if wm.machine >= wm.machines {
-        return Err(Error::Config(format!(
-            "machine {} out of range ({} machines)",
-            wm.machine, wm.machines
-        )));
-    }
-    let data = io::read_shard_json(Path::new(&wm.shard_path))?;
-    let idx: Vec<usize> = (0..data.len()).collect();
-    let target = data.subposterior(&idx, wm.prior_weight)?;
-    if target.dim() != wm.dim {
-        return Err(Error::Config(format!(
-            "shard dim {} != manifest dim {}",
-            target.dim(),
-            wm.dim
-        )));
-    }
-
-    // Same stream derivation as the in-thread path: split 0..machines
-    // off the root generator sequentially, keep stream m.
-    let mut root = Pcg64::seed_from(wm.seed);
-    let rng = root.split_n(wm.machines).swap_remove(wm.machine);
-    let sampler = repro::config::parse_sampler(&wm.sampler)?
-        .build(target.dim());
-
     let stdout = std::io::stdout();
     let mut out = std::io::BufWriter::new(stdout.lock());
     let machine = wm.machine;
-    let result = run_worker_with(
-        wm.machine,
-        target.as_ref(),
-        sampler,
-        wm.samples,
-        wm.burn_in,
-        wm.thin,
-        rng,
-        &mut |msg: &DrawMsg| {
-            if let Err(e) = write_frame(&mut out, &encode_draw(msg)) {
-                // The frame stream is this process's only output: with
-                // the pipe gone (leader died or canceled the run) the
-                // rest of the chain is wasted work — bail out now
-                // rather than sampling draws nobody will read.
-                eprintln!("worker {machine}: stdout stream closed: {e}");
-                std::process::exit(1);
-            }
-        },
-    );
-    write_frame(
-        &mut out,
-        &encode_summary(&WorkerSummary {
-            machine: wm.machine,
-            accept_rate: result.accept_rate,
-            wall_secs: result.wall_secs,
-        }),
-    )?;
-    Ok(())
+    run_manifest(&wm, &mut |frame: &str| -> std::io::Result<()> {
+        if let Err(e) = write_frame(&mut out, frame) {
+            // The frame stream is this process's only output: with the
+            // pipe gone (leader died or canceled the run) the rest of
+            // the chain is wasted work — bail out now rather than
+            // sampling draws nobody will read.
+            eprintln!("worker {machine}: stdout stream closed: {e}");
+            std::process::exit(1);
+        }
+        Ok(())
+    })
+}
+
+/// Hidden socket-mode worker daemon (dialed by `pipeline --workers`):
+/// bind `--listen`, print `LISTENING <addr>` (so `--listen host:0`
+/// ephemeral ports are discoverable), serve one manifest per
+/// connection. `--jobs N` exits after N jobs (0 = serve until killed).
+fn cmd_serve(args: &Args) -> Result<()> {
+    use repro::coordinator::serve::{serve, ServeOptions};
+    let listen = args.get("listen").unwrap_or("127.0.0.1:0");
+    let jobs = args.get_usize("jobs", 0)?;
+    let opts = ServeOptions {
+        max_jobs: if jobs == 0 { None } else { Some(jobs) },
+        ..Default::default()
+    };
+    serve(listen, &opts, &mut std::io::stdout())
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -355,8 +345,11 @@ fn usage() -> &'static str {
      \n\
      pipeline      --model M --n N --d D --machines M --samples T \\\n\
                    --method NAME --seed S [--threads K] \\\n\
-                   [--combine-threads K] [--out FILE] \\\n\
-                   [--process-mode true [--worker-bin PATH]] \\\n\
+                   [--combine-threads K] [--combine-cache-budget-mb MB] \\\n\
+                   [--out FILE] [--shard-format json|binary] \\\n\
+                   [--process-mode true [--worker-bin PATH] \\\n\
+                    [--worker-slots W]] \\\n\
+                   [--workers HOST:PORT,… (repro serve daemons)] \\\n\
                    [--use-runtime true --artifacts DIR] [--config FILE]\n\
      single-chain  --model M --n N --d D --samples T [--out FILE]\n\
      combine       --method NAME [--t T] [--combine-threads K] \\\n\
@@ -386,6 +379,8 @@ fn main() -> ExitCode {
         "info" => cmd_info(&args),
         // Hidden: spawned by `pipeline --process-mode true`.
         "worker" => cmd_worker(&args),
+        // Hidden: the socket-transport worker daemon.
+        "serve" => cmd_serve(&args),
         "help" | "--help" | "-h" => {
             println!("{}", usage());
             Ok(())

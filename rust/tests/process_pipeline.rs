@@ -7,6 +7,7 @@
 use repro::combine::CombineMethod;
 use repro::config::PipelineConfig;
 use repro::coordinator::pipeline;
+use repro::data::io::ShardFormat;
 use repro::data::synth;
 
 fn process_cfg(
@@ -102,6 +103,60 @@ fn process_mode_off_degrades_to_thread_path() {
     let out = pipeline::run_process(&c, &data).unwrap();
     assert_eq!(out.subposteriors.len(), 2);
     assert_eq!(out.combined.len(), 100);
+}
+
+/// Oversubscription: with fewer worker processes than machines
+/// (W ∈ {1, M/2}) the M manifests queue onto the W slots — and because
+/// machine m's RNG stream is `root.split(m)` regardless of which slot
+/// runs it, the output stays byte-identical to thread mode.
+#[test]
+fn oversubscribed_process_mode_is_byte_identical_to_thread_mode() {
+    let data = synth::gaussian(1_600, 2, 13);
+    let base = process_cfg("gaussian", 4, 150, CombineMethod::Semiparametric);
+    let mut tc = base.clone();
+    tc.process_mode = false;
+    let thread_out = pipeline::run_native(&tc, &data).unwrap();
+    for slots in [1usize, 2] {
+        let mut pc = base.clone();
+        pc.worker_slots = slots;
+        let proc_out = pipeline::run_process(&pc, &data).unwrap();
+        assert_byte_identical(&proc_out, &thread_out);
+    }
+}
+
+/// The binary shard spill format must be invisible to the output:
+/// workers autodetect it, and the draws stay byte-identical to thread
+/// mode (which never spills at all).
+#[test]
+fn binary_shard_format_is_byte_identical_to_thread_mode() {
+    let data = synth::logistic(1_000, 2, 29);
+    let mut pc = process_cfg("logistic", 3, 120, CombineMethod::Parametric);
+    pc.shard_format = ShardFormat::Binary;
+    pc.worker_slots = 2; // oversubscribe while we're at it
+    let proc_out = pipeline::run_process(&pc, &data).unwrap();
+    let mut tc = pc.clone();
+    tc.process_mode = false;
+    let thread_out = pipeline::run_native(&tc, &data).unwrap();
+    assert_byte_identical(&proc_out, &thread_out);
+}
+
+/// The run's scratch directory (shard + manifest spills) is owned by
+/// the output and removed when it drops — the tempdir contract.
+#[test]
+fn run_dir_spills_cleaned_up_with_output() {
+    let data = synth::gaussian(600, 1, 7);
+    let pc = process_cfg("gaussian", 2, 60, CombineMethod::Parametric);
+    let out = pipeline::run_process(&pc, &data).unwrap();
+    let dir = out
+        .run_dir
+        .as_ref()
+        .expect("process-mode output owns its run dir")
+        .path()
+        .to_path_buf();
+    assert!(dir.join("shard_0.json").is_file());
+    assert!(dir.join("worker_1.json").is_file());
+    drop(out);
+    assert!(!dir.exists(), "run dir must be removed with the output");
 }
 
 #[test]

@@ -1,0 +1,167 @@
+//! Socket-transport integration: spawns real `repro serve` worker
+//! daemons on localhost (cargo builds the binary and exports its path
+//! as `CARGO_BIN_EXE_repro`) and pins the acceptance criterion that
+//! for a fixed seed the retained draws are **byte-identical** across
+//! thread mode, pipe-transport process mode, and socket mode at any
+//! worker count W ∈ {1, M/2, M}.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+
+use repro::combine::CombineMethod;
+use repro::config::PipelineConfig;
+use repro::coordinator::pipeline;
+use repro::data::io::ShardFormat;
+use repro::data::synth;
+
+/// One `repro serve` daemon on an ephemeral localhost port; killed on
+/// drop so failing tests never leak daemons.
+struct Daemon {
+    child: Child,
+    addr: String,
+}
+
+impl Daemon {
+    fn spawn() -> Daemon {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_repro"))
+            .args(["serve", "--listen", "127.0.0.1:0"])
+            .stdin(Stdio::null())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning repro serve");
+        let stdout = child.stdout.take().unwrap();
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).unwrap();
+        let addr = line
+            .trim()
+            .strip_prefix("LISTENING ")
+            .unwrap_or_else(|| panic!("bad announce line {line:?}"))
+            .to_string();
+        Daemon { child, addr }
+    }
+
+    fn fleet(n: usize) -> (Vec<Daemon>, String) {
+        let daemons: Vec<Daemon> = (0..n).map(|_| Daemon::spawn()).collect();
+        let spec = daemons
+            .iter()
+            .map(|d| d.addr.as_str())
+            .collect::<Vec<_>>()
+            .join(",");
+        (daemons, spec)
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        self.child.kill().ok();
+        self.child.wait().ok();
+    }
+}
+
+fn assert_byte_identical(
+    a: &pipeline::PipelineOutput,
+    b: &pipeline::PipelineOutput,
+    label: &str,
+) {
+    assert_eq!(a.subposteriors.len(), b.subposteriors.len());
+    for (sa, sb) in a.subposteriors.iter().zip(&b.subposteriors) {
+        assert_eq!(
+            sa.samples.as_slice(),
+            sb.samples.as_slice(),
+            "{label}: machine {} draws diverged",
+            sa.machine
+        );
+        assert_eq!(sa.draw_times.len(), sa.samples.len());
+        assert!(sa.accept_rate.is_finite());
+    }
+    assert_eq!(
+        a.combined.as_slice(),
+        b.combined.as_slice(),
+        "{label}: combined output diverged"
+    );
+    assert_eq!(
+        a.metrics.scalars_transferred, b.metrics.scalars_transferred,
+        "{label}: leader must stream-ingest the same O(dTM) scalars"
+    );
+}
+
+/// The acceptance matrix: socket mode at W ∈ {1, M/2, M} for M = 4
+/// machines, each fleet compared byte-for-byte against thread mode and
+/// against pipe-transport process mode.
+#[test]
+fn socket_mode_is_byte_identical_at_any_worker_count() {
+    let data = synth::gaussian(1_600, 2, 23);
+    let base = PipelineConfig::builder("gaussian")
+        .machines(4)
+        .samples_per_machine(120)
+        .method(CombineMethod::Semiparametric)
+        .seed(41)
+        .build();
+
+    let thread_out = pipeline::run_native(&base, &data).unwrap();
+    let mut pc = base.clone();
+    pc.process_mode = true;
+    pc.worker_bin = env!("CARGO_BIN_EXE_repro").to_string();
+    let pipe_out = pipeline::run_process(&pc, &data).unwrap();
+    assert_byte_identical(&pipe_out, &thread_out, "pipe vs thread");
+
+    for w in [1usize, 2, 4] {
+        let (_daemons, spec) = Daemon::fleet(w);
+        let mut sc = base.clone();
+        sc.workers = spec;
+        let socket_out = pipeline::run_process(&sc, &data).unwrap();
+        assert_byte_identical(
+            &socket_out,
+            &thread_out,
+            &format!("socket W={w} vs thread"),
+        );
+    }
+}
+
+/// Socket mode with binary shard spills (the daemons autodetect the
+/// format from the magic) — also at W < M, so oversubscription and the
+/// binary format compose.
+#[test]
+fn socket_mode_with_binary_shards_matches_thread_mode() {
+    let data = synth::logistic(1_000, 2, 37);
+    let base = PipelineConfig::builder("logistic")
+        .machines(3)
+        .samples_per_machine(100)
+        .method(CombineMethod::Parametric)
+        .seed(53)
+        .shard_format(ShardFormat::Binary)
+        .build();
+    let thread_out = pipeline::run_native(&base, &data).unwrap();
+    let (_daemons, spec) = Daemon::fleet(2);
+    let mut sc = base.clone();
+    sc.workers = spec;
+    let socket_out = pipeline::run_process(&sc, &data).unwrap();
+    assert_byte_identical(&socket_out, &thread_out, "socket binary shards");
+}
+
+/// Dialing an endpoint nobody listens on must surface a connect error
+/// naming the address, not hang or panic.
+#[test]
+fn dead_socket_endpoint_surfaces_connect_error() {
+    let data = synth::gaussian(400, 1, 3);
+    // Bind-then-drop: a localhost port that (very likely) has no
+    // listener by the time the pipeline dials it.
+    let dead = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let mut c = PipelineConfig::builder("gaussian")
+        .machines(2)
+        .samples_per_machine(40)
+        .method(CombineMethod::Parametric)
+        .seed(5)
+        .build();
+    c.workers = dead.clone();
+    let err = pipeline::run_process(&c, &data).unwrap_err();
+    let text = err.to_string();
+    assert!(
+        text.contains("connecting to worker") && text.contains(&dead),
+        "error should name the dead endpoint, got: {text}"
+    );
+}
