@@ -214,6 +214,97 @@ fn main() -> repro::error::Result<()> {
         );
     }
 
+    // --- combine kernels: blocked vs naive log-density table -------------
+    // The tentpole gate for the kernel subsystem: the O(TMd²) table at
+    // M=8, d=24 (the same shape as the cache rows above) on both CPU
+    // backends. Byte-identity is asserted entry-by-entry, and the
+    // bench hard-fails if the blocked panels stop beating the scalar
+    // reference — CI's bench-smoke job runs this binary, so a kernel
+    // perf regression fails the build.
+    {
+        use repro::combine::GaussianEstimate;
+        use repro::kernel::{
+            BlockedCpuKernel, CombineKernel, NaiveKernel,
+        };
+        let (m, d, t_sub) = (8usize, 24usize, 2_000usize);
+        let mut rng = Pcg64::seed_from(23);
+        let sets: Vec<SampleMatrix> = (0..m)
+            .map(|_| {
+                Mvn::new(vec![0.0; d], Mat::identity(d))
+                    .unwrap()
+                    .sample_n(t_sub, &mut rng)
+            })
+            .collect();
+        let mvns: Vec<Mvn> = sets
+            .iter()
+            .map(|s| GaussianEstimate::fit(s).unwrap().mvn().unwrap())
+            .collect();
+        let naive = NaiveKernel;
+        let blocked = BlockedCpuKernel::default();
+        let table_pass = |k: &dyn CombineKernel| -> Vec<Vec<f64>> {
+            mvns.iter()
+                .zip(&sets)
+                .map(|(mvn, s)| k.logpdf_table(mvn, s).unwrap())
+                .collect()
+        };
+        let mut naive_tables = Vec::new();
+        let secs_naive = common::time_median(5, || {
+            naive_tables = table_pass(&naive);
+        });
+        let mut blocked_tables = Vec::new();
+        let secs_blocked = common::time_median(5, || {
+            blocked_tables = table_pass(&blocked);
+        });
+        for (mach, (a, b)) in
+            naive_tables.iter().zip(&blocked_tables).enumerate()
+        {
+            assert_eq!(a.len(), b.len());
+            for (t, (x, y)) in a.iter().zip(b).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "machine {mach} entry {t}: blocked table diverged"
+                );
+            }
+        }
+        let ops = m * t_sub;
+        row(
+            &format!("combine_table_naive_M{m}_d{d}"),
+            secs_naive,
+            ops,
+        );
+        row(
+            &format!("combine_table_blocked_M{m}_d{d}"),
+            secs_blocked,
+            ops,
+        );
+        let speedup = secs_naive / secs_blocked;
+        println!(
+            "blocked table kernel speedup (M={m}, d={d}, T={t_sub}): \
+             {speedup:.2}×"
+        );
+        records.push(common::BenchRecord {
+            name: format!("combine_table_M{m}_T{t_sub}_d{d}_naive"),
+            ns_per_op: secs_naive * 1e9,
+            threads: 1,
+            speedup: 1.0,
+        });
+        records.push(common::BenchRecord {
+            name: format!("combine_table_M{m}_T{t_sub}_d{d}_blocked"),
+            ns_per_op: secs_blocked * 1e9,
+            threads: 1,
+            speedup,
+        });
+        assert!(
+            secs_blocked < secs_naive,
+            "blocked table kernel ({}) must beat the naive reference \
+             ({}) on the M={m}/d={d} row — the panel kernel stopped \
+             paying for itself",
+            common::fmt_secs(secs_blocked),
+            common::fmt_secs(secs_naive)
+        );
+    }
+
     // --- combine end-to-end at working sizes -----------------------------
     let mut rng = Pcg64::seed_from(9);
     let sets: Vec<SampleMatrix> = (0..10)

@@ -37,9 +37,10 @@ pub use semiparametric::{
 };
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
+use crate::kernel::{default_kernel, CombineKernel, CombineKernelKind};
 use crate::rng::Pcg64;
 use crate::types::{SampleMatrix, SubposteriorSamples};
 
@@ -192,33 +193,99 @@ pub fn combine_sets_tuned(
     threads: usize,
     cache_budget_bytes: usize,
 ) -> Result<SampleMatrix> {
+    combine_sets_with(
+        method,
+        sets,
+        t_out,
+        seed,
+        &CombineTuning { threads, cache_budget_bytes, ..Default::default() },
+    )
+}
+
+/// Every combine-stage performance knob in one place: thread count,
+/// annealed-cache budget, and the compute-kernel backend
+/// ([`CombineKernelKind`]). None of them change results — the CPU
+/// backends are bit-identical by contract (`rust/tests/kernel_parity.rs`),
+/// and threads/budget only trade wall-clock/memory — so the struct can
+/// be threaded from config to combiner without touching the
+/// determinism story.
+#[derive(Debug, Clone)]
+pub struct CombineTuning {
+    /// Combine-stage worker threads (`0` = all cores).
+    pub threads: usize,
+    /// [`semiparametric::AnnealCache`] budget in bytes.
+    pub cache_budget_bytes: usize,
+    /// Compute-kernel backend for the dense combine ops.
+    pub kernel: CombineKernelKind,
+}
+
+impl Default for CombineTuning {
+    fn default() -> Self {
+        CombineTuning {
+            threads: 1,
+            cache_budget_bytes: DEFAULT_ANNEAL_CACHE_BUDGET,
+            kernel: CombineKernelKind::default(),
+        }
+    }
+}
+
+/// [`combine_tuned`] over a full [`CombineTuning`] — the pipeline's
+/// entry point, and the only one that can select a non-default
+/// compute-kernel backend.
+pub fn combine_with(
+    method: CombineMethod,
+    subs: &[SubposteriorSamples],
+    t_out: usize,
+    seed: u64,
+    tuning: &CombineTuning,
+) -> Result<SampleMatrix> {
+    let sets: Vec<&SampleMatrix> = subs.iter().map(|s| &s.samples).collect();
+    combine_sets_with(method, &sets, t_out, seed, tuning)
+}
+
+/// [`combine_sets_tuned`] over a full [`CombineTuning`]. The backend is
+/// instantiated once per call ([`CombineKernelKind::build`]), so an
+/// unavailable backend (e.g. `device` offline) fails fast with a
+/// structured error before any combine work runs.
+pub fn combine_sets_with(
+    method: CombineMethod,
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+    tuning: &CombineTuning,
+) -> Result<SampleMatrix> {
     validate_sets(sets)?;
-    let threads = resolve_threads(threads);
+    let threads = resolve_threads(tuning.threads);
+    let kernel = tuning.kernel.build()?;
     match method {
         CombineMethod::Parametric => parametric(sets, t_out, seed),
-        CombineMethod::Nonparametric => {
-            nonparametric::nonparametric_threaded(sets, t_out, seed, threads)
-        }
+        CombineMethod::Nonparametric => nonparametric::nonparametric_with(
+            sets, t_out, seed, threads, &kernel,
+        ),
         CombineMethod::Semiparametric => {
-            semiparametric::semiparametric_threaded_budgeted(
+            semiparametric::semiparametric_with(
                 sets,
                 t_out,
                 seed,
+                true,
                 threads,
-                cache_budget_bytes,
+                Some(tuning.cache_budget_bytes),
+                &kernel,
             )
         }
         CombineMethod::SemiparametricNw => {
-            semiparametric::semiparametric_nw_threaded_budgeted(
+            semiparametric::semiparametric_with(
                 sets,
                 t_out,
                 seed,
+                false,
                 threads,
-                cache_budget_bytes,
+                Some(tuning.cache_budget_bytes),
+                &kernel,
             )
         }
         CombineMethod::Pairwise => {
-            pairwise::pairwise_threaded(sets, t_out, seed, threads)
+            pairwise::pairwise_with(sets, t_out, seed, threads, &kernel)
         }
         CombineMethod::SubpostAvg => subpost_avg(sets, t_out, seed),
         CombineMethod::SubpostPool => Ok(subpost_pool(sets)?.take(t_out)),
@@ -387,27 +454,53 @@ pub struct CombineContext {
     /// `None` for combiners that don't use dense components, or for
     /// uncached reference runs.
     anneal: Option<semiparametric::AnnealCache>,
+    /// Compute-kernel backend for this combine call's dense ops —
+    /// installed at context build time (it already ran the norm pass)
+    /// and read by every chain for in-place factorization fallbacks.
+    kernel: Arc<dyn CombineKernel>,
 }
 
 impl CombineContext {
     /// Whiten all machines and cache per-draw squared norms, fanning the
-    /// per-machine work (O(Td) each) across `threads` workers.
+    /// per-machine work (O(Td) each) across `threads` workers, on the
+    /// reference compute kernel.
     pub fn prepare(sets: &[&SampleMatrix], threads: usize) -> Self {
+        Self::prepare_with(sets, threads, default_kernel())
+            .expect("the reference kernel's CPU ops are infallible")
+    }
+
+    /// [`CombineContext::prepare`] on an explicit compute-kernel
+    /// backend ([`crate::kernel`]): the norm cache is built through
+    /// `kernel.row_norms` and the kernel is installed into the context
+    /// for the chains' dense ops. CPU backends are bit-identical, so
+    /// the context contents do not depend on which one ran.
+    pub fn prepare_with(
+        sets: &[&SampleMatrix],
+        threads: usize,
+        kernel: Arc<dyn CombineKernel>,
+    ) -> Result<Self> {
         assert!(!sets.is_empty(), "no subposterior sample sets");
         let scales = whitening_scales(sets);
         let per_machine: Vec<(SampleMatrix, Vec<f64>)> =
             par_map_indexed(sets.len(), threads, |m| {
                 let w = whiten_one(sets[m], &scales);
-                let n = row_norms(&w);
-                (w, n)
-            });
+                let n = kernel.row_norms(&w)?;
+                Ok((w, n))
+            })
+            .into_iter()
+            .collect::<Result<_>>()?;
         let mut whitened = Vec::with_capacity(per_machine.len());
         let mut norms = Vec::with_capacity(per_machine.len());
         for (w, n) in per_machine {
             whitened.push(w);
             norms.push(n);
         }
-        CombineContext { sets: whitened, scales, norms, anneal: None }
+        Ok(CombineContext { sets: whitened, scales, norms, anneal: None, kernel })
+    }
+
+    /// The compute-kernel backend this context was built on.
+    pub fn kernel(&self) -> &dyn CombineKernel {
+        self.kernel.as_ref()
     }
 
     /// Install the annealed-schedule factorization cache. Must happen
@@ -478,7 +571,8 @@ impl CombineContext {
 pub(crate) fn prepare_contexts(
     groups: &[Vec<&SampleMatrix>],
     threads: usize,
-) -> Vec<CombineContext> {
+    kernel: &Arc<dyn CombineKernel>,
+) -> Result<Vec<CombineContext>> {
     // Flat (group, machine) task list over every set at this level.
     let flat: Vec<(usize, usize)> = groups
         .iter()
@@ -504,14 +598,17 @@ pub(crate) fn prepare_contexts(
         offset += sets.len();
     }
 
-    // Whiten + norm every set, again level-wide.
+    // Whiten + norm every set, again level-wide, on the combine call's
+    // kernel backend (bit-identical across CPU backends).
     let per_set: Vec<(SampleMatrix, Vec<f64>)> =
         par_map_indexed(flat.len(), threads, |k| {
             let (g, m) = flat[k];
             let w = whiten_one(groups[g][m], &scales[g]);
-            let n = row_norms(&w);
-            (w, n)
-        });
+            let n = kernel.row_norms(&w)?;
+            Ok((w, n))
+        })
+        .into_iter()
+        .collect::<Result<_>>()?;
 
     let mut contexts = Vec::with_capacity(groups.len());
     let mut it = per_set.into_iter();
@@ -528,9 +625,10 @@ pub(crate) fn prepare_contexts(
             scales: scales[g].clone(),
             norms,
             anneal: None,
+            kernel: Arc::clone(kernel),
         });
     }
-    contexts
+    Ok(contexts)
 }
 
 /// Scatter `D_t = Q_t − |S_t|²/M` (≥ 0 up to fp noise) — the single
@@ -795,7 +893,9 @@ mod tests {
             vec![&sets[2], &sets[3], &sets[4]],
         ];
         for threads in [1usize, 2, 4] {
-            let level = prepare_contexts(&groups, threads);
+            let level =
+                prepare_contexts(&groups, threads, &default_kernel())
+                    .unwrap();
             assert_eq!(level.len(), 2);
             for (ctx, group) in level.iter().zip(&groups) {
                 let solo = CombineContext::prepare(group, 1);

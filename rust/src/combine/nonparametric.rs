@@ -36,11 +36,13 @@
 //! seed at any thread count.
 
 use std::borrow::Cow;
+use std::sync::Arc;
 
 use super::CombineContext;
 use crate::error::Result;
+use crate::kernel::{default_kernel, CombineKernel};
 use crate::rng::Pcg64;
-use crate::stats::kde::annealed_bandwidth;
+use crate::stats::kde::{annealed_bandwidth, AnnealSchedule};
 use crate::types::SampleMatrix;
 
 /// Draw `t_out` samples from the nonparametric density-product estimate
@@ -64,9 +66,24 @@ pub fn nonparametric_threaded(
     seed: u64,
     threads: usize,
 ) -> Result<SampleMatrix> {
+    nonparametric_with(sets, t_out, seed, threads, &default_kernel())
+}
+
+/// [`nonparametric_threaded`] on an explicit compute-kernel backend
+/// ([`crate::kernel`]) — the combine dispatch's entry point. The
+/// kernel builds the context's norm cache; CPU backends are
+/// bit-identical, so the draws don't depend on which one ran.
+pub(crate) fn nonparametric_with(
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+    threads: usize,
+    kernel: &Arc<dyn CombineKernel>,
+) -> Result<SampleMatrix> {
     super::validate_sets(sets)?;
     let threads = super::resolve_threads(threads);
-    let ctx = CombineContext::prepare(sets, threads);
+    let ctx =
+        CombineContext::prepare_with(sets, threads, Arc::clone(kernel))?;
     nonparametric_with_context(&ctx, t_out, seed, threads)
 }
 
@@ -131,6 +148,13 @@ pub fn run_restarts_parallel(
     seed: u64,
     threads: usize,
 ) -> Result<SampleMatrix> {
+    // One shared h_i table per combine call (ROADMAP rung (c)): long
+    // enough for the longest chain in the plan, read by every chain —
+    // bit-identical to each chain computing its own powf series.
+    let schedule = AnnealSchedule::new(
+        ctx.dim(),
+        super::max_chain_len(t_out, chunk0),
+    );
     super::run_restart_chains(
         ctx.dim(),
         t_out,
@@ -140,7 +164,12 @@ pub fn run_restarts_parallel(
         |keep, warmup, mut rng| {
             let mut img = Img::with_context(ctx);
             Ok(img
-                .run_sweeps(keep + warmup, sweeps, &mut rng)
+                .run_sweeps_scheduled(
+                    keep + warmup,
+                    sweeps,
+                    &mut rng,
+                    &schedule,
+                )
                 .split_off_burnin(warmup))
         },
     )
@@ -246,6 +275,24 @@ impl<'a> Img<'a> {
         sweeps: usize,
         rng: &mut Pcg64,
     ) -> SampleMatrix {
+        // Standalone chains tabulate their own schedule; the parallel
+        // restart runtime shares one table across all chains
+        // ([`run_restarts_parallel`]). Same values either way.
+        let schedule = AnnealSchedule::new(self.dim, t_out);
+        self.run_sweeps_scheduled(t_out, sweeps, rng, &schedule)
+    }
+
+    /// [`Img::run_sweeps`] over a caller-provided bandwidth schedule
+    /// table — bit-identical (the table is filled by the same
+    /// `annealed_bandwidth`), but the `powf` series is paid once per
+    /// combine call instead of once per chain.
+    pub fn run_sweeps_scheduled(
+        &mut self,
+        t_out: usize,
+        sweeps: usize,
+        rng: &mut Pcg64,
+        schedule: &AnnealSchedule,
+    ) -> SampleMatrix {
         let m = self.sets.len() as f64;
         // Line 1: draw t· uniformly.
         for (idx, s) in self.indices.iter_mut().zip(&self.sets) {
@@ -256,8 +303,8 @@ impl<'a> Img<'a> {
         let mut out = SampleMatrix::with_capacity(self.dim, t_out);
         let mut theta = vec![0.0; self.dim];
         for i in 1..=t_out {
-            // Line 3: anneal the bandwidth.
-            let h = annealed_bandwidth(i, self.dim);
+            // Line 3: anneal the bandwidth (shared table lookup).
+            let h = schedule.h(i);
             let h2 = h * h;
             let mut d_cur = super::scatter(self.sq_sum, &self.sum, m);
             // Lines 4-11: `sweeps` IMG sweeps over machines.

@@ -143,15 +143,33 @@ impl OnlineCombiner {
         threads: usize,
         cache_budget_bytes: usize,
     ) -> Result<SampleMatrix> {
-        let refs: Vec<&SampleMatrix> = self.buffers.iter().collect();
-        combine::combine_sets_tuned(
+        self.combined_draws_with(
             method,
-            &refs,
             t_out,
             seed,
-            threads,
-            cache_budget_bytes,
+            &combine::CombineTuning {
+                threads,
+                cache_budget_bytes,
+                ..Default::default()
+            },
         )
+    }
+
+    /// [`OnlineCombiner::combined_draws_tuned`] over a full
+    /// [`combine::CombineTuning`] — the streaming leader's path to a
+    /// non-default compute-kernel backend (`combine_backend` config
+    /// key). CPU backends are bit-identical, so the guarantee is
+    /// unchanged: byte-identical draws for a fixed seed at any thread
+    /// count, budget, and CPU backend.
+    pub fn combined_draws_with(
+        &self,
+        method: CombineMethod,
+        t_out: usize,
+        seed: u64,
+        tuning: &combine::CombineTuning,
+    ) -> Result<SampleMatrix> {
+        let refs: Vec<&SampleMatrix> = self.buffers.iter().collect();
+        combine::combine_sets_with(method, &refs, t_out, seed, tuning)
     }
 }
 

@@ -26,9 +26,12 @@
 //! bit-identical to the ones the merges used to build themselves, so
 //! the tree's output is unchanged.
 
+use std::sync::Arc;
+
 use super::nonparametric::nonparametric_with_context;
 use super::CombineContext;
 use crate::error::Result;
+use crate::kernel::{default_kernel, CombineKernel};
 use crate::rng::Pcg64;
 use crate::types::SampleMatrix;
 
@@ -50,7 +53,21 @@ pub fn pairwise_threaded(
     seed: u64,
     threads: usize,
 ) -> Result<SampleMatrix> {
-    reduce_tree(sets, 2, t_out, seed, threads)
+    reduce_tree(sets, 2, t_out, seed, threads, &default_kernel())
+}
+
+/// [`pairwise_threaded`] on an explicit compute-kernel backend — the
+/// combine dispatch's entry point. The kernel runs every level's norm
+/// pass ([`super::prepare_contexts`]); CPU backends are bit-identical,
+/// so the tree's output doesn't depend on which one ran.
+pub(crate) fn pairwise_with(
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+    threads: usize,
+    kernel: &Arc<dyn CombineKernel>,
+) -> Result<SampleMatrix> {
+    reduce_tree(sets, 2, t_out, seed, threads, kernel)
 }
 
 /// Number of pair-combination invocations performed for M machines
@@ -69,7 +86,7 @@ pub fn grouped(
     t_out: usize,
     seed: u64,
 ) -> Result<SampleMatrix> {
-    reduce_tree(sets, group_size, t_out, seed, 1)
+    reduce_tree(sets, group_size, t_out, seed, 1, &default_kernel())
 }
 
 /// [`grouped`] with a combine-stage thread count.
@@ -80,7 +97,7 @@ pub fn grouped_threaded(
     seed: u64,
     threads: usize,
 ) -> Result<SampleMatrix> {
-    reduce_tree(sets, group_size, t_out, seed, threads)
+    reduce_tree(sets, group_size, t_out, seed, threads, &default_kernel())
 }
 
 fn reduce_tree(
@@ -89,6 +106,7 @@ fn reduce_tree(
     t_out: usize,
     seed: u64,
     threads: usize,
+    kernel: &Arc<dyn CombineKernel>,
 ) -> Result<SampleMatrix> {
     super::validate_sets(sets)?;
     assert!(group_size >= 2, "group size must be >= 2");
@@ -118,8 +136,9 @@ fn reduce_tree(
             .collect();
         let mut contexts: Vec<Option<CombineContext>> =
             (0..chunks.len()).map(|_| None).collect();
-        for (&slot, ctx) in
-            merge_idx.iter().zip(super::prepare_contexts(&groups, threads))
+        for (&slot, ctx) in merge_idx
+            .iter()
+            .zip(super::prepare_contexts(&groups, threads, kernel)?)
         {
             contexts[slot] = Some(ctx);
         }

@@ -48,13 +48,16 @@
 //! iterations, and iterations past the cap transparently fall back to
 //! the same per-iteration computation.
 
+use std::sync::Arc;
+
 use super::gaussian_product::GaussianEstimate;
 use super::CombineContext;
 use crate::error::Result;
+use crate::kernel::{default_kernel, CombineKernel};
 use crate::math::linalg::{self, Mat};
 use crate::math::mvn::{self, Mvn};
 use crate::rng::Pcg64;
-use crate::stats::kde::annealed_bandwidth;
+use crate::stats::kde::AnnealSchedule;
 use crate::types::SampleMatrix;
 
 /// Default memory budget for the [`AnnealCache`], in bytes. Each cached
@@ -74,13 +77,14 @@ pub fn semiparametric(
     t_out: usize,
     seed: u64,
 ) -> Result<SampleMatrix> {
-    run_semiparametric(
+    semiparametric_with(
         sets,
         t_out,
         seed,
         true,
         1,
         Some(DEFAULT_ANNEAL_CACHE_BUDGET),
+        &default_kernel(),
     )
 }
 
@@ -112,13 +116,14 @@ pub fn semiparametric_threaded_budgeted(
     threads: usize,
     cache_budget_bytes: usize,
 ) -> Result<SampleMatrix> {
-    run_semiparametric(
+    semiparametric_with(
         sets,
         t_out,
         seed,
         true,
         threads,
         Some(cache_budget_bytes),
+        &default_kernel(),
     )
 }
 
@@ -134,7 +139,15 @@ pub fn semiparametric_threaded_uncached(
     seed: u64,
     threads: usize,
 ) -> Result<SampleMatrix> {
-    run_semiparametric(sets, t_out, seed, true, threads, None)
+    semiparametric_with(
+        sets,
+        t_out,
+        seed,
+        true,
+        threads,
+        None,
+        &default_kernel(),
+    )
 }
 
 /// Variant 2: nonparametric weights `w_t`, semiparametric components.
@@ -143,13 +156,14 @@ pub fn semiparametric_nw(
     t_out: usize,
     seed: u64,
 ) -> Result<SampleMatrix> {
-    run_semiparametric(
+    semiparametric_with(
         sets,
         t_out,
         seed,
         false,
         1,
         Some(DEFAULT_ANNEAL_CACHE_BUDGET),
+        &default_kernel(),
     )
 }
 
@@ -178,13 +192,14 @@ pub fn semiparametric_nw_threaded_budgeted(
     threads: usize,
     cache_budget_bytes: usize,
 ) -> Result<SampleMatrix> {
-    run_semiparametric(
+    semiparametric_with(
         sets,
         t_out,
         seed,
         false,
         threads,
         Some(cache_budget_bytes),
+        &default_kernel(),
     )
 }
 
@@ -196,7 +211,15 @@ pub fn semiparametric_nw_threaded_uncached(
     seed: u64,
     threads: usize,
 ) -> Result<SampleMatrix> {
-    run_semiparametric(sets, t_out, seed, false, threads, None)
+    semiparametric_with(
+        sets,
+        t_out,
+        seed,
+        false,
+        threads,
+        None,
+        &default_kernel(),
+    )
 }
 
 /// Read-only state shared by every restart chain of one combine call.
@@ -212,6 +235,10 @@ struct SemiShared<'a> {
     prec_mu: Vec<f64>,
     /// Σ̂_M⁻¹ = Σ_m Σ̂_m⁻¹.
     prec_sum: Mat,
+    /// Tabulated `h_i` schedule (ROADMAP rung (c)): one `powf` series
+    /// per combine call, shared by every chain, bit-identical to
+    /// computing `annealed_bandwidth` inline.
+    schedule: AnnealSchedule,
     full_weights: bool,
 }
 
@@ -232,22 +259,23 @@ pub(crate) struct IterFactors {
     comp_chol: Mat,
 }
 
-/// Compute [`IterFactors`] for iteration `i` — the single copy of the
-/// per-iteration arithmetic, used both to build the [`AnnealCache`] and
-/// as the in-place fallback for uncached runs or iterations past the
-/// cache's memory budget. Bit-identical either way: same diagonal
-/// bumps, same jittered inverse, same covariance Cholesky the pre-cache
-/// `Mvn::new` calls performed.
+/// Compute [`IterFactors`] for bandwidth `h` (iteration `i`'s schedule
+/// value) — the single copy of the per-iteration arithmetic, used both
+/// to build the [`AnnealCache`] and as the in-place fallback for
+/// uncached runs or iterations past the cache's memory budget.
+/// Bit-identical either way: same diagonal bumps, same jittered
+/// inverse (through the run's [`CombineKernel`], whose CPU backends
+/// are bit-identical by contract), same covariance Cholesky the
+/// pre-cache `Mvn::new` calls performed.
 fn iter_factors(
     cov_m: &Mat,
     prec_sum: &Mat,
     mu_m: &[f64],
     m: f64,
     full_weights: bool,
-    i: usize,
+    h: f64,
+    kernel: &dyn CombineKernel,
 ) -> Result<IterFactors> {
-    let dim = mu_m.len();
-    let h = annealed_bandwidth(i, dim);
     let h2 = h * h;
     // Numerator Gaussian N(· | μ̂_M, Σ̂_M + h²/M I).
     let num_mvn = if full_weights {
@@ -257,10 +285,12 @@ fn iter_factors(
     } else {
         None
     };
-    // Component covariance Σ_t = (M/h² I + Σ̂_M⁻¹)⁻¹, inverted in place.
+    // Component covariance Σ_t = (M/h² I + Σ̂_M⁻¹)⁻¹, inverted in place
+    // on the selected backend (ROADMAP rung (d): the blocked kernel
+    // batches the column solves).
     let mut comp_cov = prec_sum.clone();
     comp_cov.add_diagonal(m / h2);
-    linalg::spd_inverse_jittered_in_place(&mut comp_cov)?;
+    kernel.spd_inverse_in_place(&mut comp_cov)?;
     let comp_chol = mvn::covariance_cholesky(comp_cov.clone())?;
     Ok(IterFactors { num_mvn, comp_cov, comp_chol })
 }
@@ -280,7 +310,8 @@ pub struct AnnealCache {
 impl AnnealCache {
     /// Factor the first `iters` iterations of the annealed schedule,
     /// truncated to `budget_bytes` of cached matrices, fanning the
-    /// per-iteration O(d³) work across `threads` workers.
+    /// per-iteration O(d³) work across `threads` workers on the
+    /// selected kernel backend.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn build(
         cov_m: &Mat,
@@ -291,6 +322,8 @@ impl AnnealCache {
         iters: usize,
         budget_bytes: usize,
         threads: usize,
+        schedule: &AnnealSchedule,
+        kernel: &dyn CombineKernel,
     ) -> Result<AnnealCache> {
         let dim = mu_m.len();
         let mats = if full_weights { 3 } else { 2 };
@@ -298,7 +331,15 @@ impl AnnealCache {
             (mats * dim * dim + 2 * dim) * std::mem::size_of::<f64>();
         let n = iters.min((budget_bytes / per_entry.max(1)).max(1));
         let factors = super::par_map_indexed(n, threads, |k| {
-            iter_factors(cov_m, prec_sum, mu_m, m, full_weights, k + 1)
+            iter_factors(
+                cov_m,
+                prec_sum,
+                mu_m,
+                m,
+                full_weights,
+                schedule.h(k + 1),
+                kernel,
+            )
         })
         .into_iter()
         .collect::<Result<_>>()?;
@@ -326,20 +367,29 @@ impl AnnealCache {
     }
 }
 
-fn run_semiparametric(
+/// The full semiparametric driver, parameterized over the compute
+/// kernel backend — every public entry point above delegates here with
+/// the reference kernel; the combine dispatch
+/// ([`super::combine_sets_with`]) passes the configured one. CPU
+/// backends are bit-identical, so the kernel choice never changes the
+/// retained draws (`rust/tests/kernel_parity.rs`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn semiparametric_with(
     sets: &[&SampleMatrix],
     t_out: usize,
     seed: u64,
     full_weights: bool,
     threads: usize,
     cache_budget: Option<usize>,
+    kernel: &Arc<dyn CombineKernel>,
 ) -> Result<SampleMatrix> {
     // Whitened coordinates (bandwidth relative to subposterior scale;
     // see super::whitening_scales). The estimator is equivariant under
     // this diagonal map, including its parametric factor.
     super::validate_sets(sets)?;
     let threads = super::resolve_threads(threads);
-    let mut ctx = CombineContext::prepare(sets, threads);
+    let mut ctx =
+        CombineContext::prepare_with(sets, threads, Arc::clone(kernel))?;
     let dim = ctx.dim();
     let m_count = ctx.machines();
 
@@ -367,18 +417,24 @@ fn run_semiparametric(
     let mu_m = cov_m.matvec(&acc)?; // μ̂_M
     let prec_mu = prec_sum.matvec(&mu_m)?; // Σ̂_M⁻¹ μ̂_M
 
-    // The O(TMd²) parametric log-density table, one machine per task.
+    // The O(TMd²) parametric log-density table — the single most
+    // expensive setup step — one machine per task, each column computed
+    // by the selected kernel backend ([`CombineKernel::logpdf_table`]).
     let param_lp: Vec<Vec<f64>> =
         super::par_map_indexed(m_count, threads, |m| -> Result<Vec<f64>> {
             let mvn = estimates[m].mvn()?;
-            let mut scratch = vec![0.0; dim];
-            Ok(ctx.sets()[m]
-                .rows()
-                .map(|r| mvn.logpdf_with(r, &mut scratch))
-                .collect())
+            kernel.logpdf_table(&mvn, &ctx.sets()[m])
         })
         .into_iter()
         .collect::<Result<_>>()?;
+
+    // Shared h_i table: long enough for the longest restart chain, so
+    // every chain (and the cache build) reads its bandwidth as a
+    // lookup instead of a powf.
+    let schedule = AnnealSchedule::new(
+        dim,
+        super::max_chain_len(t_out, super::RESTART_CHUNK0),
+    );
 
     // Annealed-schedule factorization cache: one entry per iteration of
     // the longest restart chain, built in parallel, shared read-only by
@@ -394,6 +450,8 @@ fn run_semiparametric(
             iters,
             budget,
             threads,
+            &schedule,
+            kernel.as_ref(),
         )?;
         ctx.install_anneal_cache(cache);
     }
@@ -405,6 +463,7 @@ fn run_semiparametric(
         mu_m,
         prec_mu,
         prec_sum,
+        schedule,
         full_weights,
     };
 
@@ -476,12 +535,14 @@ fn run_chain(
 
     let mut out = SampleMatrix::with_capacity(dim, keep);
     for i in 1..=(keep + warmup) {
-        let h = annealed_bandwidth(i, dim);
+        // Shared schedule table: bit-identical to the inline powf.
+        let h = sh.schedule.h(i);
         let h2 = h * h;
 
         // Per-iteration factorizations (h is fixed within the sweep):
         // cache hit → O(d²) of lookups; miss → the pre-cache O(d³)
-        // computation, bit-identical (single copy in `iter_factors`).
+        // computation, bit-identical (single copy in `iter_factors`,
+        // on the context's kernel backend).
         let mut fresh = None;
         let factors: &IterFactors = match cache.and_then(|c| c.entry(i)) {
             Some(f) => f,
@@ -491,7 +552,8 @@ fn run_chain(
                 &sh.mu_m,
                 m,
                 sh.full_weights,
-                i,
+                h,
+                sh.ctx.kernel(),
             )?),
         };
         // `full_weights` ⟺ the numerator Gaussian was built.
@@ -675,12 +737,22 @@ mod tests {
         let mus = vec![vec![0.2, -0.2], vec![0.5, 0.1]];
         let sets = gaussian_sets(33, &mus, 1.0, 250);
         let refs: Vec<&SampleMatrix> = sets.iter().collect();
-        let full =
-            run_semiparametric(&refs, 800, 9, true, 2, Some(usize::MAX))
+        let k = default_kernel();
+        let full = semiparametric_with(
+            &refs,
+            800,
+            9,
+            true,
+            2,
+            Some(usize::MAX),
+            &k,
+        )
+        .unwrap();
+        let tiny =
+            semiparametric_with(&refs, 800, 9, true, 2, Some(1), &k)
                 .unwrap();
-        let tiny = run_semiparametric(&refs, 800, 9, true, 2, Some(1))
-            .unwrap();
-        let none = run_semiparametric(&refs, 800, 9, true, 2, None).unwrap();
+        let none =
+            semiparametric_with(&refs, 800, 9, true, 2, None, &k).unwrap();
         assert_eq!(full.as_slice(), tiny.as_slice());
         assert_eq!(full.as_slice(), none.as_slice());
     }
@@ -696,8 +768,11 @@ mod tests {
         let prec_sum = Mat::scaled_identity(dim, 2.0);
         let cov_m = Mat::scaled_identity(dim, 0.5);
         let mu_m = vec![0.1, -0.3];
+        let sched = AnnealSchedule::new(dim, iters);
+        let k = default_kernel();
         let full = AnnealCache::build(
             &cov_m, &prec_sum, &mu_m, 2.0, true, iters, usize::MAX, 2,
+            &sched, k.as_ref(),
         )
         .unwrap();
         assert_eq!(full.len(), iters);
@@ -708,13 +783,15 @@ mod tests {
         assert!(full.entry(0).is_none(), "iterations are 1-based");
 
         let capped = AnnealCache::build(
-            &cov_m, &prec_sum, &mu_m, 2.0, true, iters, 1, 1,
+            &cov_m, &prec_sum, &mu_m, 2.0, true, iters, 1, 1, &sched,
+            k.as_ref(),
         )
         .unwrap();
         assert_eq!(capped.len(), 1, "1-byte budget still caches entry 1");
 
         let nw = AnnealCache::build(
             &cov_m, &prec_sum, &mu_m, 2.0, false, 4, usize::MAX, 1,
+            &sched, k.as_ref(),
         )
         .unwrap();
         assert!(!nw.full_weights());

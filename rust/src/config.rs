@@ -8,6 +8,7 @@
 use crate::combine::CombineMethod;
 use crate::data::io::ShardFormat;
 use crate::error::{Error, Result};
+use crate::kernel::CombineKernelKind;
 use crate::sampler::SamplerKind;
 use std::collections::BTreeMap;
 
@@ -76,6 +77,25 @@ pub struct PipelineConfig {
     /// iterations past the cap fall back to in-place recomputation —
     /// so this only trades memory for combine-stage speed. Default 256.
     pub combine_cache_budget_mb: usize,
+    /// Compute-kernel backend for the combine stage's dense ops
+    /// (`naive` | `blocked` | `device`). The CPU backends are
+    /// bit-identical — retained draws do not depend on this knob —
+    /// and `device` requires vendored PJRT bindings (a structured
+    /// error otherwise). Default: `naive` (the reference).
+    pub combine_backend: CombineKernelKind,
+    /// Ship each machine's shard to socket-transport workers *inline*
+    /// (a binary frame after the manifest frame) instead of requiring
+    /// the daemon to read `shard_path` from a shared filesystem.
+    /// Byte-identical to path mode — the daemon decodes the same
+    /// spilled bytes. Ignored by the thread and pipe runtimes, which
+    /// share a filesystem by construction.
+    pub shard_inline: bool,
+    /// Leader-side frame cap in bytes for pipe/socket transports
+    /// (`0` = the 64 MiB default). Raise it — together with the
+    /// daemon-side `repro serve --max-frame-bytes` — when inline
+    /// shards exceed the default; the oversized-shard pre-check names
+    /// both knobs.
+    pub max_frame_bytes: usize,
 }
 
 impl PipelineConfig {
@@ -162,6 +182,14 @@ impl PipelineConfig {
             "combine_cache_budget_mb",
             b.combine_cache_budget_mb,
         )?;
+        if let Some(v) = get("combine_backend") {
+            b.combine_backend = CombineKernelKind::parse(&v)?;
+        }
+        if let Some(v) = get("shard_inline") {
+            b.shard_inline = v == "true" || v == "1";
+        }
+        b.max_frame_bytes =
+            parse_usize("max_frame_bytes", b.max_frame_bytes)?;
         Ok(b.build())
     }
 
@@ -244,6 +272,9 @@ pub struct PipelineConfigBuilder {
     worker_slots: usize,
     shard_format: ShardFormat,
     combine_cache_budget_mb: usize,
+    combine_backend: CombineKernelKind,
+    shard_inline: bool,
+    max_frame_bytes: usize,
 }
 
 impl PipelineConfigBuilder {
@@ -268,6 +299,9 @@ impl PipelineConfigBuilder {
             worker_slots: 0,
             shard_format: ShardFormat::Json,
             combine_cache_budget_mb: 256,
+            combine_backend: CombineKernelKind::default(),
+            shard_inline: false,
+            max_frame_bytes: 0,
         }
     }
 
@@ -366,6 +400,27 @@ impl PipelineConfigBuilder {
         self
     }
 
+    /// Combine-stage compute-kernel backend (CPU backends are
+    /// bit-identical; see `PipelineConfig::combine_backend`).
+    pub fn combine_backend(mut self, k: CombineKernelKind) -> Self {
+        self.combine_backend = k;
+        self
+    }
+
+    /// Ship shards to socket workers inline over the connection
+    /// instead of via a shared filesystem path.
+    pub fn shard_inline(mut self, b: bool) -> Self {
+        self.shard_inline = b;
+        self
+    }
+
+    /// Leader-side transport frame cap in bytes (`0` = 64 MiB
+    /// default) — see `PipelineConfig::max_frame_bytes`.
+    pub fn max_frame_bytes(mut self, bytes: usize) -> Self {
+        self.max_frame_bytes = bytes;
+        self
+    }
+
     pub fn artifact_dir(mut self, d: &str) -> Self {
         self.artifact_dir = d.to_string();
         self
@@ -398,6 +453,9 @@ impl PipelineConfigBuilder {
             worker_slots: self.worker_slots,
             shard_format: self.shard_format,
             combine_cache_budget_mb: self.combine_cache_budget_mb,
+            combine_backend: self.combine_backend,
+            shard_inline: self.shard_inline,
+            max_frame_bytes: self.max_frame_bytes,
         }
     }
 }
@@ -458,6 +516,31 @@ mod tests {
         assert_eq!(c.worker_slots, 0);
         assert_eq!(c.shard_format, ShardFormat::Json);
         assert_eq!(c.combine_cache_budget_mb, 256);
+        assert_eq!(c.combine_backend, CombineKernelKind::Naive);
+        assert!(!c.shard_inline);
+    }
+
+    #[test]
+    fn cfg_file_kernel_and_inline_keys() {
+        let c = PipelineConfig::from_str_cfg(
+            "model = gaussian\n\
+             combine_backend = blocked\n\
+             shard_inline = true\n\
+             max_frame_bytes = 134217728\n",
+        )
+        .unwrap();
+        assert_eq!(c.combine_backend, CombineKernelKind::Blocked);
+        assert!(c.shard_inline);
+        assert_eq!(c.max_frame_bytes, 134_217_728);
+        let c = PipelineConfig::from_str_cfg(
+            "model = gaussian\ncombine_backend = device\n",
+        )
+        .unwrap();
+        assert_eq!(c.combine_backend, CombineKernelKind::Device);
+        assert!(PipelineConfig::from_str_cfg(
+            "model = gaussian\ncombine_backend = gpu\n"
+        )
+        .is_err());
     }
 
     #[test]

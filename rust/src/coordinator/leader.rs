@@ -4,10 +4,12 @@
 use std::sync::mpsc::Receiver;
 
 use crate::combine::{
-    CombineMethod, OnlineCombiner, DEFAULT_ANNEAL_CACHE_BUDGET,
+    CombineMethod, CombineTuning, OnlineCombiner,
+    DEFAULT_ANNEAL_CACHE_BUDGET,
 };
 use crate::coordinator::worker::DrawMsg;
 use crate::error::Result;
+use crate::kernel::CombineKernelKind;
 use crate::types::SampleMatrix;
 
 /// Leader-side stream consumer.
@@ -21,6 +23,9 @@ pub struct Leader {
     /// Annealed-factorization-cache budget in bytes for
     /// [`Leader::draws`]; byte-identical output at any value.
     combine_cache_budget: usize,
+    /// Compute-kernel backend for [`Leader::draws`]'s dense combine
+    /// ops; CPU backends are bit-identical.
+    combine_kernel: CombineKernelKind,
     /// Max worker-local elapsed time seen so far (cluster clock).
     pub max_elapsed: f64,
     /// Scalars received (d per draw) — the paper's O(dTM) communication.
@@ -34,6 +39,7 @@ impl Leader {
             finished: vec![false; machines],
             combine_threads: 1,
             combine_cache_budget: DEFAULT_ANNEAL_CACHE_BUDGET,
+            combine_kernel: CombineKernelKind::default(),
             max_elapsed: 0.0,
             scalars_received: 0,
         }
@@ -53,6 +59,15 @@ impl Leader {
     /// recomputation with bit-identical output.
     pub fn set_combine_cache_budget(&mut self, bytes: usize) {
         self.combine_cache_budget = bytes;
+    }
+
+    /// Select the compute-kernel backend ([`crate::kernel`]) used by
+    /// [`Leader::draws`] — the pipeline wires `combine_backend`
+    /// through here. CPU backends are bit-identical; an unavailable
+    /// backend (e.g. `device` offline) surfaces as a structured error
+    /// from `draws`, never a panic.
+    pub fn set_combine_kernel(&mut self, kernel: CombineKernelKind) {
+        self.combine_kernel = kernel;
     }
 
     /// Ingest one message.
@@ -96,12 +111,15 @@ impl Leader {
         t_out: usize,
         seed: u64,
     ) -> Result<SampleMatrix> {
-        self.combiner.combined_draws_tuned(
+        self.combiner.combined_draws_with(
             method,
             t_out,
             seed,
-            self.combine_threads,
-            self.combine_cache_budget,
+            &CombineTuning {
+                threads: self.combine_threads,
+                cache_budget_bytes: self.combine_cache_budget,
+                kernel: self.combine_kernel,
+            },
         )
     }
 }

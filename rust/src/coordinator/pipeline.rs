@@ -59,6 +59,7 @@ pub struct PipelineOutput {
 /// Run the full embarrassingly-parallel pipeline with native (pure-rust)
 /// subposterior evaluation and OS-thread workers.
 pub fn run_native(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutput> {
+    validate_combine_backend(cfg)?;
     let shards =
         Partitioner::Contiguous.split(data.len(), cfg.machines, cfg.seed)?;
     let prior_w = 1.0 / cfg.machines as f64;
@@ -85,6 +86,7 @@ pub fn run_native(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutput
     let mut leader = Leader::new(cfg.machines, dim);
     leader.set_combine_threads(cfg.combine_threads);
     leader.set_combine_cache_budget(cache_budget_bytes(cfg));
+    leader.set_combine_kernel(cfg.combine_backend);
     std::thread::scope(|scope| -> Result<()> {
         for _ in 0..n_threads {
             let tx = tx.clone();
@@ -188,6 +190,28 @@ fn cache_budget_bytes(cfg: &PipelineConfig) -> usize {
     cfg.combine_cache_budget_mb.saturating_mul(1 << 20)
 }
 
+/// The combine-stage tuning block the config describes: threads,
+/// anneal-cache budget, and the compute-kernel backend
+/// (`combine_backend` key / `--combine-backend` flag). None of these
+/// change the retained draws — CPU kernel backends are bit-identical
+/// by contract.
+fn combine_tuning(cfg: &PipelineConfig) -> combine::CombineTuning {
+    combine::CombineTuning {
+        threads: cfg.combine_threads,
+        cache_budget_bytes: cache_budget_bytes(cfg),
+        kernel: cfg.combine_backend,
+    }
+}
+
+/// Instantiate (and discard) the configured combine-kernel backend —
+/// run by every pipeline entry point *before* the sampling stage, so
+/// an unavailable backend (`--combine-backend device` offline) kills
+/// the run immediately instead of after hours of sampling whose
+/// combine step was doomed from the start.
+fn validate_combine_backend(cfg: &PipelineConfig) -> Result<()> {
+    cfg.combine_backend.build().map(|_| ())
+}
+
 /// Run the pipeline with out-of-process workers, choosing the transport
 /// from the config: socket mode when `cfg.workers` names `repro serve`
 /// endpoints, else pipe mode when `cfg.process_mode` is set (one child
@@ -199,7 +223,12 @@ fn cache_budget_bytes(cfg: &PipelineConfig) -> usize {
 /// against real child processes and real localhost daemons.
 pub fn run_process(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutput> {
     if !cfg.workers.is_empty() {
-        let transport = SocketTransport::from_spec(&cfg.workers)?;
+        let mut transport = SocketTransport::from_spec(&cfg.workers)?
+            .with_inline_shards(cfg.shard_inline);
+        if cfg.max_frame_bytes != 0 {
+            transport =
+                transport.with_max_frame_bytes(cfg.max_frame_bytes);
+        }
         return run_with_transport(cfg, data, &transport);
     }
     if !cfg.process_mode {
@@ -215,7 +244,10 @@ pub fn run_process(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutpu
     } else {
         cfg.worker_slots
     };
-    let transport = PipeTransport::new(worker_bin, slots);
+    let mut transport = PipeTransport::new(worker_bin, slots);
+    if cfg.max_frame_bytes != 0 {
+        transport = transport.with_max_frame_bytes(cfg.max_frame_bytes);
+    }
     run_with_transport(cfg, data, &transport)
 }
 
@@ -243,6 +275,7 @@ pub fn run_with_transport(
     data: &Dataset,
     transport: &dyn Transport,
 ) -> Result<PipelineOutput> {
+    validate_combine_backend(cfg)?;
     let shards =
         Partitioner::Contiguous.split(data.len(), cfg.machines, cfg.seed)?;
     let prior_w = 1.0 / cfg.machines as f64;
@@ -272,6 +305,11 @@ pub fn run_with_transport(
             sampler: config::sampler_spec(&cfg.sampler),
             shard_path: shard_path.to_string_lossy().into_owned(),
             dim,
+            // The transport decides shard delivery: inline frames for
+            // socket fleets without a shared filesystem, path mode
+            // otherwise. Setting it on the manifest keeps leader and
+            // worker in lockstep about the frame sequence.
+            shard_inline: transport.wants_inline_shard(),
         };
         let manifest_path = run_dir.path().join(format!("worker_{m}.json"));
         manifest.save(&manifest_path)?;
@@ -294,6 +332,7 @@ pub fn run_with_transport(
     let mut leader = Leader::new(cfg.machines, dim);
     leader.set_combine_threads(cfg.combine_threads);
     leader.set_combine_cache_budget(cache_budget_bytes(cfg));
+    leader.set_combine_kernel(cfg.combine_backend);
     let drained = std::thread::scope(|scope| -> Result<()> {
         for slot in 0..slots {
             let tx = tx.clone();
@@ -461,6 +500,7 @@ pub fn run_sequential(
             cfg.machines
         )));
     }
+    validate_combine_backend(cfg)?;
     let t0 = Instant::now();
     let mut root = Pcg64::seed_from(cfg.seed);
     let mut subposteriors = Vec::with_capacity(cfg.machines);
@@ -491,17 +531,16 @@ fn finish_run(
     t0: Instant,
 ) -> Result<PipelineOutput> {
     let tc = Instant::now();
-    // Combine-stage parallelism (cfg.combine_threads, 0 = all cores)
-    // and anneal-cache budget (cfg.combine_cache_budget_mb):
-    // deterministic for a fixed seed at any value of either, so both
-    // knobs only affect wall-clock/memory.
-    let combined = combine::combine_tuned(
+    // Combine-stage tuning (threads, cache budget, kernel backend):
+    // deterministic for a fixed seed at any value of any knob — CPU
+    // kernel backends are bit-identical — so this only affects
+    // wall-clock/memory.
+    let combined = combine::combine_with(
         cfg.method,
         &subposteriors,
         cfg.t_out,
         cfg.seed ^ 0x5EED,
-        cfg.combine_threads,
-        cache_budget_bytes(cfg),
+        &combine_tuning(cfg),
     )?;
     let combine_secs = tc.elapsed().as_secs_f64();
 
@@ -694,6 +733,46 @@ mod tests {
             default.combined.as_slice(),
             tiny.combined.as_slice(),
             "cache budget changed the combined draws"
+        );
+    }
+
+    /// Tentpole gate at the pipeline level: the blocked compute kernel
+    /// must produce byte-identical retained draws to the naive
+    /// reference, all the way from the `combine_backend` config key
+    /// through the leader and combiner.
+    #[test]
+    fn blocked_combine_backend_is_bit_identical_through_pipeline() {
+        use crate::kernel::CombineKernelKind;
+        let data = synth::gaussian(1_200, 2, 29);
+        let make = |backend: CombineKernelKind| {
+            let mut c = cfg(3, 250);
+            c.method = CombineMethod::Semiparametric;
+            c.combine_backend = backend;
+            run_native(&c, &data).unwrap()
+        };
+        let naive = make(CombineKernelKind::Naive);
+        let blocked = make(CombineKernelKind::Blocked);
+        assert_eq!(
+            naive.combined.as_slice(),
+            blocked.combined.as_slice(),
+            "combine backend changed the combined draws"
+        );
+    }
+
+    /// `--combine-backend device` offline: a structured error naming
+    /// the backend, surfaced *before* the sampling stage (the combine
+    /// step would be doomed anyway) — never a panic.
+    #[test]
+    fn device_combine_backend_offline_is_structured_error() {
+        use crate::kernel::CombineKernelKind;
+        let data = synth::gaussian(400, 1, 30);
+        let mut c = cfg(2, 50);
+        c.method = CombineMethod::Semiparametric;
+        c.combine_backend = CombineKernelKind::Device;
+        let err = run_native(&c, &data).unwrap_err();
+        assert!(
+            matches!(err, Error::KernelUnavailable { backend: "device", .. }),
+            "expected KernelUnavailable, got {err:?}"
         );
     }
 

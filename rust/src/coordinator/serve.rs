@@ -5,10 +5,13 @@
 //! announce the bound address (`LISTENING <addr>` on stdout — the
 //! leader-side tooling and tests parse this to support `:0` ephemeral
 //! ports), then accept one connection at a time. Each connection is one
-//! job: the first inbound frame is a [`WorkerManifest`], the outbound
-//! stream is the exact frame sequence a pipe-mode worker writes on
-//! stdout (every draw, then one summary), after which the daemon closes
-//! the connection — the clean-EOF success signal the leader's
+//! job: the first inbound frame is a [`WorkerManifest`] — followed, when
+//! the manifest says `shard_inline`, by one binary frame carrying the
+//! shard's spilled bytes (format autodetected, so daemons need no
+//! shared filesystem) — and the outbound stream is the exact frame
+//! sequence a pipe-mode worker writes on stdout (every draw, then one
+//! summary), after which the daemon closes the connection — the
+//! clean-EOF success signal the leader's
 //! [`SocketTransport`](crate::coordinator::transport::SocketTransport)
 //! expects. Job failures are reported in-band as `error` frames since a
 //! remote daemon has no stderr the leader could collect.
@@ -31,7 +34,7 @@ use crate::coordinator::transport::{
     WorkerManifest, WorkerSummary, DEFAULT_MAX_FRAME_BYTES,
 };
 use crate::coordinator::worker::{run_worker_with, DrawMsg};
-use crate::data::io;
+use crate::data::{io, Dataset};
 use crate::error::{Error, Result};
 use crate::rng::Pcg64;
 use crate::runtime::json::Json;
@@ -51,13 +54,29 @@ pub fn run_manifest<F>(wm: &WorkerManifest, sink: &mut F) -> Result<()>
 where
     F: FnMut(&str) -> std::io::Result<()>,
 {
+    let data = io::read_shard(Path::new(&wm.shard_path))?;
+    run_manifest_with_data(wm, &data, sink)
+}
+
+/// [`run_manifest`] over an already-decoded shard — the inline-shard
+/// path: socket daemons receive the shard bytes as the frame after the
+/// manifest ([`io::shard_from_bytes`]) and never touch `shard_path`.
+/// Everything downstream of the shard load is this single copy, so
+/// inline and path delivery produce bit-identical frame streams.
+pub fn run_manifest_with_data<F>(
+    wm: &WorkerManifest,
+    data: &Dataset,
+    sink: &mut F,
+) -> Result<()>
+where
+    F: FnMut(&str) -> std::io::Result<()>,
+{
     if wm.machine >= wm.machines {
         return Err(Error::Config(format!(
             "machine {} out of range ({} machines)",
             wm.machine, wm.machines
         )));
     }
-    let data = io::read_shard(Path::new(&wm.shard_path))?;
     let idx: Vec<usize> = (0..data.len()).collect();
     let target = data.subposterior(&idx, wm.prior_weight)?;
     if target.dim() != wm.dim {
@@ -176,8 +195,10 @@ const MANIFEST_READ_TIMEOUT: Duration = Duration::from_secs(30);
 /// One job: read the manifest frame, stream the run back, close.
 fn handle_conn(stream: TcpStream, max_frame_bytes: usize) -> Result<()> {
     stream.set_nodelay(true).ok();
-    // Only the manifest read is bounded: after it, the daemon only
-    // writes, so no further read can block the loop.
+    // Only the inbound frames (manifest, plus the optional inline
+    // shard frame, both sent immediately by a real leader) are
+    // bounded: after them, the daemon only writes, so no further read
+    // can block the loop.
     stream.set_read_timeout(Some(MANIFEST_READ_TIMEOUT)).ok();
     let reader = stream.try_clone().map_err(Error::Io)?;
     let mut frames =
@@ -187,9 +208,27 @@ fn handle_conn(stream: TcpStream, max_frame_bytes: usize) -> Result<()> {
     })?;
     let wm = WorkerManifest::from_json(&Json::parse(&payload)?)?;
     let mut out = BufWriter::new(stream.try_clone().map_err(Error::Io)?);
-    let run = run_manifest(&wm, &mut |frame: &str| {
-        write_frame(&mut out, frame)
-    });
+    let run = if wm.shard_inline {
+        // Inline delivery: the next frame is the shard's spilled bytes
+        // (format autodetected, exactly as a file read would) — the
+        // daemon's filesystem is never involved.
+        match frames.read_frame_bytes() {
+            Ok(Some(bytes)) => match io::shard_from_bytes(&bytes) {
+                Ok(data) => run_manifest_with_data(
+                    &wm,
+                    &data,
+                    &mut |frame: &str| write_frame(&mut out, frame),
+                ),
+                Err(e) => Err(e),
+            },
+            Ok(None) => Err(Error::Runtime(
+                "connection closed before the inline shard frame".into(),
+            )),
+            Err(e) => Err(e),
+        }
+    } else {
+        run_manifest(&wm, &mut |frame: &str| write_frame(&mut out, frame))
+    };
     if let Err(e) = &run {
         // Best-effort in-band failure report; if the leader is already
         // gone this write fails too, which is fine.
@@ -230,6 +269,7 @@ mod tests {
             sampler: "rwm:1e0".into(),
             shard_path: shard_path.to_string_lossy().into_owned(),
             dim: 2,
+            shard_inline: false,
         }
     }
 
@@ -405,6 +445,117 @@ mod tests {
         }
         assert_eq!(draws, 25);
         assert_eq!(summaries, 1);
+        daemon.join().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Inline shard delivery over a real TCP connection: the manifest
+    /// points `shard_path` at a file that does **not exist on the
+    /// daemon's filesystem**, the shard bytes ride the connection as
+    /// the frame after the manifest, and the job still streams the
+    /// full draw+summary sequence — proof the shared-filesystem
+    /// requirement is gone. The draws must be identical to a path-mode
+    /// job over the same shard.
+    #[test]
+    fn serve_runs_inline_shard_job_without_touching_the_filesystem() {
+        use crate::coordinator::transport::write_frame_bytes;
+        let dir = std::env::temp_dir().join("repro_serve_inline_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path_wm = spill_manifest(&dir, 0, 2, io::ShardFormat::Binary);
+        let shard_bytes = std::fs::read(&path_wm.shard_path).unwrap();
+        // Path-mode reference stream (thetas only; timings vary).
+        let mut reference: Vec<String> = Vec::new();
+        run_manifest(&path_wm, &mut |frame: &str| {
+            reference.push(frame.to_string());
+            Ok(())
+        })
+        .unwrap();
+        let ref_thetas: Vec<String> = reference
+            .iter()
+            .filter_map(|f| match WireMsg::decode(f).unwrap() {
+                WireMsg::Draw(d) => Some(format!("{:?}", d.theta)),
+                _ => None,
+            })
+            .collect();
+
+        let mut wm = path_wm.clone();
+        wm.shard_inline = true;
+        wm.shard_path =
+            dir.join("not-on-this-host.bin").to_string_lossy().into_owned();
+
+        let opts = ServeOptions { max_jobs: Some(1), ..Default::default() };
+        let (mut announcer, addr_rx) = Announcer::channel();
+        let daemon = std::thread::spawn(move || {
+            serve("127.0.0.1:0", &opts, &mut announcer).unwrap();
+        });
+        let addr = addr_rx
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .expect("daemon never announced its address");
+
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        write_frame(&mut writer, &wm.to_json().render()).unwrap();
+        write_frame_bytes(&mut writer, &shard_bytes).unwrap();
+        let mut frames = FrameReader::new(BufReader::new(stream));
+        let mut thetas: Vec<String> = Vec::new();
+        let mut summaries = 0usize;
+        while let Some(payload) = frames.read_frame().unwrap() {
+            match WireMsg::decode(&payload).unwrap() {
+                WireMsg::Draw(d) => thetas.push(format!("{:?}", d.theta)),
+                WireMsg::Summary(s) => {
+                    assert_eq!(s.machine, 0);
+                    summaries += 1;
+                }
+                WireMsg::Error { message, .. } => {
+                    panic!("inline job failed remotely: {message}")
+                }
+            }
+        }
+        assert_eq!(summaries, 1);
+        assert_eq!(
+            thetas, ref_thetas,
+            "inline shard delivery must reproduce the path-mode draws"
+        );
+        daemon.join().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// An inline-marked connection that closes before the shard frame
+    /// is a clean in-band error, and the daemon stays up.
+    #[test]
+    fn serve_reports_missing_inline_shard_frame_in_band() {
+        let dir = std::env::temp_dir().join("repro_serve_inline_missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut wm = spill_manifest(&dir, 0, 2, io::ShardFormat::Json);
+        wm.shard_inline = true;
+        let opts = ServeOptions { max_jobs: Some(1), ..Default::default() };
+        let (mut announcer, addr_rx) = Announcer::channel();
+        let daemon = std::thread::spawn(move || {
+            serve("127.0.0.1:0", &opts, &mut announcer).ok();
+        });
+        let addr = addr_rx
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .expect("daemon never announced its address");
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        write_frame(&mut writer, &wm.to_json().render()).unwrap();
+        // Half-close our sending side: the daemon sees EOF where the
+        // shard frame should be.
+        stream.shutdown(Shutdown::Write).ok();
+        let mut frames = FrameReader::new(BufReader::new(stream));
+        let mut saw_error = false;
+        while let Some(payload) = frames.read_frame().unwrap() {
+            if let WireMsg::Error { message, .. } =
+                WireMsg::decode(&payload).unwrap()
+            {
+                assert!(
+                    message.contains("inline shard"),
+                    "error should name the missing frame: {message}"
+                );
+                saw_error = true;
+            }
+        }
+        assert!(saw_error, "missing shard frame must surface in-band");
         daemon.join().unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }

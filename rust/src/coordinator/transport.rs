@@ -46,8 +46,19 @@ const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
 /// Flushes so the leader sees draws as they are produced, not when the
 /// worker's buffer happens to fill.
 pub fn write_frame<W: Write>(w: &mut W, payload: &str) -> std::io::Result<()> {
+    write_frame_bytes(w, payload.as_bytes())
+}
+
+/// [`write_frame`] for a raw byte payload — the same grammar (decimal
+/// length, newline, payload, newline), without requiring the payload to
+/// be text. Used to ship binary shard spills inline over the socket
+/// transport; readers opt in via [`FrameReader::read_frame_bytes`].
+pub fn write_frame_bytes<W: Write>(
+    w: &mut W,
+    payload: &[u8],
+) -> std::io::Result<()> {
     writeln!(w, "{}", payload.len())?;
-    w.write_all(payload.as_bytes())?;
+    w.write_all(payload)?;
     w.write_all(b"\n")?;
     w.flush()
 }
@@ -109,6 +120,18 @@ impl<R: BufRead> FrameReader<R> {
 
     /// Read the next frame's payload, or `None` at clean end-of-stream.
     pub fn read_frame(&mut self) -> Result<Option<String>> {
+        match self.read_frame_bytes()? {
+            None => Ok(None),
+            Some(buf) => String::from_utf8(buf)
+                .map(Some)
+                .map_err(|_| FrameError::NotUtf8.into()),
+        }
+    }
+
+    /// [`FrameReader::read_frame`] without the UTF-8 requirement — for
+    /// frames whose payload is raw bytes (inline binary shard spills).
+    /// Same grammar, same structured violations.
+    pub fn read_frame_bytes(&mut self) -> Result<Option<Vec<u8>>> {
         let Some(prefix) = self.read_prefix()? else {
             return Ok(None);
         };
@@ -135,9 +158,7 @@ impl<R: BufRead> FrameReader<R> {
         if buf.pop() != Some(b'\n') {
             return Err(FrameError::MissingNewline.into());
         }
-        String::from_utf8(buf)
-            .map(Some)
-            .map_err(|_| FrameError::NotUtf8.into())
+        Ok(Some(buf))
     }
 }
 
@@ -284,6 +305,13 @@ pub struct WorkerManifest {
     pub shard_path: String,
     /// Expected parameter dimension (validated against the shard).
     pub dim: usize,
+    /// When set, the shard arrives *inline* as a binary frame right
+    /// after this manifest frame, and `shard_path` is only the
+    /// leader-side spill (never resolved by the worker) — socket
+    /// daemons stop needing a shared filesystem. Absent in old
+    /// manifests ⇒ `false` (path mode), so mixed-version fleets keep
+    /// working.
+    pub shard_inline: bool,
 }
 
 impl WorkerManifest {
@@ -299,11 +327,17 @@ impl WorkerManifest {
             ("sampler", Json::Str(self.sampler.clone())),
             ("shard_path", Json::Str(self.shard_path.clone())),
             ("dim", Json::Num(self.dim as f64)),
+            ("shard_inline", Json::Bool(self.shard_inline)),
         ])
     }
 
     pub fn from_json(j: &Json) -> Result<Self> {
         let seed = j.get("seed")?.as_str()?;
+        // Optional for backward compatibility with pre-inline manifests.
+        let shard_inline = match j.get("shard_inline") {
+            Ok(v) => v.as_bool()?,
+            Err(_) => false,
+        };
         Ok(WorkerManifest {
             machine: j.get("machine")?.as_usize()?,
             machines: j.get("machines")?.as_usize()?,
@@ -317,6 +351,7 @@ impl WorkerManifest {
             sampler: j.get("sampler")?.as_str()?.to_string(),
             shard_path: j.get("shard_path")?.as_str()?.to_string(),
             dim: j.get("dim")?.as_usize()?,
+            shard_inline,
         })
     }
 
@@ -377,6 +412,15 @@ pub trait Transport: Sync {
     /// Largest frame this transport accepts from a worker.
     fn max_frame_bytes(&self) -> usize {
         DEFAULT_MAX_FRAME_BYTES
+    }
+
+    /// Whether the leader should mark manifests `shard_inline` and
+    /// ship each shard's spilled bytes over the connection instead of
+    /// relying on the worker resolving `shard_path` on a shared
+    /// filesystem. Default `false`: pipe workers and in-thread runs
+    /// share a filesystem by construction.
+    fn wants_inline_shard(&self) -> bool {
+        false
     }
 
     /// Cancel every in-flight worker this transport has started — the
@@ -560,6 +604,12 @@ impl Drop for PipeConnection {
 pub struct SocketTransport {
     addrs: Vec<String>,
     max_frame_bytes: usize,
+    /// Ship each shard inline as a binary frame after the manifest
+    /// frame (`shard_inline` config key / `--shard-inline`): daemons
+    /// stop needing a shared filesystem. The shard bytes sent are the
+    /// leader's own spill file, so inline and path delivery decode
+    /// bit-identically.
+    inline_shards: bool,
     /// Clones of every in-flight connection's stream, shared so
     /// [`Transport::cancel_all`] can shut them down from the failing
     /// thread: the blocked reader sees EOF, and the daemon's next draw
@@ -578,8 +628,16 @@ impl SocketTransport {
         Ok(SocketTransport {
             addrs,
             max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            inline_shards: false,
             live: Mutex::new(Vec::new()),
         })
+    }
+
+    /// Enable (or disable) inline shard delivery — see the
+    /// `inline_shards` field docs.
+    pub fn with_inline_shards(mut self, inline: bool) -> SocketTransport {
+        self.inline_shards = inline;
+        self
     }
 
     /// Parse a comma-separated `host:port,host:port,…` list (the
@@ -643,6 +701,15 @@ impl Transport for SocketTransport {
                     ))
                 })?;
         stream.set_nodelay(true).ok();
+        // Register with the cancel list *before* any write: the inline
+        // shard frame below can be tens of MB, and a daemon that stops
+        // draining its socket would block that write forever — the
+        // fail-fast path (`cancel_all` from a failing sibling) must be
+        // able to shut this stream down mid-send.
+        self.live
+            .lock()
+            .unwrap()
+            .push(stream.try_clone().map_err(Error::Io)?);
         let mut writer = stream.try_clone().map_err(Error::Io)?;
         write_frame(&mut writer, &manifest.to_json().render()).map_err(
             |e| {
@@ -652,10 +719,52 @@ impl Transport for SocketTransport {
                 ))
             },
         )?;
-        self.live
-            .lock()
-            .unwrap()
-            .push(stream.try_clone().map_err(Error::Io)?);
+        // Inline delivery: the manifest promised (`shard_inline`) that
+        // the next frame carries the shard's spilled bytes — read the
+        // leader-side spill and ship it, so the daemon never resolves
+        // `shard_path` on its own filesystem. Gated on the manifest
+        // flag (not the transport field) so leader and daemon can never
+        // disagree about the frame sequence.
+        if manifest.shard_inline {
+            let bytes =
+                std::fs::read(&manifest.shard_path).map_err(|e| {
+                    Error::Runtime(format!(
+                        "reading spilled shard {} for inline delivery: {e}",
+                        manifest.shard_path
+                    ))
+                })?;
+            // Pre-check against the frame cap: the daemon's reader
+            // enforces its own `max_frame_bytes` (same default as
+            // ours), so an oversized shard would otherwise burn a
+            // dispatch and fail deep in the run with a bare Oversized
+            // frame error. Fail here instead, naming the fixes.
+            if bytes.len() > self.max_frame_bytes {
+                return Err(Error::Runtime(format!(
+                    "machine {}'s shard is {} bytes, over the {}-byte \
+                     inline-frame cap — raise it on both ends \
+                     (`pipeline --max-frame-bytes` / the \
+                     `max_frame_bytes` config key on the leader, \
+                     `repro serve --max-frame-bytes` on the daemons) \
+                     or use path mode (drop --shard-inline) over a \
+                     shared filesystem",
+                    manifest.machine,
+                    bytes.len(),
+                    self.max_frame_bytes
+                )));
+            }
+            // The bytes come off the just-written spill file (page-
+            // cache-warm), not a second in-memory encode: the spill
+            // must exist anyway — it is the run's inspectable copy and
+            // the path-mode fallback — and `io::shard_to_bytes` pins
+            // the file ≡ memory equivalence for transports that do
+            // want to skip the disk.
+            write_frame_bytes(&mut writer, &bytes).map_err(|e| {
+                Error::Runtime(format!(
+                    "sending inline shard for machine {} to {addr}: {e}",
+                    manifest.machine
+                ))
+            })?;
+        }
         Ok(Box::new(SocketConnection {
             frames: FrameReader::with_max_frame(
                 BufReader::new(stream),
@@ -666,6 +775,10 @@ impl Transport for SocketTransport {
 
     fn max_frame_bytes(&self) -> usize {
         self.max_frame_bytes
+    }
+
+    fn wants_inline_shard(&self) -> bool {
+        self.inline_shards
     }
 
     /// Shut down every connection opened so far; already-closed ones
@@ -718,6 +831,66 @@ mod tests {
         assert_eq!(r.read_frame().unwrap().unwrap(), "{\"k\":[1,2]}");
         assert!(r.read_frame().unwrap().is_none());
         assert!(r.read_frame().unwrap().is_none()); // EOF is sticky
+    }
+
+    /// Binary frames share the grammar with text frames: arbitrary
+    /// (non-UTF-8) payloads round-trip through
+    /// `write_frame_bytes`/`read_frame_bytes`, text readers reject them
+    /// structurally, and the two reader flavours interleave on one
+    /// stream — the manifest-then-inline-shard sequence.
+    #[test]
+    fn byte_frames_roundtrip_and_interleave_with_text() {
+        let shard_bytes = vec![0xFFu8, 0x00, b'R', 0xFE, b'\n', 0x80];
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, "{\"type\":\"manifest\"}").unwrap();
+        write_frame_bytes(&mut buf, &shard_bytes).unwrap();
+        write_frame(&mut buf, "after").unwrap();
+        let mut r = FrameReader::new(BufReader::new(buf.as_slice()));
+        assert_eq!(r.read_frame().unwrap().unwrap(), "{\"type\":\"manifest\"}");
+        assert_eq!(r.read_frame_bytes().unwrap().unwrap(), shard_bytes);
+        assert_eq!(r.read_frame().unwrap().unwrap(), "after");
+        assert!(r.read_frame_bytes().unwrap().is_none());
+        // A text read of a non-UTF-8 payload is the structured NotUtf8
+        // violation, not a panic or a lossy string.
+        let mut buf2: Vec<u8> = Vec::new();
+        write_frame_bytes(&mut buf2, &shard_bytes).unwrap();
+        let mut r2 = FrameReader::new(BufReader::new(buf2.as_slice()));
+        assert!(matches!(
+            r2.read_frame().unwrap_err(),
+            Error::Frame(crate::error::FrameError::NotUtf8)
+        ));
+    }
+
+    /// `shard_inline` survives the manifest JSON round-trip, and
+    /// manifests written before the field existed decode as path mode.
+    #[test]
+    fn manifest_shard_inline_roundtrip_and_backcompat() {
+        let mut m = WorkerManifest {
+            machine: 0,
+            machines: 2,
+            seed: 1,
+            samples: 5,
+            burn_in: 0,
+            thin: 1,
+            prior_weight: 0.5,
+            sampler: "rwm:1".into(),
+            shard_path: "/tmp/s.bin".into(),
+            dim: 2,
+            shard_inline: true,
+        };
+        let back =
+            WorkerManifest::from_json(&Json::parse(&m.to_json().render()).unwrap())
+                .unwrap();
+        assert_eq!(m, back);
+        m.shard_inline = false;
+        // Strip the field to simulate an old leader's manifest.
+        let mut obj = match m.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        obj.remove("shard_inline");
+        let old = WorkerManifest::from_json(&Json::Obj(obj)).unwrap();
+        assert_eq!(m, old, "missing field must decode as path mode");
     }
 
     #[test]
@@ -910,6 +1083,7 @@ mod tests {
             sampler: "rwm:1".into(),
             shard_path: "/tmp/none".into(),
             dim: 1,
+            shard_inline: false,
         };
         let err =
             t.connect(0, &m, Path::new("/tmp/none.json")).unwrap_err();
@@ -918,6 +1092,47 @@ mod tests {
             text.contains("connecting to worker") && text.contains(&dead),
             "{text}"
         );
+    }
+
+    /// An inline shard bigger than the transport's frame cap fails at
+    /// dispatch with an error naming the cap and the ways out — not
+    /// deep in the run with a bare Oversized frame error from the
+    /// daemon's reader.
+    #[test]
+    fn oversized_inline_shard_fails_fast_at_the_leader() {
+        let dir = std::env::temp_dir().join("repro_inline_cap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let shard_path = dir.join("big.bin");
+        std::fs::write(&shard_path, vec![0u8; 256]).unwrap();
+        // A listener that never accepts is enough: the handshake
+        // completes into the backlog, and connect() fails on the size
+        // pre-check before any daemon interaction.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = SocketTransport::from_spec(&addr)
+            .unwrap()
+            .with_inline_shards(true)
+            .with_max_frame_bytes(64);
+        let m = WorkerManifest {
+            machine: 0,
+            machines: 1,
+            seed: 1,
+            samples: 2,
+            burn_in: 0,
+            thin: 1,
+            prior_weight: 1.0,
+            sampler: "rwm:1".into(),
+            shard_path: shard_path.to_string_lossy().into_owned(),
+            dim: 1,
+            shard_inline: true,
+        };
+        let err = t.connect(0, &m, Path::new("/tmp/none.json")).unwrap_err();
+        let text = err.to_string();
+        assert!(
+            text.contains("inline-frame cap") && text.contains("256"),
+            "{text}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -933,6 +1148,7 @@ mod tests {
             sampler: "hmc:1e-1,10".into(),
             shard_path: "/tmp/shard_2.json".into(),
             dim: 4,
+            shard_inline: true,
         };
         let dir = std::env::temp_dir().join("repro_transport_test");
         std::fs::create_dir_all(&dir).unwrap();

@@ -143,21 +143,47 @@ pub fn write_shard(
     }
 }
 
-/// Load a shard spilled in either format, autodetected from the magic.
-pub fn read_shard(path: &Path) -> Result<Dataset> {
-    let bytes = std::fs::read(path)?;
+/// Encode a shard in the requested format as an in-memory byte buffer
+/// — exactly the bytes [`write_shard`] would spill to disk (pinned by
+/// `shard_bytes_match_file_spill_both_formats`). The inline-shard path
+/// ships the spill *file's* bytes (the leader has already spilled by
+/// dispatch time, and the file doubles as the inspectable copy), so
+/// this encoder is the contract's executable spec — and the encode
+/// half for callers that want to skip the disk round-trip.
+pub fn shard_to_bytes(data: &Dataset, format: ShardFormat) -> Vec<u8> {
+    match format {
+        ShardFormat::Json => shard_to_json(data).render().into_bytes(),
+        ShardFormat::Binary => shard_to_bin(data),
+    }
+}
+
+/// Decode a shard from in-memory bytes, format autodetected from the
+/// magic — the single decode path behind [`read_shard`] and the socket
+/// daemons' inline-shard frames, so file and wire delivery are
+/// bit-identical by construction.
+pub fn shard_from_bytes(bytes: &[u8]) -> Result<Dataset> {
     if bytes.starts_with(SHARD_MAGIC) {
-        shard_from_bin(&bytes)
+        shard_from_bin(bytes)
     } else {
-        let text = std::str::from_utf8(&bytes).map_err(|_| {
-            Error::Parse(format!(
-                "shard {} is neither binary (bad magic) nor JSON (not \
-                 utf-8)",
-                path.display()
-            ))
+        let text = std::str::from_utf8(bytes).map_err(|_| {
+            Error::Parse(
+                "shard is neither binary (bad magic) nor JSON (not utf-8)"
+                    .into(),
+            )
         })?;
         shard_from_json(&Json::parse(text)?)
     }
+}
+
+/// Load a shard spilled in either format, autodetected from the magic.
+pub fn read_shard(path: &Path) -> Result<Dataset> {
+    let bytes = std::fs::read(path)?;
+    shard_from_bytes(&bytes).map_err(|e| match e {
+        Error::Parse(m) => {
+            Error::Parse(format!("shard {}: {m}", path.display()))
+        }
+        other => other,
+    })
 }
 
 /// Spill a dataset in the binary shard format (see the module docs for
@@ -748,6 +774,32 @@ mod tests {
         // rejects it too.
         std::fs::write(&path, b"not a shard at all").unwrap();
         assert!(read_shard(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The in-memory encode/decode pair is bit-identical to the file
+    /// spill path in both formats — the inline-shard wire contract.
+    #[test]
+    fn shard_bytes_match_file_spill_both_formats() {
+        use crate::data::synth;
+        let dir = std::env::temp_dir().join("repro_shard_bytes_test");
+        let ds = synth::logistic(50, 3, 8);
+        let idx: Vec<usize> = (0..50).collect();
+        let shard = ds.select(&idx).unwrap();
+        for format in [ShardFormat::Json, ShardFormat::Binary] {
+            let path = dir.join(format!("s.{}", format.extension()));
+            write_shard(&path, &shard, format).unwrap();
+            let file_bytes = std::fs::read(&path).unwrap();
+            let mem_bytes = shard_to_bytes(&shard, format);
+            assert_eq!(
+                file_bytes, mem_bytes,
+                "{} in-memory encoding diverged from the file spill",
+                format.name()
+            );
+            let back = shard_from_bytes(&mem_bytes).unwrap();
+            assert_eq!(format!("{shard:?}"), format!("{back:?}"));
+        }
+        assert!(shard_from_bytes(&[0xFF, 0xFE, 0x00]).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -27,6 +27,15 @@ pub enum Error {
     /// structured so leaders and socket peers can tell a corrupt prefix
     /// from an oversized frame from a mid-payload truncation.
     Frame(FrameError),
+    /// A combine-kernel backend that cannot run in this build/
+    /// environment (e.g. `--combine-backend device` with no vendored
+    /// PJRT bindings). Structured so callers can distinguish "backend
+    /// unavailable" from a genuine runtime fault and tell the user
+    /// which backend to fall back to.
+    KernelUnavailable {
+        backend: &'static str,
+        reason: String,
+    },
 }
 
 /// Structured frame-protocol failures (see `coordinator::transport`).
@@ -99,6 +108,10 @@ impl fmt::Display for Error {
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Parse(m) => write!(f, "parse error: {m}"),
             Error::Frame(e) => write!(f, "frame protocol error: {e}"),
+            Error::KernelUnavailable { backend, reason } => write!(
+                f,
+                "combine kernel backend '{backend}' unavailable: {reason}"
+            ),
         }
     }
 }

@@ -1,0 +1,312 @@
+//! Cache-blocked CPU backend.
+//!
+//! The scalar reference solves are *latency*-bound, not flop-bound:
+//! a forward substitution carries one accumulator through `d` dependent
+//! fused multiply-subtracts, so the core idles for the FMA latency on
+//! every step. This backend reorganizes the same arithmetic over
+//! **panels** — a block of table rows (or all `d` inverse columns) is
+//! solved simultaneously, with the loop over panel lanes *innermost* —
+//! which gives the CPU `panel` independent dependency chains to overlap
+//! and a contiguous unit-stride inner loop to vectorize.
+//!
+//! ## Bit-identity contract
+//!
+//! Reordering is only across independent table entries / inverse
+//! columns, never *within* one entry's accumulation: every entry still
+//! starts from the same value, subtracts the same products in the same
+//! (ascending-`k`) order, and divides by the same pivot. The results
+//! are therefore bit-identical to [`NaiveKernel`](super::NaiveKernel)
+//! — pinned by the unit tests below, `rust/tests/kernel_parity.rs`
+//! (whole-combiner byte-identity at 1/2/4 threads, including
+//! non-finite table entries), and the `micro_hotpath` bench, which
+//! hard-fails if this backend ever stops beating the reference.
+
+use super::naive::check_dims;
+use super::CombineKernel;
+use crate::error::Result;
+use crate::math::linalg::{self, Mat};
+use crate::math::mvn::Mvn;
+use crate::types::SampleMatrix;
+
+/// Rows per column panel of the log-density table solve: enough
+/// independent dependency chains to hide FMA latency and fill a SIMD
+/// register file, small enough that a d×panel f64 panel stays in L1
+/// for the d ≲ 100 regime the combiners run in.
+const PANEL_ROWS: usize = 32;
+
+/// Cache-blocked CPU kernel (`--combine-backend blocked`).
+#[derive(Debug, Clone)]
+pub struct BlockedCpuKernel {
+    panel_rows: usize,
+}
+
+impl Default for BlockedCpuKernel {
+    fn default() -> Self {
+        BlockedCpuKernel { panel_rows: PANEL_ROWS }
+    }
+}
+
+impl BlockedCpuKernel {
+    /// Kernel with an explicit panel width (tests sweep odd widths to
+    /// pin the remainder-panel path; results are identical at any
+    /// width ≥ 1).
+    pub fn with_panel_rows(panel_rows: usize) -> Self {
+        BlockedCpuKernel { panel_rows: panel_rows.max(1) }
+    }
+}
+
+impl CombineKernel for BlockedCpuKernel {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    /// Whitened-quadratic-form table over column panels.
+    ///
+    /// Per panel of `r ≤ panel_rows` draws: load the transposed
+    /// residual panel `y[i][t] = θ_t[i] − μ[i]` (coordinate-major, so
+    /// lane loops are unit-stride), forward-solve `L y = resid` with
+    /// the lane loop innermost, then reduce `|y_t|²` in ascending-`i`
+    /// order — each per-entry operation sequence is exactly
+    /// [`Mvn::logpdf_with`]'s.
+    fn logpdf_table(
+        &self,
+        mvn: &Mvn,
+        set: &SampleMatrix,
+    ) -> Result<Vec<f64>> {
+        check_dims(mvn, set)?;
+        let d = mvn.dim();
+        let l = mvn.chol();
+        let mean = mvn.mean();
+        let log_norm = mvn.log_norm();
+        let width = self.panel_rows;
+        let mut out = Vec::with_capacity(set.len());
+        let mut panel = vec![0.0f64; d * width];
+        let mut acc = vec![0.0f64; width];
+        for block in set.rows_chunked(width) {
+            let r = block.len() / d;
+            // Transposed residuals: same subtraction as the scalar
+            // path's `scratch[i] = x[i] - mean[i]`, laid out lane-major.
+            for i in 0..d {
+                let mi = mean[i];
+                let yi = &mut panel[i * r..(i + 1) * r];
+                for (t, y) in yi.iter_mut().enumerate() {
+                    *y = block[t * d + i] - mi;
+                }
+            }
+            // Forward substitution, panel-wide. Entry (i, t) starts at
+            // its residual, subtracts L[i][k]·y[k][t] for k ascending,
+            // then divides by the pivot — the scalar
+            // `forward_solve_in_place` op sequence per entry, with the
+            // lane loop innermost for ILP/SIMD.
+            for i in 0..d {
+                let (solved, active) = panel.split_at_mut(i * r);
+                let yi = &mut active[..r];
+                for k in 0..i {
+                    let lik = l[(i, k)];
+                    let yk = &solved[k * r..(k + 1) * r];
+                    for (y, &v) in yi.iter_mut().zip(yk) {
+                        *y -= lik * v;
+                    }
+                }
+                let lii = l[(i, i)];
+                for y in yi.iter_mut() {
+                    *y /= lii;
+                }
+            }
+            // |y_t|² accumulated over i ascending from 0.0 — the same
+            // fold order as `linalg::dot`'s iterator sum.
+            for a in acc[..r].iter_mut() {
+                *a = 0.0;
+            }
+            for i in 0..d {
+                let yi = &panel[i * r..(i + 1) * r];
+                for (a, &v) in acc[..r].iter_mut().zip(yi) {
+                    *a += v * v;
+                }
+            }
+            for &a in &acc[..r] {
+                out.push(log_norm - 0.5 * a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Jittered SPD inverse with the `d` basis-column solves batched
+    /// into one blocked triangular solve pair (ROADMAP rung (d)).
+    ///
+    /// The factor comes from the same [`linalg::jittered_cholesky`]
+    /// escalation policy as the scalar path; the forward pass solves
+    /// `L Y = I` with the column loop innermost, the backward pass
+    /// solves `Lᵀ X = Y` in place, and the result is symmetrized with
+    /// the same [`Mat::symmetrize`] — so every element matches
+    /// [`linalg::spd_inverse_jittered_in_place`] bit-for-bit while the
+    /// inner loops run over contiguous rows instead of one
+    /// latency-chained column at a time.
+    fn spd_inverse_in_place(&self, a: &mut Mat) -> Result<()> {
+        let l = linalg::jittered_cholesky(a)?;
+        let n = l.rows();
+        let mut y = Mat::zeros(n, n);
+        // Forward: row i of Y starts at row i of I, subtracts
+        // L[i][k]·Y[k] for k ascending, divides by the pivot — per
+        // column j this is exactly `forward_solve(l, e_j)`.
+        for i in 0..n {
+            y[(i, i)] = 1.0;
+            for k in 0..i {
+                let lik = l[(i, k)];
+                for j in 0..n {
+                    let v = y[(k, j)];
+                    y[(i, j)] -= lik * v;
+                }
+            }
+            let lii = l[(i, i)];
+            for j in 0..n {
+                y[(i, j)] /= lii;
+            }
+        }
+        // Backward, in place: row i starts at its forward value,
+        // subtracts L[k][i]·X[k] for k ascending in (i+1)..n, divides —
+        // per column j exactly `backward_solve(l, y_j)`.
+        for i in (0..n).rev() {
+            for k in (i + 1)..n {
+                let lki = l[(k, i)];
+                for j in 0..n {
+                    let v = y[(k, j)];
+                    y[(i, j)] -= lki * v;
+                }
+            }
+            let lii = l[(i, i)];
+            for j in 0..n {
+                y[(i, j)] /= lii;
+            }
+        }
+        y.symmetrize();
+        *a = y;
+        Ok(())
+    }
+
+    /// Same shared block-reduced pass as the reference backend — the
+    /// norm cache was already cache-blocked (PR 1), so there is nothing
+    /// further to reorganize on CPU; the seam exists for device
+    /// backends.
+    fn row_norms(&self, set: &SampleMatrix) -> Result<Vec<f64>> {
+        Ok(crate::combine::row_norms(set))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::NaiveKernel;
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_spd(d: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed_from(seed);
+        let b = Mat::from_vec(
+            (0..d * d).map(|_| rng.normal()).collect(),
+            d,
+            d,
+        )
+        .unwrap();
+        let mut a = b.matmul(&b.transpose()).unwrap();
+        for i in 0..d {
+            a[(i, i)] += 0.5;
+        }
+        a
+    }
+
+    fn random_mvn(d: usize, seed: u64) -> Mvn {
+        let mut rng = Pcg64::seed_from(seed);
+        let mean: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        Mvn::new(mean, random_spd(d, seed ^ 0xA5)).unwrap()
+    }
+
+    /// Bit-identity of the table op against the scalar reference, at
+    /// panel widths that exercise full panels, remainder panels, and
+    /// the degenerate width-1 panel, for several dimensions.
+    #[test]
+    fn logpdf_table_bit_identical_to_naive() {
+        for (d, t, seed) in [(1usize, 7usize, 1u64), (3, 50, 2), (24, 67, 3)] {
+            let mvn = random_mvn(d, seed);
+            let mut rng = Pcg64::seed_from(seed ^ 0x77);
+            let set = mvn.sample_n(t, &mut rng);
+            let want = NaiveKernel.logpdf_table(&mvn, &set).unwrap();
+            for width in [1usize, 3, 32, 1000] {
+                let got = BlockedCpuKernel::with_panel_rows(width)
+                    .logpdf_table(&mvn, &set)
+                    .unwrap();
+                assert_eq!(want.len(), got.len());
+                for (t, (w, g)) in want.iter().zip(&got).enumerate() {
+                    assert_eq!(
+                        w.to_bits(),
+                        g.to_bits(),
+                        "d={d} width={width} entry {t}: {w} vs {g}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Non-finite draws must flow through the blocked panels exactly as
+    /// through the scalar path — ∞ − ∞ → NaN in the same places, same
+    /// bit patterns (the table feeds IMG weights, where a silent
+    /// divergence would corrupt accept decisions).
+    #[test]
+    fn logpdf_table_preserves_nonfinite_entries_bitwise() {
+        let mvn = random_mvn(3, 11);
+        let mut rng = Pcg64::seed_from(12);
+        let mut set = mvn.sample_n(10, &mut rng);
+        set.push(&[f64::INFINITY, 0.5, -0.25]);
+        set.push(&[f64::NEG_INFINITY, f64::NAN, 1.0]);
+        set.push(&[0.0, -0.0, f64::MAX]);
+        let want = NaiveKernel.logpdf_table(&mvn, &set).unwrap();
+        let got = BlockedCpuKernel::with_panel_rows(4)
+            .logpdf_table(&mvn, &set)
+            .unwrap();
+        assert!(
+            want.iter().any(|v| !v.is_finite()),
+            "test must actually produce non-finite table entries"
+        );
+        for (t, (w, g)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(w.to_bits(), g.to_bits(), "entry {t}: {w} vs {g}");
+        }
+    }
+
+    /// The batched inverse matches the scalar jittered inverse
+    /// bit-for-bit, on well-conditioned SPD inputs and on a singular
+    /// matrix that takes the jitter-escalation path.
+    #[test]
+    fn batched_inverse_bit_identical_to_scalar() {
+        let singular =
+            Mat::from_vec(vec![1.0, 1.0, 1.0, 1.0], 2, 2).unwrap();
+        for a in [random_spd(1, 4), random_spd(5, 5), random_spd(24, 6), singular]
+        {
+            let mut want = a.clone();
+            linalg::spd_inverse_jittered_in_place(&mut want).unwrap();
+            let mut got = a.clone();
+            BlockedCpuKernel::default()
+                .spd_inverse_in_place(&mut got)
+                .unwrap();
+            for (i, (w, g)) in
+                want.as_slice().iter().zip(got.as_slice()).enumerate()
+            {
+                assert_eq!(
+                    w.to_bits(),
+                    g.to_bits(),
+                    "element {i}: {w} vs {g}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn norms_match_naive() {
+        let mut rng = Pcg64::seed_from(9);
+        let mut set = SampleMatrix::new(2);
+        for _ in 0..77 {
+            set.push(&[rng.normal() * 3.0, rng.normal()]);
+        }
+        let want = NaiveKernel.row_norms(&set).unwrap();
+        let got = BlockedCpuKernel::default().row_norms(&set).unwrap();
+        assert_eq!(want, got);
+    }
+}

@@ -1,0 +1,141 @@
+//! Device backend: the combine-table op lowered through the PJRT
+//! surface — the mount point for the future Pallas combine kernel.
+//!
+//! The sampler side already has a python → HLO → PJRT path
+//! (`python/compile/` lowers likelihood kernels, `runtime/` executes
+//! them); the combine stage had none. This backend gives it the same
+//! shape: [`DeviceKernel::new`] opens a PJRT client through
+//! [`crate::runtime::xla_shim`], and [`CombineKernel::logpdf_table`]
+//! stages the factor/mean/draws as device buffers and executes the
+//! `combine_logpdf_table` HLO artifact ([`COMBINE_TABLE_ARTIFACT`])
+//! once one is lowered.
+//!
+//! Offline — this crate vendors no PJRT bindings, `xla_shim` fails
+//! every fallible call — construction returns a **structured**
+//! [`Error::KernelUnavailable`] ("backend unavailable"), so
+//! `--combine-backend device` is a clean, diagnosable error and never
+//! a panic. The kernel parity gates apply to the CPU backends only:
+//! device results are f32 and explicitly *not* bit-identical, which is
+//! why this backend must always be selected explicitly.
+//!
+//! Note on threading: the offline stub's client is a unit struct and
+//! trivially `Send + Sync`; the real `xla` bindings are `Rc`-based, so
+//! vendoring them will need a per-thread client handle here (the same
+//! constraint `runtime/client.rs` documents).
+
+use std::fmt;
+
+use super::CombineKernel;
+use crate::error::{Error, Result};
+use crate::math::linalg::Mat;
+use crate::math::mvn::Mvn;
+use crate::runtime::xla_shim as xla;
+use crate::types::SampleMatrix;
+
+/// Artifact name the device table op executes — the contract for the
+/// python side's future Pallas lowering: inputs `(rows: [t, d],
+/// mean: [d], chol: [d, d], log_norm: [])`, output `table: [t]`.
+pub const COMBINE_TABLE_ARTIFACT: &str = "combine_logpdf_table";
+
+/// PJRT-backed combine kernel (`--combine-backend device`).
+pub struct DeviceKernel {
+    client: xla::PjRtClient,
+}
+
+impl fmt::Debug for DeviceKernel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("DeviceKernel")
+            .field("platform", &self.client.platform_name())
+            .finish()
+    }
+}
+
+impl DeviceKernel {
+    /// Open a PJRT client for the combine table op. Offline this is
+    /// where `--combine-backend device` fails — before any sampling or
+    /// combine work is spent — with a structured
+    /// [`Error::KernelUnavailable`] carrying the stub's reason.
+    pub fn new() -> Result<DeviceKernel> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| Error::KernelUnavailable {
+                backend: "device",
+                reason: e.to_string(),
+            })?;
+        Ok(DeviceKernel { client })
+    }
+
+    /// Structured "op not lowered yet" error: the client exists (so a
+    /// runtime *is* available) but the combine-stage artifact has not
+    /// been lowered — name exactly what is missing.
+    fn not_lowered(op: &str) -> Error {
+        Error::KernelUnavailable {
+            backend: "device",
+            reason: format!(
+                "op '{op}' needs the {COMBINE_TABLE_ARTIFACT} HLO \
+                 artifact (not lowered yet; see python/compile)"
+            ),
+        }
+    }
+}
+
+impl CombineKernel for DeviceKernel {
+    fn name(&self) -> &'static str {
+        "device"
+    }
+
+    /// Stage the table inputs on the device. Execution requires the
+    /// [`COMBINE_TABLE_ARTIFACT`] HLO; until the Pallas lowering lands
+    /// this returns the structured not-lowered error after the buffers
+    /// round-trip (which exercises the real PJRT staging path when
+    /// bindings are vendored).
+    fn logpdf_table(
+        &self,
+        mvn: &Mvn,
+        set: &SampleMatrix,
+    ) -> Result<Vec<f64>> {
+        super::naive::check_dims(mvn, set)?;
+        let d = mvn.dim();
+        let rows: Vec<f32> =
+            set.as_slice().iter().map(|&v| v as f32).collect();
+        let mean: Vec<f32> = mvn.mean().iter().map(|&v| v as f32).collect();
+        let chol: Vec<f32> =
+            mvn.chol().as_slice().iter().map(|&v| v as f32).collect();
+        let _rows_buf =
+            self.client.buffer_from_host_buffer(&rows, &[set.len(), d], None)?;
+        let _mean_buf = self.client.buffer_from_host_buffer(&mean, &[d], None)?;
+        let _chol_buf = self.client.buffer_from_host_buffer(&chol, &[d, d], None)?;
+        let _norm_buf = self
+            .client
+            .buffer_from_host_buffer(&[mvn.log_norm() as f32], &[], None)?;
+        Err(Self::not_lowered("logpdf_table"))
+    }
+
+    /// Dense d×d inverses are far below the device dispatch
+    /// break-even; there is no device op for them by design.
+    fn spd_inverse_in_place(&self, _a: &mut Mat) -> Result<()> {
+        Err(Self::not_lowered("spd_inverse_in_place"))
+    }
+
+    fn row_norms(&self, _set: &SampleMatrix) -> Result<Vec<f64>> {
+        Err(Self::not_lowered("row_norms"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Offline, construction is the failure point and the error is the
+    /// structured variant with the stub's reason — no panics anywhere.
+    #[test]
+    fn offline_construction_fails_structured() {
+        let err = DeviceKernel::new().unwrap_err();
+        match err {
+            Error::KernelUnavailable { backend, reason } => {
+                assert_eq!(backend, "device");
+                assert!(reason.contains("offline stub"), "{reason}");
+            }
+            other => panic!("expected KernelUnavailable, got {other:?}"),
+        }
+    }
+}

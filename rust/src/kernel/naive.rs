@@ -1,0 +1,103 @@
+//! Scalar reference backend — the combine layer's original loops,
+//! extracted behind the [`CombineKernel`] seam.
+//!
+//! Every other backend is pinned against this one: the blocked CPU
+//! kernel must match it bit-for-bit (`rust/tests/kernel_parity.rs`),
+//! and the bench gate in `benches/micro_hotpath.rs` measures against
+//! it. Keep these bodies boring — they *are* the spec.
+
+use super::CombineKernel;
+use crate::error::{Error, Result};
+use crate::math::linalg::{self, Mat};
+use crate::math::mvn::Mvn;
+use crate::types::SampleMatrix;
+
+/// The bit-exact scalar reference backend (`--combine-backend naive`,
+/// and the default when no backend is configured).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NaiveKernel;
+
+impl CombineKernel for NaiveKernel {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    /// Row-at-a-time [`Mvn::logpdf_with`] over one reused scratch
+    /// buffer — exactly the loop `combine/semiparametric.rs` ran
+    /// inline before the kernel seam existed.
+    fn logpdf_table(
+        &self,
+        mvn: &Mvn,
+        set: &SampleMatrix,
+    ) -> Result<Vec<f64>> {
+        check_dims(mvn, set)?;
+        let mut scratch = vec![0.0; mvn.dim()];
+        Ok(set.rows().map(|r| mvn.logpdf_with(r, &mut scratch)).collect())
+    }
+
+    /// Column-at-a-time jittered inverse — the single pre-existing copy
+    /// in [`linalg::spd_inverse_jittered_in_place`].
+    fn spd_inverse_in_place(&self, a: &mut Mat) -> Result<()> {
+        linalg::spd_inverse_jittered_in_place(a)
+    }
+
+    /// The combine layer's shared norm pass ([`crate::combine::row_norms`])
+    /// — already block-reduced since PR 1; the kernel seam exists so
+    /// device backends can take it over, not because the CPU pass needs
+    /// restructuring.
+    fn row_norms(&self, set: &SampleMatrix) -> Result<Vec<f64>> {
+        Ok(crate::combine::row_norms(set))
+    }
+}
+
+/// Shared input validation for the table op (both CPU backends).
+pub(crate) fn check_dims(mvn: &Mvn, set: &SampleMatrix) -> Result<()> {
+    if set.dim() != mvn.dim() {
+        return Err(Error::Shape(format!(
+            "logpdf table: set dim {} != mvn dim {}",
+            set.dim(),
+            mvn.dim()
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn table_matches_per_row_logpdf() {
+        let mut rng = Pcg64::seed_from(3);
+        let cov = Mat::from_vec(vec![2.0, 0.7, 0.7, 1.5], 2, 2).unwrap();
+        let mvn = Mvn::new(vec![0.4, -0.2], cov).unwrap();
+        let set = mvn.sample_n(37, &mut rng);
+        let table = NaiveKernel.logpdf_table(&mvn, &set).unwrap();
+        assert_eq!(table.len(), 37);
+        for (t, row) in set.rows().enumerate() {
+            assert_eq!(table[t].to_bits(), mvn.logpdf(row).to_bits());
+        }
+    }
+
+    #[test]
+    fn table_rejects_dim_mismatch() {
+        let mvn = Mvn::new(vec![0.0; 3], Mat::identity(3)).unwrap();
+        let set = SampleMatrix::from_rows(vec![1.0, 2.0], 2).unwrap();
+        assert!(NaiveKernel.logpdf_table(&mvn, &set).is_err());
+    }
+
+    #[test]
+    fn norms_match_reference_pass() {
+        let mut rng = Pcg64::seed_from(5);
+        let mut set = SampleMatrix::new(3);
+        for _ in 0..130 {
+            set.push(&[rng.normal(), rng.normal(), rng.normal()]);
+        }
+        let got = NaiveKernel.row_norms(&set).unwrap();
+        for (row, n) in set.rows().zip(&got) {
+            let want: f64 = row.iter().map(|v| v * v).sum();
+            assert_eq!(want.to_bits(), n.to_bits());
+        }
+    }
+}

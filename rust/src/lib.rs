@@ -43,6 +43,7 @@ pub mod coordinator;
 pub mod data;
 pub mod error;
 pub mod evaluation;
+pub mod kernel;
 pub mod math;
 pub mod model;
 pub mod rng;

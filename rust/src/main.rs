@@ -145,6 +145,19 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
                     ))
                 })?);
             }
+            if let Some(k) = args.get("combine-backend") {
+                b = b.combine_backend(
+                    repro::kernel::CombineKernelKind::parse(k)?,
+                );
+            }
+            if args.get("shard-inline") == Some("true") {
+                b = b.shard_inline(true);
+            }
+            if let Some(v) = args.get("max-frame-bytes") {
+                b = b.max_frame_bytes(v.parse().map_err(|_| {
+                    Error::Config(format!("bad --max-frame-bytes: {v}"))
+                })?);
+            }
             if let Some(d) = args.get("artifacts") {
                 b = b.artifact_dir(d);
             }
@@ -309,15 +322,25 @@ fn cmd_worker(args: &Args) -> Result<()> {
 /// Hidden socket-mode worker daemon (dialed by `pipeline --workers`):
 /// bind `--listen`, print `LISTENING <addr>` (so `--listen host:0`
 /// ephemeral ports are discoverable), serve one manifest per
-/// connection. `--jobs N` exits after N jobs (0 = serve until killed).
+/// connection. `--jobs N` exits after N jobs (0 = serve until killed);
+/// `--max-frame-bytes B` raises the inbound frame cap for leaders
+/// shipping large shards inline (`--shard-inline true`).
 fn cmd_serve(args: &Args) -> Result<()> {
     use repro::coordinator::serve::{serve, ServeOptions};
     let listen = args.get("listen").unwrap_or("127.0.0.1:0");
     let jobs = args.get_usize("jobs", 0)?;
-    let opts = ServeOptions {
+    let mut opts = ServeOptions {
         max_jobs: if jobs == 0 { None } else { Some(jobs) },
         ..Default::default()
     };
+    // Inbound frame cap (manifest + optional inline shard frame).
+    // Leaders shipping shards inline past the 64 MiB default need
+    // this raised in step with their transport-side cap.
+    if let Some(b) = args.get("max-frame-bytes") {
+        opts.max_frame_bytes = b.parse().map_err(|_| {
+            Error::Config(format!("bad --max-frame-bytes: {b}"))
+        })?;
+    }
     serve(listen, &opts, &mut std::io::stdout())
 }
 
@@ -346,10 +369,12 @@ fn usage() -> &'static str {
      pipeline      --model M --n N --d D --machines M --samples T \\\n\
                    --method NAME --seed S [--threads K] \\\n\
                    [--combine-threads K] [--combine-cache-budget-mb MB] \\\n\
+                   [--combine-backend naive|blocked|device] \\\n\
                    [--out FILE] [--shard-format json|binary] \\\n\
                    [--process-mode true [--worker-bin PATH] \\\n\
                     [--worker-slots W]] \\\n\
-                   [--workers HOST:PORT,… (repro serve daemons)] \\\n\
+                   [--workers HOST:PORT,… (repro serve daemons) \\\n\
+                    [--shard-inline true] [--max-frame-bytes B]] \\\n\
                    [--use-runtime true --artifacts DIR] [--config FILE]\n\
      single-chain  --model M --n N --d D --samples T [--out FILE]\n\
      combine       --method NAME [--t T] [--combine-threads K] \\\n\

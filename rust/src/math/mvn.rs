@@ -46,6 +46,15 @@ impl Mvn {
         &self.chol
     }
 
+    /// The cached log-normalizer `-0.5 (d log 2π + log det Σ)` — what
+    /// [`Mvn::logpdf`] adds to the whitened quadratic form. Exposed so
+    /// the combine kernels ([`crate::kernel`]) can evaluate whole
+    /// log-density tables against the same factorization with the same
+    /// final expression, bit-for-bit.
+    pub fn log_norm(&self) -> f64 {
+        self.log_norm
+    }
+
     pub fn dim(&self) -> usize {
         self.mean.len()
     }

@@ -64,6 +64,51 @@ pub fn annealed_bandwidth(iteration: usize, dim: usize) -> f64 {
     (iteration.max(1) as f64).powf(-1.0 / (4.0 + dim as f64))
 }
 
+/// Precomputed annealed-bandwidth schedule (ROADMAP rung (c)).
+///
+/// Every IMG chain of one combine call walks the same `h_i` sequence,
+/// so each `powf` needs evaluating once per *combine call*, not once
+/// per iteration per chain. The table is filled with
+/// [`annealed_bandwidth`] itself and the rare out-of-table lookup
+/// falls back to the same function, so schedules read from the table
+/// are bit-identical to computing `h_i` inline — pinned by the tests
+/// below and, end-to-end, by the combine layer's thread-count /
+/// backend byte-identity suites.
+#[derive(Debug, Clone)]
+pub struct AnnealSchedule {
+    dim: usize,
+    h: Vec<f64>,
+}
+
+impl AnnealSchedule {
+    /// Tabulate `h_1 … h_iters` for dimension `dim`.
+    pub fn new(dim: usize, iters: usize) -> Self {
+        AnnealSchedule {
+            dim,
+            h: (1..=iters).map(|i| annealed_bandwidth(i, dim)).collect(),
+        }
+    }
+
+    /// `h_i` (1-based, like Algorithm 1): table lookup, or the direct
+    /// computation past the tabulated range.
+    #[inline]
+    pub fn h(&self, iteration: usize) -> f64 {
+        match self.h.get(iteration.wrapping_sub(1)) {
+            Some(&h) => h,
+            None => annealed_bandwidth(iteration, self.dim),
+        }
+    }
+
+    /// Number of tabulated iterations.
+    pub fn len(&self) -> usize {
+        self.h.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.h.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,6 +144,30 @@ mod tests {
         let kde = Kde::new(&s, 0.5);
         assert!(kde.density(&[0.0]) > kde.density(&[1.0]));
         assert!(kde.density(&[1.0]) > kde.density(&[3.0]));
+    }
+
+    /// The schedule table is bit-identical to computing the bandwidth
+    /// inline, inside and past the tabulated range — including the
+    /// degenerate empty table and the `i = 0` clamp.
+    #[test]
+    fn anneal_schedule_matches_direct_computation_bitwise() {
+        for dim in [1usize, 2, 24] {
+            let s = AnnealSchedule::new(dim, 50);
+            assert_eq!(s.len(), 50);
+            for i in 0..80 {
+                assert_eq!(
+                    s.h(i).to_bits(),
+                    annealed_bandwidth(i, dim).to_bits(),
+                    "dim {dim} iteration {i}"
+                );
+            }
+        }
+        let empty = AnnealSchedule::new(3, 0);
+        assert!(empty.is_empty());
+        assert_eq!(
+            empty.h(7).to_bits(),
+            annealed_bandwidth(7, 3).to_bits()
+        );
     }
 
     #[test]

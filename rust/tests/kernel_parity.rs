@@ -1,0 +1,179 @@
+//! Kernel-backend parity suite — the tentpole's acceptance gate.
+//!
+//! The blocked CPU kernel reorganizes the combine stage's dense loops
+//! for ILP/SIMD but must never change a bit of output: for a fixed
+//! seed, retained draws are **byte-identical** across
+//! `--combine-backend naive` and `blocked`, at any thread count, for
+//! every IMG-based combiner (semiparametric full/nw weights,
+//! nonparametric, pairwise tree). The device backend is required to
+//! fail *structurally* offline (no panics, no silent fallback).
+//!
+//! CI runs this file in the `kernel-parity` job.
+
+use repro::combine::{
+    combine_sets_with, CombineMethod, CombineTuning,
+    DEFAULT_ANNEAL_CACHE_BUDGET,
+};
+use repro::error::Error;
+use repro::kernel::{
+    BlockedCpuKernel, CombineKernel, CombineKernelKind, NaiveKernel,
+};
+use repro::math::linalg::Mat;
+use repro::math::mvn::Mvn;
+use repro::rng::Pcg64;
+use repro::types::SampleMatrix;
+
+fn gaussian_sets(
+    seed: u64,
+    mus: &[Vec<f64>],
+    var: f64,
+    t: usize,
+) -> Vec<SampleMatrix> {
+    let mut rng = Pcg64::seed_from(seed);
+    mus.iter()
+        .map(|mu| {
+            Mvn::new(mu.clone(), Mat::scaled_identity(mu.len(), var))
+                .unwrap()
+                .sample_n(t, &mut rng)
+        })
+        .collect()
+}
+
+fn tuning(kernel: CombineKernelKind, threads: usize) -> CombineTuning {
+    CombineTuning {
+        threads,
+        cache_budget_bytes: DEFAULT_ANNEAL_CACHE_BUDGET,
+        kernel,
+    }
+}
+
+/// Run one method under both CPU backends at 1/2/4 threads and demand
+/// byte-identity everywhere (including across thread counts, which
+/// pins the kernel seam against scheduling effects).
+fn assert_backend_parity(method: CombineMethod, sets: &[SampleMatrix]) {
+    let refs: Vec<&SampleMatrix> = sets.iter().collect();
+    let base = combine_sets_with(
+        method,
+        &refs,
+        900,
+        13,
+        &tuning(CombineKernelKind::Naive, 1),
+    )
+    .unwrap();
+    assert_eq!(base.len(), 900);
+    for threads in [1usize, 2, 4] {
+        for kernel in [CombineKernelKind::Naive, CombineKernelKind::Blocked]
+        {
+            let out = combine_sets_with(
+                method,
+                &refs,
+                900,
+                13,
+                &tuning(kernel, threads),
+            )
+            .unwrap();
+            assert_eq!(
+                base.as_slice(),
+                out.as_slice(),
+                "{} diverged under backend {} at {} threads",
+                method.name(),
+                kernel.name(),
+                threads
+            );
+        }
+    }
+}
+
+#[test]
+fn semiparametric_blocked_matches_naive_at_any_thread_count() {
+    let mus = vec![vec![0.3, -0.1, 0.2], vec![0.7, 0.1, 0.4]];
+    let sets = gaussian_sets(101, &mus, 1.0, 300);
+    assert_backend_parity(CombineMethod::Semiparametric, &sets);
+}
+
+#[test]
+fn semiparametric_nw_blocked_matches_naive_at_any_thread_count() {
+    let mus = vec![vec![0.2, -0.2], vec![0.5, 0.1], vec![0.4, 0.0]];
+    let sets = gaussian_sets(103, &mus, 1.0, 250);
+    assert_backend_parity(CombineMethod::SemiparametricNw, &sets);
+}
+
+#[test]
+fn nonparametric_blocked_matches_naive_at_any_thread_count() {
+    let mus = vec![vec![0.5, -0.5], vec![1.0, 0.0]];
+    let sets = gaussian_sets(105, &mus, 1.0, 300);
+    assert_backend_parity(CombineMethod::Nonparametric, &sets);
+}
+
+#[test]
+fn pairwise_blocked_matches_naive_at_any_thread_count() {
+    // Five machines: an odd carry plus two tree levels.
+    let mus: Vec<Vec<f64>> =
+        [0.6, 0.8, 1.0, 1.2, 1.4].iter().map(|&m| vec![m, -m]).collect();
+    let sets = gaussian_sets(107, &mus, 1.0, 200);
+    assert_backend_parity(CombineMethod::Pairwise, &sets);
+}
+
+/// The table kernels agree bit-for-bit even when a machine's draws
+/// contain non-finite values (a diverged worker chain): ∞ and NaN
+/// propagate through the blocked panels exactly as through the scalar
+/// loop — weight-table corruption must be *identical*, not merely
+/// similar, or backend choice would change downstream accept
+/// decisions.
+#[test]
+fn nonfinite_table_entries_are_bitwise_identical_across_cpu_backends() {
+    let mvn = Mvn::new(
+        vec![0.1, -0.4, 0.3],
+        Mat::from_vec(
+            vec![2.0, 0.5, 0.1, 0.5, 1.5, 0.2, 0.1, 0.2, 1.1],
+            3,
+            3,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let mut rng = Pcg64::seed_from(109);
+    let mut set = mvn.sample_n(40, &mut rng);
+    set.push(&[f64::INFINITY, 0.0, 1.0]);
+    set.push(&[f64::NEG_INFINITY, f64::NAN, -2.0]);
+    set.push(&[f64::MAX, -f64::MAX, 0.5]);
+    let naive = NaiveKernel.logpdf_table(&mvn, &set).unwrap();
+    let blocked =
+        BlockedCpuKernel::default().logpdf_table(&mvn, &set).unwrap();
+    assert!(
+        naive.iter().any(|v| !v.is_finite()),
+        "the poisoned rows must actually produce non-finite entries"
+    );
+    assert_eq!(naive.len(), blocked.len());
+    for (t, (a, b)) in naive.iter().zip(&blocked).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "table entry {t}: naive {a} vs blocked {b}"
+        );
+    }
+}
+
+/// `--combine-backend device` offline: a structured
+/// `Error::KernelUnavailable` naming the backend, surfaced before any
+/// combine work runs — never a panic, never a silent fallback to CPU.
+#[test]
+fn device_backend_offline_is_a_structured_error() {
+    let sets = gaussian_sets(111, &[vec![0.0], vec![0.5]], 1.0, 50);
+    let refs: Vec<&SampleMatrix> = sets.iter().collect();
+    let err = combine_sets_with(
+        CombineMethod::Semiparametric,
+        &refs,
+        100,
+        7,
+        &tuning(CombineKernelKind::Device, 2),
+    )
+    .unwrap_err();
+    match &err {
+        Error::KernelUnavailable { backend, reason } => {
+            assert_eq!(*backend, "device");
+            assert!(!reason.is_empty());
+        }
+        other => panic!("expected KernelUnavailable, got {other:?}"),
+    }
+}

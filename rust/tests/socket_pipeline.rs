@@ -140,6 +140,37 @@ fn socket_mode_with_binary_shards_matches_thread_mode() {
     assert_byte_identical(&socket_out, &thread_out, "socket binary shards");
 }
 
+/// Inline shard delivery (`shard_inline = true`): shards ride the
+/// socket as binary frames after the manifest, daemons never resolve
+/// `shard_path`, and the pipeline output stays byte-identical to
+/// thread mode — at W < M so oversubscription and inline delivery
+/// compose, and in both spill formats (the daemon autodetects from the
+/// inline bytes exactly as it would from a file).
+#[test]
+fn inline_shards_are_byte_identical_to_thread_mode() {
+    let data = synth::gaussian(1_200, 2, 61);
+    for format in [ShardFormat::Json, ShardFormat::Binary] {
+        let base = PipelineConfig::builder("gaussian")
+            .machines(4)
+            .samples_per_machine(100)
+            .method(CombineMethod::Semiparametric)
+            .seed(47)
+            .shard_format(format)
+            .build();
+        let thread_out = pipeline::run_native(&base, &data).unwrap();
+        let (_daemons, spec) = Daemon::fleet(2);
+        let mut sc = base.clone();
+        sc.workers = spec;
+        sc.shard_inline = true;
+        let socket_out = pipeline::run_process(&sc, &data).unwrap();
+        assert_byte_identical(
+            &socket_out,
+            &thread_out,
+            &format!("inline {} shards vs thread", format.name()),
+        );
+    }
+}
+
 /// Dialing an endpoint nobody listens on must surface a connect error
 /// naming the address, not hang or panic.
 #[test]
