@@ -305,6 +305,170 @@ fn main() -> repro::error::Result<()> {
         );
     }
 
+    // --- draw plane: JSON vs binary wire at M=8, d=24 --------------------
+    // The streaming hot path on both ends: worker-side encode (per-draw
+    // JSON frames vs batched binary chunks through a reused scratch
+    // buffer) and the full frame round-trip (encode + frame + read +
+    // decode). CI's bench-smoke job runs this binary, so the build
+    // fails if the binary plane ever stops beating JSON.
+    {
+        use repro::coordinator::transport::{
+            encode_draw, write_frame, write_frame_bytes, DrawEncoder,
+            FrameReader, WireFormat, WireMsg,
+        };
+        use repro::coordinator::worker::DrawMsg;
+        use std::io::BufReader;
+
+        let (m_count, d, t_sub) = (8usize, 24usize, 2_000usize);
+        let mut rng = Pcg64::seed_from(37);
+        let streams: Vec<Vec<DrawMsg>> = (0..m_count)
+            .map(|m| {
+                (0..t_sub)
+                    .map(|i| DrawMsg {
+                        machine: m,
+                        theta: (0..d).map(|_| rng.normal()).collect(),
+                        elapsed: 1e-3 * (i + 1) as f64,
+                        last: i + 1 == t_sub,
+                    })
+                    .collect()
+            })
+            .collect();
+        let ops = m_count * t_sub;
+
+        let encode_pass = |format: WireFormat| -> (f64, usize) {
+            let mut bytes_out = 0usize;
+            let secs = common::time_median(3, || {
+                bytes_out = 0;
+                for (m, msgs) in streams.iter().enumerate() {
+                    let mut buf: Vec<u8> = Vec::new();
+                    {
+                        let mut sink = |payload: &[u8]| {
+                            write_frame_bytes(&mut buf, payload)
+                        };
+                        let mut enc =
+                            DrawEncoder::new(format, 64, m, d);
+                        for msg in msgs {
+                            enc.push(msg, &mut sink).unwrap();
+                        }
+                        enc.flush(&mut sink).unwrap();
+                    }
+                    bytes_out += buf.len();
+                    std::hint::black_box(&buf);
+                }
+            });
+            (secs, bytes_out)
+        };
+        let (secs_enc_json, bytes_json) = encode_pass(WireFormat::Json);
+        let (secs_enc_bin, bytes_bin) = encode_pass(WireFormat::Binary);
+        row(&format!("draw_encode_json_M{m_count}_d{d}"), secs_enc_json, ops);
+        row(&format!("draw_encode_binary_M{m_count}_d{d}"), secs_enc_bin, ops);
+        println!(
+            "wire bytes/draw (d={d}): json {:.0}, binary {:.1}  \
+             (encode speedup {:.2}×)",
+            bytes_json as f64 / ops as f64,
+            bytes_bin as f64 / ops as f64,
+            secs_enc_json / secs_enc_bin
+        );
+
+        let roundtrip_pass = |format: WireFormat| -> f64 {
+            common::time_median(3, || {
+                let mut scalars = 0usize;
+                for (m, msgs) in streams.iter().enumerate() {
+                    let mut buf: Vec<u8> = Vec::new();
+                    if format == WireFormat::Json {
+                        // The seed wire path: one JSON frame per draw.
+                        for msg in msgs {
+                            write_frame(&mut buf, &encode_draw(msg))
+                                .unwrap();
+                        }
+                    } else {
+                        let mut sink = |payload: &[u8]| {
+                            write_frame_bytes(&mut buf, payload)
+                        };
+                        let mut enc =
+                            DrawEncoder::new(format, 64, m, d);
+                        for msg in msgs {
+                            enc.push(msg, &mut sink).unwrap();
+                        }
+                        enc.flush(&mut sink).unwrap();
+                    }
+                    let mut r =
+                        FrameReader::new(BufReader::new(buf.as_slice()));
+                    let mut payload: Vec<u8> = Vec::new();
+                    while r.read_frame_into(&mut payload).unwrap().is_some()
+                    {
+                        match WireMsg::decode_frame(&payload).unwrap() {
+                            WireMsg::Draw(dm) => scalars += dm.theta.len(),
+                            WireMsg::Chunk(c) => scalars += c.thetas.len(),
+                            other => {
+                                panic!("unexpected frame {other:?}")
+                            }
+                        }
+                    }
+                }
+                assert_eq!(scalars, ops * d, "round-trip dropped draws");
+                std::hint::black_box(scalars);
+            })
+        };
+        let secs_rt_json = roundtrip_pass(WireFormat::Json);
+        let secs_rt_bin = roundtrip_pass(WireFormat::Binary);
+        row(
+            &format!("frame_roundtrip_json_M{m_count}_d{d}"),
+            secs_rt_json,
+            ops,
+        );
+        row(
+            &format!("frame_roundtrip_binary_M{m_count}_d{d}"),
+            secs_rt_bin,
+            ops,
+        );
+        println!(
+            "frame round-trip speedup (M={m_count}, d={d}, T={t_sub}): \
+             {:.2}×",
+            secs_rt_json / secs_rt_bin
+        );
+        records.push(common::BenchRecord {
+            name: format!("draw_encode_json_M{m_count}_T{t_sub}_d{d}"),
+            ns_per_op: secs_enc_json * 1e9,
+            threads: 1,
+            speedup: 1.0,
+        });
+        records.push(common::BenchRecord {
+            name: format!("draw_encode_binary_M{m_count}_T{t_sub}_d{d}"),
+            ns_per_op: secs_enc_bin * 1e9,
+            threads: 1,
+            speedup: secs_enc_json / secs_enc_bin,
+        });
+        records.push(common::BenchRecord {
+            name: format!("frame_roundtrip_json_M{m_count}_T{t_sub}_d{d}"),
+            ns_per_op: secs_rt_json * 1e9,
+            threads: 1,
+            speedup: 1.0,
+        });
+        records.push(common::BenchRecord {
+            name: format!(
+                "frame_roundtrip_binary_M{m_count}_T{t_sub}_d{d}"
+            ),
+            ns_per_op: secs_rt_bin * 1e9,
+            threads: 1,
+            speedup: secs_rt_json / secs_rt_bin,
+        });
+        assert!(
+            secs_enc_bin < secs_enc_json,
+            "binary draw encode ({}) must beat JSON ({}) at M={m_count}, \
+             d={d} — the binary plane stopped paying for itself",
+            common::fmt_secs(secs_enc_bin),
+            common::fmt_secs(secs_enc_json)
+        );
+        assert!(
+            secs_rt_bin < secs_rt_json,
+            "binary frame round-trip ({}) must beat JSON ({}) at \
+             M={m_count}, d={d}",
+            common::fmt_secs(secs_rt_bin),
+            common::fmt_secs(secs_rt_json)
+        );
+    }
+
     // --- combine end-to-end at working sizes -----------------------------
     let mut rng = Pcg64::seed_from(9);
     let sets: Vec<SampleMatrix> = (0..10)

@@ -6,6 +6,7 @@
 //! documented key list rather than TOML.
 
 use crate::combine::CombineMethod;
+use crate::coordinator::transport::WireFormat;
 use crate::data::io::ShardFormat;
 use crate::error::{Error, Result};
 use crate::kernel::CombineKernelKind;
@@ -96,6 +97,19 @@ pub struct PipelineConfig {
     /// shards exceed the default; the oversized-shard pre-check names
     /// both knobs.
     pub max_frame_bytes: usize,
+    /// Draw-plane wire encoding for pipe/socket transports (`json` |
+    /// `binary`). JSON is the original one-frame-per-draw wire; binary
+    /// ships batched raw-LE-f64 chunk frames (see
+    /// `coordinator::transport::DrawChunk`). Retained draws are
+    /// byte-identical either way; binary is additionally bit-exact for
+    /// NaN payloads and skips float↔decimal entirely. Ignored by the
+    /// thread runtime, which never serializes.
+    pub wire_format: WireFormat,
+    /// Draws coalesced per binary chunk frame (`--draw-batch`; clamped
+    /// to ≥ 1). A binary-plane knob with no effect on the JSON wire or
+    /// on outputs — any batch size yields byte-identical retained
+    /// draws. Default 64.
+    pub draw_batch: usize,
 }
 
 impl PipelineConfig {
@@ -190,6 +204,10 @@ impl PipelineConfig {
         }
         b.max_frame_bytes =
             parse_usize("max_frame_bytes", b.max_frame_bytes)?;
+        if let Some(v) = get("wire_format") {
+            b.wire_format = WireFormat::parse(&v)?;
+        }
+        b.draw_batch = parse_usize("draw_batch", b.draw_batch)?;
         Ok(b.build())
     }
 
@@ -275,6 +293,8 @@ pub struct PipelineConfigBuilder {
     combine_backend: CombineKernelKind,
     shard_inline: bool,
     max_frame_bytes: usize,
+    wire_format: WireFormat,
+    draw_batch: usize,
 }
 
 impl PipelineConfigBuilder {
@@ -302,6 +322,8 @@ impl PipelineConfigBuilder {
             combine_backend: CombineKernelKind::default(),
             shard_inline: false,
             max_frame_bytes: 0,
+            wire_format: WireFormat::Json,
+            draw_batch: 64,
         }
     }
 
@@ -421,6 +443,20 @@ impl PipelineConfigBuilder {
         self
     }
 
+    /// Draw-plane wire encoding for pipe/socket transports — see
+    /// `PipelineConfig::wire_format`.
+    pub fn wire_format(mut self, f: WireFormat) -> Self {
+        self.wire_format = f;
+        self
+    }
+
+    /// Draws per binary chunk frame (clamped to ≥ 1) — see
+    /// `PipelineConfig::draw_batch`.
+    pub fn draw_batch(mut self, n: usize) -> Self {
+        self.draw_batch = n;
+        self
+    }
+
     pub fn artifact_dir(mut self, d: &str) -> Self {
         self.artifact_dir = d.to_string();
         self
@@ -456,6 +492,10 @@ impl PipelineConfigBuilder {
             combine_backend: self.combine_backend,
             shard_inline: self.shard_inline,
             max_frame_bytes: self.max_frame_bytes,
+            wire_format: self.wire_format,
+            // Clamp like `thin`: `from_str_cfg` writes the field
+            // directly, and a zero batch would stall the encoder.
+            draw_batch: self.draw_batch.max(1),
         }
     }
 }
@@ -518,6 +558,34 @@ mod tests {
         assert_eq!(c.combine_cache_budget_mb, 256);
         assert_eq!(c.combine_backend, CombineKernelKind::Naive);
         assert!(!c.shard_inline);
+        // Draw-plane defaults: the original JSON wire, 64-draw batches
+        // (a binary-only knob until wire_format flips).
+        assert_eq!(c.wire_format, WireFormat::Json);
+        assert_eq!(c.draw_batch, 64);
+    }
+
+    #[test]
+    fn cfg_file_wire_format_keys() {
+        let c = PipelineConfig::from_str_cfg(
+            "model = gaussian\nwire_format = binary\ndraw_batch = 7\n",
+        )
+        .unwrap();
+        assert_eq!(c.wire_format, WireFormat::Binary);
+        assert_eq!(c.draw_batch, 7);
+        // Zero batch is clamped like thin = 0.
+        let c = PipelineConfig::from_str_cfg(
+            "model = gaussian\ndraw_batch = 0\n",
+        )
+        .unwrap();
+        assert_eq!(c.draw_batch, 1);
+        assert!(PipelineConfig::from_str_cfg(
+            "model = gaussian\nwire_format = msgpack\n"
+        )
+        .is_err());
+        assert!(PipelineConfig::from_str_cfg(
+            "model = gaussian\ndraw_batch = many\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -7,10 +7,21 @@ use crate::combine::{
     CombineMethod, CombineTuning, OnlineCombiner,
     DEFAULT_ANNEAL_CACHE_BUDGET,
 };
+use crate::coordinator::transport::DrawChunk;
 use crate::coordinator::worker::DrawMsg;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::kernel::CombineKernelKind;
 use crate::types::SampleMatrix;
+
+/// One unit of leader-bound traffic: a single draw (JSON wire /
+/// native thread mode) or a batched binary chunk carrying many rows.
+/// Chunks are moved, never copied, so the leader ingests the same
+/// buffer the transport decoded into.
+#[derive(Debug, Clone)]
+pub enum LeaderMsg {
+    Draw(DrawMsg),
+    Chunk(DrawChunk),
+}
 
 /// Leader-side stream consumer.
 pub struct Leader {
@@ -83,11 +94,58 @@ impl Leader {
         Ok(())
     }
 
+    /// Ingest one batched binary chunk: every row lands in the
+    /// combiner without materializing per-draw `DrawMsg` values.
+    pub fn ingest_chunk(&mut self, chunk: &DrawChunk) -> Result<()> {
+        if chunk.dim == 0 || chunk.thetas.len() % chunk.dim != 0 {
+            return Err(Error::Runtime(format!(
+                "draw chunk from machine {} has ragged payload ({} scalars, dim {})",
+                chunk.machine,
+                chunk.thetas.len(),
+                chunk.dim
+            )));
+        }
+        for row in chunk.thetas.chunks_exact(chunk.dim) {
+            self.combiner.push(chunk.machine, row)?;
+        }
+        self.scalars_received += chunk.thetas.len();
+        for &e in &chunk.elapsed {
+            if e > self.max_elapsed {
+                self.max_elapsed = e;
+            }
+        }
+        if chunk.last {
+            if chunk.machine >= self.finished.len() {
+                return Err(Error::Runtime(format!(
+                    "draw chunk from unknown machine {}",
+                    chunk.machine
+                )));
+            }
+            self.finished[chunk.machine] = true;
+        }
+        Ok(())
+    }
+
     /// Drain a receiver until every worker has sent its final message
     /// (or the channel closes).
     pub fn drain(&mut self, rx: &Receiver<DrawMsg>) -> Result<()> {
         for msg in rx.iter() {
             self.ingest(&msg)?;
+            if self.all_finished() {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain a mixed draw/chunk stream ([`LeaderMsg`]) until every
+    /// worker has sent its final message (or the channel closes).
+    pub fn drain_stream(&mut self, rx: &Receiver<LeaderMsg>) -> Result<()> {
+        for msg in rx.iter() {
+            match msg {
+                LeaderMsg::Draw(d) => self.ingest(&d)?,
+                LeaderMsg::Chunk(c) => self.ingest_chunk(&c)?,
+            }
             if self.all_finished() {
                 break;
             }
@@ -183,5 +241,91 @@ mod tests {
     fn rejects_bad_machine() {
         let mut leader = Leader::new(1, 1);
         assert!(leader.ingest(&msg(5, 0.0, false)).is_err());
+    }
+
+    #[test]
+    fn chunk_ingest_matches_per_draw_ingest() {
+        let mut rng = crate::rng::Pcg64::seed_from(11);
+        let mut per_draw = Leader::new(2, 3);
+        let mut chunked = Leader::new(2, 3);
+        for m in 0..2usize {
+            let mut thetas = Vec::new();
+            let mut elapsed = Vec::new();
+            for i in 0..20 {
+                let theta: Vec<f64> =
+                    (0..3).map(|_| rng.normal() + m as f64).collect();
+                let e = 0.1 * (i as f64 + 1.0);
+                per_draw
+                    .ingest(&DrawMsg {
+                        machine: m,
+                        theta: theta.clone(),
+                        elapsed: e,
+                        last: i == 19,
+                    })
+                    .unwrap();
+                thetas.extend_from_slice(&theta);
+                elapsed.push(e);
+            }
+            chunked
+                .ingest_chunk(&DrawChunk {
+                    machine: m,
+                    dim: 3,
+                    thetas,
+                    elapsed,
+                    last: true,
+                })
+                .unwrap();
+        }
+        assert!(per_draw.all_finished() && chunked.all_finished());
+        assert_eq!(per_draw.scalars_received, chunked.scalars_received);
+        assert_eq!(per_draw.max_elapsed, chunked.max_elapsed);
+        let a = per_draw.draws(CombineMethod::Parametric, 64, 7).unwrap();
+        let b = chunked.draws(CombineMethod::Parametric, 64, 7).unwrap();
+        assert_eq!(a.as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn chunk_ingest_rejects_ragged_and_unknown_machine() {
+        let mut leader = Leader::new(1, 2);
+        let ragged = DrawChunk {
+            machine: 0,
+            dim: 2,
+            thetas: vec![1.0, 2.0, 3.0],
+            elapsed: vec![0.1],
+            last: false,
+        };
+        assert!(leader.ingest_chunk(&ragged).is_err());
+        let stray = DrawChunk {
+            machine: 4,
+            dim: 2,
+            thetas: vec![],
+            elapsed: vec![],
+            last: true,
+        };
+        assert!(leader.ingest_chunk(&stray).is_err());
+    }
+
+    #[test]
+    fn drain_stream_consumes_mixed_traffic() {
+        use std::sync::mpsc::channel;
+        let (tx, rx) = channel();
+        for i in 0..4 {
+            tx.send(LeaderMsg::Draw(msg(0, i as f64, false))).unwrap();
+        }
+        tx.send(LeaderMsg::Chunk(DrawChunk {
+            machine: 0,
+            dim: 1,
+            thetas: vec![4.0, 5.0],
+            elapsed: vec![4.0, 5.0],
+            last: true,
+        }))
+        .unwrap();
+        drop(tx);
+        let mut leader = Leader::new(1, 1);
+        leader.drain_stream(&rx).unwrap();
+        assert!(leader.all_finished());
+        assert_eq!(leader.combiner().total_received(), 6);
+        assert_eq!(leader.scalars_received, 6);
+        assert!((leader.max_elapsed - 5.0).abs() < 1e-12);
     }
 }

@@ -5,9 +5,10 @@
 //! machine — on an OS thread ([`pipeline::run_native`]), in its own OS
 //! process, or on a remote `repro serve` daemon ([`serve`]) — with zero
 //! inter-worker communication, the "embarrassingly parallel" property;
-//! draws stream unidirectionally (mpsc channel in-thread,
-//! length-prefixed ndjson frames over a pluggable [`transport`] —
-//! stdout pipes or TCP sockets — out-of-process) to the [`leader`],
+//! draws stream unidirectionally (mpsc channel in-thread; out of
+//! process, length-prefixed ndjson frames or batched binary `RPDRAW1`
+//! chunks over a pluggable [`transport`] — stdout pipes or TCP
+//! sockets) to the [`leader`],
 //! which folds them into an online combiner and produces full-posterior
 //! draws on demand; [`pipeline`] wires the stages end-to-end from a
 //! [`crate::config::PipelineConfig`], oversubscribing W < M worker
@@ -24,7 +25,7 @@ pub mod timing;
 pub mod transport;
 pub mod worker;
 
-pub use leader::Leader;
+pub use leader::{Leader, LeaderMsg};
 pub use partition::Partitioner;
 pub use pipeline::{
     run_native, run_process, run_with_transport, PipelineOutput, RunDir,

@@ -29,7 +29,7 @@ use crate::coordinator::transport::{
     WorkerSummary,
 };
 use crate::coordinator::worker::{run_worker, DrawMsg};
-use crate::coordinator::Leader;
+use crate::coordinator::{Leader, LeaderMsg};
 use crate::data::{io, Dataset};
 use crate::error::{Error, Result};
 use crate::model::LogDensity;
@@ -310,6 +310,12 @@ pub fn run_with_transport(
             // otherwise. Setting it on the manifest keeps leader and
             // worker in lockstep about the frame sequence.
             shard_inline: transport.wants_inline_shard(),
+            // The draw plane: JSON per-draw frames or batched binary
+            // chunks. Negotiated through the manifest so a worker that
+            // predates the binary plane simply ignores the fields and
+            // streams JSON, which the leader accepts frame-by-frame.
+            wire_format: cfg.wire_format,
+            draw_batch: cfg.draw_batch,
         };
         let manifest_path = run_dir.path().join(format!("worker_{m}.json"));
         manifest.save(&manifest_path)?;
@@ -318,7 +324,7 @@ pub fn run_with_transport(
     }
 
     let slots = transport.slots().clamp(1, cfg.machines);
-    let (tx, rx) = channel::<DrawMsg>();
+    let (tx, rx) = channel::<LeaderMsg>();
     let results: Mutex<Vec<Option<SubposteriorSamples>>> =
         Mutex::new((0..cfg.machines).map(|_| None).collect());
     // First root-cause failure (first writer wins); setting `abort`
@@ -384,7 +390,7 @@ pub fn run_with_transport(
             });
         }
         drop(tx);
-        leader.drain(&rx)?;
+        leader.drain_stream(&rx)?;
         Ok(())
     });
     drained?;
@@ -418,7 +424,7 @@ fn run_assignment(
     manifest: &WorkerManifest,
     manifest_path: &Path,
     dim: usize,
-    tx: &Sender<DrawMsg>,
+    tx: &Sender<LeaderMsg>,
 ) -> Result<SubposteriorSamples> {
     let machine = manifest.machine;
     let mut conn = transport.connect(slot, manifest, manifest_path)?;
@@ -448,7 +454,28 @@ fn run_assignment(
                 samples.push(&d.theta);
                 draw_times.push(d.elapsed);
                 // Leader hung up → keep draining (mirrors thread mode).
-                let _ = tx.send(d);
+                let _ = tx.send(LeaderMsg::Draw(d));
+            }
+            WireMsg::Chunk(chunk) => {
+                if chunk.machine != machine
+                    || chunk.dim != dim
+                    || chunk.thetas.len() != chunk.elapsed.len() * dim
+                {
+                    return Err(Error::Runtime(format!(
+                        "worker {machine}: chunk for machine {} with dim {} \
+                         ({} scalars, {} rows)",
+                        chunk.machine,
+                        chunk.dim,
+                        chunk.thetas.len(),
+                        chunk.elapsed.len()
+                    )));
+                }
+                // Batched landing: the whole chunk memcpys into the
+                // per-machine matrix — no per-draw Vec, no Json tree.
+                samples.push_rows(&chunk.thetas);
+                draw_times.extend_from_slice(&chunk.elapsed);
+                // Move the decoded buffers to the leader (no copy).
+                let _ = tx.send(LeaderMsg::Chunk(chunk));
             }
             WireMsg::Summary(s) => {
                 if s.machine != machine {
@@ -942,6 +969,108 @@ mod tests {
             text.contains("remote failure") && text.contains("shard unreadable"),
             "{text}"
         );
+    }
+
+    /// Re-script a per-draw stream as batched binary chunks (batch
+    /// size `batch`, tail chunk short), keeping the summary frame.
+    fn chunked_stream(machine: usize, t: usize, batch: usize) -> Vec<WireMsg> {
+        use crate::coordinator::transport::DrawChunk;
+        let mut msgs = Vec::new();
+        let mut thetas = Vec::new();
+        let mut elapsed = Vec::new();
+        let mut last = false;
+        for (i, msg) in scripted_stream(machine, t).into_iter().enumerate() {
+            match msg {
+                WireMsg::Draw(d) => {
+                    thetas.extend_from_slice(&d.theta);
+                    elapsed.push(d.elapsed);
+                    last |= d.last;
+                    if elapsed.len() >= batch || i + 1 == t {
+                        msgs.push(WireMsg::Chunk(DrawChunk {
+                            machine,
+                            dim: 1,
+                            thetas: std::mem::take(&mut thetas),
+                            elapsed: std::mem::take(&mut elapsed),
+                            last: std::mem::take(&mut last),
+                        }));
+                    }
+                }
+                other => msgs.push(other),
+            }
+        }
+        msgs
+    }
+
+    /// Tentpole gate at the scheduler level: a chunked wire stream must
+    /// reassemble into byte-identical subposteriors and combined draws
+    /// as the per-draw stream it batches — at any batch size, including
+    /// one that leaves a short tail chunk.
+    #[test]
+    fn chunked_streams_match_per_draw_streams() {
+        let data = synth::gaussian(400, 1, 35);
+        let c = cfg(3, 10);
+        let per_draw = run_with_transport(
+            &c,
+            &data,
+            &MockTransport::new(
+                2,
+                (0..3).map(|m| scripted_stream(m, 10)).collect(),
+            ),
+        )
+        .unwrap();
+        for batch in [1usize, 4, 64] {
+            let chunked = run_with_transport(
+                &c,
+                &data,
+                &MockTransport::new(
+                    2,
+                    (0..3).map(|m| chunked_stream(m, 10, batch)).collect(),
+                ),
+            )
+            .unwrap();
+            for (a, b) in
+                per_draw.subposteriors.iter().zip(&chunked.subposteriors)
+            {
+                assert_eq!(
+                    a.samples.as_slice(),
+                    b.samples.as_slice(),
+                    "machine {} diverged at batch {batch}",
+                    a.machine
+                );
+                assert_eq!(a.draw_times, b.draw_times);
+            }
+            assert_eq!(
+                per_draw.combined.as_slice(),
+                chunked.combined.as_slice(),
+                "combined draws diverged at batch {batch}"
+            );
+            assert_eq!(
+                per_draw.metrics.scalars_transferred,
+                chunked.metrics.scalars_transferred
+            );
+        }
+    }
+
+    /// A chunk whose dim disagrees with the run must fail the
+    /// assignment, not corrupt the matrix.
+    #[test]
+    fn bad_chunk_dim_is_rejected() {
+        use crate::coordinator::transport::DrawChunk;
+        let data = synth::gaussian(200, 1, 36);
+        let c = cfg(2, 3);
+        let streams = vec![
+            scripted_stream(0, 3),
+            vec![WireMsg::Chunk(DrawChunk {
+                machine: 1,
+                dim: 2,
+                thetas: vec![0.0; 6],
+                elapsed: vec![0.1; 3],
+                last: true,
+            })],
+        ];
+        let transport = MockTransport::new(2, streams);
+        let err = run_with_transport(&c, &data, &transport).unwrap_err();
+        assert!(err.to_string().contains("chunk for machine"), "{err}");
     }
 
     /// A draw tagged for the wrong machine (an endpoint mixing up

@@ -30,8 +30,9 @@ use std::time::Duration;
 
 use crate::config;
 use crate::coordinator::transport::{
-    encode_draw, encode_error, encode_summary, write_frame, FrameReader,
-    WorkerManifest, WorkerSummary, DEFAULT_MAX_FRAME_BYTES,
+    encode_error, encode_summary, write_frame, write_frame_bytes,
+    DrawEncoder, FrameReader, WorkerManifest, WorkerSummary,
+    DEFAULT_MAX_FRAME_BYTES,
 };
 use crate::coordinator::worker::{run_worker_with, DrawMsg};
 use crate::data::{io, Dataset};
@@ -42,7 +43,9 @@ use crate::runtime::json::Json;
 /// Execute one worker manifest end-to-end: load the shard (JSON or
 /// binary, autodetected), build the subposterior target, derive the
 /// `root.split(m)` RNG stream, sample, and push every frame payload
-/// (draws, then the final summary) through `sink`.
+/// (draws — encoded per the manifest's `wire_format`/`draw_batch`
+/// through a [`DrawEncoder`] — then the final JSON summary) through
+/// `sink` as raw bytes.
 ///
 /// A sink failure mid-run aborts the chain immediately — with the peer
 /// gone, the remaining iterations are dead compute, and a daemon stuck
@@ -52,7 +55,7 @@ use crate::runtime::json::Json;
 /// its stdout stream) can do so from inside the sink instead.
 pub fn run_manifest<F>(wm: &WorkerManifest, sink: &mut F) -> Result<()>
 where
-    F: FnMut(&str) -> std::io::Result<()>,
+    F: FnMut(&[u8]) -> std::io::Result<()>,
 {
     let data = io::read_shard(Path::new(&wm.shard_path))?;
     run_manifest_with_data(wm, &data, sink)
@@ -69,7 +72,7 @@ pub fn run_manifest_with_data<F>(
     sink: &mut F,
 ) -> Result<()>
 where
-    F: FnMut(&str) -> std::io::Result<()>,
+    F: FnMut(&[u8]) -> std::io::Result<()>,
 {
     if wm.machine >= wm.machines {
         return Err(Error::Config(format!(
@@ -94,6 +97,17 @@ where
     let sampler =
         config::parse_sampler(&wm.sampler)?.build(target.dim());
 
+    // The draw plane goes through one encoder with reused buffers:
+    // JSON mode emits the legacy per-draw frames, binary mode batches
+    // `draw_batch` draws per chunk frame — either way this is the only
+    // place draws are serialized, so pipe and socket workers stay
+    // frame-identical.
+    let mut enc = DrawEncoder::new(
+        wm.wire_format,
+        wm.draw_batch,
+        wm.machine,
+        target.dim(),
+    );
     let mut broken = false;
     let result = run_worker_with(
         wm.machine,
@@ -104,23 +118,26 @@ where
         wm.thin,
         rng,
         &mut |msg: &DrawMsg| {
-            if sink(&encode_draw(msg)).is_err() {
+            if enc.push(msg, sink).is_err() {
                 broken = true;
             }
             !broken
         },
     );
-    if broken {
+    if broken || enc.flush(sink).is_err() {
         return Err(Error::Runtime(format!(
             "worker {}: draw stream closed mid-run",
             wm.machine
         )));
     }
-    sink(&encode_summary(&WorkerSummary {
-        machine: wm.machine,
-        accept_rate: result.accept_rate,
-        wall_secs: result.wall_secs,
-    }))?;
+    sink(
+        encode_summary(&WorkerSummary {
+            machine: wm.machine,
+            accept_rate: result.accept_rate,
+            wall_secs: result.wall_secs,
+        })
+        .as_bytes(),
+    )?;
     Ok(())
 }
 
@@ -217,7 +234,7 @@ fn handle_conn(stream: TcpStream, max_frame_bytes: usize) -> Result<()> {
                 Ok(data) => run_manifest_with_data(
                     &wm,
                     &data,
-                    &mut |frame: &str| write_frame(&mut out, frame),
+                    &mut |frame: &[u8]| write_frame_bytes(&mut out, frame),
                 ),
                 Err(e) => Err(e),
             },
@@ -227,7 +244,9 @@ fn handle_conn(stream: TcpStream, max_frame_bytes: usize) -> Result<()> {
             Err(e) => Err(e),
         }
     } else {
-        run_manifest(&wm, &mut |frame: &str| write_frame(&mut out, frame))
+        run_manifest(&wm, &mut |frame: &[u8]| {
+            write_frame_bytes(&mut out, frame)
+        })
     };
     if let Err(e) = &run {
         // Best-effort in-band failure report; if the leader is already
@@ -244,7 +263,7 @@ fn handle_conn(stream: TcpStream, max_frame_bytes: usize) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::transport::WireMsg;
+    use crate::coordinator::transport::{WireFormat, WireMsg};
     use crate::data::synth;
 
     fn spill_manifest(
@@ -270,6 +289,8 @@ mod tests {
             shard_path: shard_path.to_string_lossy().into_owned(),
             dim: 2,
             shard_inline: false,
+            wire_format: WireFormat::Json,
+            draw_batch: 1,
         }
     }
 
@@ -284,15 +305,15 @@ mod tests {
         let mut streams: Vec<Vec<String>> = Vec::new();
         for format in [io::ShardFormat::Json, io::ShardFormat::Binary] {
             let wm = spill_manifest(&dir, 1, 3, format);
-            let mut frames: Vec<String> = Vec::new();
-            run_manifest(&wm, &mut |frame: &str| {
-                frames.push(frame.to_string());
+            let mut frames: Vec<Vec<u8>> = Vec::new();
+            run_manifest(&wm, &mut |frame: &[u8]| {
+                frames.push(frame.to_vec());
                 Ok(())
             })
             .unwrap();
             assert_eq!(frames.len(), 26);
             for f in &frames[..25] {
-                match WireMsg::decode(f).unwrap() {
+                match WireMsg::decode_frame(f).unwrap() {
                     WireMsg::Draw(d) => {
                         assert_eq!(d.machine, 1);
                         assert_eq!(d.theta.len(), 2);
@@ -300,7 +321,7 @@ mod tests {
                     other => panic!("wrong variant {other:?}"),
                 }
             }
-            match WireMsg::decode(&frames[25]).unwrap() {
+            match WireMsg::decode_frame(&frames[25]).unwrap() {
                 WireMsg::Summary(s) => assert_eq!(s.machine, 1),
                 other => panic!("wrong variant {other:?}"),
             }
@@ -308,7 +329,7 @@ mod tests {
             // not depend on the spill format.
             let thetas: Vec<String> = frames[..25]
                 .iter()
-                .map(|f| match WireMsg::decode(f).unwrap() {
+                .map(|f| match WireMsg::decode_frame(f).unwrap() {
                     WireMsg::Draw(d) => format!("{:?}", d.theta),
                     _ => unreachable!(),
                 })
@@ -322,17 +343,83 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
     }
 
+    /// The binary wire carries the same draws as the JSON wire,
+    /// bit-exactly, batched `draw_batch` per chunk frame with `last`
+    /// only on the final chunk — 25 draws at batch 7 is 4 chunk frames
+    /// (7+7+7+4) plus the JSON summary.
+    #[test]
+    fn run_manifest_binary_wire_matches_json_wire_bit_exactly() {
+        use crate::coordinator::transport::DrawChunk;
+        let dir = std::env::temp_dir().join("repro_serve_binwire_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let wm_json = spill_manifest(&dir, 1, 3, io::ShardFormat::Binary);
+        let mut json_thetas: Vec<u64> = Vec::new();
+        run_manifest(&wm_json, &mut |frame: &[u8]| {
+            if let WireMsg::Draw(d) = WireMsg::decode_frame(frame).unwrap()
+            {
+                json_thetas.extend(d.theta.iter().map(|v| v.to_bits()));
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(json_thetas.len(), 25 * 2);
+
+        let mut wm_bin = wm_json.clone();
+        wm_bin.wire_format = WireFormat::Binary;
+        wm_bin.draw_batch = 7;
+        let mut frames: Vec<Vec<u8>> = Vec::new();
+        run_manifest(&wm_bin, &mut |frame: &[u8]| {
+            frames.push(frame.to_vec());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(frames.len(), 5, "4 chunk frames + 1 summary");
+        let chunks: Vec<DrawChunk> = frames[..4]
+            .iter()
+            .map(|f| match WireMsg::decode_frame(f).unwrap() {
+                WireMsg::Chunk(c) => c,
+                other => panic!("wrong variant {other:?}"),
+            })
+            .collect();
+        assert_eq!(
+            chunks.iter().map(DrawChunk::count).collect::<Vec<_>>(),
+            vec![7, 7, 7, 4]
+        );
+        assert_eq!(
+            chunks.iter().map(|c| c.last).collect::<Vec<_>>(),
+            vec![false, false, false, true]
+        );
+        for c in &chunks {
+            assert_eq!(c.machine, 1);
+            assert_eq!(c.dim, 2);
+            assert_eq!(c.elapsed.len(), c.count());
+        }
+        let bin_thetas: Vec<u64> = chunks
+            .iter()
+            .flat_map(|c| c.thetas.iter().map(|v| v.to_bits()))
+            .collect();
+        assert_eq!(
+            bin_thetas, json_thetas,
+            "binary wire must carry bit-identical draws"
+        );
+        assert!(matches!(
+            WireMsg::decode_frame(&frames[4]).unwrap(),
+            WireMsg::Summary(_)
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
     #[test]
     fn run_manifest_rejects_bad_machine_and_missing_shard() {
         let dir = std::env::temp_dir().join("repro_serve_badjob_test");
         std::fs::create_dir_all(&dir).unwrap();
         let mut wm = spill_manifest(&dir, 0, 2, io::ShardFormat::Json);
         wm.machine = 5; // out of range
-        let err = run_manifest(&wm, &mut |_f: &str| Ok(())).unwrap_err();
+        let err = run_manifest(&wm, &mut |_f: &[u8]| Ok(())).unwrap_err();
         assert!(err.to_string().contains("out of range"), "{err}");
         let mut wm = spill_manifest(&dir, 0, 2, io::ShardFormat::Json);
         wm.shard_path = dir.join("nope.json").to_string_lossy().into_owned();
-        assert!(run_manifest(&wm, &mut |_f: &str| Ok(())).is_err());
+        assert!(run_manifest(&wm, &mut |_f: &[u8]| Ok(())).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -346,7 +433,7 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let wm = spill_manifest(&dir, 0, 2, io::ShardFormat::Binary);
         let mut wrote = 0usize;
-        let err = run_manifest(&wm, &mut |_f: &str| {
+        let err = run_manifest(&wm, &mut |_f: &[u8]| {
             wrote += 1;
             if wrote > 3 {
                 Err(std::io::Error::new(
@@ -434,6 +521,9 @@ mod tests {
                     assert_eq!(d.machine, 0);
                     draws += 1;
                 }
+                WireMsg::Chunk(_) => {
+                    panic!("unexpected chunk on the JSON wire")
+                }
                 WireMsg::Summary(s) => {
                     assert_eq!(s.machine, 0);
                     summaries += 1;
@@ -464,15 +554,15 @@ mod tests {
         let path_wm = spill_manifest(&dir, 0, 2, io::ShardFormat::Binary);
         let shard_bytes = std::fs::read(&path_wm.shard_path).unwrap();
         // Path-mode reference stream (thetas only; timings vary).
-        let mut reference: Vec<String> = Vec::new();
-        run_manifest(&path_wm, &mut |frame: &str| {
-            reference.push(frame.to_string());
+        let mut reference: Vec<Vec<u8>> = Vec::new();
+        run_manifest(&path_wm, &mut |frame: &[u8]| {
+            reference.push(frame.to_vec());
             Ok(())
         })
         .unwrap();
         let ref_thetas: Vec<String> = reference
             .iter()
-            .filter_map(|f| match WireMsg::decode(f).unwrap() {
+            .filter_map(|f| match WireMsg::decode_frame(f).unwrap() {
                 WireMsg::Draw(d) => Some(format!("{:?}", d.theta)),
                 _ => None,
             })
@@ -502,6 +592,9 @@ mod tests {
         while let Some(payload) = frames.read_frame().unwrap() {
             match WireMsg::decode(&payload).unwrap() {
                 WireMsg::Draw(d) => thetas.push(format!("{:?}", d.theta)),
+                WireMsg::Chunk(_) => {
+                    panic!("unexpected chunk on the JSON wire")
+                }
                 WireMsg::Summary(s) => {
                     assert_eq!(s.machine, 0);
                     summaries += 1;

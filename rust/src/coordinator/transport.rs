@@ -22,6 +22,30 @@
 //! rendering, so a draw decoded by the leader is bit-identical to the
 //! one the worker produced — every transport inherits the thread-mode
 //! determinism guarantee byte-for-byte.
+//!
+//! # The binary draw plane
+//!
+//! JSON frames pay float→decimal→float per coordinate and one frame
+//! per draw. [`WireFormat::Binary`] replaces the *draw* plane with
+//! batched [`DrawChunk`] frames — the same length-prefixed grammar,
+//! but the payload is `RPDRAW1\n` magic + a fixed header + raw LE f64
+//! rows, coalescing `draw_batch` draws per frame. Control frames
+//! (summary, error, manifest) stay JSON in both modes. The leader
+//! sniffs each frame for the magic ([`WireMsg::decode_frame`]), so a
+//! daemon that ignores the negotiated `wire_format` manifest field and
+//! answers in JSON still interoperates — mixed-version fleets degrade
+//! to the JSON plane instead of failing.
+//!
+//! ## Float fidelity contract
+//!
+//! Both planes preserve every float *value*, including ±∞ and NaN
+//! (JSON carries non-finite values as the tokens `"inf"`/`"-inf"`/
+//! `"nan"`). The JSON plane is lossy in exactly one documented way:
+//! all NaNs decode as the one canonical quiet NaN, so a NaN's *bit
+//! payload* does not survive. The binary plane ships `f64::to_bits`
+//! verbatim and is the only bit-exact encoding — retained draws are
+//! nevertheless byte-identical across both formats because samplers
+//! only ever emit canonical NaNs (if they emit NaN at all).
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{Shutdown, TcpStream, ToSocketAddrs};
@@ -41,6 +65,57 @@ pub const DEFAULT_MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
 
 /// Dial timeout for socket endpoints (see [`SocketTransport`]).
 const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Draw-plane encoding, selected by the `wire_format` config key /
+/// `--wire-format` flag and negotiated per worker via the
+/// [`WorkerManifest`] so old daemons keep working (absent field ⇒
+/// JSON).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireFormat {
+    /// One JSON frame per draw — the original wire. A JSON-mode run
+    /// puts byte-identical frames on the wire regardless of
+    /// `draw_batch` (batching is a binary-plane knob).
+    #[default]
+    Json,
+    /// Batched [`DrawChunk`] frames: `RPDRAW1\n` magic + raw LE f64
+    /// payload, `draw_batch` draws per frame. Bit-exact for every
+    /// f64, including NaN payloads — the only lossless encoding.
+    Binary,
+}
+
+impl WireFormat {
+    /// Parse the config/CLI token.
+    pub fn parse(s: &str) -> Result<WireFormat> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "json" => Ok(WireFormat::Json),
+            "binary" | "bin" => Ok(WireFormat::Binary),
+            other => Err(Error::Config(format!(
+                "unknown wire format '{other}' (expected json or binary)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireFormat::Json => "json",
+            WireFormat::Binary => "binary",
+        }
+    }
+}
+
+/// Magic prefix announcing a binary draw-chunk frame payload (same
+/// shape as the `RPSHRD1\n` shard magic). The leader sniffs every
+/// frame for it, so binary draw frames and JSON control frames share
+/// one stream.
+pub const DRAW_MAGIC: &[u8; 8] = b"RPDRAW1\n";
+
+/// Frame-kind byte following the magic (room for future binary frame
+/// kinds on the same magic).
+const DRAW_KIND_CHUNK: u8 = 0;
+
+/// Fixed chunk header: magic (8) + kind (1) + machine u64 LE (8) +
+/// chunk_len u64 LE (8) + d u64 LE (8) + last flag (1).
+const CHUNK_HEADER_BYTES: usize = 8 + 1 + 8 + 8 + 8 + 1;
 
 /// Write one frame: decimal payload length, newline, payload, newline.
 /// Flushes so the leader sees draws as they are produced, not when the
@@ -91,14 +166,17 @@ impl<R: BufRead> FrameReader<R> {
         FrameReader { inner, max_frame_bytes: max_frame_bytes.max(1) }
     }
 
-    /// Read the bounded length-prefix line, or `None` at clean EOF.
-    fn read_prefix(&mut self) -> Result<Option<String>> {
-        let mut line = Vec::with_capacity(MAX_PREFIX_BYTES);
+    /// Read the bounded length-prefix line and parse it, or `None` at
+    /// clean EOF. Parses in place off a stack buffer, so the hot frame
+    /// loop's prefix handling allocates nothing.
+    fn read_prefix_len(&mut self) -> Result<Option<usize>> {
+        let mut line = [0u8; MAX_PREFIX_BYTES];
+        let mut used = 0usize;
         let mut byte = [0u8; 1];
         loop {
             let n = self.inner.read(&mut byte).map_err(Error::Io)?;
             if n == 0 {
-                return if line.is_empty() {
+                return if used == 0 {
                     Ok(None)
                 } else {
                     Err(FrameError::TruncatedPrefix.into())
@@ -107,15 +185,20 @@ impl<R: BufRead> FrameReader<R> {
             if byte[0] == b'\n' {
                 break;
             }
-            if line.len() >= MAX_PREFIX_BYTES {
+            if used >= MAX_PREFIX_BYTES {
                 return Err(FrameError::PrefixTooLong {
                     limit: MAX_PREFIX_BYTES,
                 }
                 .into());
             }
-            line.push(byte[0]);
+            line[used] = byte[0];
+            used += 1;
         }
-        Ok(Some(String::from_utf8_lossy(&line).into_owned()))
+        let text = String::from_utf8_lossy(&line[..used]);
+        let trimmed = text.trim();
+        trimmed.parse::<usize>().map(Some).map_err(|_| {
+            Error::Frame(FrameError::BadPrefix(trimmed.to_string()))
+        })
     }
 
     /// Read the next frame's payload, or `None` at clean end-of-stream.
@@ -130,14 +213,29 @@ impl<R: BufRead> FrameReader<R> {
 
     /// [`FrameReader::read_frame`] without the UTF-8 requirement — for
     /// frames whose payload is raw bytes (inline binary shard spills).
-    /// Same grammar, same structured violations.
+    /// Same grammar, same structured violations. Allocates a fresh
+    /// `Vec` per frame; the hot draw loop uses
+    /// [`FrameReader::read_frame_into`] instead.
     pub fn read_frame_bytes(&mut self) -> Result<Option<Vec<u8>>> {
-        let Some(prefix) = self.read_prefix()? else {
+        let mut buf = Vec::new();
+        match self.read_frame_into(&mut buf)? {
+            None => Ok(None),
+            Some(_) => Ok(Some(buf)),
+        }
+    }
+
+    /// Read the next frame's payload into `buf` (cleared first),
+    /// returning its length, or `None` at clean end-of-stream. Callers
+    /// hand in one reused buffer, so the steady-state frame loop
+    /// performs no heap allocation — the leader-side half of the
+    /// draw-plane no-per-draw-allocation contract.
+    pub fn read_frame_into(
+        &mut self,
+        buf: &mut Vec<u8>,
+    ) -> Result<Option<usize>> {
+        let Some(len) = self.read_prefix_len()? else {
             return Ok(None);
         };
-        let len: usize = prefix.trim().parse().map_err(|_| {
-            Error::Frame(FrameError::BadPrefix(prefix.trim().to_string()))
-        })?;
         if len > self.max_frame_bytes {
             return Err(FrameError::Oversized {
                 len,
@@ -145,8 +243,9 @@ impl<R: BufRead> FrameReader<R> {
             }
             .into());
         }
-        let mut buf = vec![0u8; len + 1]; // payload + trailing newline
-        self.inner.read_exact(&mut buf).map_err(|e| {
+        buf.clear();
+        buf.resize(len + 1, 0); // payload + trailing newline
+        self.inner.read_exact(buf).map_err(|e| {
             // Distinguish "the stream ended mid-payload" (a protocol
             // violation the peer can diagnose) from a genuine I/O fault.
             if e.kind() == std::io::ErrorKind::UnexpectedEof {
@@ -158,7 +257,7 @@ impl<R: BufRead> FrameReader<R> {
         if buf.pop() != Some(b'\n') {
             return Err(FrameError::MissingNewline.into());
         }
-        Ok(Some(buf))
+        Ok(Some(len))
     }
 }
 
@@ -172,10 +271,260 @@ pub struct WorkerSummary {
     pub wall_secs: f64,
 }
 
+/// A batch of consecutive retained draws from one machine, shipped as
+/// one binary frame: the [`DRAW_MAGIC`] header followed by
+/// `chunk_len × dim` theta f64s (row-major LE) and `chunk_len`
+/// cumulative elapsed-seconds f64s (LE). Bit-exact: every value goes
+/// through `f64::to_bits`/`from_bits`, so NaN payloads and -0.0
+/// survive — the wire's only lossless draw encoding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DrawChunk {
+    pub machine: usize,
+    /// Parameter dimension d (validated by the leader against the run).
+    pub dim: usize,
+    /// `count() × dim` row-major draw coordinates.
+    pub thetas: Vec<f64>,
+    /// One cumulative elapsed time per draw (`count()` entries).
+    pub elapsed: Vec<f64>,
+    /// Whether the final draw of this chunk is the machine's last
+    /// retained draw.
+    pub last: bool,
+}
+
+impl DrawChunk {
+    /// Number of draws in the chunk.
+    pub fn count(&self) -> usize {
+        self.elapsed.len()
+    }
+
+    /// Serialize into `out` (cleared first) — callers reuse one scratch
+    /// buffer across chunks, so the steady-state encode allocates
+    /// nothing.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        encode_chunk_into(
+            self.machine,
+            self.dim,
+            &self.thetas,
+            &self.elapsed,
+            self.last,
+            out,
+        );
+    }
+
+    /// Decode a frame payload that starts with [`DRAW_MAGIC`]. The
+    /// header's promised length must match the payload exactly — a
+    /// truncated or padded chunk is a structured parse error, never a
+    /// short read.
+    pub fn decode(payload: &[u8]) -> Result<DrawChunk> {
+        if payload.len() < CHUNK_HEADER_BYTES || &payload[..8] != DRAW_MAGIC
+        {
+            return Err(Error::Parse(
+                "binary draw frame: missing RPDRAW1 header".into(),
+            ));
+        }
+        if payload[8] != DRAW_KIND_CHUNK {
+            return Err(Error::Parse(format!(
+                "binary draw frame: unknown kind byte {}",
+                payload[8]
+            )));
+        }
+        let u64_at = |off: usize| {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&payload[off..off + 8]);
+            u64::from_le_bytes(b) as usize
+        };
+        let machine = u64_at(9);
+        let chunk_len = u64_at(17);
+        let dim = u64_at(25);
+        let last = match payload[33] {
+            0 => false,
+            1 => true,
+            other => {
+                return Err(Error::Parse(format!(
+                    "binary draw frame: bad last flag {other}"
+                )))
+            }
+        };
+        if dim == 0 {
+            return Err(Error::Parse(
+                "binary draw frame: zero dimension".into(),
+            ));
+        }
+        let scalars = chunk_len
+            .checked_mul(dim)
+            .and_then(|td| td.checked_add(chunk_len))
+            .and_then(|n| n.checked_mul(8))
+            .ok_or_else(|| {
+                Error::Parse("binary draw frame: length overflow".into())
+            })?;
+        let expected = CHUNK_HEADER_BYTES + scalars;
+        if payload.len() != expected {
+            return Err(Error::Parse(format!(
+                "binary draw frame: {} payload bytes but the header \
+                 promises {expected} ({chunk_len} draws × dim {dim})",
+                payload.len()
+            )));
+        }
+        let body = &payload[CHUNK_HEADER_BYTES..];
+        let f64s = |bytes: &[u8]| -> Vec<f64> {
+            bytes
+                .chunks_exact(8)
+                .map(|c| {
+                    let mut b = [0u8; 8];
+                    b.copy_from_slice(c);
+                    f64::from_le_bytes(b)
+                })
+                .collect()
+        };
+        let theta_bytes = 8 * chunk_len * dim;
+        Ok(DrawChunk {
+            machine,
+            dim,
+            thetas: f64s(&body[..theta_bytes]),
+            elapsed: f64s(&body[theta_bytes..]),
+            last,
+        })
+    }
+}
+
+/// [`DrawChunk::encode_into`] over borrowed parts, so the worker-side
+/// [`DrawEncoder`] can serialize its accumulation buffers without
+/// moving them into a `DrawChunk`.
+fn encode_chunk_into(
+    machine: usize,
+    dim: usize,
+    thetas: &[f64],
+    elapsed: &[f64],
+    last: bool,
+    out: &mut Vec<u8>,
+) {
+    debug_assert_eq!(thetas.len(), elapsed.len() * dim);
+    out.clear();
+    out.reserve(CHUNK_HEADER_BYTES + 8 * (thetas.len() + elapsed.len()));
+    out.extend_from_slice(DRAW_MAGIC);
+    out.push(DRAW_KIND_CHUNK);
+    out.extend_from_slice(&(machine as u64).to_le_bytes());
+    out.extend_from_slice(&(elapsed.len() as u64).to_le_bytes());
+    out.extend_from_slice(&(dim as u64).to_le_bytes());
+    out.push(last as u8);
+    for &v in thetas {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    for &v in elapsed {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Worker-side draw-plane encoder with reused buffers.
+///
+/// JSON mode emits exactly the legacy per-draw [`encode_draw`] frames
+/// — `draw_batch` is a binary-plane knob, so a JSON-mode run's wire is
+/// byte-identical to the pre-batching protocol. Binary mode coalesces
+/// up to `batch` draws per [`DrawChunk`] frame, accumulating into
+/// buffers that are cleared (capacity kept) on every flush: once the
+/// buffers reach steady state the hot loop performs no per-draw heap
+/// allocation. `flush` must be called after the final draw to emit a
+/// partial tail chunk.
+pub struct DrawEncoder {
+    format: WireFormat,
+    batch: usize,
+    machine: usize,
+    dim: usize,
+    thetas: Vec<f64>,
+    elapsed: Vec<f64>,
+    last: bool,
+    scratch: Vec<u8>,
+}
+
+impl DrawEncoder {
+    /// Encoder for one worker's draw stream. `batch` is clamped to ≥ 1.
+    pub fn new(
+        format: WireFormat,
+        batch: usize,
+        machine: usize,
+        dim: usize,
+    ) -> DrawEncoder {
+        let batch = batch.max(1);
+        let binary = format == WireFormat::Binary;
+        DrawEncoder {
+            format,
+            batch,
+            machine,
+            dim,
+            thetas: Vec::with_capacity(if binary { batch * dim } else { 0 }),
+            elapsed: Vec::with_capacity(if binary { batch } else { 0 }),
+            last: false,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Buffer one draw; emits a frame payload through `sink` when the
+    /// batch fills (binary) or immediately (JSON).
+    pub fn push<S>(
+        &mut self,
+        msg: &DrawMsg,
+        sink: &mut S,
+    ) -> std::io::Result<()>
+    where
+        S: FnMut(&[u8]) -> std::io::Result<()>,
+    {
+        match self.format {
+            WireFormat::Json => sink(encode_draw(msg).as_bytes()),
+            WireFormat::Binary => {
+                debug_assert_eq!(msg.machine, self.machine);
+                debug_assert_eq!(msg.theta.len(), self.dim);
+                self.thetas.extend_from_slice(&msg.theta);
+                self.elapsed.push(msg.elapsed);
+                self.last |= msg.last;
+                if self.elapsed.len() >= self.batch {
+                    self.flush(sink)?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Emit buffered draws as one chunk frame (no-op when empty or in
+    /// JSON mode, which never buffers).
+    pub fn flush<S>(&mut self, sink: &mut S) -> std::io::Result<()>
+    where
+        S: FnMut(&[u8]) -> std::io::Result<()>,
+    {
+        if self.elapsed.is_empty() {
+            return Ok(());
+        }
+        encode_chunk_into(
+            self.machine,
+            self.dim,
+            &self.thetas,
+            &self.elapsed,
+            self.last,
+            &mut self.scratch,
+        );
+        self.thetas.clear();
+        self.elapsed.clear();
+        self.last = false;
+        sink(&self.scratch)
+    }
+
+    /// Draws currently buffered (0 in JSON mode).
+    pub fn buffered(&self) -> usize {
+        self.elapsed.len()
+    }
+
+    /// Current scratch-buffer capacity — the allocation-reuse test
+    /// hook: after the first full flush this must stay constant.
+    pub fn scratch_capacity(&self) -> usize {
+        self.scratch.capacity()
+    }
+}
+
 /// One decoded frame payload.
 #[derive(Debug, Clone)]
 pub enum WireMsg {
     Draw(DrawMsg),
+    /// A batched binary draw chunk (see [`DrawChunk`]).
+    Chunk(DrawChunk),
     Summary(WorkerSummary),
     /// Worker-side failure report. Socket daemons have no stderr the
     /// leader can collect, so a job that dies after the connection is
@@ -253,6 +602,20 @@ pub fn encode_error(machine: usize, message: &str) -> String {
 }
 
 impl WireMsg {
+    /// Decode a raw frame payload from either plane: binary chunk
+    /// frames announce themselves with [`DRAW_MAGIC`]; anything else
+    /// must be UTF-8 JSON (summary and error frames stay JSON even in
+    /// binary mode). The sniff is per frame, so a peer that never
+    /// upgraded to the binary plane keeps decoding on the same stream.
+    pub fn decode_frame(payload: &[u8]) -> Result<WireMsg> {
+        if payload.starts_with(DRAW_MAGIC) {
+            return DrawChunk::decode(payload).map(WireMsg::Chunk);
+        }
+        let text = std::str::from_utf8(payload)
+            .map_err(|_| Error::Frame(FrameError::NotUtf8))?;
+        WireMsg::decode(text)
+    }
+
     pub fn decode(text: &str) -> Result<WireMsg> {
         let j = Json::parse(text)?;
         match j.get("type")?.as_str()? {
@@ -312,6 +675,16 @@ pub struct WorkerManifest {
     /// manifests ⇒ `false` (path mode), so mixed-version fleets keep
     /// working.
     pub shard_inline: bool,
+    /// Draw-plane encoding the worker must answer in (control frames
+    /// stay JSON either way). Absent in old manifests ⇒
+    /// [`WireFormat::Json`]; and because the leader sniffs every frame
+    /// for the [`DRAW_MAGIC`], an old daemon that ignores this field
+    /// and answers in JSON still interoperates.
+    pub wire_format: WireFormat,
+    /// Draws coalesced per binary chunk frame (a binary-plane knob;
+    /// ignored in JSON mode). Consumers clamp to ≥ 1. Absent in old
+    /// manifests ⇒ 1.
+    pub draw_batch: usize,
 }
 
 impl WorkerManifest {
@@ -328,6 +701,8 @@ impl WorkerManifest {
             ("shard_path", Json::Str(self.shard_path.clone())),
             ("dim", Json::Num(self.dim as f64)),
             ("shard_inline", Json::Bool(self.shard_inline)),
+            ("wire_format", Json::Str(self.wire_format.name().into())),
+            ("draw_batch", Json::Num(self.draw_batch as f64)),
         ])
     }
 
@@ -337,6 +712,16 @@ impl WorkerManifest {
         let shard_inline = match j.get("shard_inline") {
             Ok(v) => v.as_bool()?,
             Err(_) => false,
+        };
+        // Optional for backward compatibility with pre-binary-plane
+        // manifests: absent ⇒ the original JSON wire, one draw/frame.
+        let wire_format = match j.get("wire_format") {
+            Ok(v) => WireFormat::parse(v.as_str()?)?,
+            Err(_) => WireFormat::Json,
+        };
+        let draw_batch = match j.get("draw_batch") {
+            Ok(v) => v.as_usize()?,
+            Err(_) => 1,
         };
         Ok(WorkerManifest {
             machine: j.get("machine")?.as_usize()?,
@@ -352,6 +737,8 @@ impl WorkerManifest {
             shard_path: j.get("shard_path")?.as_str()?.to_string(),
             dim: j.get("dim")?.as_usize()?,
             shard_inline,
+            wire_format,
+            draw_batch,
         })
     }
 
@@ -507,7 +894,12 @@ impl Transport for PipeTransport {
         let stderr_drain = child.stderr.take().map(|mut se| {
             std::thread::spawn(move || {
                 let mut text = String::new();
-                se.read_to_string(&mut text).ok();
+                if let Err(e) = se.read_to_string(&mut text) {
+                    // Surface the read failure instead of silently
+                    // reporting an empty (or truncated) stderr — the
+                    // exit diagnostic says why the capture is partial.
+                    text.push_str(&format!("\n<stderr read failed: {e}>"));
+                }
                 text
             })
         });
@@ -519,6 +911,7 @@ impl Transport for PipeTransport {
                 BufReader::new(stdout),
                 self.max_frame_bytes,
             ),
+            buf: Vec::new(),
             stderr_drain,
             child,
             reaped: false,
@@ -542,6 +935,10 @@ impl Transport for PipeTransport {
 struct PipeConnection {
     machine: usize,
     frames: FrameReader<BufReader<ChildStdout>>,
+    /// Reused frame-payload buffer: every frame of the child's stream
+    /// lands in this one allocation (see
+    /// [`FrameReader::read_frame_into`]).
+    buf: Vec<u8>,
     stderr_drain: Option<std::thread::JoinHandle<String>>,
     /// Shared with the owning [`PipeTransport`]'s cancel registry.
     child: Arc<Mutex<Child>>,
@@ -550,8 +947,8 @@ struct PipeConnection {
 
 impl WorkerConnection for PipeConnection {
     fn recv(&mut self) -> Result<Option<WireMsg>> {
-        match self.frames.read_frame()? {
-            Some(payload) => WireMsg::decode(&payload).map(Some),
+        match self.frames.read_frame_into(&mut self.buf)? {
+            Some(_) => WireMsg::decode_frame(&self.buf).map(Some),
             None => Ok(None),
         }
     }
@@ -770,6 +1167,7 @@ impl Transport for SocketTransport {
                 BufReader::new(stream),
                 self.max_frame_bytes,
             ),
+            buf: Vec::new(),
         }))
     }
 
@@ -793,12 +1191,14 @@ impl Transport for SocketTransport {
 
 struct SocketConnection {
     frames: FrameReader<BufReader<TcpStream>>,
+    /// Reused frame-payload buffer (see [`FrameReader::read_frame_into`]).
+    buf: Vec<u8>,
 }
 
 impl WorkerConnection for SocketConnection {
     fn recv(&mut self) -> Result<Option<WireMsg>> {
-        match self.frames.read_frame()? {
-            Some(payload) => WireMsg::decode(&payload).map(Some),
+        match self.frames.read_frame_into(&mut self.buf)? {
+            Some(_) => WireMsg::decode_frame(&self.buf).map(Some),
             None => Ok(None),
         }
     }
@@ -877,6 +1277,8 @@ mod tests {
             shard_path: "/tmp/s.bin".into(),
             dim: 2,
             shard_inline: true,
+            wire_format: WireFormat::Json,
+            draw_batch: 1,
         };
         let back =
             WorkerManifest::from_json(&Json::parse(&m.to_json().render()).unwrap())
@@ -1084,6 +1486,8 @@ mod tests {
             shard_path: "/tmp/none".into(),
             dim: 1,
             shard_inline: false,
+            wire_format: WireFormat::Json,
+            draw_batch: 1,
         };
         let err =
             t.connect(0, &m, Path::new("/tmp/none.json")).unwrap_err();
@@ -1125,6 +1529,8 @@ mod tests {
             shard_path: shard_path.to_string_lossy().into_owned(),
             dim: 1,
             shard_inline: true,
+            wire_format: WireFormat::Json,
+            draw_batch: 1,
         };
         let err = t.connect(0, &m, Path::new("/tmp/none.json")).unwrap_err();
         let text = err.to_string();
@@ -1149,6 +1555,8 @@ mod tests {
             shard_path: "/tmp/shard_2.json".into(),
             dim: 4,
             shard_inline: true,
+            wire_format: WireFormat::Binary,
+            draw_batch: 7,
         };
         let dir = std::env::temp_dir().join("repro_transport_test");
         std::fs::create_dir_all(&dir).unwrap();
@@ -1157,5 +1565,321 @@ mod tests {
         let back = WorkerManifest::load(&path).unwrap();
         assert_eq!(m, back);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Manifests written before the binary draw plane existed decode
+    /// as the original wire: JSON, one draw per frame.
+    #[test]
+    fn manifest_wire_fields_backcompat() {
+        let mut m = WorkerManifest {
+            machine: 0,
+            machines: 2,
+            seed: 1,
+            samples: 5,
+            burn_in: 0,
+            thin: 1,
+            prior_weight: 0.5,
+            sampler: "rwm:1".into(),
+            shard_path: "/tmp/s.bin".into(),
+            dim: 2,
+            shard_inline: false,
+            wire_format: WireFormat::Binary,
+            draw_batch: 64,
+        };
+        let back = WorkerManifest::from_json(
+            &Json::parse(&m.to_json().render()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(m, back, "wire fields must survive the round-trip");
+        // Strip the fields to simulate an old leader's manifest.
+        let mut obj = match m.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        obj.remove("wire_format");
+        obj.remove("draw_batch");
+        let old = WorkerManifest::from_json(&Json::Obj(obj)).unwrap();
+        m.wire_format = WireFormat::Json;
+        m.draw_batch = 1;
+        assert_eq!(m, old, "missing fields must decode as json wire");
+    }
+
+    #[test]
+    fn wire_format_parses_tokens() {
+        assert_eq!(WireFormat::parse("json").unwrap(), WireFormat::Json);
+        assert_eq!(WireFormat::parse(" Binary ").unwrap(), WireFormat::Binary);
+        assert_eq!(WireFormat::parse("bin").unwrap(), WireFormat::Binary);
+        assert!(WireFormat::parse("msgpack").is_err());
+        assert_eq!(WireFormat::default().name(), "json");
+    }
+
+    /// The binary chunk frame is bit-exact for every f64: NaN bit
+    /// payloads, ±∞ and -0.0 all survive `encode_into` → `decode`
+    /// untouched — the lossless-encoding half of the wire contract.
+    #[test]
+    fn chunk_roundtrip_is_bit_exact_including_nan_payloads() {
+        let payload_nan = f64::from_bits(0x7ff8_dead_beef_cafe);
+        let chunk = DrawChunk {
+            machine: 3,
+            dim: 2,
+            thetas: vec![
+                payload_nan,
+                -0.0,
+                f64::INFINITY,
+                f64::NEG_INFINITY,
+                1.0 / 3.0,
+                1e-300,
+            ],
+            elapsed: vec![0.5, 1.5, 2.5],
+            last: true,
+        };
+        let mut buf = Vec::new();
+        chunk.encode_into(&mut buf);
+        assert!(buf.starts_with(DRAW_MAGIC));
+        let back = DrawChunk::decode(&buf).unwrap();
+        assert_eq!(back.machine, 3);
+        assert_eq!(back.dim, 2);
+        assert_eq!(back.count(), 3);
+        assert!(back.last);
+        for (a, b) in chunk.thetas.iter().zip(&back.thetas) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in chunk.elapsed.iter().zip(&back.elapsed) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    /// The JSON plane's one documented loss: every NaN decodes as the
+    /// canonical quiet NaN, so NaN *bit payloads* are canonicalized
+    /// (values — including ±∞ and NaN-ness itself — are preserved;
+    /// see `draw_roundtrip_preserves_nonfinite_values`). This is the
+    /// regression pin for the "binary is the only lossless encoding"
+    /// contract.
+    #[test]
+    fn json_wire_canonicalizes_nan_payload_bits() {
+        let payload_nan = f64::from_bits(0x7ff8_dead_beef_cafe);
+        let msg = draw(0, vec![payload_nan], false);
+        let decoded = match WireMsg::decode(&encode_draw(&msg)).unwrap() {
+            WireMsg::Draw(d) => d,
+            other => panic!("wrong variant {other:?}"),
+        };
+        assert!(decoded.theta[0].is_nan(), "NaN-ness survives");
+        assert_ne!(
+            decoded.theta[0].to_bits(),
+            payload_nan.to_bits(),
+            "JSON canonicalizes the NaN payload — documented-lossy"
+        );
+    }
+
+    /// Chunk decode rejects structural corruption with parse errors,
+    /// never panics or short reads.
+    #[test]
+    fn chunk_decode_rejects_corrupt_frames() {
+        let chunk = DrawChunk {
+            machine: 0,
+            dim: 2,
+            thetas: vec![1.0, 2.0],
+            elapsed: vec![0.1],
+            last: false,
+        };
+        let mut buf = Vec::new();
+        chunk.encode_into(&mut buf);
+        // Truncated body.
+        assert!(DrawChunk::decode(&buf[..buf.len() - 1]).is_err());
+        // Padded body.
+        let mut padded = buf.clone();
+        padded.push(0);
+        assert!(DrawChunk::decode(&padded).is_err());
+        // Unknown kind byte.
+        let mut bad_kind = buf.clone();
+        bad_kind[8] = 9;
+        assert!(DrawChunk::decode(&bad_kind).is_err());
+        // Bad last flag.
+        let mut bad_last = buf.clone();
+        bad_last[33] = 7;
+        assert!(DrawChunk::decode(&bad_last).is_err());
+        // Not a chunk at all.
+        assert!(DrawChunk::decode(b"RPDRAW1\n").is_err());
+    }
+
+    /// `decode_frame` sniffs the magic per frame, so binary chunks and
+    /// JSON control frames interleave on one stream.
+    #[test]
+    fn decode_frame_sniffs_magic_per_frame() {
+        let mut stream: Vec<u8> = Vec::new();
+        write_frame(&mut stream, &encode_draw(&draw(1, vec![0.5], false)))
+            .unwrap();
+        let chunk = DrawChunk {
+            machine: 1,
+            dim: 1,
+            thetas: vec![1.5, 2.5],
+            elapsed: vec![0.1, 0.2],
+            last: false,
+        };
+        let mut payload = Vec::new();
+        chunk.encode_into(&mut payload);
+        write_frame_bytes(&mut stream, &payload).unwrap();
+        write_frame(
+            &mut stream,
+            &encode_summary(&WorkerSummary {
+                machine: 1,
+                accept_rate: 0.25,
+                wall_secs: 1.0,
+            }),
+        )
+        .unwrap();
+        let mut r = FrameReader::new(BufReader::new(stream.as_slice()));
+        let mut buf = Vec::new();
+        r.read_frame_into(&mut buf).unwrap().unwrap();
+        assert!(matches!(
+            WireMsg::decode_frame(&buf).unwrap(),
+            WireMsg::Draw(_)
+        ));
+        r.read_frame_into(&mut buf).unwrap().unwrap();
+        match WireMsg::decode_frame(&buf).unwrap() {
+            WireMsg::Chunk(c) => assert_eq!(c, chunk),
+            other => panic!("wrong variant {other:?}"),
+        }
+        r.read_frame_into(&mut buf).unwrap().unwrap();
+        assert!(matches!(
+            WireMsg::decode_frame(&buf).unwrap(),
+            WireMsg::Summary(_)
+        ));
+        assert!(r.read_frame_into(&mut buf).unwrap().is_none());
+    }
+
+    /// Binary batching: 10 draws at batch 4 emit 4+4 draw chunks plus
+    /// a 2-draw tail on flush, the concatenated payload reproduces
+    /// the input order, and only the final chunk carries `last`.
+    #[test]
+    fn draw_encoder_batches_with_tail_flush() {
+        let mut enc = DrawEncoder::new(WireFormat::Binary, 4, 2, 3);
+        let mut frames: Vec<Vec<u8>> = Vec::new();
+        let mut sink = |payload: &[u8]| {
+            frames.push(payload.to_vec());
+            Ok(())
+        };
+        for i in 0..10 {
+            let msg = DrawMsg {
+                machine: 2,
+                theta: vec![i as f64, -(i as f64), 0.5 * i as f64],
+                elapsed: i as f64,
+                last: i == 9,
+            };
+            enc.push(&msg, &mut sink).unwrap();
+        }
+        assert_eq!(frames.len(), 2, "two full batches emitted eagerly");
+        assert_eq!(enc.buffered(), 2);
+        enc.flush(&mut sink).unwrap();
+        assert_eq!(enc.buffered(), 0);
+        enc.flush(&mut sink).unwrap(); // empty flush is a no-op
+        assert_eq!(frames.len(), 3);
+        let chunks: Vec<DrawChunk> = frames
+            .iter()
+            .map(|f| DrawChunk::decode(f).unwrap())
+            .collect();
+        assert_eq!(
+            chunks.iter().map(DrawChunk::count).collect::<Vec<_>>(),
+            vec![4, 4, 2]
+        );
+        assert_eq!(
+            chunks.iter().map(|c| c.last).collect::<Vec<_>>(),
+            vec![false, false, true]
+        );
+        let all: Vec<f64> =
+            chunks.iter().flat_map(|c| c.thetas.clone()).collect();
+        for (i, row) in all.chunks_exact(3).enumerate() {
+            assert_eq!(row, &[i as f64, -(i as f64), 0.5 * i as f64]);
+        }
+        let times: Vec<f64> =
+            chunks.iter().flat_map(|c| c.elapsed.clone()).collect();
+        assert_eq!(times, (0..10).map(|i| i as f64).collect::<Vec<_>>());
+    }
+
+    /// JSON mode ignores the batch knob and emits the legacy per-draw
+    /// frames byte-for-byte — a JSON-mode run's wire is identical to
+    /// the pre-batching protocol.
+    #[test]
+    fn draw_encoder_json_mode_is_wire_identical_to_legacy() {
+        let mut enc = DrawEncoder::new(WireFormat::Json, 64, 0, 2);
+        let mut frames: Vec<Vec<u8>> = Vec::new();
+        let mut sink = |payload: &[u8]| {
+            frames.push(payload.to_vec());
+            Ok(())
+        };
+        let msgs: Vec<DrawMsg> = (0..3)
+            .map(|i| DrawMsg {
+                machine: 0,
+                theta: vec![i as f64, 0.25],
+                elapsed: 0.125,
+                last: i == 2,
+            })
+            .collect();
+        for m in &msgs {
+            enc.push(m, &mut sink).unwrap();
+        }
+        enc.flush(&mut sink).unwrap();
+        assert_eq!(frames.len(), 3, "one frame per draw, flush adds none");
+        for (m, f) in msgs.iter().zip(&frames) {
+            assert_eq!(f.as_slice(), encode_draw(m).as_bytes());
+        }
+    }
+
+    /// The hot-loop allocation contract: after the first full flush
+    /// the encoder's scratch and accumulation buffers stop growing —
+    /// pushing more draws reuses the same allocations.
+    #[test]
+    fn draw_encoder_reuses_scratch_across_flushes() {
+        let mut enc = DrawEncoder::new(WireFormat::Binary, 8, 0, 4);
+        let mut sink = |_: &[u8]| Ok(());
+        let mut scratch_cap = 0usize;
+        for round in 0..6 {
+            for i in 0..8 {
+                let msg = DrawMsg {
+                    machine: 0,
+                    theta: vec![i as f64; 4],
+                    elapsed: i as f64,
+                    last: false,
+                };
+                enc.push(&msg, &mut sink).unwrap();
+            }
+            assert_eq!(enc.buffered(), 0, "full batch flushes eagerly");
+            if round == 0 {
+                scratch_cap = enc.scratch_capacity();
+                assert!(scratch_cap > 0, "first flush sized the scratch");
+            } else {
+                assert_eq!(
+                    enc.scratch_capacity(),
+                    scratch_cap,
+                    "steady-state flushes must not reallocate the \
+                     scratch buffer"
+                );
+            }
+        }
+    }
+
+    /// `read_frame_into` reuses the caller's buffer: after the largest
+    /// frame has been seen, smaller and equal frames do not grow it.
+    #[test]
+    fn read_frame_into_reuses_buffer() {
+        let mut stream: Vec<u8> = Vec::new();
+        write_frame_bytes(&mut stream, &vec![7u8; 512]).unwrap();
+        write_frame_bytes(&mut stream, &vec![8u8; 32]).unwrap();
+        write_frame_bytes(&mut stream, &vec![9u8; 512]).unwrap();
+        let mut r = FrameReader::new(BufReader::new(stream.as_slice()));
+        let mut buf = Vec::new();
+        assert_eq!(r.read_frame_into(&mut buf).unwrap(), Some(512));
+        assert_eq!(buf, vec![7u8; 512]);
+        let cap = buf.capacity();
+        assert_eq!(r.read_frame_into(&mut buf).unwrap(), Some(32));
+        assert_eq!(buf, vec![8u8; 32]);
+        assert_eq!(r.read_frame_into(&mut buf).unwrap(), Some(512));
+        assert_eq!(buf, vec![9u8; 512]);
+        assert_eq!(
+            buf.capacity(),
+            cap,
+            "equal-sized frames must reuse the allocation"
+        );
+        assert!(r.read_frame_into(&mut buf).unwrap().is_none());
     }
 }

@@ -16,6 +16,14 @@ use crate::sampler::{Sampler, State};
 use crate::types::{SampleMatrix, SubposteriorSamples};
 
 /// One streamed draw.
+///
+/// In-process this moves through an `mpsc` channel verbatim. Out of
+/// process it is carried either as its own JSON frame
+/// ([`crate::coordinator::transport::encode_draw`], `wire_format =
+/// json`) or coalesced with its neighbours into a batched binary
+/// `RPDRAW1` chunk ([`crate::coordinator::transport::DrawEncoder`],
+/// `wire_format = binary`) — the draws are identical either way; only
+/// the framing differs.
 #[derive(Debug, Clone)]
 pub struct DrawMsg {
     pub machine: usize,

@@ -13,6 +13,14 @@
 //! [`read_shard`] autodetects the format from the magic, so workers
 //! never need to be told which one the leader chose
 //! (`shard_format` config key).
+//!
+//! On unix, binary (`RPSHRD1`) shards are ingested through a read-only
+//! **memory mapping** instead of a heap read: the bounds-checked cursor
+//! decodes straight out of the page cache, so daemon-side shard load
+//! never double-buffers the dataset (mapping + decoded rows, instead of
+//! read buffer + decoded rows). JSON shards, empty files, and platforms
+//! without `mmap` fall back to the buffered whole-file read
+//! ([`read_shard_buffered`]), which is bit-identical by construction.
 
 use crate::data::Dataset;
 use crate::error::{Error, Result};
@@ -176,14 +184,125 @@ pub fn shard_from_bytes(bytes: &[u8]) -> Result<Dataset> {
 }
 
 /// Load a shard spilled in either format, autodetected from the magic.
+///
+/// Binary shards decode straight out of a read-only memory mapping
+/// where the platform supports it (the spill is written once by the
+/// leader before dispatch, so the mapping is stable for its lifetime);
+/// everything else takes the buffered path. Both paths are bit-exact —
+/// pinned by `mmap_and_buffered_ingest_are_bit_identical`.
 pub fn read_shard(path: &Path) -> Result<Dataset> {
+    #[cfg(unix)]
+    {
+        let file = std::fs::File::open(path)?;
+        if let Some(map) = mmap::Map::of(&file) {
+            let bytes = map.bytes();
+            if bytes.starts_with(SHARD_MAGIC) {
+                return shard_from_bin(bytes)
+                    .map_err(|e| decorate_shard_err(path, e));
+            }
+            // JSON shard: parsing wants a &str anyway, so drop the
+            // mapping and take the buffered path below.
+        }
+    }
+    read_shard_buffered(path)
+}
+
+/// [`read_shard`] without the mmap fast path: one whole-file read into
+/// a heap buffer, then the same autodetecting decoder. Public so tests
+/// (and callers on exotic filesystems where mappings misbehave) can pin
+/// the two ingest paths against each other.
+pub fn read_shard_buffered(path: &Path) -> Result<Dataset> {
     let bytes = std::fs::read(path)?;
-    shard_from_bytes(&bytes).map_err(|e| match e {
+    shard_from_bytes(&bytes).map_err(|e| decorate_shard_err(path, e))
+}
+
+/// Prefix parse failures with the shard path (I/O errors already carry
+/// it via the OS message).
+fn decorate_shard_err(path: &Path, e: Error) -> Error {
+    match e {
         Error::Parse(m) => {
             Error::Parse(format!("shard {}: {m}", path.display()))
         }
         other => other,
-    })
+    }
+}
+
+/// Minimal read-only `mmap` binding — no libc crate (the repo is
+/// dependency-free by design), just the two syscall wrappers every unix
+/// libc exports with this exact C signature.
+#[cfg(unix)]
+mod mmap {
+    use std::ffi::c_void;
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    // POSIX values, identical on linux and the BSDs (incl. macOS).
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+
+    /// A read-only private mapping of one whole file, unmapped on drop.
+    pub struct Map {
+        ptr: *mut c_void,
+        len: usize,
+    }
+
+    impl Map {
+        /// Map the file, or `None` when mapping is impossible (empty
+        /// file — `mmap` rejects zero lengths — an oversized file on a
+        /// 32-bit target, or any syscall failure). Callers must treat
+        /// `None` as "use the buffered path", never as an error.
+        pub fn of(file: &File) -> Option<Map> {
+            let len = usize::try_from(file.metadata().ok()?.len()).ok()?;
+            if len == 0 {
+                return None;
+            }
+            let ptr = unsafe {
+                mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    PROT_READ,
+                    MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            // MAP_FAILED is (void*)-1; a null return would be a libc
+            // bug but refuse it too rather than fabricate a mapping.
+            if ptr.is_null() || ptr as isize == -1 {
+                return None;
+            }
+            Some(Map { ptr, len })
+        }
+
+        pub fn bytes(&self) -> &[u8] {
+            // Safe: the mapping is PROT_READ over `len` bytes and
+            // lives until drop; spill files are written once before
+            // any reader opens them, so the pages are stable.
+            unsafe {
+                std::slice::from_raw_parts(self.ptr as *const u8, self.len)
+            }
+        }
+    }
+
+    impl Drop for Map {
+        fn drop(&mut self) {
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
 }
 
 /// Spill a dataset in the binary shard format (see the module docs for
@@ -800,6 +919,69 @@ mod tests {
             assert_eq!(format!("{shard:?}"), format!("{back:?}"));
         }
         assert!(shard_from_bytes(&[0xFF, 0xFE, 0x00]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Tentpole gate for the mmap rung: the memory-mapped ingest path
+    /// ([`read_shard`] on a binary shard) and the buffered path must be
+    /// bit-identical for every model — and the JSON fallback must keep
+    /// working through the same entry point.
+    #[test]
+    fn mmap_and_buffered_ingest_are_bit_identical() {
+        use crate::data::synth;
+        let dir = std::env::temp_dir().join("repro_shard_mmap_test");
+        let idx: Vec<usize> = (3..41).collect();
+        let datasets = [
+            synth::gaussian(60, 2, 1),
+            synth::logistic(60, 3, 2),
+            synth::gmm(60, 2, 2, 4.0, 3),
+            synth::poisson_gamma(60, 4),
+            synth::linreg(60, 2, 5),
+        ];
+        for (i, ds) in datasets.iter().enumerate() {
+            let shard = ds.select(&idx).unwrap();
+            for format in [ShardFormat::Json, ShardFormat::Binary] {
+                let path =
+                    dir.join(format!("shard_{i}.{}", format.extension()));
+                write_shard(&path, &shard, format).unwrap();
+                let mapped = read_shard(&path).unwrap();
+                let buffered = read_shard_buffered(&path).unwrap();
+                // Debug formatting prints shortest-round-trip floats,
+                // so equal strings ⇔ bit-identical contents.
+                assert_eq!(
+                    format!("{mapped:?}"),
+                    format!("{buffered:?}"),
+                    "{} {} shard diverged between mmap and buffered ingest",
+                    ds.model_name(),
+                    format.name()
+                );
+                assert_eq!(format!("{mapped:?}"), format!("{shard:?}"));
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Degenerate inputs must take the fallback, not crash the mapper:
+    /// an empty file (unmappable) and a corrupt binary shard (mapped,
+    /// then rejected by the bounds-checked cursor with the path in the
+    /// message).
+    #[test]
+    fn mmap_path_handles_empty_and_corrupt_files() {
+        let dir = std::env::temp_dir().join("repro_shard_mmap_edge");
+        std::fs::create_dir_all(&dir).unwrap();
+        let empty = dir.join("empty.bin");
+        std::fs::write(&empty, b"").unwrap();
+        assert!(read_shard(&empty).is_err());
+
+        let corrupt = dir.join("corrupt.bin");
+        let mut bytes = SHARD_MAGIC.to_vec();
+        bytes.push(99); // unknown model tag
+        std::fs::write(&corrupt, &bytes).unwrap();
+        let err = read_shard(&corrupt).unwrap_err();
+        assert!(
+            err.to_string().contains("corrupt.bin"),
+            "parse errors must name the shard file: {err}"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

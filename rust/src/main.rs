@@ -158,6 +158,16 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
                     Error::Config(format!("bad --max-frame-bytes: {v}"))
                 })?);
             }
+            if let Some(v) = args.get("wire-format") {
+                b = b.wire_format(
+                    repro::coordinator::transport::WireFormat::parse(v)?,
+                );
+            }
+            if let Some(v) = args.get("draw-batch") {
+                b = b.draw_batch(v.parse().map_err(|_| {
+                    Error::Config(format!("bad --draw-batch: {v}"))
+                })?);
+            }
             if let Some(d) = args.get("artifacts") {
                 b = b.artifact_dir(d);
             }
@@ -297,7 +307,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
 /// + a non-zero exit; the leader attaches them to the failing machine.
 fn cmd_worker(args: &Args) -> Result<()> {
     use repro::coordinator::serve::run_manifest;
-    use repro::coordinator::transport::{write_frame, WorkerManifest};
+    use repro::coordinator::transport::{write_frame_bytes, WorkerManifest};
 
     let manifest_path = args
         .get("manifest")
@@ -306,8 +316,8 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let stdout = std::io::stdout();
     let mut out = std::io::BufWriter::new(stdout.lock());
     let machine = wm.machine;
-    run_manifest(&wm, &mut |frame: &str| -> std::io::Result<()> {
-        if let Err(e) = write_frame(&mut out, frame) {
+    run_manifest(&wm, &mut |frame: &[u8]| -> std::io::Result<()> {
+        if let Err(e) = write_frame_bytes(&mut out, frame) {
             // The frame stream is this process's only output: with the
             // pipe gone (leader died or canceled the run) the rest of
             // the chain is wasted work — bail out now rather than
@@ -371,6 +381,7 @@ fn usage() -> &'static str {
                    [--combine-threads K] [--combine-cache-budget-mb MB] \\\n\
                    [--combine-backend naive|blocked|device] \\\n\
                    [--out FILE] [--shard-format json|binary] \\\n\
+                   [--wire-format json|binary [--draw-batch N]] \\\n\
                    [--process-mode true [--worker-bin PATH] \\\n\
                     [--worker-slots W]] \\\n\
                    [--workers HOST:PORT,… (repro serve daemons) \\\n\

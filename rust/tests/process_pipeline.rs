@@ -140,6 +140,29 @@ fn binary_shard_format_is_byte_identical_to_thread_mode() {
     assert_byte_identical(&proc_out, &thread_out);
 }
 
+/// Tentpole gate: the binary draw plane is invisible to the output.
+/// For every draw_batch ∈ {1, 7, 64} the binary-wire process run must
+/// be byte-identical to thread mode (which never frames a single draw)
+/// — including a batch size (7) that leaves a short tail chunk and one
+/// (64) larger than some chunks' draw counts.
+#[test]
+fn binary_wire_format_is_byte_identical_to_thread_mode() {
+    use repro::coordinator::transport::WireFormat;
+    let data = synth::gaussian(1_200, 2, 41);
+    let base = process_cfg("gaussian", 3, 130, CombineMethod::Semiparametric);
+    let mut tc = base.clone();
+    tc.process_mode = false;
+    let thread_out = pipeline::run_native(&tc, &data).unwrap();
+    for batch in [1usize, 7, 64] {
+        let mut pc = base.clone();
+        pc.wire_format = WireFormat::Binary;
+        pc.draw_batch = batch;
+        pc.shard_format = ShardFormat::Binary; // mmap ingest on the workers
+        let proc_out = pipeline::run_process(&pc, &data).unwrap();
+        assert_byte_identical(&proc_out, &thread_out);
+    }
+}
+
 /// The run's scratch directory (shard + manifest spills) is owned by
 /// the output and removed when it drops — the tempdir contract.
 #[test]

@@ -171,6 +171,37 @@ fn inline_shards_are_byte_identical_to_thread_mode() {
     }
 }
 
+/// Tentpole gate over real daemons: the binary draw plane at
+/// draw_batch ∈ {1, 7, 64} is byte-identical to thread mode — at
+/// W < M so chunked streams and oversubscription compose, with binary
+/// shard spills so the daemons take the mmap ingest path too.
+#[test]
+fn binary_wire_is_byte_identical_over_sockets_at_any_batch() {
+    use repro::coordinator::transport::WireFormat;
+    let data = synth::gaussian(1_200, 2, 67);
+    let base = PipelineConfig::builder("gaussian")
+        .machines(4)
+        .samples_per_machine(110)
+        .method(CombineMethod::Semiparametric)
+        .seed(59)
+        .shard_format(ShardFormat::Binary)
+        .build();
+    let thread_out = pipeline::run_native(&base, &data).unwrap();
+    let (_daemons, spec) = Daemon::fleet(2);
+    for batch in [1usize, 7, 64] {
+        let mut sc = base.clone();
+        sc.workers = spec.clone();
+        sc.wire_format = WireFormat::Binary;
+        sc.draw_batch = batch;
+        let socket_out = pipeline::run_process(&sc, &data).unwrap();
+        assert_byte_identical(
+            &socket_out,
+            &thread_out,
+            &format!("binary wire batch={batch} vs thread"),
+        );
+    }
+}
+
 /// Dialing an endpoint nobody listens on must surface a connect error
 /// naming the address, not hang or panic.
 #[test]

@@ -1,0 +1,208 @@
+//! End-to-end fidelity of the binary draw plane over *real* transports:
+//! scripted worker byte streams carrying NaN (with a nonstandard bit
+//! payload), ±Inf, and -0.0 are shipped through an actual OS pipe (a
+//! fake worker process) and an actual TCP socket (a scripted daemon),
+//! and must decode bit-exactly on the leader side. The same streams
+//! carry a JSON draw frame whose NaN payload is canonicalized in
+//! transit — the documented-lossy JSON contract, pinned here over the
+//! wire (unit-pinned in `coordinator::transport`).
+
+use std::io::{BufReader, Write};
+use std::path::{Path, PathBuf};
+
+use repro::coordinator::transport::{
+    encode_draw, encode_summary, write_frame, write_frame_bytes, DrawChunk,
+    FrameReader, PipeTransport, SocketTransport, Transport, WireFormat,
+    WireMsg, WorkerConnection, WorkerManifest, WorkerSummary,
+};
+use repro::coordinator::worker::DrawMsg;
+
+/// A NaN with a distinctive payload: survives binary framing verbatim,
+/// canonicalized by the JSON path.
+const NAN_PAYLOAD: u64 = 0x7ff8_dead_beef_cafe;
+
+/// 3 rows × dim 2 of adversarial values.
+fn weird_thetas() -> Vec<f64> {
+    vec![
+        f64::from_bits(NAN_PAYLOAD),
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        -0.0,
+        f64::MIN_POSITIVE,
+        1.5,
+    ]
+}
+
+/// The exact bytes a binary-wire worker would put on its stream for
+/// this job: one JSON draw frame (mixed streams are legal — the leader
+/// sniffs the magic per frame), one binary chunk frame carrying
+/// [`weird_thetas`], then the JSON summary frame.
+fn scripted_wire_bytes() -> Vec<u8> {
+    let mut buf = Vec::new();
+    write_frame(
+        &mut buf,
+        &encode_draw(&DrawMsg {
+            machine: 0,
+            theta: vec![f64::from_bits(NAN_PAYLOAD), 1.0],
+            elapsed: 0.5,
+            last: false,
+        }),
+    )
+    .unwrap();
+    let chunk = DrawChunk {
+        machine: 0,
+        dim: 2,
+        thetas: weird_thetas(),
+        elapsed: vec![0.1, 0.2, 0.3],
+        last: true,
+    };
+    let mut frame = Vec::new();
+    chunk.encode_into(&mut frame);
+    write_frame_bytes(&mut buf, &frame).unwrap();
+    write_frame(
+        &mut buf,
+        &encode_summary(&WorkerSummary {
+            machine: 0,
+            accept_rate: 0.5,
+            wall_secs: 0.25,
+        }),
+    )
+    .unwrap();
+    buf
+}
+
+/// A binary-wire manifest for the scripted job. Nothing resolves
+/// `shard_path` — the fake endpoints never load a shard.
+fn manifest(dir: &Path) -> WorkerManifest {
+    WorkerManifest {
+        machine: 0,
+        machines: 1,
+        seed: 7,
+        samples: 4,
+        burn_in: 0,
+        thin: 1,
+        prior_weight: 1.0,
+        sampler: "rwm:1".into(),
+        shard_path: dir.join("unused.bin").to_string_lossy().into_owned(),
+        dim: 2,
+        shard_inline: false,
+        wire_format: WireFormat::Binary,
+        draw_batch: 3,
+    }
+}
+
+/// Drain the connection and assert the scripted stream decoded
+/// faithfully: JSON draw (NaN-ness kept, payload canonicalized), then
+/// the chunk bit-exact, then the summary, then clean EOF.
+fn assert_scripted_stream(conn: &mut dyn WorkerConnection) {
+    match conn.recv().unwrap().expect("missing JSON draw frame") {
+        WireMsg::Draw(d) => {
+            assert!(d.theta[0].is_nan(), "NaN-ness must survive JSON");
+            assert_ne!(
+                d.theta[0].to_bits(),
+                NAN_PAYLOAD,
+                "JSON canonicalizes NaN payloads — documented-lossy"
+            );
+            assert_eq!(d.theta[1], 1.0);
+        }
+        other => panic!("expected a draw, got {other:?}"),
+    }
+    match conn.recv().unwrap().expect("missing binary chunk frame") {
+        WireMsg::Chunk(c) => {
+            assert_eq!(c.machine, 0);
+            assert_eq!(c.dim, 2);
+            assert_eq!(c.count(), 3);
+            assert!(c.last);
+            let want: Vec<u64> =
+                weird_thetas().iter().map(|v| v.to_bits()).collect();
+            let got: Vec<u64> =
+                c.thetas.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(
+                got, want,
+                "binary chunk must carry non-finite values bit-exactly"
+            );
+            assert_eq!(c.elapsed, vec![0.1, 0.2, 0.3]);
+        }
+        other => panic!("expected a chunk, got {other:?}"),
+    }
+    assert!(matches!(
+        conn.recv().unwrap().expect("missing summary frame"),
+        WireMsg::Summary(WorkerSummary { machine: 0, .. })
+    ));
+    assert!(conn.recv().unwrap().is_none(), "stream must end cleanly");
+}
+
+/// Pipe transport: a fake worker process (`exec cat <fixture>`) ships
+/// the scripted bytes through a real stdout pipe; the leader-side
+/// [`PipeTransport`] connection must decode them bit-exactly.
+#[cfg(unix)]
+#[test]
+fn nonfinite_draws_bit_exact_over_pipe_binary_wire() {
+    use std::os::unix::fs::PermissionsExt;
+    let dir = std::env::temp_dir().join("repro_wire_binary_pipe");
+    std::fs::create_dir_all(&dir).unwrap();
+    let fixture = dir.join("frames.bin");
+    std::fs::write(&fixture, scripted_wire_bytes()).unwrap();
+    let script = dir.join("fake_worker.sh");
+    std::fs::write(
+        &script,
+        format!("#!/bin/sh\nexec cat '{}'\n", fixture.display()),
+    )
+    .unwrap();
+    std::fs::set_permissions(
+        &script,
+        std::fs::Permissions::from_mode(0o755),
+    )
+    .unwrap();
+
+    let wm = manifest(&dir);
+    let manifest_path = dir.join("worker_0.json");
+    wm.save(&manifest_path).unwrap();
+    let transport = PipeTransport::new(PathBuf::from(&script), 1);
+    let mut conn = transport.connect(0, &wm, &manifest_path).unwrap();
+    assert_scripted_stream(conn.as_mut());
+    conn.finish().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Socket transport: a scripted daemon thread accepts one connection,
+/// reads the manifest frame (asserting the binary wire was actually
+/// negotiated across the socket), and ships the scripted bytes back;
+/// the leader-side [`SocketTransport`] connection must decode them
+/// bit-exactly.
+#[test]
+fn nonfinite_draws_bit_exact_over_socket_binary_wire() {
+    let dir = std::env::temp_dir().join("repro_wire_binary_socket");
+    std::fs::create_dir_all(&dir).unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || -> String {
+        let (stream, _) = listener.accept().unwrap();
+        let mut frames =
+            FrameReader::new(BufReader::new(stream.try_clone().unwrap()));
+        let manifest_text = frames
+            .read_frame()
+            .unwrap()
+            .expect("client must send a manifest frame first");
+        let mut writer = stream;
+        writer.write_all(&scripted_wire_bytes()).unwrap();
+        writer.flush().unwrap();
+        manifest_text
+        // Dropping the stream sends FIN: clean end-of-stream.
+    });
+
+    let transport = SocketTransport::from_spec(&addr.to_string()).unwrap();
+    let wm = manifest(&dir);
+    let mut conn = transport
+        .connect(0, &wm, Path::new("unused-manifest-path"))
+        .unwrap();
+    assert_scripted_stream(conn.as_mut());
+    conn.finish().unwrap();
+    let manifest_text = server.join().unwrap();
+    assert!(
+        manifest_text.contains("\"wire_format\":\"binary\"")
+            && manifest_text.contains("\"draw_batch\":3"),
+        "wire negotiation must cross the socket: {manifest_text}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
