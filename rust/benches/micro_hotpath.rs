@@ -305,6 +305,100 @@ fn main() -> repro::error::Result<()> {
         );
     }
 
+    // --- out-of-core draw plane: dense vs chunked table streaming --------
+    // The tentpole gate for the chunked DrawStore seam: the same
+    // O(TMd²) log-density table, computed in one whole-set pass vs
+    // streamed through 64-row chunk views (the shape the store-backed
+    // combine feeds the kernel). Byte-identity is asserted entry by
+    // entry, and the bench hard-fails if chunking ever costs more than
+    // 25% over the dense pass — CI's bench-smoke job runs this binary,
+    // so a chunk-seam perf regression fails the build.
+    {
+        use repro::combine::GaussianEstimate;
+        use repro::kernel::{BlockedCpuKernel, CombineKernel};
+        let (m, d, t_sub, chunk) = (8usize, 24usize, 2_000usize, 64usize);
+        let mut rng = Pcg64::seed_from(29);
+        let sets: Vec<SampleMatrix> = (0..m)
+            .map(|_| {
+                Mvn::new(vec![0.0; d], Mat::identity(d))
+                    .unwrap()
+                    .sample_n(t_sub, &mut rng)
+            })
+            .collect();
+        let mvns: Vec<Mvn> = sets
+            .iter()
+            .map(|s| GaussianEstimate::fit(s).unwrap().mvn().unwrap())
+            .collect();
+        let kernel = BlockedCpuKernel::default();
+        let mut dense_tables: Vec<Vec<f64>> = Vec::new();
+        let secs_dense = common::time_median(5, || {
+            dense_tables = mvns
+                .iter()
+                .zip(&sets)
+                .map(|(mvn, s)| kernel.logpdf_table(mvn, s).unwrap())
+                .collect();
+        });
+        let mut chunked_tables: Vec<Vec<f64>> = Vec::new();
+        let secs_chunked = common::time_median(5, || {
+            chunked_tables = mvns
+                .iter()
+                .zip(&sets)
+                .map(|(mvn, s)| {
+                    let mut col = Vec::with_capacity(s.len());
+                    for block in s.rows_chunked(chunk) {
+                        kernel
+                            .logpdf_table_block(mvn, block, &mut col)
+                            .unwrap();
+                    }
+                    col
+                })
+                .collect();
+        });
+        for (mach, (a, b)) in
+            dense_tables.iter().zip(&chunked_tables).enumerate()
+        {
+            assert_eq!(a.len(), b.len());
+            for (t, (x, y)) in a.iter().zip(b).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "machine {mach} entry {t}: chunked table diverged"
+                );
+            }
+        }
+        let ops = m * t_sub;
+        row(&format!("combine_table_dense_M{m}_d{d}"), secs_dense, ops);
+        row(
+            &format!("combine_table_chunked_M{m}_d{d}"),
+            secs_chunked,
+            ops,
+        );
+        println!(
+            "chunked table overhead (M={m}, d={d}, T={t_sub}, \
+             chunk={chunk}): {:.2}×",
+            secs_chunked / secs_dense
+        );
+        records.push(common::BenchRecord {
+            name: format!("combine_table_M{m}_T{t_sub}_d{d}_dense"),
+            ns_per_op: secs_dense * 1e9,
+            threads: 1,
+            speedup: 1.0,
+        });
+        records.push(common::BenchRecord {
+            name: format!("combine_table_M{m}_T{t_sub}_d{d}_chunked"),
+            ns_per_op: secs_chunked * 1e9,
+            threads: 1,
+            speedup: secs_dense / secs_chunked,
+        });
+        assert!(
+            secs_chunked < 1.25 * secs_dense,
+            "chunked table streaming ({}) must stay within 1.25× of the \
+             dense pass ({}) — the chunk seam got too expensive",
+            common::fmt_secs(secs_chunked),
+            common::fmt_secs(secs_dense)
+        );
+    }
+
     // --- draw plane: JSON vs binary wire at M=8, d=24 --------------------
     // The streaming hot path on both ends: worker-side encode (per-draw
     // JSON frames vs batched binary chunks through a reused scratch

@@ -42,7 +42,7 @@ use std::sync::{Arc, Mutex};
 use crate::error::{Error, Result};
 use crate::kernel::{default_kernel, CombineKernel, CombineKernelKind};
 use crate::rng::Pcg64;
-use crate::types::{SampleMatrix, SubposteriorSamples};
+use crate::types::{DrawStore, SampleMatrix, SubposteriorSamples};
 
 /// Rows per block when building combine-stage caches (norms, whitening):
 /// large enough that the inner reduction runs over a long contiguous
@@ -241,6 +241,57 @@ pub fn combine_with(
 ) -> Result<SampleMatrix> {
     let sets: Vec<&SampleMatrix> = subs.iter().map(|s| &s.samples).collect();
     combine_sets_with(method, &sets, t_out, seed, tuning)
+}
+
+/// [`combine_sets_with`] over chunked draw stores — the leader's entry
+/// point when the draw plane is held in [`DrawStore`]s (dense or
+/// spilled). The IMG-based methods (nonparametric, semiparametric)
+/// prepare their whitened context straight from the chunked stores
+/// ([`CombineContext::prepare_from_stores`]) — the un-whitened draws are
+/// only ever resident one chunk per worker at a time; the remaining
+/// methods need whole un-whitened sets (moment fits, tree reshuffles,
+/// pooling) and densify first. Retained draws are byte-identical to
+/// densifying everything up front, for every method, chunk size and
+/// spill budget — per-entry accumulation order never depends on chunk
+/// boundaries.
+pub fn combine_stores_with(
+    method: CombineMethod,
+    stores: &[&DrawStore],
+    t_out: usize,
+    seed: u64,
+    tuning: &CombineTuning,
+) -> Result<SampleMatrix> {
+    validate_stores(stores)?;
+    let threads = resolve_threads(tuning.threads);
+    match method {
+        CombineMethod::Nonparametric => {
+            let kernel = tuning.kernel.build()?;
+            let ctx =
+                CombineContext::prepare_from_stores(stores, threads, kernel)?;
+            nonparametric::nonparametric_with_context(&ctx, t_out, seed, threads)
+        }
+        CombineMethod::Semiparametric | CombineMethod::SemiparametricNw => {
+            let kernel = tuning.kernel.build()?;
+            let ctx =
+                CombineContext::prepare_from_stores(stores, threads, kernel)?;
+            semiparametric::semiparametric_with_context(
+                ctx,
+                t_out,
+                seed,
+                method == CombineMethod::Semiparametric,
+                threads,
+                Some(tuning.cache_budget_bytes),
+            )
+        }
+        _ => {
+            let dense: Vec<SampleMatrix> = stores
+                .iter()
+                .map(|s| s.to_matrix())
+                .collect::<Result<_>>()?;
+            let refs: Vec<&SampleMatrix> = dense.iter().collect();
+            combine_sets_with(method, &refs, t_out, seed, tuning)
+        }
+    }
 }
 
 /// [`combine_sets_tuned`] over a full [`CombineTuning`]. The backend is
@@ -498,9 +549,62 @@ impl CombineContext {
         Ok(CombineContext { sets: whitened, scales, norms, anneal: None, kernel })
     }
 
+    /// [`CombineContext::prepare_with`] over chunked [`DrawStore`]s —
+    /// the leader's out-of-core path. Each store's row chunks are
+    /// streamed twice (a variance pass for the whitening scales, then a
+    /// whiten + norm pass landing directly in the whitened set), so the
+    /// un-whitened draws are only ever resident one chunk per worker at
+    /// a time — spilled chunks are paged in, folded, and dropped.
+    ///
+    /// Bit-identical to densifying first and calling `prepare_with`:
+    /// the variance fold ([`store_variances`]), the whitening map and
+    /// the norm fold ([`CombineKernel::row_norms_block`]) are all
+    /// per-row sequential passes in draw order, so chunk boundaries —
+    /// and therefore `chunk_rows` and the spill budget — never change
+    /// per-entry accumulation order.
+    pub fn prepare_from_stores(
+        stores: &[&DrawStore],
+        threads: usize,
+        kernel: Arc<dyn CombineKernel>,
+    ) -> Result<Self> {
+        assert!(!stores.is_empty(), "no subposterior sample sets");
+        let vars: Vec<Option<Vec<f64>>> =
+            par_map_indexed(stores.len(), threads, |m| {
+                store_variances(stores[m])
+            })
+            .into_iter()
+            .collect::<Result<_>>()?;
+        let scales = scales_from_variances(stores[0].dim(), &vars);
+        let per_machine: Vec<(SampleMatrix, Vec<f64>)> =
+            par_map_indexed(stores.len(), threads, |m| {
+                whiten_store(stores[m], &scales, kernel.as_ref())
+            })
+            .into_iter()
+            .collect::<Result<_>>()?;
+        let mut whitened = Vec::with_capacity(per_machine.len());
+        let mut norms = Vec::with_capacity(per_machine.len());
+        for (w, n) in per_machine {
+            whitened.push(w);
+            norms.push(n);
+        }
+        Ok(CombineContext { sets: whitened, scales, norms, anneal: None, kernel })
+    }
+
     /// The compute-kernel backend this context was built on.
     pub fn kernel(&self) -> &dyn CombineKernel {
         self.kernel.as_ref()
+    }
+
+    /// Bytes held by this context's whitened copies, norm caches and
+    /// scales — what the pairwise tree's per-merge [`MemGauge`]
+    /// accounts. Excludes the anneal cache (budgeted separately by
+    /// [`CombineTuning::cache_budget_bytes`]).
+    pub fn resident_bytes(&self) -> usize {
+        let f = std::mem::size_of::<f64>();
+        let sets: usize =
+            self.sets.iter().map(|s| s.as_slice().len() * f).sum();
+        let norms: usize = self.norms.iter().map(|n| n.len() * f).sum();
+        sets + norms + self.scales.len() * f
     }
 
     /// Install the annealed-schedule factorization cache. Must happen
@@ -679,6 +783,77 @@ fn set_variances(set: &SampleMatrix) -> Option<Vec<f64>> {
     (set.len() >= 2).then(|| crate::stats::moments::variances(set))
 }
 
+/// Chunk-streamed twin of [`set_variances`] over a [`DrawStore`]:
+/// the same two per-row folds as [`crate::stats::moments`] (mean
+/// accumulation in draw order then `/ n`; squared deviations in draw
+/// order then `/ (n − 1)`), run chunk-at-a-time so spilled stores
+/// never densify. Chunk boundaries are invisible to the accumulation,
+/// so the result is bit-identical to `moments::variances` on the
+/// densified store.
+fn store_variances(store: &DrawStore) -> Result<Option<Vec<f64>>> {
+    if store.len() < 2 {
+        return Ok(None);
+    }
+    let d = store.dim();
+    let mut m = vec![0.0; d];
+    store.for_each_chunk(|block| {
+        for row in block.chunks_exact(d) {
+            for (mi, &xi) in m.iter_mut().zip(row) {
+                *mi += xi;
+            }
+        }
+        Ok(())
+    })?;
+    let n = store.len() as f64;
+    for mi in m.iter_mut() {
+        *mi /= n;
+    }
+    let mut v = vec![0.0; d];
+    store.for_each_chunk(|block| {
+        for row in block.chunks_exact(d) {
+            for j in 0..d {
+                let dev = row[j] - m[j];
+                v[j] += dev * dev;
+            }
+        }
+        Ok(())
+    })?;
+    let denom = (store.len() - 1) as f64;
+    for vj in v.iter_mut() {
+        *vj /= denom;
+    }
+    Ok(Some(v))
+}
+
+/// Whiten one [`DrawStore`] chunk-at-a-time straight into the whitened
+/// dense set, building the norm cache through the kernel's
+/// chunk-streaming op as the rows land — no un-whitened dense
+/// intermediate ever exists. Same per-row arithmetic as [`whiten_one`]
+/// (shared inverse-scale vector) and the same per-entry norm fold, so
+/// the output is bit-identical to densify-then-whiten at any chunk
+/// size or spill budget.
+fn whiten_store(
+    store: &DrawStore,
+    scales: &[f64],
+    kernel: &dyn CombineKernel,
+) -> Result<(SampleMatrix, Vec<f64>)> {
+    let d = store.dim();
+    let inv: Vec<f64> = scales.iter().map(|s| 1.0 / s).collect();
+    let mut out = SampleMatrix::with_capacity(d, store.len());
+    let mut norms = Vec::with_capacity(store.len());
+    let mut buf: Vec<f64> = Vec::new();
+    store.for_each_chunk(|block| {
+        buf.clear();
+        for row in block.chunks_exact(d) {
+            buf.extend(row.iter().zip(&inv).map(|(&v, &s)| v * s));
+        }
+        kernel.row_norms_block(&buf, d, &mut norms)?;
+        out.push_rows(&buf);
+        Ok(())
+    })?;
+    Ok((out, norms))
+}
+
 /// Reduce precomputed per-set variances to whitening scales — the
 /// single copy of the scale arithmetic (mean of per-set sds per
 /// coordinate, floored at 1e-12) shared by [`whitening_scales`] and the
@@ -758,6 +933,28 @@ pub(crate) fn validate_sets(sets: &[&SampleMatrix]) -> Result<()> {
     Ok(())
 }
 
+/// [`validate_sets`] over chunked draw stores — identical policy and
+/// messages, so the leader's store-backed path rejects degenerate
+/// inputs exactly like the dense one.
+pub(crate) fn validate_stores(stores: &[&DrawStore]) -> Result<()> {
+    if stores.is_empty() {
+        return Err(Error::Config("no subposterior sample sets".into()));
+    }
+    let dim = stores[0].dim();
+    for (m, s) in stores.iter().enumerate() {
+        if s.dim() != dim {
+            return Err(Error::Shape(format!(
+                "machine {m} dim {} != {dim}",
+                s.dim()
+            )));
+        }
+        if s.is_empty() {
+            return Err(Error::Config(format!("machine {m} has no samples")));
+        }
+    }
+    Ok(())
+}
+
 /// Single copy of the empty-machine rejection shared by
 /// [`validate_sets`] and [`CombineContext::validate_non_empty`].
 pub(crate) fn ensure_machine_non_empty(
@@ -768,6 +965,39 @@ pub(crate) fn ensure_machine_non_empty(
         return Err(Error::Config(format!("machine {m} has no samples")));
     }
     Ok(())
+}
+
+/// Shared high-water-mark gauge for whitened combine-context bytes.
+///
+/// The pairwise tree threads one of these through its merge workers:
+/// each merge registers its context's [`CombineContext::resident_bytes`]
+/// for exactly the context's lifetime, so `peak_bytes` records the most
+/// whitened-copy memory the tree ever held at once. With one worker the
+/// peak equals the largest single merge group — the invariant the
+/// per-outer-batch refactor exists to provide (a full level's contexts
+/// are never alive together).
+#[derive(Debug, Default)]
+pub struct MemGauge {
+    cur: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl MemGauge {
+    /// Register `bytes` coming alive.
+    pub(crate) fn add(&self, bytes: usize) {
+        let now = self.cur.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Register `bytes` released.
+    pub(crate) fn sub(&self, bytes: usize) {
+        self.cur.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    /// Most bytes ever registered alive at once.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
 }
 
 #[cfg(test)]
@@ -918,6 +1148,134 @@ mod tests {
                 .unwrap_or(0);
             assert_eq!(max_chain_len(t_out, RESTART_CHUNK0), want);
         }
+    }
+
+    #[test]
+    fn validate_stores_matches_dense_policy() {
+        use crate::types::DrawStoreConfig;
+        let cfg = DrawStoreConfig::default();
+        let a = DrawStore::from_matrix(
+            &SampleMatrix::from_rows(vec![1.0, 2.0], 2).unwrap(),
+            cfg,
+        )
+        .unwrap();
+        let b = DrawStore::from_matrix(
+            &SampleMatrix::from_rows(vec![1.0], 1).unwrap(),
+            cfg,
+        )
+        .unwrap();
+        let empty = DrawStore::new(2);
+        assert!(validate_stores(&[]).is_err());
+        assert!(validate_stores(&[&a]).is_ok());
+        let err = validate_stores(&[&a, &b]).unwrap_err();
+        assert!(err.to_string().contains("dim"), "{err}");
+        let err = validate_stores(&[&a, &empty]).unwrap_err();
+        assert!(err.to_string().contains("machine 1 has no samples"), "{err}");
+    }
+
+    /// The store-backed context builder is bit-identical to the dense
+    /// one at every chunk size and spill budget — including a store
+    /// small enough to skip the variance pass.
+    #[test]
+    fn prepare_from_stores_matches_dense_prepare() {
+        use crate::types::DrawStoreConfig;
+        let mut rng = crate::rng::Pcg64::seed_from(11);
+        let sets: Vec<SampleMatrix> = (0..3)
+            .map(|m| {
+                let mut s = SampleMatrix::new(2);
+                let n = if m == 2 { 1 } else { 97 };
+                for _ in 0..n {
+                    s.push(&[rng.normal() * 2.0, 1.0 + rng.normal()]);
+                }
+                s
+            })
+            .collect();
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let dense = CombineContext::prepare(&refs, 1);
+        for chunk_rows in [1usize, 7, 64, 200] {
+            for budget in [None, Some(0), Some(1 << 20)] {
+                let cfg = DrawStoreConfig {
+                    chunk_rows,
+                    spill_budget_bytes: budget,
+                };
+                let stores: Vec<DrawStore> = sets
+                    .iter()
+                    .map(|s| DrawStore::from_matrix(s, cfg).unwrap())
+                    .collect();
+                let store_refs: Vec<&DrawStore> = stores.iter().collect();
+                for threads in [1usize, 3] {
+                    let ctx = CombineContext::prepare_from_stores(
+                        &store_refs,
+                        threads,
+                        default_kernel(),
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        ctx.scales(),
+                        dense.scales(),
+                        "chunk {chunk_rows} budget {budget:?}"
+                    );
+                    for m in 0..sets.len() {
+                        assert_eq!(ctx.sets()[m], dense.sets()[m]);
+                        assert_eq!(ctx.norms()[m], dense.norms()[m]);
+                    }
+                    assert_eq!(ctx.resident_bytes(), dense.resident_bytes());
+                }
+            }
+        }
+    }
+
+    /// End-to-end store dispatch: every method's retained draws are
+    /// byte-identical between the dense path and a spilled, oddly
+    /// chunked store path.
+    #[test]
+    fn combine_stores_matches_dense_combine_all_methods() {
+        use crate::types::DrawStoreConfig;
+        let mut rng = crate::rng::Pcg64::seed_from(21);
+        let sets: Vec<SampleMatrix> = (0..3)
+            .map(|_| {
+                let mut s = SampleMatrix::new(2);
+                for _ in 0..120 {
+                    s.push(&[rng.normal(), 0.5 + rng.normal()]);
+                }
+                s
+            })
+            .collect();
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let cfg = DrawStoreConfig {
+            chunk_rows: 7,
+            spill_budget_bytes: Some(0),
+        };
+        let stores: Vec<DrawStore> = sets
+            .iter()
+            .map(|s| DrawStore::from_matrix(s, cfg).unwrap())
+            .collect();
+        let store_refs: Vec<&DrawStore> = stores.iter().collect();
+        let tuning = CombineTuning::default();
+        for &method in CombineMethod::all() {
+            let dense =
+                combine_sets_with(method, &refs, 300, 19, &tuning).unwrap();
+            let stored =
+                combine_stores_with(method, &store_refs, 300, 19, &tuning)
+                    .unwrap();
+            assert_eq!(
+                dense.as_slice(),
+                stored.as_slice(),
+                "{} diverged through the store path",
+                method.name()
+            );
+        }
+    }
+
+    #[test]
+    fn mem_gauge_tracks_high_water_mark() {
+        let g = MemGauge::default();
+        assert_eq!(g.peak_bytes(), 0);
+        g.add(100);
+        g.add(50);
+        g.sub(100);
+        g.add(20);
+        assert_eq!(g.peak_bytes(), 150);
     }
 
     #[test]

@@ -1,32 +1,57 @@
 //! Online combination (paper section 4).
 //!
 //! Workers stream draws to the leader as they are produced; the leader
-//! folds each into per-machine buffers and online Gaussian moment
+//! folds each into per-machine draw stores and online Gaussian moment
 //! accumulators. At any time it can emit (a) parametric product draws in
 //! O(d³ + t·d²) using only the running moments — no buffer pass — or (b)
 //! asymptotically exact draws by running the IMG combiner over the
-//! buffers collected so far.
+//! stores collected so far.
+//!
+//! The per-machine buffers are chunked [`DrawStore`]s, so a leader
+//! configured with a spill budget (`draw_spill_budget_mb`) keeps only
+//! the hottest chunks of each machine's draw plane resident — the
+//! combiners consume the stores chunk-at-a-time
+//! ([`combine::combine_stores_with`]) and the retained draws stay
+//! byte-identical to the dense path at any chunk size or budget.
 
 use crate::combine::{self, CombineMethod};
 use crate::error::{Error, Result};
 use crate::math::running::RunningMoments;
-use crate::types::SampleMatrix;
+use crate::types::{DrawStore, DrawStoreConfig, DrawStoreStats, SampleMatrix};
 
 /// Streaming leader-side combiner.
 #[derive(Debug)]
 pub struct OnlineCombiner {
     dim: usize,
-    buffers: Vec<SampleMatrix>,
+    buffers: Vec<DrawStore>,
     moments: Vec<RunningMoments>,
     total_received: usize,
 }
 
 impl OnlineCombiner {
+    /// Dense stores (default chunking, no spill) — today's behavior.
     pub fn new(machines: usize, dim: usize) -> Self {
+        OnlineCombiner::with_store_config(
+            machines,
+            dim,
+            DrawStoreConfig::default(),
+        )
+    }
+
+    /// Combiner whose per-machine draw plane uses an explicit
+    /// [`DrawStoreConfig`] (chunk size + spill budget; the budget
+    /// applies per machine store).
+    pub fn with_store_config(
+        machines: usize,
+        dim: usize,
+        store_cfg: DrawStoreConfig,
+    ) -> Self {
         assert!(machines > 0 && dim > 0);
         OnlineCombiner {
             dim,
-            buffers: (0..machines).map(|_| SampleMatrix::new(dim)).collect(),
+            buffers: (0..machines)
+                .map(|_| DrawStore::with_config(dim, store_cfg))
+                .collect(),
             moments: (0..machines).map(|_| RunningMoments::new(dim)).collect(),
             total_received: 0,
         }
@@ -66,10 +91,51 @@ impl OnlineCombiner {
                 self.dim
             )));
         }
-        self.buffers[machine].push(theta);
+        self.buffers[machine].push(theta)?;
         self.moments[machine].push(theta);
         self.total_received += 1;
         Ok(())
+    }
+
+    /// Ingest a decoded `RPDRAW1` chunk from `machine` — a flat
+    /// row-major buffer of whole rows — as one bulk landing: a single
+    /// copy into the machine's store, then the moment accumulators
+    /// folded per row *in draw order* (the same per-row updates, in the
+    /// same order, as pushing each row through
+    /// [`OnlineCombiner::push`]). Validation runs before anything
+    /// lands, so a bad chunk leaves the store without partial rows.
+    pub fn push_rows(&mut self, machine: usize, flat: &[f64]) -> Result<()> {
+        if machine >= self.buffers.len() {
+            return Err(Error::Config(format!(
+                "machine {machine} out of range ({})",
+                self.buffers.len()
+            )));
+        }
+        if flat.len() % self.dim != 0 {
+            return Err(Error::Shape(format!(
+                "draw chunk of {} scalars is not whole rows of dim {}",
+                flat.len(),
+                self.dim
+            )));
+        }
+        self.buffers[machine].push_rows(flat)?;
+        for row in flat.chunks_exact(self.dim) {
+            self.moments[machine].push(row);
+        }
+        self.total_received += flat.len() / self.dim;
+        Ok(())
+    }
+
+    /// Aggregate memory accounting across every machine's draw store:
+    /// resident and spilled payload bytes, plus the (conservatively
+    /// summed) peak — the pipeline summary's `draw_peak_bytes` /
+    /// `draw_spilled_bytes` source.
+    pub fn draw_stats(&self) -> DrawStoreStats {
+        let mut total = DrawStoreStats::default();
+        for b in &self.buffers {
+            total.absorb(&b.stats());
+        }
+        total
     }
 
     /// Parametric product from the *running* moments (footnote 3 of the
@@ -168,8 +234,8 @@ impl OnlineCombiner {
         seed: u64,
         tuning: &combine::CombineTuning,
     ) -> Result<SampleMatrix> {
-        let refs: Vec<&SampleMatrix> = self.buffers.iter().collect();
-        combine::combine_sets_with(method, &refs, t_out, seed, tuning)
+        let refs: Vec<&DrawStore> = self.buffers.iter().collect();
+        combine::combine_stores_with(method, &refs, t_out, seed, tuning)
     }
 }
 
@@ -247,6 +313,67 @@ mod tests {
                 "threads {threads} diverged"
             );
         }
+    }
+
+    /// Bulk chunk landing is equivalent to per-row pushes — same store
+    /// contents, same moment folds — and a spill-configured combiner
+    /// emits byte-identical draws to the dense one.
+    #[test]
+    fn push_rows_and_spill_match_dense_per_row() {
+        let mut rng = Pcg64::seed_from(7);
+        let machines: Vec<Vec<f64>> = [0.7, 1.3]
+            .iter()
+            .map(|&mu| (0..300).map(|_| mu + rng.normal()).collect())
+            .collect();
+        let mut dense = OnlineCombiner::new(2, 1);
+        for (m, draws) in machines.iter().enumerate() {
+            for &v in draws {
+                dense.push(m, &[v]).unwrap();
+            }
+        }
+        let cfg = DrawStoreConfig {
+            chunk_rows: 7,
+            spill_budget_bytes: Some(0),
+        };
+        let mut spill = OnlineCombiner::with_store_config(2, 1, cfg);
+        for (m, draws) in machines.iter().enumerate() {
+            for chunk in draws.chunks(64) {
+                spill.push_rows(m, chunk).unwrap();
+            }
+        }
+        assert_eq!(spill.total_received(), 600);
+        assert_eq!(spill.min_buffer_len(), 300);
+        assert!(spill.draw_stats().spilled_bytes > 0);
+        assert_eq!(dense.draw_stats().spilled_bytes, 0);
+        let online = spill.parametric_draws(100, 3).unwrap();
+        let online_dense = dense.parametric_draws(100, 3).unwrap();
+        assert_eq!(online.as_slice(), online_dense.as_slice());
+        for method in
+            [CombineMethod::Semiparametric, CombineMethod::Pairwise]
+        {
+            let a = dense.combined_draws(method, 400, 9).unwrap();
+            let b = spill.combined_draws(method, 400, 9).unwrap();
+            assert_eq!(
+                a.as_slice(),
+                b.as_slice(),
+                "{} diverged through spill",
+                method.name()
+            );
+        }
+    }
+
+    /// A bad chunk is rejected before anything lands: no partial rows
+    /// in the store, no moment updates.
+    #[test]
+    fn push_rows_validates_before_landing() {
+        let mut oc = OnlineCombiner::new(2, 2);
+        assert!(oc.push_rows(9, &[0.0, 0.0]).is_err());
+        let err = oc.push_rows(0, &[0.0, 0.0, 0.0]).unwrap_err();
+        assert!(err.to_string().contains("whole rows"), "{err}");
+        assert_eq!(oc.total_received(), 0);
+        assert_eq!(oc.min_buffer_len(), 0);
+        oc.push_rows(0, &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(oc.total_received(), 2);
     }
 
     #[test]

@@ -17,19 +17,24 @@
 //! the reduction is byte-identical for a fixed seed at any thread
 //! count.
 //!
-//! Each level's [`super::CombineContext`]s (whitening + norm caches)
-//! are built *once per level* before the merges run
-//! ([`super::prepare_contexts`]): the per-set O(Td) variance and
-//! whitening passes of every merge at the level fan across the full
-//! worker pool, instead of each merge re-whitening inside its own —
-//! possibly single-worker — slice of the pool. The contexts are
-//! bit-identical to the ones the merges used to build themselves, so
-//! the tree's output is unchanged.
+//! Each merge's [`super::CombineContext`] (whitened copies + norm
+//! caches) is built *when its worker picks the merge up*
+//! ([`super::prepare_contexts`] over that one group, fanned across the
+//! merge's inner chain pool) and dropped before the worker moves on —
+//! so at most `outer` merge groups' whitened copies are alive at any
+//! instant (exactly one on a single worker), never a whole level's.
+//! That bound is what lets the out-of-core leader run the tree over
+//! spilled draw stores without densifying a level at a time, and it is
+//! observable: thread a [`super::MemGauge`] through
+//! [`pairwise_threaded_gauged`] and `peak_bytes` reports the high-water
+//! mark of live context bytes. The contexts themselves are
+//! bit-identical to the ones a level-wide hoist (or each merge's own
+//! in-line whitening) would build, so the tree's output is unchanged.
 
 use std::sync::Arc;
 
 use super::nonparametric::nonparametric_with_context;
-use super::CombineContext;
+use super::MemGauge;
 use crate::error::Result;
 use crate::kernel::{default_kernel, CombineKernel};
 use crate::rng::Pcg64;
@@ -53,11 +58,27 @@ pub fn pairwise_threaded(
     seed: u64,
     threads: usize,
 ) -> Result<SampleMatrix> {
-    reduce_tree(sets, 2, t_out, seed, threads, &default_kernel())
+    reduce_tree(sets, 2, t_out, seed, threads, &default_kernel(), None)
+}
+
+/// [`pairwise_threaded`] with a [`MemGauge`] observing how many
+/// whitened-context bytes the tree holds at once — each merge registers
+/// its context for exactly the context's lifetime. With one thread the
+/// reported peak is the largest single merge group's
+/// [`super::CombineContext::resident_bytes`]; the draws are
+/// byte-identical to the ungauged call.
+pub fn pairwise_threaded_gauged(
+    sets: &[&SampleMatrix],
+    t_out: usize,
+    seed: u64,
+    threads: usize,
+    gauge: &MemGauge,
+) -> Result<SampleMatrix> {
+    reduce_tree(sets, 2, t_out, seed, threads, &default_kernel(), Some(gauge))
 }
 
 /// [`pairwise_threaded`] on an explicit compute-kernel backend — the
-/// combine dispatch's entry point. The kernel runs every level's norm
+/// combine dispatch's entry point. The kernel runs every merge's norm
 /// pass ([`super::prepare_contexts`]); CPU backends are bit-identical,
 /// so the tree's output doesn't depend on which one ran.
 pub(crate) fn pairwise_with(
@@ -67,7 +88,7 @@ pub(crate) fn pairwise_with(
     threads: usize,
     kernel: &Arc<dyn CombineKernel>,
 ) -> Result<SampleMatrix> {
-    reduce_tree(sets, 2, t_out, seed, threads, kernel)
+    reduce_tree(sets, 2, t_out, seed, threads, kernel, None)
 }
 
 /// Number of pair-combination invocations performed for M machines
@@ -86,7 +107,7 @@ pub fn grouped(
     t_out: usize,
     seed: u64,
 ) -> Result<SampleMatrix> {
-    reduce_tree(sets, group_size, t_out, seed, 1, &default_kernel())
+    reduce_tree(sets, group_size, t_out, seed, 1, &default_kernel(), None)
 }
 
 /// [`grouped`] with a combine-stage thread count.
@@ -97,7 +118,15 @@ pub fn grouped_threaded(
     seed: u64,
     threads: usize,
 ) -> Result<SampleMatrix> {
-    reduce_tree(sets, group_size, t_out, seed, threads, &default_kernel())
+    reduce_tree(
+        sets,
+        group_size,
+        t_out,
+        seed,
+        threads,
+        &default_kernel(),
+        None,
+    )
 }
 
 fn reduce_tree(
@@ -107,6 +136,7 @@ fn reduce_tree(
     seed: u64,
     threads: usize,
     kernel: &Arc<dyn CombineKernel>,
+    gauge: Option<&MemGauge>,
 ) -> Result<SampleMatrix> {
     super::validate_sets(sets)?;
     assert!(group_size >= 2, "group size must be >= 2");
@@ -125,23 +155,6 @@ fn reduce_tree(
             .map(|c| if c.len() >= 2 { Some(rng.next_u64()) } else { None })
             .collect();
         let merges = seeds.iter().filter(|s| s.is_some()).count();
-        // Per-level context hoist: whiten every merge group once, with
-        // the per-set work of the whole level fanned across the full
-        // thread budget, before any merge runs.
-        let merge_idx: Vec<usize> =
-            (0..chunks.len()).filter(|&i| seeds[i].is_some()).collect();
-        let groups: Vec<Vec<&SampleMatrix>> = merge_idx
-            .iter()
-            .map(|&i| chunks[i].iter().collect())
-            .collect();
-        let mut contexts: Vec<Option<CombineContext>> =
-            (0..chunks.len()).map(|_| None).collect();
-        for (&slot, ctx) in merge_idx
-            .iter()
-            .zip(super::prepare_contexts(&groups, threads, kernel)?)
-        {
-            contexts[slot] = Some(ctx);
-        }
         // Split workers: up to `merges` concurrent merges at this
         // level, remaining parallelism goes into each merge's own
         // restart-chain pool. Round the inner pool up so no worker
@@ -151,15 +164,36 @@ fn reduce_tree(
         let outer = threads.clamp(1, merges.max(1));
         let inner = threads.div_ceil(outer).max(1);
         let next: Vec<Result<SampleMatrix>> =
-            super::par_map_indexed(chunks.len(), outer, |i| {
-                match (&contexts[i], seeds[i]) {
-                    (Some(ctx), Some(merge_seed)) => {
-                        nonparametric_with_context(
-                            ctx, t_out, merge_seed, inner,
-                        )
+            super::par_map_indexed(chunks.len(), outer, |i| match seeds[i] {
+                Some(merge_seed) => {
+                    // Per-outer-batch context: the merge whitens its own
+                    // group — the per-set passes fanned across its inner
+                    // chain pool — when a worker picks it up, and the
+                    // whitened copies drop before the worker moves on.
+                    // At most `outer` groups' contexts are ever alive at
+                    // once (exactly one single-threaded), instead of a
+                    // whole level's; content is bit-identical to a
+                    // level-wide hoist.
+                    let group: Vec<&SampleMatrix> =
+                        chunks[i].iter().collect();
+                    let ctx =
+                        super::prepare_contexts(&[group], inner, kernel)?
+                            .pop()
+                            .expect("one context per group");
+                    let bytes = ctx.resident_bytes();
+                    if let Some(g) = gauge {
+                        g.add(bytes);
                     }
-                    _ => Ok(chunks[i][0].clone()),
+                    let out = nonparametric_with_context(
+                        &ctx, t_out, merge_seed, inner,
+                    );
+                    drop(ctx);
+                    if let Some(g) = gauge {
+                        g.sub(bytes);
+                    }
+                    out
                 }
+                None => Ok(chunks[i][0].clone()),
             });
         current = next.into_iter().collect::<Result<Vec<SampleMatrix>>>()?;
     }
@@ -259,6 +293,28 @@ mod tests {
         let gbase = grouped_threaded(&refs, 3, 900, 14, 1).unwrap();
         let gpar = grouped_threaded(&refs, 3, 900, 14, 4).unwrap();
         assert_eq!(gbase.as_slice(), gpar.as_slice());
+    }
+
+    /// Per-outer-batch context prep: with one worker the tree never
+    /// holds more than one merge group's whitened context at a time —
+    /// the gauge's peak is exactly the largest single group's bytes,
+    /// not a level's worth — and gauging changes no draw.
+    #[test]
+    fn single_worker_tree_holds_one_context_at_a_time() {
+        let sets = gaussian_sets(21, &[0.7, 0.9, 1.1, 1.3], 1.0, 100);
+        let refs: Vec<&SampleMatrix> = sets.iter().collect();
+        let gauge = MemGauge::default();
+        let out =
+            pairwise_threaded_gauged(&refs, 50, 23, 1, &gauge).unwrap();
+        assert_eq!(out.len(), 50);
+        let f = std::mem::size_of::<f64>();
+        // Largest merge group: two 100-draw d=1 leaf sets — whitened
+        // copies + norm caches + the scale vector. (The root merge's
+        // two 50-draw inputs are smaller.)
+        let expect = 2 * (100 + 100) * f + f;
+        assert_eq!(gauge.peak_bytes(), expect);
+        let plain = pairwise_threaded(&refs, 50, 23, 1).unwrap();
+        assert_eq!(out.as_slice(), plain.as_slice());
     }
 
     #[test]

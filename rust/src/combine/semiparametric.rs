@@ -388,8 +388,35 @@ pub(crate) fn semiparametric_with(
     // this diagonal map, including its parametric factor.
     super::validate_sets(sets)?;
     let threads = super::resolve_threads(threads);
-    let mut ctx =
+    let ctx =
         CombineContext::prepare_with(sets, threads, Arc::clone(kernel))?;
+    semiparametric_with_context(
+        ctx,
+        t_out,
+        seed,
+        full_weights,
+        threads,
+        cache_budget,
+    )
+}
+
+/// Everything after whitening: the context-driven driver, shared by the
+/// dense path above and the store-backed path
+/// ([`super::combine_stores_with`], whose contexts come from
+/// [`CombineContext::prepare_from_stores`]). Takes the context by value
+/// — it installs the annealed factorization cache before the chains fan
+/// out — and runs every dense op on the context's kernel backend. The
+/// fits, product pieces and log-density table all read the *whitened*
+/// sets, so a context is the complete input state.
+pub(crate) fn semiparametric_with_context(
+    mut ctx: CombineContext,
+    t_out: usize,
+    seed: u64,
+    full_weights: bool,
+    threads: usize,
+    cache_budget: Option<usize>,
+) -> Result<SampleMatrix> {
+    let threads = super::resolve_threads(threads);
     let dim = ctx.dim();
     let m_count = ctx.machines();
 
@@ -418,12 +445,21 @@ pub(crate) fn semiparametric_with(
     let prec_mu = prec_sum.matvec(&mu_m)?; // Σ̂_M⁻¹ μ̂_M
 
     // The O(TMd²) parametric log-density table — the single most
-    // expensive setup step — one machine per task, each column computed
-    // by the selected kernel backend ([`CombineKernel::logpdf_table`]).
+    // expensive setup step — one machine per task, each column streamed
+    // chunk-at-a-time through the selected kernel backend
+    // ([`CombineKernel::logpdf_table_block`]; bit-identical to the
+    // whole-set op at any chunk width by the block-boundary contract).
     let param_lp: Vec<Vec<f64>> =
         super::par_map_indexed(m_count, threads, |m| -> Result<Vec<f64>> {
             let mvn = estimates[m].mvn()?;
-            kernel.logpdf_table(&mvn, &ctx.sets()[m])
+            let set = &ctx.sets()[m];
+            let mut col = Vec::with_capacity(set.len());
+            for block in
+                set.rows_chunked(crate::data::store::DEFAULT_CHUNK_ROWS)
+            {
+                ctx.kernel().logpdf_table_block(&mvn, block, &mut col)?;
+            }
+            Ok(col)
         })
         .into_iter()
         .collect::<Result<_>>()?;
@@ -451,7 +487,7 @@ pub(crate) fn semiparametric_with(
             budget,
             threads,
             &schedule,
-            kernel.as_ref(),
+            ctx.kernel(),
         )?;
         ctx.install_anneal_cache(cache);
     }

@@ -105,11 +105,24 @@ pub struct PipelineConfig {
     /// NaN payloads and skips float↔decimal entirely. Ignored by the
     /// thread runtime, which never serializes.
     pub wire_format: WireFormat,
-    /// Draws coalesced per binary chunk frame (`--draw-batch`; clamped
-    /// to ≥ 1). A binary-plane knob with no effect on the JSON wire or
-    /// on outputs — any batch size yields byte-identical retained
-    /// draws. Default 64.
+    /// Draws coalesced per binary chunk frame (`--draw-batch`; zero is
+    /// rejected at parse). A binary-plane knob with no effect on the
+    /// JSON wire or on outputs — any batch size yields byte-identical
+    /// retained draws. Default 64.
     pub draw_batch: usize,
+    /// Rows per sealed chunk in the leader's draw stores
+    /// (`chunk_rows` key / `--chunk-rows`; zero is rejected at parse).
+    /// A memory-layout knob: retained draws are byte-identical at any
+    /// value. Default 512.
+    pub chunk_rows: usize,
+    /// Draw-plane spill budget in MiB (`draw_spill_budget_mb` key /
+    /// `--draw-spill-budget-mb`). Absent ⇒ dense, today's behavior;
+    /// `0` ⇒ every sealed chunk spills to disk immediately; otherwise
+    /// each machine's store spills coldest chunks first once its sealed
+    /// resident bytes exceed the budget. Retained draws are
+    /// byte-identical at any value — the budget trades memory for
+    /// segment-file I/O, never results.
+    pub draw_spill_budget_mb: Option<usize>,
 }
 
 impl PipelineConfig {
@@ -208,6 +221,25 @@ impl PipelineConfig {
             b.wire_format = WireFormat::parse(&v)?;
         }
         b.draw_batch = parse_usize("draw_batch", b.draw_batch)?;
+        b.chunk_rows = parse_usize("chunk_rows", b.chunk_rows)?;
+        b.draw_spill_budget_mb = match get("draw_spill_budget_mb") {
+            None => None,
+            Some(v) => Some(v.parse().map_err(|_| {
+                Error::Parse(format!("bad usize for draw_spill_budget_mb: {v}"))
+            })?),
+        };
+        // Degenerate knobs are rejected here, with the key named, rather
+        // than silently clamped or left to panic deep in the draw plane.
+        if b.draw_batch == 0 {
+            return Err(Error::Config(
+                "draw_batch must be >= 1 (got 0)".into(),
+            ));
+        }
+        if b.chunk_rows == 0 {
+            return Err(Error::Config(
+                "chunk_rows must be >= 1 (got 0)".into(),
+            ));
+        }
         Ok(b.build())
     }
 
@@ -295,6 +327,8 @@ pub struct PipelineConfigBuilder {
     max_frame_bytes: usize,
     wire_format: WireFormat,
     draw_batch: usize,
+    chunk_rows: usize,
+    draw_spill_budget_mb: Option<usize>,
 }
 
 impl PipelineConfigBuilder {
@@ -324,6 +358,8 @@ impl PipelineConfigBuilder {
             max_frame_bytes: 0,
             wire_format: WireFormat::Json,
             draw_batch: 64,
+            chunk_rows: crate::data::store::DEFAULT_CHUNK_ROWS,
+            draw_spill_budget_mb: None,
         }
     }
 
@@ -457,6 +493,20 @@ impl PipelineConfigBuilder {
         self
     }
 
+    /// Rows per sealed draw-store chunk (clamped to ≥ 1) — see
+    /// `PipelineConfig::chunk_rows`.
+    pub fn chunk_rows(mut self, n: usize) -> Self {
+        self.chunk_rows = n;
+        self
+    }
+
+    /// Draw-plane spill budget in MiB (`None` = dense) — see
+    /// `PipelineConfig::draw_spill_budget_mb`.
+    pub fn draw_spill_budget_mb(mut self, mb: Option<usize>) -> Self {
+        self.draw_spill_budget_mb = mb;
+        self
+    }
+
     pub fn artifact_dir(mut self, d: &str) -> Self {
         self.artifact_dir = d.to_string();
         self
@@ -493,9 +543,11 @@ impl PipelineConfigBuilder {
             shard_inline: self.shard_inline,
             max_frame_bytes: self.max_frame_bytes,
             wire_format: self.wire_format,
-            // Clamp like `thin`: `from_str_cfg` writes the field
-            // directly, and a zero batch would stall the encoder.
+            // Backstop clamps for programmatic builders; `from_str_cfg`
+            // rejects the zero values outright before reaching here.
             draw_batch: self.draw_batch.max(1),
+            chunk_rows: self.chunk_rows.max(1),
+            draw_spill_budget_mb: self.draw_spill_budget_mb,
         }
     }
 }
@@ -572,18 +624,66 @@ mod tests {
         .unwrap();
         assert_eq!(c.wire_format, WireFormat::Binary);
         assert_eq!(c.draw_batch, 7);
-        // Zero batch is clamped like thin = 0.
-        let c = PipelineConfig::from_str_cfg(
+        // A zero batch is a config error named at parse time, not a
+        // silent clamp (the builder's `.max(1)` stays only as a backstop
+        // for programmatic callers).
+        let err = PipelineConfig::from_str_cfg(
             "model = gaussian\ndraw_batch = 0\n",
         )
-        .unwrap();
-        assert_eq!(c.draw_batch, 1);
+        .unwrap_err();
+        assert!(
+            err.to_string().contains("draw_batch"),
+            "error should name the key: {err}"
+        );
         assert!(PipelineConfig::from_str_cfg(
             "model = gaussian\nwire_format = msgpack\n"
         )
         .is_err());
         assert!(PipelineConfig::from_str_cfg(
             "model = gaussian\ndraw_batch = many\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn cfg_file_draw_store_keys() {
+        let c = PipelineConfig::from_str_cfg(
+            "model = gaussian\nchunk_rows = 128\ndraw_spill_budget_mb = 4\n",
+        )
+        .unwrap();
+        assert_eq!(c.chunk_rows, 128);
+        assert_eq!(c.draw_spill_budget_mb, Some(4));
+        // Defaults: 512-row chunks, no spill budget (dense draw plane).
+        let c = PipelineConfig::from_str_cfg("model = gaussian\n").unwrap();
+        assert_eq!(c.chunk_rows, crate::data::store::DEFAULT_CHUNK_ROWS);
+        assert_eq!(c.draw_spill_budget_mb, None);
+        // Budget 0 is meaningful (spill everything), so it parses fine;
+        // chunk_rows = 0 is degenerate and rejected with the key named.
+        let c = PipelineConfig::from_str_cfg(
+            "model = gaussian\ndraw_spill_budget_mb = 0\n",
+        )
+        .unwrap();
+        assert_eq!(c.draw_spill_budget_mb, Some(0));
+        let err = PipelineConfig::from_str_cfg(
+            "model = gaussian\nchunk_rows = 0\n",
+        )
+        .unwrap_err();
+        assert!(
+            err.to_string().contains("chunk_rows"),
+            "error should name the key: {err}"
+        );
+        // Negative and non-numeric budgets fail the usize parse with a
+        // structured error, never a panic or a wrapped value.
+        for bad in ["-1", "lots", "18446744073709551616"] {
+            let cfg = format!("model = gaussian\ndraw_spill_budget_mb = {bad}\n");
+            let err = PipelineConfig::from_str_cfg(&cfg).unwrap_err();
+            assert!(
+                err.to_string().contains("draw_spill_budget_mb"),
+                "error should name the key for '{bad}': {err}"
+            );
+        }
+        assert!(PipelineConfig::from_str_cfg(
+            "model = gaussian\nchunk_rows = -5\n"
         )
         .is_err());
     }

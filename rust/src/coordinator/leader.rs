@@ -11,7 +11,7 @@ use crate::coordinator::transport::DrawChunk;
 use crate::coordinator::worker::DrawMsg;
 use crate::error::{Error, Result};
 use crate::kernel::CombineKernelKind;
-use crate::types::SampleMatrix;
+use crate::types::{DrawStoreConfig, DrawStoreStats, SampleMatrix};
 
 /// One unit of leader-bound traffic: a single draw (JSON wire /
 /// native thread mode) or a batched binary chunk carrying many rows.
@@ -45,8 +45,22 @@ pub struct Leader {
 
 impl Leader {
     pub fn new(machines: usize, dim: usize) -> Self {
+        Leader::with_store_config(machines, dim, DrawStoreConfig::default())
+    }
+
+    /// Leader whose per-machine draw plane uses an explicit
+    /// [`DrawStoreConfig`] (chunk size + spill budget) — the pipeline
+    /// wires the `chunk_rows` / `draw_spill_budget_mb` config through
+    /// here. Retained draws are byte-identical at any configuration.
+    pub fn with_store_config(
+        machines: usize,
+        dim: usize,
+        store_cfg: DrawStoreConfig,
+    ) -> Self {
         Leader {
-            combiner: OnlineCombiner::new(machines, dim),
+            combiner: OnlineCombiner::with_store_config(
+                machines, dim, store_cfg,
+            ),
             finished: vec![false; machines],
             combine_threads: 1,
             combine_cache_budget: DEFAULT_ANNEAL_CACHE_BUDGET,
@@ -54,6 +68,13 @@ impl Leader {
             max_elapsed: 0.0,
             scalars_received: 0,
         }
+    }
+
+    /// Aggregate draw-plane memory accounting across every machine's
+    /// store (see [`OnlineCombiner::draw_stats`]) — the pipeline
+    /// summary's peak/spilled bytes source.
+    pub fn draw_stats(&self) -> DrawStoreStats {
+        self.combiner.draw_stats()
     }
 
     /// Set the combine-stage thread count used by [`Leader::draws`]
@@ -94,8 +115,11 @@ impl Leader {
         Ok(())
     }
 
-    /// Ingest one batched binary chunk: every row lands in the
-    /// combiner without materializing per-draw `DrawMsg` values.
+    /// Ingest one batched binary chunk: the whole payload lands in the
+    /// machine's draw store as one bulk copy
+    /// ([`OnlineCombiner::push_rows`]) — no per-draw `DrawMsg`
+    /// materialization, no per-row push loop. Validation runs before
+    /// anything lands, so a bad chunk leaves no partial rows behind.
     pub fn ingest_chunk(&mut self, chunk: &DrawChunk) -> Result<()> {
         if chunk.dim == 0 || chunk.thetas.len() % chunk.dim != 0 {
             return Err(Error::Runtime(format!(
@@ -105,8 +129,15 @@ impl Leader {
                 chunk.dim
             )));
         }
-        for row in chunk.thetas.chunks_exact(chunk.dim) {
-            self.combiner.push(chunk.machine, row)?;
+        if chunk.dim != self.combiner.dim() {
+            return Err(Error::Shape(format!(
+                "draw dim {} != {}",
+                chunk.dim,
+                self.combiner.dim()
+            )));
+        }
+        if !chunk.thetas.is_empty() {
+            self.combiner.push_rows(chunk.machine, &chunk.thetas)?;
         }
         self.scalars_received += chunk.thetas.len();
         for &e in &chunk.elapsed {
@@ -303,6 +334,71 @@ mod tests {
             last: true,
         };
         assert!(leader.ingest_chunk(&stray).is_err());
+    }
+
+    /// A chunk that fails validation lands nothing: rows from the
+    /// preceding good chunk are retained, none of the bad chunk's —
+    /// the no-partial-rows half of the fail-fast contract.
+    #[test]
+    fn failed_chunk_leaves_no_partial_rows() {
+        let mut leader = Leader::new(1, 2);
+        leader
+            .ingest_chunk(&DrawChunk {
+                machine: 0,
+                dim: 2,
+                thetas: vec![1.0, 2.0, 3.0, 4.0],
+                elapsed: vec![0.1, 0.2],
+                last: false,
+            })
+            .unwrap();
+        let ragged = DrawChunk {
+            machine: 0,
+            dim: 2,
+            thetas: vec![5.0, 6.0, 7.0],
+            elapsed: vec![0.3],
+            last: false,
+        };
+        assert!(leader.ingest_chunk(&ragged).is_err());
+        let wrong_dim = DrawChunk {
+            machine: 0,
+            dim: 3,
+            thetas: vec![5.0, 6.0, 7.0],
+            elapsed: vec![0.3],
+            last: false,
+        };
+        let err = leader.ingest_chunk(&wrong_dim).unwrap_err();
+        assert!(err.to_string().contains("draw dim 3 != 2"), "{err}");
+        assert_eq!(leader.combiner().total_received(), 2);
+        assert_eq!(leader.scalars_received, 4);
+    }
+
+    /// A spill-configured leader reports spilled bytes and emits draws
+    /// byte-identical to a dense leader fed the same stream.
+    #[test]
+    fn spill_configured_leader_matches_dense() {
+        let cfg = DrawStoreConfig {
+            chunk_rows: 7,
+            spill_budget_bytes: Some(0),
+        };
+        let mut rng = crate::rng::Pcg64::seed_from(23);
+        let mut dense = Leader::new(2, 1);
+        let mut spill = Leader::with_store_config(2, 1, cfg);
+        for i in 0..200 {
+            for m in 0..2 {
+                let d = msg(m, rng.normal() + m as f64, i == 199);
+                dense.ingest(&d).unwrap();
+                spill.ingest(&d).unwrap();
+            }
+        }
+        let stats = spill.draw_stats();
+        assert!(stats.spilled_bytes > 0);
+        assert!(stats.peak_resident_bytes > 0);
+        assert_eq!(dense.draw_stats().spilled_bytes, 0);
+        let a =
+            dense.draws(CombineMethod::Semiparametric, 300, 5).unwrap();
+        let b =
+            spill.draws(CombineMethod::Semiparametric, 300, 5).unwrap();
+        assert_eq!(a.as_slice(), b.as_slice());
     }
 
     #[test]

@@ -18,6 +18,13 @@ pub struct RunMetrics {
     pub combine_secs: f64,
     /// Total end-to-end wall-clock (real, not modeled).
     pub total_secs: f64,
+    /// Peak resident bytes of the leader's draw plane (sum of
+    /// per-machine store peaks; `0` for the sequential path, which
+    /// holds no leader stores).
+    pub draw_peak_bytes: usize,
+    /// Draw-plane bytes spilled to disk at combine time (`0` when no
+    /// spill budget is configured).
+    pub draw_spilled_bytes: usize,
 }
 
 impl RunMetrics {
@@ -60,10 +67,15 @@ impl fmt::Display for RunMetrics {
             self.max_worker_secs(),
             self.imbalance()
         )?;
-        write!(
+        writeln!(
             f,
             "scalars={} combine_secs={:.3} total_secs={:.3}",
             self.scalars_transferred, self.combine_secs, self.total_secs
+        )?;
+        write!(
+            f,
+            "draw_peak_bytes={} draw_spilled_bytes={}",
+            self.draw_peak_bytes, self.draw_spilled_bytes
         )
     }
 }
@@ -83,12 +95,16 @@ mod tests {
             scalars_transferred: 60,
             combine_secs: 0.5,
             total_secs: 4.0,
+            draw_peak_bytes: 480,
+            draw_spilled_bytes: 320,
         };
         assert!((m.mean_accept_rate() - 0.7).abs() < 1e-12);
         assert!((m.max_worker_secs() - 3.0).abs() < 1e-12);
         assert!((m.imbalance() - 1.5).abs() < 1e-12);
         let s = format!("{m}");
         assert!(s.contains("machines=2"));
+        assert!(s.contains("draw_peak_bytes=480"));
+        assert!(s.contains("draw_spilled_bytes=320"));
     }
 
     #[test]

@@ -34,7 +34,7 @@ use crate::data::{io, Dataset};
 use crate::error::{Error, Result};
 use crate::model::LogDensity;
 use crate::rng::Pcg64;
-use crate::types::{SampleMatrix, SubposteriorSamples};
+use crate::types::{DrawStoreConfig, SampleMatrix, SubposteriorSamples};
 
 /// Everything a pipeline run produces.
 #[derive(Debug)]
@@ -83,7 +83,8 @@ pub fn run_native(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutput
     let rng_slots: Vec<Mutex<Option<Pcg64>>> =
         worker_rngs.into_iter().map(|r| Mutex::new(Some(r))).collect();
 
-    let mut leader = Leader::new(cfg.machines, dim);
+    let mut leader =
+        Leader::with_store_config(cfg.machines, dim, store_config(cfg));
     leader.set_combine_threads(cfg.combine_threads);
     leader.set_combine_cache_budget(cache_budget_bytes(cfg));
     leader.set_combine_kernel(cfg.combine_backend);
@@ -143,7 +144,7 @@ pub fn run_native(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutput
         .map(|o| o.ok_or_else(|| Error::Runtime("worker died".into())))
         .collect::<Result<_>>()?;
 
-    finish_run(cfg, subposteriors, leader.scalars_received, t0)
+    finish_run(cfg, subposteriors, leader.scalars_received, t0, Some(&leader))
 }
 
 /// Scratch-directory sequence number: keeps concurrent transport runs
@@ -188,6 +189,21 @@ impl Drop for RunDir {
 /// The configured anneal-cache budget in bytes.
 fn cache_budget_bytes(cfg: &PipelineConfig) -> usize {
     cfg.combine_cache_budget_mb.saturating_mul(1 << 20)
+}
+
+/// The leader-side draw-store configuration the config describes:
+/// row-chunk granularity (`chunk_rows` key / `--chunk-rows`) and the
+/// optional spill budget (`draw_spill_budget_mb` MiB → bytes; absent =
+/// fully dense). Neither knob changes the retained draws — the store
+/// backends are byte-identical by contract — so this only bounds the
+/// leader's resident memory.
+fn store_config(cfg: &PipelineConfig) -> DrawStoreConfig {
+    DrawStoreConfig {
+        chunk_rows: cfg.chunk_rows,
+        spill_budget_bytes: cfg
+            .draw_spill_budget_mb
+            .map(|mb| mb.saturating_mul(1 << 20)),
+    }
 }
 
 /// The combine-stage tuning block the config describes: threads,
@@ -335,7 +351,8 @@ pub fn run_with_transport(
     let root_err: Mutex<Option<Error>> = Mutex::new(None);
     let abort = AtomicBool::new(false);
     let next_machine = AtomicUsize::new(0);
-    let mut leader = Leader::new(cfg.machines, dim);
+    let mut leader =
+        Leader::with_store_config(cfg.machines, dim, store_config(cfg));
     leader.set_combine_threads(cfg.combine_threads);
     leader.set_combine_cache_budget(cache_budget_bytes(cfg));
     leader.set_combine_kernel(cfg.combine_backend);
@@ -405,8 +422,13 @@ pub fn run_with_transport(
         .map(|o| o.ok_or_else(|| Error::Runtime("worker died".into())))
         .collect::<Result<_>>()?;
 
-    let mut out =
-        finish_run(cfg, subposteriors, leader.scalars_received, t0)?;
+    let mut out = finish_run(
+        cfg,
+        subposteriors,
+        leader.scalars_received,
+        t0,
+        Some(&leader),
+    )?;
     out.run_dir = Some(run_dir);
     Ok(out)
 }
@@ -548,7 +570,7 @@ pub fn run_sequential(
         scalars += out.samples.len() * out.samples.dim();
         subposteriors.push(out);
     }
-    finish_run(cfg, subposteriors, scalars, t0)
+    finish_run(cfg, subposteriors, scalars, t0, None)
 }
 
 fn finish_run(
@@ -556,21 +578,31 @@ fn finish_run(
     subposteriors: Vec<SubposteriorSamples>,
     scalars: usize,
     t0: Instant,
+    leader: Option<&Leader>,
 ) -> Result<PipelineOutput> {
     let tc = Instant::now();
     // Combine-stage tuning (threads, cache budget, kernel backend):
     // deterministic for a fixed seed at any value of any knob — CPU
     // kernel backends are bit-identical — so this only affects
-    // wall-clock/memory.
-    let combined = combine::combine_with(
-        cfg.method,
-        &subposteriors,
-        cfg.t_out,
-        cfg.seed ^ 0x5EED,
-        &combine_tuning(cfg),
-    )?;
+    // wall-clock/memory. With a leader present the final combine runs
+    // over its draw stores (dense or spill-backed, byte-identical
+    // either way); the sequential path holds no leader and combines
+    // the dense per-machine matrices directly.
+    let combined = match leader {
+        Some(leader) => {
+            leader.draws(cfg.method, cfg.t_out, cfg.seed ^ 0x5EED)?
+        }
+        None => combine::combine_with(
+            cfg.method,
+            &subposteriors,
+            cfg.t_out,
+            cfg.seed ^ 0x5EED,
+            &combine_tuning(cfg),
+        )?,
+    };
     let combine_secs = tc.elapsed().as_secs_f64();
 
+    let draw_stats = leader.map(Leader::draw_stats).unwrap_or_default();
     let timing = ClusterTiming::from_run(&subposteriors, combine_secs);
     let metrics = RunMetrics {
         machines: cfg.machines,
@@ -581,6 +613,8 @@ fn finish_run(
         scalars_transferred: scalars,
         combine_secs,
         total_secs: t0.elapsed().as_secs_f64(),
+        draw_peak_bytes: draw_stats.peak_resident_bytes,
+        draw_spilled_bytes: draw_stats.spilled_bytes,
     };
     Ok(PipelineOutput {
         subposteriors,
@@ -760,6 +794,50 @@ mod tests {
             default.combined.as_slice(),
             tiny.combined.as_slice(),
             "cache budget changed the combined draws"
+        );
+    }
+
+    /// Tentpole gate: a spill-configured draw plane (any chunk size,
+    /// any budget — including "spill everything") must produce
+    /// byte-identical combined draws to the dense default, all the way
+    /// from the `chunk_rows` / `draw_spill_budget_mb` config keys
+    /// through the leader's stores and the store-backed combine, while
+    /// the metrics report the spill.
+    #[test]
+    fn spill_budget_is_bit_identical_through_pipeline() {
+        let data = synth::gaussian(1000, 2, 22);
+        let make = |budget_mb: Option<usize>, chunk: usize| {
+            let mut c = cfg(3, 250);
+            c.method = CombineMethod::Semiparametric;
+            c.draw_spill_budget_mb = budget_mb;
+            c.chunk_rows = chunk;
+            run_native(&c, &data).unwrap()
+        };
+        let dense = make(None, crate::data::store::DEFAULT_CHUNK_ROWS);
+        assert_eq!(dense.metrics.draw_spilled_bytes, 0);
+        assert_eq!(
+            dense.metrics.draw_peak_bytes,
+            3 * 250 * 2 * 8,
+            "dense peak = every retained scalar resident"
+        );
+        for (budget_mb, chunk) in [(Some(0), 1), (Some(0), 7), (Some(1), 64)]
+        {
+            let run = make(budget_mb, chunk);
+            assert_eq!(
+                dense.combined.as_slice(),
+                run.combined.as_slice(),
+                "budget {budget_mb:?} chunk {chunk} changed the draws"
+            );
+        }
+        // Budget 0: every sealed chunk spills, so the disk holds all
+        // but each machine's unsealed tail and the peak stays bounded.
+        let spill = make(Some(0), 7);
+        assert!(spill.metrics.draw_spilled_bytes > 0);
+        assert!(
+            spill.metrics.draw_peak_bytes < dense.metrics.draw_peak_bytes,
+            "spill peak {} must undercut dense peak {}",
+            spill.metrics.draw_peak_bytes,
+            dense.metrics.draw_peak_bytes
         );
     }
 

@@ -329,6 +329,107 @@ const TAG_GMM: u8 = 2;
 const TAG_POISSON_GAMMA: u8 = 3;
 const TAG_LINREG: u8 = 4;
 
+/// Tag of a spilled draw-plane row-chunk segment
+/// ([`crate::data::store::DrawStore`]'s on-disk unit). Deliberately at
+/// the far end of the tag space so a draw segment can never be
+/// mistaken for a model shard as new models are appended.
+const TAG_DRAW_SEGMENT: u8 = 255;
+
+/// Spill one draw-store row chunk: [`SHARD_MAGIC`] + the draw-segment
+/// tag + `dim`/`rows` little-endian `u64` header + the flat row-major
+/// `f64` payload as raw little-endian bytes. Same fidelity rules as
+/// binary shards: every value crosses the file through
+/// `f64::to_le_bytes`, so NaN bit-payloads, ±Inf, and -0.0 round-trip
+/// verbatim.
+pub fn write_draw_segment(
+    path: &Path,
+    dim: usize,
+    flat: &[f64],
+) -> Result<()> {
+    debug_assert!(dim > 0 && flat.len() % dim == 0, "whole rows only");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut buf =
+        Vec::with_capacity(SHARD_MAGIC.len() + 1 + 16 + 8 * flat.len());
+    buf.extend_from_slice(SHARD_MAGIC);
+    buf.push(TAG_DRAW_SEGMENT);
+    put_u64(&mut buf, dim as u64);
+    put_u64(&mut buf, (flat.len() / dim) as u64);
+    for &v in flat {
+        put_f64(&mut buf, v);
+    }
+    std::fs::write(path, buf)?;
+    Ok(())
+}
+
+/// Read back a segment spilled by [`write_draw_segment`] into `out`
+/// (cleared first), validating the header against the shape the store
+/// recorded at spill time. Decodes straight out of a read-only memory
+/// mapping where the platform supports it (segments are written once
+/// before any reader opens them), with a bit-identical buffered
+/// fallback — the same two-path contract as [`read_shard`].
+pub fn read_draw_segment_into(
+    path: &Path,
+    dim: usize,
+    rows: usize,
+    out: &mut Vec<f64>,
+) -> Result<()> {
+    #[cfg(unix)]
+    {
+        let file = std::fs::File::open(path)?;
+        if let Some(map) = mmap::Map::of(&file) {
+            return draw_segment_from_bin(map.bytes(), dim, rows, out)
+                .map_err(|e| decorate_shard_err(path, e));
+        }
+    }
+    let bytes = std::fs::read(path)?;
+    draw_segment_from_bin(&bytes, dim, rows, out)
+        .map_err(|e| decorate_shard_err(path, e))
+}
+
+fn draw_segment_from_bin(
+    bytes: &[u8],
+    dim: usize,
+    rows: usize,
+    out: &mut Vec<f64>,
+) -> Result<()> {
+    let mut cur = Cur { buf: bytes, pos: 0 };
+    if cur.take(SHARD_MAGIC.len())? != SHARD_MAGIC {
+        return Err(Error::Parse(
+            "draw segment: bad magic (not a spill segment)".into(),
+        ));
+    }
+    let tag = cur.u8()?;
+    if tag != TAG_DRAW_SEGMENT {
+        return Err(Error::Parse(format!(
+            "draw segment: unexpected tag {tag}"
+        )));
+    }
+    let file_dim = cur.u64()?;
+    let file_rows = cur.u64()?;
+    if file_dim != dim || file_rows != rows {
+        return Err(Error::Parse(format!(
+            "draw segment: header says {file_rows} rows × dim {file_dim}, \
+             the store expects {rows} × {dim}"
+        )));
+    }
+    let n = dim.checked_mul(rows).ok_or_else(|| {
+        Error::Parse("draw segment: size overflow".into())
+    })?;
+    let payload = cur.take(n.checked_mul(8).ok_or_else(|| {
+        Error::Parse("draw segment: size overflow".into())
+    })?)?;
+    out.clear();
+    out.reserve(n);
+    out.extend(
+        payload
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap())),
+    );
+    cur.done()
+}
+
 fn put_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
@@ -996,6 +1097,47 @@ mod tests {
         assert!(ShardFormat::parse("yaml").is_err());
         assert_eq!(ShardFormat::Binary.extension(), "bin");
         assert_eq!(ShardFormat::default(), ShardFormat::Json);
+    }
+
+    /// Draw segments (the `DrawStore` spill unit) round-trip bit-exactly
+    /// through both ingest paths, including non-finite payloads, and a
+    /// shape mismatch against the store's record is a structured error.
+    #[test]
+    fn draw_segment_roundtrips_bit_exactly() {
+        let dir = std::env::temp_dir().join("repro_draw_segment_test");
+        let path = dir.join("seg_0.bin");
+        let nan_payload = f64::from_bits(0x7ff8_dead_beef_1234);
+        let flat = [
+            1.5,
+            -0.0,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            nan_payload,
+            3.25,
+        ];
+        write_draw_segment(&path, 2, &flat).unwrap();
+        let mut out = Vec::new();
+        read_draw_segment_into(&path, 2, 3, &mut out).unwrap();
+        assert_eq!(out.len(), flat.len());
+        for (a, b) in flat.iter().zip(&out) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "draw segment payload diverged"
+            );
+        }
+        // Wrong expected shape: structured error naming both shapes.
+        let err =
+            read_draw_segment_into(&path, 2, 4, &mut out).unwrap_err();
+        assert!(err.to_string().contains("expects 4"), "{err}");
+        let err =
+            read_draw_segment_into(&path, 3, 3, &mut out).unwrap_err();
+        assert!(err.to_string().contains("dim 2"), "{err}");
+        // A truncated segment fails the bounds check, never panics.
+        let good = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &good[..good.len() - 5]).unwrap();
+        assert!(read_draw_segment_into(&path, 2, 3, &mut out).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! DESIGN.md §3), and CSV I/O for experiment outputs.
 
 pub mod io;
+pub mod store;
 pub mod synth;
 
 use crate::error::{Error, Result};

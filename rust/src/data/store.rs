@@ -1,0 +1,458 @@
+//! Chunked draw-plane storage with optional disk spill.
+//!
+//! A [`DrawStore`] holds one machine's retained draws as a sequence of
+//! fixed-size row-chunk **segments** plus an in-progress tail. With no
+//! spill budget configured every segment stays in memory and the store
+//! is a bit-exact wrapper over today's dense
+//! [`SampleMatrix`] behavior; with a budget, sealed segments spill
+//! coldest-first to `RPSHRD1`-layout files
+//! ([`crate::data::io::write_draw_segment`]) and are read back through
+//! the mmap ingest path when a consumer iterates.
+//!
+//! Determinism contract: the flat row stream a store yields — via
+//! [`DrawStore::for_each_chunk`] or [`DrawStore::to_matrix`] — is a
+//! function of the pushed rows only. Chunk size, spill budget, and how
+//! pushes were batched change *where* the bytes live, never *what*
+//! they are; spilled values round-trip through `f64::to_le_bytes`
+//! verbatim, so NaN payloads, ±Inf, and -0.0 survive bit-exactly.
+
+use crate::data::io;
+use crate::error::Result;
+use crate::types::SampleMatrix;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Default rows per sealed chunk (`chunk_rows` config key).
+pub const DEFAULT_CHUNK_ROWS: usize = 512;
+
+/// Shape of a [`DrawStore`]: chunking granularity and spill policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DrawStoreConfig {
+    /// Rows per sealed segment. Boundaries fall at fixed row indices
+    /// (multiples of `chunk_rows`) regardless of how pushes were
+    /// batched, so the segment layout is deterministic per machine.
+    pub chunk_rows: usize,
+    /// `None` ⇒ dense, never spill (today's behavior). `Some(0)` ⇒
+    /// every sealed segment spills immediately. `Some(b)` ⇒ sealed
+    /// segments spill coldest-first while their resident bytes exceed
+    /// `b`. The in-progress tail (< `chunk_rows` rows) never spills.
+    pub spill_budget_bytes: Option<usize>,
+}
+
+impl Default for DrawStoreConfig {
+    fn default() -> Self {
+        DrawStoreConfig {
+            chunk_rows: DEFAULT_CHUNK_ROWS,
+            spill_budget_bytes: None,
+        }
+    }
+}
+
+/// Memory accounting for one store (or a sum over stores): what is
+/// resident now, what sits on disk, and the high-water mark.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DrawStoreStats {
+    /// Payload bytes currently held in memory (sealed segments + tail).
+    pub resident_bytes: usize,
+    /// Payload bytes currently spilled to disk.
+    pub spilled_bytes: usize,
+    /// Highest resident-bytes value ever observed.
+    pub peak_resident_bytes: usize,
+}
+
+impl DrawStoreStats {
+    /// Accumulate another store's stats (peaks add conservatively:
+    /// the stores coexist, so the plane's peak is at most the sum).
+    pub fn absorb(&mut self, other: &DrawStoreStats) {
+        self.resident_bytes += other.resident_bytes;
+        self.spilled_bytes += other.spilled_bytes;
+        self.peak_resident_bytes += other.peak_resident_bytes;
+    }
+}
+
+/// One sealed row chunk: resident, or spilled to a segment file.
+#[derive(Debug)]
+enum Segment {
+    Mem(Vec<f64>),
+    Disk { path: PathBuf, rows: usize },
+}
+
+/// Spill-directory sequence number: keeps concurrent stores in one
+/// process (every leader holds M of them) from colliding.
+static STORE_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+/// Chunked storage for one machine's draws. See the module docs.
+#[derive(Debug)]
+pub struct DrawStore {
+    dim: usize,
+    cfg: DrawStoreConfig,
+    /// Sealed segments in row order. Spill is strictly coldest-first
+    /// (front to back), so `segments[..spilled]` are all on disk.
+    segments: Vec<Segment>,
+    /// Count of leading `Disk` segments.
+    spilled: usize,
+    /// In-progress rows (< `chunk_rows`), never spilled.
+    tail: Vec<f64>,
+    rows: usize,
+    /// Payload bytes of sealed `Mem` segments.
+    sealed_resident: usize,
+    spilled_bytes: usize,
+    peak_resident: usize,
+    /// Lazily created on first spill; removed on drop.
+    spill_dir: Option<PathBuf>,
+    seq: usize,
+}
+
+impl DrawStore {
+    /// Dense store (default chunking, no spill) — bit-exact stand-in
+    /// for a `SampleMatrix` accumulator.
+    pub fn new(dim: usize) -> DrawStore {
+        DrawStore::with_config(dim, DrawStoreConfig::default())
+    }
+
+    /// Store with an explicit chunk size and spill policy.
+    pub fn with_config(dim: usize, cfg: DrawStoreConfig) -> DrawStore {
+        assert!(dim > 0, "dim must be positive");
+        assert!(cfg.chunk_rows > 0, "chunk_rows must be positive");
+        DrawStore {
+            dim,
+            cfg,
+            segments: Vec::new(),
+            spilled: 0,
+            tail: Vec::new(),
+            rows: 0,
+            sealed_resident: 0,
+            spilled_bytes: 0,
+            peak_resident: 0,
+            spill_dir: None,
+            seq: STORE_SEQ.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+
+    /// Build a store holding the matrix's rows (used by the dense →
+    /// store adapters and tests).
+    pub fn from_matrix(
+        samples: &SampleMatrix,
+        cfg: DrawStoreConfig,
+    ) -> Result<DrawStore> {
+        let mut store = DrawStore::with_config(samples.dim(), cfg);
+        store.push_rows(samples.as_slice())?;
+        Ok(store)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of draws held (resident + spilled + tail).
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    pub fn config(&self) -> &DrawStoreConfig {
+        &self.cfg
+    }
+
+    /// Append one draw. May spill a newly sealed segment.
+    pub fn push(&mut self, theta: &[f64]) -> Result<()> {
+        assert_eq!(theta.len(), self.dim, "draw has wrong dimension");
+        self.tail.extend_from_slice(theta);
+        self.rows += 1;
+        self.note_peak();
+        self.seal_full_chunks()
+    }
+
+    /// Append draws from a flat row-major buffer (a whole number of
+    /// rows) — the bulk landing path for decoded `RPDRAW1` chunks: one
+    /// copy into the tail, then sealing at the fixed chunk boundaries.
+    pub fn push_rows(&mut self, flat: &[f64]) -> Result<()> {
+        assert_eq!(
+            flat.len() % self.dim,
+            0,
+            "flat buffer of {} is not whole rows of dim {}",
+            flat.len(),
+            self.dim
+        );
+        self.tail.extend_from_slice(flat);
+        self.rows += flat.len() / self.dim;
+        self.note_peak();
+        self.seal_full_chunks()
+    }
+
+    /// Visit every chunk of rows in order, each as one flat row-major
+    /// slice of whole rows. Sealed in-memory segments are borrowed
+    /// directly; spilled segments are read back through one reused
+    /// buffer, so at most one disk chunk is resident at a time.
+    pub fn for_each_chunk<F>(&self, mut f: F) -> Result<()>
+    where
+        F: FnMut(&[f64]) -> Result<()>,
+    {
+        let mut buf: Vec<f64> = Vec::new();
+        for seg in &self.segments {
+            match seg {
+                Segment::Mem(data) => f(data)?,
+                Segment::Disk { path, rows } => {
+                    io::read_draw_segment_into(
+                        path, self.dim, *rows, &mut buf,
+                    )?;
+                    f(&buf)?;
+                }
+            }
+        }
+        if !self.tail.is_empty() {
+            f(&self.tail)?;
+        }
+        Ok(())
+    }
+
+    /// Densify into a [`SampleMatrix`] — byte-identical to the matrix a
+    /// dense accumulator would hold after the same pushes, whatever the
+    /// chunk size or spill policy.
+    pub fn to_matrix(&self) -> Result<SampleMatrix> {
+        let mut out = SampleMatrix::with_capacity(self.dim, self.rows);
+        self.for_each_chunk(|block| {
+            out.push_rows(block);
+            Ok(())
+        })?;
+        Ok(out)
+    }
+
+    /// Current memory accounting.
+    pub fn stats(&self) -> DrawStoreStats {
+        DrawStoreStats {
+            resident_bytes: self.resident_bytes(),
+            spilled_bytes: self.spilled_bytes,
+            peak_resident_bytes: self.peak_resident,
+        }
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.sealed_resident + self.tail.len() * 8
+    }
+
+    fn note_peak(&mut self) {
+        self.peak_resident = self.peak_resident.max(self.resident_bytes());
+    }
+
+    /// Move full chunks out of the tail, then enforce the spill budget.
+    /// Sealing drains exactly `chunk_rows` rows at a time so segment
+    /// boundaries fall at fixed row indices regardless of push batching.
+    fn seal_full_chunks(&mut self) -> Result<()> {
+        let chunk_scalars = self.cfg.chunk_rows * self.dim;
+        while self.tail.len() >= chunk_scalars {
+            let seg: Vec<f64> = if self.tail.len() == chunk_scalars {
+                std::mem::take(&mut self.tail)
+            } else {
+                self.tail.drain(..chunk_scalars).collect()
+            };
+            self.sealed_resident += seg.len() * 8;
+            self.segments.push(Segment::Mem(seg));
+        }
+        self.enforce_budget()
+    }
+
+    fn enforce_budget(&mut self) -> Result<()> {
+        let Some(budget) = self.cfg.spill_budget_bytes else {
+            return Ok(());
+        };
+        while self.sealed_resident > budget
+            && self.spilled < self.segments.len()
+        {
+            self.spill_segment(self.spilled)?;
+            self.spilled += 1;
+        }
+        Ok(())
+    }
+
+    fn spill_segment(&mut self, i: usize) -> Result<()> {
+        if self.spill_dir.is_none() {
+            let dir = std::env::temp_dir().join(format!(
+                "repro_draws_{}_{}",
+                std::process::id(),
+                self.seq
+            ));
+            std::fs::create_dir_all(&dir)?;
+            self.spill_dir = Some(dir);
+        }
+        let dir = self.spill_dir.as_ref().unwrap();
+        let Segment::Mem(data) = &self.segments[i] else {
+            unreachable!("spill cursor always points at a Mem segment");
+        };
+        let path = dir.join(format!("seg_{i}.bin"));
+        io::write_draw_segment(&path, self.dim, data)?;
+        let bytes = data.len() * 8;
+        let rows = data.len() / self.dim;
+        self.sealed_resident -= bytes;
+        self.spilled_bytes += bytes;
+        self.segments[i] = Segment::Disk { path, rows };
+        Ok(())
+    }
+}
+
+impl Drop for DrawStore {
+    fn drop(&mut self) {
+        if let Some(dir) = &self.spill_dir {
+            std::fs::remove_dir_all(dir).ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(n: usize, d: usize) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|i| {
+                (0..d).map(|j| (i * d + j) as f64 * 0.5 - 3.0).collect()
+            })
+            .collect()
+    }
+
+    fn filled(
+        n: usize,
+        d: usize,
+        cfg: DrawStoreConfig,
+    ) -> (DrawStore, SampleMatrix) {
+        let mut store = DrawStore::with_config(d, cfg);
+        let mut dense = SampleMatrix::new(d);
+        for r in rows(n, d) {
+            store.push(&r).unwrap();
+            dense.push(&r);
+        }
+        (store, dense)
+    }
+
+    #[test]
+    fn dense_default_matches_sample_matrix() {
+        let (store, dense) = filled(37, 3, DrawStoreConfig::default());
+        assert_eq!(store.len(), 37);
+        assert_eq!(store.dim(), 3);
+        let back = store.to_matrix().unwrap();
+        assert_eq!(back.as_slice(), dense.as_slice());
+        assert_eq!(store.stats().spilled_bytes, 0);
+        assert_eq!(store.stats().resident_bytes, 37 * 3 * 8);
+    }
+
+    #[test]
+    fn chunk_boundaries_are_push_batch_invariant() {
+        let d = 2;
+        let all: Vec<f64> =
+            rows(23, d).into_iter().flatten().collect();
+        let cfg = DrawStoreConfig { chunk_rows: 5, spill_budget_bytes: None };
+        // One bulk push vs ragged bulk pushes vs per-row pushes.
+        let mut a = DrawStore::with_config(d, cfg);
+        a.push_rows(&all).unwrap();
+        let mut b = DrawStore::with_config(d, cfg);
+        for part in all.chunks(7 * d) {
+            b.push_rows(part).unwrap();
+        }
+        let mut c = DrawStore::with_config(d, cfg);
+        for r in all.chunks(d) {
+            c.push(r).unwrap();
+        }
+        for store in [&a, &b, &c] {
+            let mut sizes = Vec::new();
+            store
+                .for_each_chunk(|block| {
+                    sizes.push(block.len() / d);
+                    Ok(())
+                })
+                .unwrap();
+            assert_eq!(sizes, vec![5, 5, 5, 5, 3]);
+            assert_eq!(store.to_matrix().unwrap().as_slice(), &all[..]);
+        }
+    }
+
+    #[test]
+    fn budget_zero_spills_every_sealed_chunk() {
+        let cfg = DrawStoreConfig {
+            chunk_rows: 4,
+            spill_budget_bytes: Some(0),
+        };
+        let (store, dense) = filled(18, 2, cfg);
+        let stats = store.stats();
+        // 4 sealed chunks of 4 rows spilled; 2 tail rows resident.
+        assert_eq!(stats.spilled_bytes, 16 * 2 * 8);
+        assert_eq!(stats.resident_bytes, 2 * 2 * 8);
+        assert!(stats.peak_resident_bytes >= 4 * 2 * 8);
+        assert_eq!(
+            store.to_matrix().unwrap().as_slice(),
+            dense.as_slice(),
+            "spilled store diverged from dense"
+        );
+    }
+
+    #[test]
+    fn huge_budget_never_spills() {
+        let cfg = DrawStoreConfig {
+            chunk_rows: 4,
+            spill_budget_bytes: Some(usize::MAX),
+        };
+        let (store, dense) = filled(18, 2, cfg);
+        assert_eq!(store.stats().spilled_bytes, 0);
+        assert_eq!(store.to_matrix().unwrap().as_slice(), dense.as_slice());
+    }
+
+    #[test]
+    fn nonfinite_payloads_roundtrip_spill_bit_exactly() {
+        let cfg = DrawStoreConfig {
+            chunk_rows: 1,
+            spill_budget_bytes: Some(0),
+        };
+        let mut store = DrawStore::with_config(2, cfg);
+        let nan_payload = f64::from_bits(0x7ff8_0000_dead_beef);
+        let weird = [
+            [f64::INFINITY, -0.0],
+            [f64::NEG_INFINITY, nan_payload],
+            [f64::MIN_POSITIVE / 2.0, f64::MAX],
+        ];
+        for r in &weird {
+            store.push(r).unwrap();
+        }
+        assert!(store.stats().spilled_bytes > 0);
+        let back = store.to_matrix().unwrap();
+        let flat: Vec<f64> =
+            weird.iter().flat_map(|r| r.iter().copied()).collect();
+        for (a, b) in flat.iter().zip(back.as_slice()) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "spill round-trip changed a bit pattern"
+            );
+        }
+    }
+
+    #[test]
+    fn spill_dir_removed_on_drop() {
+        let cfg = DrawStoreConfig {
+            chunk_rows: 1,
+            spill_budget_bytes: Some(0),
+        };
+        let mut store = DrawStore::with_config(1, cfg);
+        store.push(&[1.0]).unwrap();
+        store.push(&[2.0]).unwrap();
+        let dir = store.spill_dir.clone().expect("spill dir created");
+        assert!(dir.is_dir());
+        drop(store);
+        assert!(!dir.exists(), "spill dir must clean up after itself");
+    }
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let cfg = DrawStoreConfig {
+            chunk_rows: 8,
+            spill_budget_bytes: Some(0),
+        };
+        let (store, _) = filled(32, 1, cfg);
+        let stats = store.stats();
+        // Residency peaks just as a chunk seals: 8 rows × 8 bytes.
+        assert_eq!(stats.peak_resident_bytes, 8 * 8);
+        assert_eq!(stats.spilled_bytes, 32 * 8);
+        assert_eq!(stats.resident_bytes, 0);
+    }
+}

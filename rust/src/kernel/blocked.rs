@@ -53,6 +53,68 @@ impl BlockedCpuKernel {
     pub fn with_panel_rows(panel_rows: usize) -> Self {
         BlockedCpuKernel { panel_rows: panel_rows.max(1) }
     }
+
+    /// One ≤`panel_rows` panel of the table solve over a flat row-major
+    /// `block` — the shared body behind the dense `logpdf_table` and
+    /// the chunk-streaming `logpdf_table_block`. `panel`/`acc` are
+    /// caller-owned scratch of at least `d·width` / `width` scalars.
+    fn table_panel(
+        &self,
+        mvn: &Mvn,
+        block: &[f64],
+        panel: &mut [f64],
+        acc: &mut [f64],
+        out: &mut Vec<f64>,
+    ) {
+        let d = mvn.dim();
+        let l = mvn.chol();
+        let mean = mvn.mean();
+        let log_norm = mvn.log_norm();
+        let r = block.len() / d;
+        // Transposed residuals: same subtraction as the scalar
+        // path's `scratch[i] = x[i] - mean[i]`, laid out lane-major.
+        for i in 0..d {
+            let mi = mean[i];
+            let yi = &mut panel[i * r..(i + 1) * r];
+            for (t, y) in yi.iter_mut().enumerate() {
+                *y = block[t * d + i] - mi;
+            }
+        }
+        // Forward substitution, panel-wide. Entry (i, t) starts at
+        // its residual, subtracts L[i][k]·y[k][t] for k ascending,
+        // then divides by the pivot — the scalar
+        // `forward_solve_in_place` op sequence per entry, with the
+        // lane loop innermost for ILP/SIMD.
+        for i in 0..d {
+            let (solved, active) = panel.split_at_mut(i * r);
+            let yi = &mut active[..r];
+            for k in 0..i {
+                let lik = l[(i, k)];
+                let yk = &solved[k * r..(k + 1) * r];
+                for (y, &v) in yi.iter_mut().zip(yk) {
+                    *y -= lik * v;
+                }
+            }
+            let lii = l[(i, i)];
+            for y in yi.iter_mut() {
+                *y /= lii;
+            }
+        }
+        // |y_t|² accumulated over i ascending from 0.0 — the same
+        // fold order as `linalg::dot`'s iterator sum.
+        for a in acc[..r].iter_mut() {
+            *a = 0.0;
+        }
+        for i in 0..d {
+            let yi = &panel[i * r..(i + 1) * r];
+            for (a, &v) in acc[..r].iter_mut().zip(yi) {
+                *a += v * v;
+            }
+        }
+        for &a in &acc[..r] {
+            out.push(log_norm - 0.5 * a);
+        }
+    }
 }
 
 impl CombineKernel for BlockedCpuKernel {
@@ -75,58 +137,12 @@ impl CombineKernel for BlockedCpuKernel {
     ) -> Result<Vec<f64>> {
         check_dims(mvn, set)?;
         let d = mvn.dim();
-        let l = mvn.chol();
-        let mean = mvn.mean();
-        let log_norm = mvn.log_norm();
         let width = self.panel_rows;
         let mut out = Vec::with_capacity(set.len());
         let mut panel = vec![0.0f64; d * width];
         let mut acc = vec![0.0f64; width];
         for block in set.rows_chunked(width) {
-            let r = block.len() / d;
-            // Transposed residuals: same subtraction as the scalar
-            // path's `scratch[i] = x[i] - mean[i]`, laid out lane-major.
-            for i in 0..d {
-                let mi = mean[i];
-                let yi = &mut panel[i * r..(i + 1) * r];
-                for (t, y) in yi.iter_mut().enumerate() {
-                    *y = block[t * d + i] - mi;
-                }
-            }
-            // Forward substitution, panel-wide. Entry (i, t) starts at
-            // its residual, subtracts L[i][k]·y[k][t] for k ascending,
-            // then divides by the pivot — the scalar
-            // `forward_solve_in_place` op sequence per entry, with the
-            // lane loop innermost for ILP/SIMD.
-            for i in 0..d {
-                let (solved, active) = panel.split_at_mut(i * r);
-                let yi = &mut active[..r];
-                for k in 0..i {
-                    let lik = l[(i, k)];
-                    let yk = &solved[k * r..(k + 1) * r];
-                    for (y, &v) in yi.iter_mut().zip(yk) {
-                        *y -= lik * v;
-                    }
-                }
-                let lii = l[(i, i)];
-                for y in yi.iter_mut() {
-                    *y /= lii;
-                }
-            }
-            // |y_t|² accumulated over i ascending from 0.0 — the same
-            // fold order as `linalg::dot`'s iterator sum.
-            for a in acc[..r].iter_mut() {
-                *a = 0.0;
-            }
-            for i in 0..d {
-                let yi = &panel[i * r..(i + 1) * r];
-                for (a, &v) in acc[..r].iter_mut().zip(yi) {
-                    *a += v * v;
-                }
-            }
-            for &a in &acc[..r] {
-                out.push(log_norm - 0.5 * a);
-            }
+            self.table_panel(mvn, block, &mut panel, &mut acc, &mut out);
         }
         Ok(out)
     }
@@ -190,6 +206,39 @@ impl CombineKernel for BlockedCpuKernel {
     /// backends.
     fn row_norms(&self, set: &SampleMatrix) -> Result<Vec<f64>> {
         Ok(crate::combine::row_norms(set))
+    }
+
+    /// Same panels as the dense op, run straight over the borrowed
+    /// block (no temporary matrix). The panel grid restarts at each
+    /// chunk boundary, but per-entry accumulation never crosses panels,
+    /// so any chunking reproduces `logpdf_table` bit-for-bit — pinned
+    /// by the unit test below and the `combine_table_chunked` bench row.
+    fn logpdf_table_block(
+        &self,
+        mvn: &Mvn,
+        block: &[f64],
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        super::naive::check_block(block, mvn.dim(), "logpdf table")?;
+        let d = mvn.dim();
+        let width = self.panel_rows;
+        let mut panel = vec![0.0f64; d * width];
+        let mut acc = vec![0.0f64; width];
+        out.reserve(block.len() / d);
+        for chunk in block.chunks(d * width) {
+            self.table_panel(mvn, chunk, &mut panel, &mut acc, out);
+        }
+        Ok(())
+    }
+
+    /// Shared index-order norm fold (see `naive::norms_block`).
+    fn row_norms_block(
+        &self,
+        block: &[f64],
+        dim: usize,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        super::naive::norms_block(block, dim, out)
     }
 }
 
@@ -296,6 +345,59 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Chunk-streaming the table through `logpdf_table_block` at any
+    /// chunk size — aligned or not with the panel width — reproduces
+    /// the dense op bit-for-bit. This is the contract that lets the
+    /// draw store feed the combine stage without densifying.
+    #[test]
+    fn table_block_chunking_matches_dense() {
+        let mvn = random_mvn(3, 21);
+        let mut rng = Pcg64::seed_from(22);
+        let set = mvn.sample_n(53, &mut rng);
+        let k = BlockedCpuKernel::with_panel_rows(4);
+        let want = k.logpdf_table(&mvn, &set).unwrap();
+        for rows_per_chunk in [1usize, 7, 32, 1000] {
+            let mut got = Vec::new();
+            for block in set.rows_chunked(rows_per_chunk) {
+                k.logpdf_table_block(&mvn, block, &mut got).unwrap();
+            }
+            assert_eq!(want.len(), got.len());
+            for (t, (w, g)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(
+                    w.to_bits(),
+                    g.to_bits(),
+                    "chunk={rows_per_chunk} entry {t}: {w} vs {g}"
+                );
+            }
+        }
+        // A ragged block (partial row) is a structured shape error.
+        let mut sink = Vec::new();
+        assert!(k
+            .logpdf_table_block(&mvn, &[1.0, 2.0], &mut sink)
+            .is_err());
+    }
+
+    /// Same chunking invariance for the norm fold.
+    #[test]
+    fn norms_block_chunking_matches_dense() {
+        let mut rng = Pcg64::seed_from(29);
+        let mut set = SampleMatrix::new(3);
+        for _ in 0..41 {
+            set.push(&[rng.normal(), rng.normal() * 2.0, rng.normal()]);
+        }
+        let k = BlockedCpuKernel::default();
+        let want = k.row_norms(&set).unwrap();
+        for rows_per_chunk in [1usize, 7, 64] {
+            let mut got = Vec::new();
+            for block in set.rows_chunked(rows_per_chunk) {
+                k.row_norms_block(block, set.dim(), &mut got).unwrap();
+            }
+            assert_eq!(want, got, "chunk={rows_per_chunk}");
+        }
+        let mut sink = Vec::new();
+        assert!(k.row_norms_block(&[1.0], 2, &mut sink).is_err());
     }
 
     #[test]

@@ -82,6 +82,44 @@ pub trait CombineKernel: fmt::Debug + Send + Sync {
     /// `set.row(t).iter().map(|v| v * v).sum()` accumulated in index
     /// order.
     fn row_norms(&self, set: &SampleMatrix) -> Result<Vec<f64>>;
+
+    /// Chunk-streaming counterpart of [`CombineKernel::logpdf_table`]:
+    /// append the log-densities of one flat row-major `block` of draws
+    /// (dim `mvn.dim()`, whole rows) onto `out`. Per-entry values must
+    /// be *block-boundary independent* — streaming a set through any
+    /// chunking of this method reproduces `logpdf_table` bit-for-bit —
+    /// which is what lets the chunked [`crate::types::DrawStore`] feed
+    /// the combine stage without densifying. The default materializes
+    /// the block as a temporary [`SampleMatrix`] and defers to
+    /// `logpdf_table`, so backends that only implement the dense op
+    /// (e.g. the device backend) stay correct; CPU backends override it
+    /// to skip the copy.
+    fn logpdf_table_block(
+        &self,
+        mvn: &Mvn,
+        block: &[f64],
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        let set = SampleMatrix::from_rows(block.to_vec(), mvn.dim())?;
+        out.extend(self.logpdf_table(mvn, &set)?);
+        Ok(())
+    }
+
+    /// Chunk-streaming counterpart of [`CombineKernel::row_norms`]:
+    /// append per-row squared norms of one flat row-major `block` (dim
+    /// `dim`, whole rows) onto `out`. Same block-boundary-independence
+    /// contract as [`CombineKernel::logpdf_table_block`]; same
+    /// densifying default.
+    fn row_norms_block(
+        &self,
+        block: &[f64],
+        dim: usize,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        let set = SampleMatrix::from_rows(block.to_vec(), dim)?;
+        out.extend(self.row_norms(&set)?);
+        Ok(())
+    }
 }
 
 /// Which combine-kernel backend to run — the `combine_backend` config
@@ -173,6 +211,54 @@ mod tests {
             let k = kind.build().unwrap();
             assert_eq!(k.name(), kind.name());
         }
+    }
+
+    /// A backend that only implements the dense ops (as the device
+    /// backend does) still serves the chunk-streaming calls correctly
+    /// through the trait's densifying defaults.
+    #[derive(Debug)]
+    struct DenseOnly;
+
+    impl CombineKernel for DenseOnly {
+        fn name(&self) -> &'static str {
+            "dense-only"
+        }
+        fn logpdf_table(
+            &self,
+            mvn: &Mvn,
+            set: &SampleMatrix,
+        ) -> Result<Vec<f64>> {
+            NaiveKernel.logpdf_table(mvn, set)
+        }
+        fn spd_inverse_in_place(&self, a: &mut Mat) -> Result<()> {
+            NaiveKernel.spd_inverse_in_place(a)
+        }
+        fn row_norms(&self, set: &SampleMatrix) -> Result<Vec<f64>> {
+            NaiveKernel.row_norms(set)
+        }
+    }
+
+    #[test]
+    fn default_block_impls_match_dense_ops() {
+        let cov = Mat::from_vec(vec![2.0, 0.3, 0.3, 1.0], 2, 2).unwrap();
+        let mvn = Mvn::new(vec![0.1, -0.4], cov).unwrap();
+        let mut rng = crate::rng::Pcg64::seed_from(31);
+        let set = mvn.sample_n(11, &mut rng);
+        let want = DenseOnly.logpdf_table(&mvn, &set).unwrap();
+        let mut got = Vec::new();
+        for block in set.rows_chunked(4) {
+            DenseOnly.logpdf_table_block(&mvn, block, &mut got).unwrap();
+        }
+        assert_eq!(want.len(), got.len());
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.to_bits(), g.to_bits());
+        }
+        let want = DenseOnly.row_norms(&set).unwrap();
+        let mut got = Vec::new();
+        for block in set.rows_chunked(3) {
+            DenseOnly.row_norms_block(block, set.dim(), &mut got).unwrap();
+        }
+        assert_eq!(want, got);
     }
 
     /// Offline, the device backend is a structured error at build time

@@ -48,6 +48,37 @@ impl CombineKernel for NaiveKernel {
     fn row_norms(&self, set: &SampleMatrix) -> Result<Vec<f64>> {
         Ok(crate::combine::row_norms(set))
     }
+
+    /// Same per-row [`Mvn::logpdf_with`] loop as the dense op, run
+    /// straight over the borrowed block — no temporary matrix. Each
+    /// entry's accumulation is independent of where chunk boundaries
+    /// fall, so any chunking reproduces `logpdf_table` bit-for-bit.
+    fn logpdf_table_block(
+        &self,
+        mvn: &Mvn,
+        block: &[f64],
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        check_block(block, mvn.dim(), "logpdf table")?;
+        let mut scratch = vec![0.0; mvn.dim()];
+        out.extend(
+            block
+                .chunks_exact(mvn.dim())
+                .map(|r| mvn.logpdf_with(r, &mut scratch)),
+        );
+        Ok(())
+    }
+
+    /// Per-row index-order squared-norm sums over the borrowed block —
+    /// the same per-entry fold as [`crate::combine::row_norms`].
+    fn row_norms_block(
+        &self,
+        block: &[f64],
+        dim: usize,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        norms_block(block, dim, out)
+    }
 }
 
 /// Shared input validation for the table op (both CPU backends).
@@ -59,6 +90,34 @@ pub(crate) fn check_dims(mvn: &Mvn, set: &SampleMatrix) -> Result<()> {
             mvn.dim()
         )));
     }
+    Ok(())
+}
+
+/// Shared whole-rows validation for the chunk-streaming block ops.
+pub(crate) fn check_block(block: &[f64], dim: usize, what: &str) -> Result<()> {
+    if dim == 0 || block.len() % dim != 0 {
+        return Err(Error::Shape(format!(
+            "{what} block: {} scalars is not whole rows of dim {dim}",
+            block.len()
+        )));
+    }
+    Ok(())
+}
+
+/// Per-row squared norms of a flat block, accumulated in index order —
+/// the shared body behind both CPU backends' `row_norms_block` (the
+/// norm fold has no panel structure worth specializing).
+pub(crate) fn norms_block(
+    block: &[f64],
+    dim: usize,
+    out: &mut Vec<f64>,
+) -> Result<()> {
+    check_block(block, dim, "row norms")?;
+    out.extend(
+        block
+            .chunks_exact(dim)
+            .map(|r| r.iter().map(|v| v * v).sum::<f64>()),
+    );
     Ok(())
 }
 

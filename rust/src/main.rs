@@ -164,9 +164,35 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
                 );
             }
             if let Some(v) = args.get("draw-batch") {
-                b = b.draw_batch(v.parse().map_err(|_| {
+                let n: usize = v.parse().map_err(|_| {
                     Error::Config(format!("bad --draw-batch: {v}"))
-                })?);
+                })?;
+                if n == 0 {
+                    return Err(Error::Config(
+                        "--draw-batch must be >= 1 (got 0)".into(),
+                    ));
+                }
+                b = b.draw_batch(n);
+            }
+            if let Some(v) = args.get("chunk-rows") {
+                let n: usize = v.parse().map_err(|_| {
+                    Error::Config(format!("bad --chunk-rows: {v}"))
+                })?;
+                if n == 0 {
+                    return Err(Error::Config(
+                        "--chunk-rows must be >= 1 (got 0)".into(),
+                    ));
+                }
+                b = b.chunk_rows(n);
+            }
+            if let Some(v) = args.get("draw-spill-budget-mb") {
+                b = b.draw_spill_budget_mb(Some(v.parse().map_err(
+                    |_| {
+                        Error::Config(format!(
+                            "bad --draw-spill-budget-mb: {v}"
+                        ))
+                    },
+                )?));
             }
             if let Some(d) = args.get("artifacts") {
                 b = b.artifact_dir(d);
@@ -382,6 +408,7 @@ fn usage() -> &'static str {
                    [--combine-backend naive|blocked|device] \\\n\
                    [--out FILE] [--shard-format json|binary] \\\n\
                    [--wire-format json|binary [--draw-batch N]] \\\n\
+                   [--chunk-rows R] [--draw-spill-budget-mb MB] \\\n\
                    [--process-mode true [--worker-bin PATH] \\\n\
                     [--worker-slots W]] \\\n\
                    [--workers HOST:PORT,… (repro serve daemons) \\\n\

@@ -2,6 +2,11 @@
 
 use crate::error::{Error, Result};
 
+// The chunked, spillable counterpart of [`SampleMatrix`] lives in
+// `data/store.rs`; re-exported here because it is the other core draw
+// container (the leader's draw plane holds stores, not matrices).
+pub use crate::data::store::{DrawStore, DrawStoreConfig, DrawStoreStats};
+
 /// A row-major `T × d` matrix of MCMC samples (one row = one draw of θ).
 ///
 /// This is the interchange type between workers, the leader, the

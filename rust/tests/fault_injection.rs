@@ -1,0 +1,212 @@
+//! Fault injection on the binary draw plane: a worker that dies
+//! mid-stream or ships a truncated `RPDRAW1` chunk must surface a
+//! *structured* diagnostic, fail fast (no hang), and land no partial
+//! rows — never a panic, never a silently short draw matrix. The
+//! no-partial-rows half is unit-pinned on the leader
+//! (`coordinator::leader`); these tests drive the same failures
+//! through real OS pipes, real TCP sockets, and the full transport
+//! scheduler.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use repro::combine::CombineMethod;
+use repro::config::PipelineConfig;
+use repro::coordinator::pipeline::run_with_transport;
+use repro::coordinator::transport::{
+    encode_summary, write_frame, write_frame_bytes, DrawChunk,
+    PipeTransport, SocketTransport, Transport, WireFormat, WorkerManifest,
+    WorkerSummary,
+};
+use repro::data::synth;
+use repro::error::{Error, FrameError};
+
+fn manifest(dir: &Path, machine: usize) -> WorkerManifest {
+    WorkerManifest {
+        machine,
+        machines: 1,
+        seed: 7,
+        samples: 4,
+        burn_in: 0,
+        thin: 1,
+        prior_weight: 1.0,
+        sampler: "rwm:1".into(),
+        shard_path: dir.join("unused.bin").to_string_lossy().into_owned(),
+        dim: 2,
+        shard_inline: false,
+        wire_format: WireFormat::Binary,
+        draw_batch: 3,
+    }
+}
+
+/// One well-formed RPDRAW1 chunk frame's payload bytes.
+fn chunk_payload() -> Vec<u8> {
+    let chunk = DrawChunk {
+        machine: 0,
+        dim: 2,
+        thetas: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        elapsed: vec![0.1, 0.2, 0.3],
+        last: true,
+    };
+    let mut payload = Vec::new();
+    chunk.encode_into(&mut payload);
+    payload
+}
+
+/// A chunk whose payload was cut mid-float but re-framed consistently
+/// (the frame grammar holds; the *chunk header's* promised length does
+/// not) must decode to a structured parse error naming the mismatch —
+/// over a real pipe, from a real child process.
+#[cfg(unix)]
+#[test]
+fn truncated_chunk_payload_is_structured_parse_error_over_pipe() {
+    use std::os::unix::fs::PermissionsExt;
+    let dir = std::env::temp_dir().join("repro_fault_pipe_truncchunk");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut payload = chunk_payload();
+    payload.truncate(payload.len() - 8); // drop the last f64
+    let mut bytes = Vec::new();
+    write_frame_bytes(&mut bytes, &payload).unwrap();
+    let fixture = dir.join("frames.bin");
+    std::fs::write(&fixture, &bytes).unwrap();
+    let script = dir.join("fake_worker.sh");
+    std::fs::write(
+        &script,
+        format!("#!/bin/sh\nexec cat '{}'\n", fixture.display()),
+    )
+    .unwrap();
+    std::fs::set_permissions(
+        &script,
+        std::fs::Permissions::from_mode(0o755),
+    )
+    .unwrap();
+
+    let wm = manifest(&dir, 0);
+    let manifest_path = dir.join("worker_0.json");
+    wm.save(&manifest_path).unwrap();
+    let transport = PipeTransport::new(PathBuf::from(&script), 1);
+    let mut conn = transport.connect(0, &wm, &manifest_path).unwrap();
+    let err = conn.recv().unwrap_err();
+    assert!(
+        matches!(err, Error::Parse(_)),
+        "expected a structured parse error, got {err:?}"
+    );
+    assert!(
+        err.to_string().contains("promises"),
+        "error must name the header/payload length mismatch: {err}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A daemon killed mid-frame (TCP FIN inside a chunk's payload) must
+/// surface as [`FrameError::TruncatedPayload`] on the very next recv —
+/// after the preceding complete frame decoded fine.
+#[test]
+fn daemon_killed_mid_stream_is_truncated_payload_over_socket() {
+    let dir = std::env::temp_dir().join("repro_fault_socket_kill");
+    std::fs::create_dir_all(&dir).unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        // Ignore the manifest frame; script the reply: one good chunk
+        // frame, then a second frame cut off mid-payload, then FIN
+        // (the daemon "dies" here).
+        let mut good = Vec::new();
+        write_frame_bytes(&mut good, &chunk_payload()).unwrap();
+        let mut partial = Vec::new();
+        write_frame_bytes(&mut partial, &chunk_payload()).unwrap();
+        partial.truncate(good.len() / 2);
+        let mut writer = stream;
+        writer.write_all(&good).unwrap();
+        writer.write_all(&partial).unwrap();
+        writer.flush().unwrap();
+    });
+
+    let transport = SocketTransport::from_spec(&addr.to_string()).unwrap();
+    let wm = manifest(&dir, 0);
+    let mut conn = transport
+        .connect(0, &wm, Path::new("unused-manifest-path"))
+        .unwrap();
+    let first = conn.recv().unwrap().expect("good chunk must decode");
+    match first {
+        repro::coordinator::transport::WireMsg::Chunk(c) => {
+            assert_eq!(c.count(), 3);
+        }
+        other => panic!("expected the good chunk, got {other:?}"),
+    }
+    let err = conn.recv().unwrap_err();
+    assert!(
+        matches!(
+            err,
+            Error::Frame(FrameError::TruncatedPayload { .. })
+        ),
+        "expected TruncatedPayload, got {err:?}"
+    );
+    server.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Full scheduler fail-fast: a pipeline whose worker dies mid-stream
+/// (its byte stream ends inside a frame) must fail the run promptly
+/// with the frame diagnostic as the root cause — the draw plane never
+/// hangs waiting for the missing bytes and never fabricates a result
+/// from the partial stream.
+#[cfg(unix)]
+#[test]
+fn pipeline_fails_fast_on_worker_killed_mid_stream() {
+    use std::os::unix::fs::PermissionsExt;
+    let dir = std::env::temp_dir().join("repro_fault_pipeline_kill");
+    std::fs::create_dir_all(&dir).unwrap();
+    // The fake worker ships one summary frame (proving frames were
+    // flowing) and then dies mid-way through a chunk frame.
+    let mut bytes = Vec::new();
+    write_frame(
+        &mut bytes,
+        &encode_summary(&WorkerSummary {
+            machine: 0,
+            accept_rate: 0.5,
+            wall_secs: 0.25,
+        }),
+    )
+    .unwrap();
+    let mut partial = Vec::new();
+    write_frame_bytes(&mut partial, &chunk_payload()).unwrap();
+    partial.truncate(partial.len() - 5);
+    bytes.extend_from_slice(&partial);
+    let fixture = dir.join("frames.bin");
+    std::fs::write(&fixture, &bytes).unwrap();
+    let script = dir.join("fake_worker.sh");
+    std::fs::write(
+        &script,
+        format!("#!/bin/sh\nexec cat '{}'\n", fixture.display()),
+    )
+    .unwrap();
+    std::fs::set_permissions(
+        &script,
+        std::fs::Permissions::from_mode(0o755),
+    )
+    .unwrap();
+
+    let data = synth::gaussian(200, 2, 3);
+    let cfg = PipelineConfig::builder("gaussian")
+        .machines(1)
+        .samples_per_machine(4)
+        .method(CombineMethod::Parametric)
+        .seed(7)
+        .build();
+    let transport = PipeTransport::new(PathBuf::from(&script), 1);
+    let t0 = Instant::now();
+    let err = run_with_transport(&cfg, &data, &transport).unwrap_err();
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "fail-fast contract: the run must not hang on a dead worker"
+    );
+    let text = err.to_string();
+    assert!(
+        text.contains("bad frame") && text.contains("truncated mid-payload"),
+        "root cause must be the structured frame diagnostic: {text}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,163 @@
+//! Out-of-core draw plane, end to end: the leader's per-machine
+//! [`DrawStore`]s must be a pure memory knob. For a fixed seed the
+//! retained combined draws are **byte-identical** across every point of
+//! the chunk-size × spill-budget × kernel-backend matrix — dense
+//! in-memory storage, partially spilled, and "spill everything" are the
+//! same distribution estimator down to the last bit. Budget edge cases
+//! and non-finite payload round-trips are pinned on the public store
+//! API.
+
+use repro::combine::CombineMethod;
+use repro::config::PipelineConfig;
+use repro::coordinator::pipeline::run_native;
+use repro::data::synth;
+use repro::kernel::CombineKernelKind;
+use repro::types::{DrawStore, DrawStoreConfig};
+
+const T: usize = 120;
+
+fn cfg() -> PipelineConfig {
+    PipelineConfig::builder("gaussian")
+        .machines(3)
+        .samples_per_machine(T)
+        .method(CombineMethod::Semiparametric)
+        .seed(41)
+        .build()
+}
+
+/// The acceptance matrix: chunk size {1, 7, 64, T} × spill budget
+/// {0 MiB, 1 MiB, default-dense} × backend {naive, blocked}. Every
+/// cell must reproduce the dense/naive baseline byte-for-byte — the
+/// subposterior streams and the combined draws alike.
+#[test]
+fn spill_matrix_is_byte_identical_through_pipeline() {
+    let data = synth::gaussian(900, 2, 17);
+    let run = |chunk: usize,
+               budget_mb: Option<usize>,
+               backend: CombineKernelKind| {
+        let mut c = cfg();
+        c.chunk_rows = chunk;
+        c.draw_spill_budget_mb = budget_mb;
+        c.combine_backend = backend;
+        run_native(&c, &data).unwrap()
+    };
+    let base = run(
+        repro::data::store::DEFAULT_CHUNK_ROWS,
+        None,
+        CombineKernelKind::Naive,
+    );
+    assert_eq!(base.metrics.draw_spilled_bytes, 0);
+    for chunk in [1usize, 7, 64, T] {
+        for budget_mb in [Some(0), Some(1), None] {
+            for backend in
+                [CombineKernelKind::Naive, CombineKernelKind::Blocked]
+            {
+                let out = run(chunk, budget_mb, backend);
+                assert_eq!(
+                    base.combined.as_slice(),
+                    out.combined.as_slice(),
+                    "combined draws diverged at chunk {chunk}, budget \
+                     {budget_mb:?}, backend {backend:?}"
+                );
+                for (a, b) in
+                    base.subposteriors.iter().zip(&out.subposteriors)
+                {
+                    assert_eq!(
+                        a.samples.as_slice(),
+                        b.samples.as_slice(),
+                        "machine {} diverged at chunk {chunk}, budget \
+                         {budget_mb:?}, backend {backend:?}",
+                        a.machine
+                    );
+                }
+                if budget_mb == Some(0) {
+                    // Every sealed chunk spills; 3 machines × T rows
+                    // of dim 2 comfortably exceed one chunk.
+                    assert!(
+                        out.metrics.draw_spilled_bytes > 0,
+                        "budget 0 must spill (chunk {chunk})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The pairwise tree densifies store chunks per merge group — the
+/// spill path must feed it the same bytes as the dense plane.
+#[test]
+fn pairwise_through_spilled_stores_matches_dense() {
+    let data = synth::gaussian(800, 2, 19);
+    let run = |budget_mb: Option<usize>| {
+        let mut c = cfg();
+        c.machines = 4;
+        c.method = CombineMethod::Pairwise;
+        c.draw_spill_budget_mb = budget_mb;
+        c.chunk_rows = 7;
+        run_native(&c, &data).unwrap()
+    };
+    let dense = run(None);
+    let spill = run(Some(0));
+    assert!(spill.metrics.draw_spilled_bytes > 0);
+    assert_eq!(dense.combined.as_slice(), spill.combined.as_slice());
+}
+
+/// Budget edges on the store itself: a budget exactly equal to the
+/// sealed bytes keeps everything resident; one byte less spills
+/// exactly one chunk (the coldest). The tail never spills.
+#[test]
+fn budget_edge_spills_exactly_one_chunk() {
+    let rows: Vec<[f64; 2]> =
+        (0..12).map(|i| [i as f64, 0.5 * i as f64]).collect();
+    let fill = |budget: usize| {
+        let mut store = DrawStore::with_config(
+            2,
+            DrawStoreConfig {
+                chunk_rows: 4,
+                spill_budget_bytes: Some(budget),
+            },
+        );
+        for r in &rows {
+            store.push(r).unwrap();
+        }
+        store
+    };
+    // 12 rows × dim 2 → 3 sealed chunks of 64 bytes each, empty tail.
+    let exact = fill(192);
+    assert_eq!(exact.stats().spilled_bytes, 0);
+    assert_eq!(exact.stats().resident_bytes, 192);
+    let under = fill(191);
+    assert_eq!(under.stats().spilled_bytes, 64, "exactly one chunk");
+    assert_eq!(under.stats().resident_bytes, 128);
+    for store in [&exact, &under] {
+        let back = store.to_matrix().unwrap();
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(back.row(i), r);
+        }
+    }
+}
+
+/// Non-finite draws (NaN with a nonstandard payload, ±Inf, -0.0,
+/// subnormals) must survive the spill round-trip bit-exactly — the
+/// disk segments are raw little-endian f64, not a lossy text format.
+#[test]
+fn nonfinite_payloads_survive_spill_bit_exactly() {
+    let weird = [
+        f64::from_bits(0x7ff8_dead_beef_cafe),
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        -0.0,
+        f64::MIN_POSITIVE / 4.0,
+        f64::MAX,
+    ];
+    let mut store = DrawStore::with_config(
+        3,
+        DrawStoreConfig { chunk_rows: 1, spill_budget_bytes: Some(0) },
+    );
+    store.push_rows(&weird).unwrap();
+    assert_eq!(store.stats().spilled_bytes, 2 * 3 * 8);
+    let back = store.to_matrix().unwrap();
+    let got: Vec<u64> = back.as_slice().iter().map(|v| v.to_bits()).collect();
+    let want: Vec<u64> = weird.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(got, want, "spill must be bit-exact for non-finite values");
+}
