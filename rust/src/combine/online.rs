@@ -126,6 +126,27 @@ impl OnlineCombiner {
         Ok(())
     }
 
+    /// Discard everything received from `machine` — draw store and
+    /// moment accumulator — returning how many rows were dropped. The
+    /// fault-tolerant scheduler calls this before re-dispatching a
+    /// failed shard: every machine's RNG stream is `root.split(m)`, so
+    /// the retried run regenerates the discarded prefix bit-identically
+    /// and the combine stage never sees duplicate or partial draws.
+    pub fn reset_machine(&mut self, machine: usize) -> Result<usize> {
+        if machine >= self.buffers.len() {
+            return Err(Error::Config(format!(
+                "machine {machine} out of range ({})",
+                self.buffers.len()
+            )));
+        }
+        let cfg = *self.buffers[machine].config();
+        let dropped = self.buffers[machine].len();
+        self.buffers[machine] = DrawStore::with_config(self.dim, cfg);
+        self.moments[machine] = RunningMoments::new(self.dim);
+        self.total_received -= dropped;
+        Ok(dropped)
+    }
+
     /// Aggregate memory accounting across every machine's draw store:
     /// resident and spilled payload bytes, plus the (conservatively
     /// summed) peak — the pipeline summary's `draw_peak_bytes` /
@@ -374,6 +395,52 @@ mod tests {
         assert_eq!(oc.min_buffer_len(), 0);
         oc.push_rows(0, &[1.0, 2.0, 3.0, 4.0]).unwrap();
         assert_eq!(oc.total_received(), 2);
+    }
+
+    /// Reset-then-refeed is indistinguishable from never having
+    /// failed: the combined draws (both moment-based and buffer-based
+    /// paths) are byte-identical, which is the correctness core of the
+    /// shard-retry scheduler.
+    #[test]
+    fn reset_then_refeed_matches_never_failed() {
+        let mut rng = Pcg64::seed_from(13);
+        let streams: Vec<Vec<f64>> = [0.6, 1.4]
+            .iter()
+            .map(|&mu| (0..200).map(|_| mu + rng.normal()).collect())
+            .collect();
+        let mut clean = OnlineCombiner::new(2, 1);
+        for (m, draws) in streams.iter().enumerate() {
+            for &v in draws {
+                clean.push(m, &[v]).unwrap();
+            }
+        }
+        // Faulted replica: machine 1 delivers a partial stream, dies,
+        // is reset, then replays its full stream from the start.
+        let mut faulted = OnlineCombiner::new(2, 1);
+        for &v in &streams[0] {
+            faulted.push(0, &[v]).unwrap();
+        }
+        for &v in &streams[1][..77] {
+            faulted.push(1, &[v]).unwrap();
+        }
+        assert_eq!(faulted.reset_machine(1).unwrap(), 77);
+        assert_eq!(faulted.total_received(), 200);
+        assert_eq!(faulted.min_buffer_len(), 0);
+        for &v in &streams[1] {
+            faulted.push(1, &[v]).unwrap();
+        }
+        assert_eq!(faulted.total_received(), clean.total_received());
+        let a = clean.parametric_draws(100, 5).unwrap();
+        let b = faulted.parametric_draws(100, 5).unwrap();
+        assert_eq!(a.as_slice(), b.as_slice(), "moments diverged");
+        let a = clean
+            .combined_draws(CombineMethod::Semiparametric, 300, 8)
+            .unwrap();
+        let b = faulted
+            .combined_draws(CombineMethod::Semiparametric, 300, 8)
+            .unwrap();
+        assert_eq!(a.as_slice(), b.as_slice(), "buffers diverged");
+        assert!(faulted.reset_machine(9).is_err());
     }
 
     #[test]

@@ -13,6 +13,42 @@ use crate::kernel::CombineKernelKind;
 use crate::sampler::SamplerKind;
 use std::collections::BTreeMap;
 
+/// What the pipeline scheduler does when a worker stream fails
+/// (process death, bad frame, remote error, liveness expiry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FailurePolicy {
+    /// Abort the whole run on the first failure (the historical
+    /// behavior): cancel every in-flight worker, surface the first
+    /// error.
+    #[default]
+    Failfast,
+    /// Discard the failed machine's partial rows, requeue its shard,
+    /// and re-dispatch — quarantining endpoints that fail repeatedly.
+    /// Safe because worker RNG streams are endpoint-independent
+    /// (`root.split(m)`): a retried shard reproduces bit-identical
+    /// draws, so retained draws match an unfaulted run byte-for-byte.
+    Retry,
+}
+
+impl FailurePolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "failfast" => Ok(FailurePolicy::Failfast),
+            "retry" => Ok(FailurePolicy::Retry),
+            other => Err(Error::Config(format!(
+                "unknown failure_policy '{other}' (expected failfast | retry)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FailurePolicy::Failfast => "failfast",
+            FailurePolicy::Retry => "retry",
+        }
+    }
+}
+
 /// Full configuration of an embarrassingly-parallel MCMC run.
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
@@ -123,6 +159,31 @@ pub struct PipelineConfig {
     /// byte-identical at any value — the budget trades memory for
     /// segment-file I/O, never results.
     pub draw_spill_budget_mb: Option<usize>,
+    /// Scheduler response to worker failures (`failure_policy` key /
+    /// `--failure-policy`): `failfast` (default) aborts the run;
+    /// `retry` re-dispatches failed shards with backoff and endpoint
+    /// quarantine. Retained draws are byte-identical either way a run
+    /// completes — retried RNG streams are endpoint-independent.
+    pub failure_policy: FailurePolicy,
+    /// Re-dispatch attempts per machine beyond the first under
+    /// `failure_policy = retry` (`--max-retries`). Default 2.
+    pub max_retries: usize,
+    /// Worker heartbeat interval in seconds (`heartbeat_secs` key /
+    /// `--heartbeat-secs`; `0` = disabled). Carried to workers in the
+    /// manifest, so old daemons that ignore it simply never beacon —
+    /// the leader only requires *some* frame per liveness window.
+    pub heartbeat_secs: usize,
+    /// Leader-side liveness deadline in seconds
+    /// (`liveness_timeout_secs` key / `--liveness-timeout-secs`; `0` =
+    /// disabled): a socket worker that produces no frame (draw or
+    /// heartbeat) for this long is declared dead instead of hanging
+    /// the endpoint loop. Must exceed `heartbeat_secs` when both are
+    /// set.
+    pub liveness_timeout_secs: usize,
+    /// Socket dial timeout in seconds (`connect_timeout_secs` key /
+    /// `--connect-timeout-secs`; zero is rejected at parse).
+    /// Default 30.
+    pub connect_timeout_secs: usize,
 }
 
 impl PipelineConfig {
@@ -228,8 +289,29 @@ impl PipelineConfig {
                 Error::Parse(format!("bad usize for draw_spill_budget_mb: {v}"))
             })?),
         };
+        if let Some(v) = get("failure_policy") {
+            b.failure_policy = FailurePolicy::parse(&v)?;
+        }
+        b.max_retries = parse_usize("max_retries", b.max_retries)?;
+        b.heartbeat_secs =
+            parse_usize("heartbeat_secs", b.heartbeat_secs)?;
+        b.liveness_timeout_secs = parse_usize(
+            "liveness_timeout_secs",
+            b.liveness_timeout_secs,
+        )?;
+        b.connect_timeout_secs = parse_usize(
+            "connect_timeout_secs",
+            b.connect_timeout_secs,
+        )?;
         // Degenerate knobs are rejected here, with the key named, rather
         // than silently clamped or left to panic deep in the draw plane.
+        if b.connect_timeout_secs == 0 {
+            return Err(Error::Config(
+                "connect_timeout_secs must be >= 1 (got 0); \
+                 a zero dial timeout can never connect"
+                    .into(),
+            ));
+        }
         if b.draw_batch == 0 {
             return Err(Error::Config(
                 "draw_batch must be >= 1 (got 0)".into(),
@@ -329,6 +411,11 @@ pub struct PipelineConfigBuilder {
     draw_batch: usize,
     chunk_rows: usize,
     draw_spill_budget_mb: Option<usize>,
+    failure_policy: FailurePolicy,
+    max_retries: usize,
+    heartbeat_secs: usize,
+    liveness_timeout_secs: usize,
+    connect_timeout_secs: usize,
 }
 
 impl PipelineConfigBuilder {
@@ -360,6 +447,11 @@ impl PipelineConfigBuilder {
             draw_batch: 64,
             chunk_rows: crate::data::store::DEFAULT_CHUNK_ROWS,
             draw_spill_budget_mb: None,
+            failure_policy: FailurePolicy::Failfast,
+            max_retries: 2,
+            heartbeat_secs: 0,
+            liveness_timeout_secs: 0,
+            connect_timeout_secs: 30,
         }
     }
 
@@ -507,6 +599,41 @@ impl PipelineConfigBuilder {
         self
     }
 
+    /// Scheduler failure policy — see
+    /// `PipelineConfig::failure_policy`.
+    pub fn failure_policy(mut self, p: FailurePolicy) -> Self {
+        self.failure_policy = p;
+        self
+    }
+
+    /// Retry budget per machine under the retry policy — see
+    /// `PipelineConfig::max_retries`.
+    pub fn max_retries(mut self, n: usize) -> Self {
+        self.max_retries = n;
+        self
+    }
+
+    /// Worker heartbeat interval in seconds (`0` = disabled) — see
+    /// `PipelineConfig::heartbeat_secs`.
+    pub fn heartbeat_secs(mut self, s: usize) -> Self {
+        self.heartbeat_secs = s;
+        self
+    }
+
+    /// Leader liveness deadline in seconds (`0` = disabled) — see
+    /// `PipelineConfig::liveness_timeout_secs`.
+    pub fn liveness_timeout_secs(mut self, s: usize) -> Self {
+        self.liveness_timeout_secs = s;
+        self
+    }
+
+    /// Socket dial timeout in seconds (clamped to ≥ 1) — see
+    /// `PipelineConfig::connect_timeout_secs`.
+    pub fn connect_timeout_secs(mut self, s: usize) -> Self {
+        self.connect_timeout_secs = s;
+        self
+    }
+
     pub fn artifact_dir(mut self, d: &str) -> Self {
         self.artifact_dir = d.to_string();
         self
@@ -548,6 +675,11 @@ impl PipelineConfigBuilder {
             draw_batch: self.draw_batch.max(1),
             chunk_rows: self.chunk_rows.max(1),
             draw_spill_budget_mb: self.draw_spill_budget_mb,
+            failure_policy: self.failure_policy,
+            max_retries: self.max_retries,
+            heartbeat_secs: self.heartbeat_secs,
+            liveness_timeout_secs: self.liveness_timeout_secs,
+            connect_timeout_secs: self.connect_timeout_secs.max(1),
         }
     }
 }
@@ -731,6 +863,47 @@ mod tests {
         .is_err());
         assert!(PipelineConfig::from_str_cfg(
             "model = gaussian\ncombine_cache_budget_mb = lots\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn cfg_file_resilience_keys() {
+        let c = PipelineConfig::from_str_cfg(
+            "model = gaussian\n\
+             failure_policy = retry\n\
+             max_retries = 5\n\
+             heartbeat_secs = 2\n\
+             liveness_timeout_secs = 10\n\
+             connect_timeout_secs = 3\n",
+        )
+        .unwrap();
+        assert_eq!(c.failure_policy, FailurePolicy::Retry);
+        assert_eq!(c.max_retries, 5);
+        assert_eq!(c.heartbeat_secs, 2);
+        assert_eq!(c.liveness_timeout_secs, 10);
+        assert_eq!(c.connect_timeout_secs, 3);
+        // Defaults: fail-fast, 2 retries held in reserve, heartbeats
+        // and liveness off, the historical 30 s dial timeout.
+        let c = PipelineConfig::from_str_cfg("model = gaussian\n").unwrap();
+        assert_eq!(c.failure_policy, FailurePolicy::Failfast);
+        assert_eq!(c.max_retries, 2);
+        assert_eq!(c.heartbeat_secs, 0);
+        assert_eq!(c.liveness_timeout_secs, 0);
+        assert_eq!(c.connect_timeout_secs, 30);
+        // Bad values are structured errors naming the key.
+        let err = PipelineConfig::from_str_cfg(
+            "model = gaussian\nfailure_policy = shrug\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("failure_policy"), "{err}");
+        let err = PipelineConfig::from_str_cfg(
+            "model = gaussian\nconnect_timeout_secs = 0\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("connect_timeout_secs"), "{err}");
+        assert!(PipelineConfig::from_str_cfg(
+            "model = gaussian\nmax_retries = some\n"
         )
         .is_err());
     }

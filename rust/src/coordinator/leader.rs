@@ -21,6 +21,12 @@ use crate::types::{DrawStoreConfig, DrawStoreStats, SampleMatrix};
 pub enum LeaderMsg {
     Draw(DrawMsg),
     Chunk(DrawChunk),
+    /// A scheduler thread observed machine `machine`'s stream fail and
+    /// is about to re-dispatch it: discard every row received so far.
+    /// Each machine has exactly one live sender at a time, so on the
+    /// leader's FIFO channel a Reset always lands after the failed
+    /// attempt's partial traffic and before the retry's.
+    Reset { machine: usize },
 }
 
 /// Leader-side stream consumer.
@@ -173,14 +179,50 @@ impl Leader {
     /// worker has sent its final message (or the channel closes).
     pub fn drain_stream(&mut self, rx: &Receiver<LeaderMsg>) -> Result<()> {
         for msg in rx.iter() {
-            match msg {
-                LeaderMsg::Draw(d) => self.ingest(&d)?,
-                LeaderMsg::Chunk(c) => self.ingest_chunk(&c)?,
-            }
+            self.ingest_msg(msg)?;
             if self.all_finished() {
                 break;
             }
         }
+        Ok(())
+    }
+
+    /// Drain a mixed stream until the channel closes, with no
+    /// `all_finished` early exit. The retry scheduler needs this
+    /// variant: under `--failure-policy retry` a machine can finish,
+    /// then a *different* machine's failure arrives, so "all finished"
+    /// is not a stable condition until every sender is gone — exiting
+    /// early would strand Reset messages in the channel and ingest a
+    /// retried stream on top of the failed prefix.
+    pub fn drain_stream_all(
+        &mut self,
+        rx: &Receiver<LeaderMsg>,
+    ) -> Result<()> {
+        for msg in rx.iter() {
+            self.ingest_msg(msg)?;
+        }
+        Ok(())
+    }
+
+    /// Dispatch one [`LeaderMsg`] to the right ingest path.
+    pub fn ingest_msg(&mut self, msg: LeaderMsg) -> Result<()> {
+        match msg {
+            LeaderMsg::Draw(d) => self.ingest(&d),
+            LeaderMsg::Chunk(c) => self.ingest_chunk(&c),
+            LeaderMsg::Reset { machine } => self.reset_machine(machine),
+        }
+    }
+
+    /// Discard everything received from `machine` (draw rows, moments,
+    /// scalar accounting, completion flag) ahead of a shard retry.
+    /// Because worker RNG streams are endpoint-independent
+    /// (`root.split(m)`), the re-dispatched shard regenerates the
+    /// discarded prefix bit-identically — this is what keeps retried
+    /// runs byte-identical to unfaulted ones.
+    pub fn reset_machine(&mut self, machine: usize) -> Result<()> {
+        let dropped = self.combiner.reset_machine(machine)?;
+        self.scalars_received -= dropped * self.combiner.dim();
+        self.finished[machine] = false;
         Ok(())
     }
 
@@ -399,6 +441,57 @@ mod tests {
         let b =
             spill.draws(CombineMethod::Semiparametric, 300, 5).unwrap();
         assert_eq!(a.as_slice(), b.as_slice());
+    }
+
+    /// An in-band Reset discards the failed attempt's partial rows and
+    /// completion flag; replaying the full stream afterwards leaves the
+    /// leader indistinguishable from one that never saw the failure.
+    #[test]
+    fn reset_then_replay_matches_unfaulted_leader() {
+        use std::sync::mpsc::channel;
+        let stream: Vec<DrawMsg> =
+            (0..8).map(|i| msg(0, i as f64, i == 7)).collect();
+        let mut clean = Leader::new(1, 1);
+        for d in &stream {
+            clean.ingest(d).unwrap();
+        }
+        let (tx, rx) = channel();
+        // Failed attempt: 5 draws land (one even flagged last), then
+        // the scheduler resets and the retry replays from the top.
+        for d in &stream[..5] {
+            tx.send(LeaderMsg::Draw(d.clone())).unwrap();
+        }
+        tx.send(LeaderMsg::Reset { machine: 0 }).unwrap();
+        for d in &stream {
+            tx.send(LeaderMsg::Draw(d.clone())).unwrap();
+        }
+        drop(tx);
+        let mut retried = Leader::new(1, 1);
+        retried.drain_stream_all(&rx).unwrap();
+        assert!(retried.all_finished());
+        assert_eq!(
+            retried.combiner().total_received(),
+            clean.combiner().total_received()
+        );
+        assert_eq!(retried.scalars_received, clean.scalars_received);
+        let a = clean.draws(CombineMethod::Parametric, 32, 7).unwrap();
+        let b = retried.draws(CombineMethod::Parametric, 32, 7).unwrap();
+        assert_eq!(a.as_slice(), b.as_slice());
+        assert!(retried.reset_machine(3).is_err());
+    }
+
+    /// `drain_stream` (fail-fast path) still early-exits on completion;
+    /// a Reset mid-stream un-finishes the machine so the early exit
+    /// cannot fire between a failure and its retry.
+    #[test]
+    fn reset_unfinishes_a_completed_machine() {
+        let mut leader = Leader::new(1, 1);
+        leader.ingest(&msg(0, 1.0, true)).unwrap();
+        assert!(leader.all_finished());
+        leader.reset_machine(0).unwrap();
+        assert!(!leader.all_finished());
+        assert_eq!(leader.scalars_received, 0);
+        assert_eq!(leader.combiner().total_received(), 0);
     }
 
     #[test]

@@ -25,6 +25,17 @@ pub struct RunMetrics {
     /// Draw-plane bytes spilled to disk at combine time (`0` when no
     /// spill budget is configured).
     pub draw_spilled_bytes: usize,
+    /// Shards re-dispatched after a worker failure (`--failure-policy
+    /// retry`); `0` under fail-fast or a clean run.
+    pub shard_retries: usize,
+    /// Endpoints benched after repeated failures; the job finished on
+    /// the surviving pool.
+    pub endpoints_quarantined: usize,
+    /// Liveness deadlines that expired (no draw or heartbeat frame
+    /// within `--liveness-timeout-secs`) — each counts a wedged or
+    /// partitioned peer the deadline converted into a schedulable
+    /// failure.
+    pub heartbeats_missed: usize,
 }
 
 impl RunMetrics {
@@ -72,10 +83,17 @@ impl fmt::Display for RunMetrics {
             "scalars={} combine_secs={:.3} total_secs={:.3}",
             self.scalars_transferred, self.combine_secs, self.total_secs
         )?;
-        write!(
+        writeln!(
             f,
             "draw_peak_bytes={} draw_spilled_bytes={}",
             self.draw_peak_bytes, self.draw_spilled_bytes
+        )?;
+        write!(
+            f,
+            "shard_retries={} endpoints_quarantined={} heartbeats_missed={}",
+            self.shard_retries,
+            self.endpoints_quarantined,
+            self.heartbeats_missed
         )
     }
 }
@@ -97,6 +115,9 @@ mod tests {
             total_secs: 4.0,
             draw_peak_bytes: 480,
             draw_spilled_bytes: 320,
+            shard_retries: 2,
+            endpoints_quarantined: 1,
+            heartbeats_missed: 3,
         };
         assert!((m.mean_accept_rate() - 0.7).abs() < 1e-12);
         assert!((m.max_worker_secs() - 3.0).abs() < 1e-12);
@@ -105,6 +126,9 @@ mod tests {
         assert!(s.contains("machines=2"));
         assert!(s.contains("draw_peak_bytes=480"));
         assert!(s.contains("draw_spilled_bytes=320"));
+        assert!(s.contains("shard_retries=2"));
+        assert!(s.contains("endpoints_quarantined=1"));
+        assert!(s.contains("heartbeats_missed=3"));
     }
 
     #[test]

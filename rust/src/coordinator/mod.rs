@@ -31,4 +31,6 @@ pub use pipeline::{
     run_native, run_process, run_with_transport, PipelineOutput, RunDir,
 };
 pub use timing::ClusterTiming;
-pub use transport::{PipeTransport, SocketTransport, Transport};
+pub use transport::{
+    FaultInjector, FaultSpec, PipeTransport, SocketTransport, Transport,
+};

@@ -13,20 +13,21 @@
 //! retained draws are byte-identical for the same config regardless of
 //! worker count W, assignment order, or transport.
 
+use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::combine;
-use crate::config::{self, PipelineConfig};
+use crate::config::{self, FailurePolicy, PipelineConfig};
 use crate::coordinator::metrics::RunMetrics;
 use crate::coordinator::partition::Partitioner;
 use crate::coordinator::timing::ClusterTiming;
 use crate::coordinator::transport::{
     PipeTransport, SocketTransport, Transport, WireMsg, WorkerManifest,
-    WorkerSummary,
+    WorkerSummary, LIVENESS_EXPIRED_MARKER,
 };
 use crate::coordinator::worker::{run_worker, DrawMsg};
 use crate::coordinator::{Leader, LeaderMsg};
@@ -239,8 +240,25 @@ fn validate_combine_backend(cfg: &PipelineConfig) -> Result<()> {
 /// against real child processes and real localhost daemons.
 pub fn run_process(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutput> {
     if !cfg.workers.is_empty() {
+        if cfg.liveness_timeout_secs > 0
+            && cfg.heartbeat_secs > 0
+            && cfg.liveness_timeout_secs <= cfg.heartbeat_secs
+        {
+            return Err(Error::Config(format!(
+                "liveness_timeout_secs ({}) must exceed heartbeat_secs \
+                 ({}) — a deadline no longer than the beacon interval \
+                 declares healthy workers dead",
+                cfg.liveness_timeout_secs, cfg.heartbeat_secs
+            )));
+        }
         let mut transport = SocketTransport::from_spec(&cfg.workers)?
-            .with_inline_shards(cfg.shard_inline);
+            .with_inline_shards(cfg.shard_inline)
+            .with_connect_timeout(Duration::from_secs(
+                cfg.connect_timeout_secs as u64,
+            ))
+            .with_read_deadline((cfg.liveness_timeout_secs > 0).then(
+                || Duration::from_secs(cfg.liveness_timeout_secs as u64),
+            ));
         if cfg.max_frame_bytes != 0 {
             transport =
                 transport.with_max_frame_bytes(cfg.max_frame_bytes);
@@ -332,6 +350,11 @@ pub fn run_with_transport(
             // streams JSON, which the leader accepts frame-by-frame.
             wire_format: cfg.wire_format,
             draw_batch: cfg.draw_batch,
+            // Manifest-negotiated heartbeats: a worker that predates
+            // RPHB beacons ignores the field and never beacons, which
+            // is only fatal if the leader also armed a liveness
+            // deadline — exactly the contract the knobs document.
+            heartbeat_secs: cfg.heartbeat_secs,
         };
         let manifest_path = run_dir.path().join(format!("worker_{m}.json"));
         manifest.save(&manifest_path)?;
@@ -350,66 +373,240 @@ pub fn run_with_transport(
     // to surface.
     let root_err: Mutex<Option<Error>> = Mutex::new(None);
     let abort = AtomicBool::new(false);
-    let next_machine = AtomicUsize::new(0);
     let mut leader =
         Leader::with_store_config(cfg.machines, dim, store_config(cfg));
     leader.set_combine_threads(cfg.combine_threads);
     leader.set_combine_cache_budget(cache_budget_bytes(cfg));
     leader.set_combine_kernel(cfg.combine_backend);
-    let drained = std::thread::scope(|scope| -> Result<()> {
-        for slot in 0..slots {
-            let tx = tx.clone();
-            let manifests = &manifests;
-            let manifest_paths = &manifest_paths;
-            let results = &results;
-            let root_err = &root_err;
-            let abort = &abort;
-            let next_machine = &next_machine;
-            scope.spawn(move || {
-                // One endpoint's assignment loop: pull queued machines
-                // until the queue is empty or the run is aborted.
-                while !abort.load(Ordering::SeqCst) {
-                    let m = next_machine.fetch_add(1, Ordering::SeqCst);
-                    if m >= manifests.len() {
-                        break;
-                    }
-                    match run_assignment(
-                        transport,
-                        slot,
-                        &manifests[m],
-                        &manifest_paths[m],
-                        dim,
-                        &tx,
-                    ) {
-                        Ok(out) => {
-                            results.lock().unwrap()[m] = Some(out);
-                        }
-                        Err(e) => {
-                            {
-                                let mut first = root_err.lock().unwrap();
-                                if first.is_none() {
-                                    *first = Some(e);
+    // Resilience accounting, stamped onto the metrics after the run.
+    let retries = AtomicUsize::new(0);
+    let quarantines = AtomicUsize::new(0);
+    let missed = AtomicUsize::new(0);
+    let drained = match cfg.failure_policy {
+        FailurePolicy::Failfast => {
+            let next_machine = AtomicUsize::new(0);
+            std::thread::scope(|scope| -> Result<()> {
+                for slot in 0..slots {
+                    let tx = tx.clone();
+                    let manifests = &manifests;
+                    let manifest_paths = &manifest_paths;
+                    let results = &results;
+                    let root_err = &root_err;
+                    let abort = &abort;
+                    let next_machine = &next_machine;
+                    scope.spawn(move || {
+                        // One endpoint's assignment loop: pull queued
+                        // machines until the queue is empty or the run
+                        // is aborted.
+                        while !abort.load(Ordering::SeqCst) {
+                            let m =
+                                next_machine.fetch_add(1, Ordering::SeqCst);
+                            if m >= manifests.len() {
+                                break;
+                            }
+                            match run_assignment(
+                                transport,
+                                slot,
+                                &manifests[m],
+                                &manifest_paths[m],
+                                dim,
+                                &tx,
+                            ) {
+                                Ok(out) => {
+                                    results.lock().unwrap()[m] = Some(out);
+                                }
+                                Err(e) => {
+                                    // Fail fast: kill every in-flight
+                                    // sibling (pipe children die
+                                    // outright; socket daemons abort at
+                                    // their next failed draw write)
+                                    // instead of letting healthy
+                                    // workers finish a doomed run.
+                                    // Their threads surface secondary
+                                    // errors, but first-write-wins
+                                    // keeps this one as the root cause.
+                                    fail_run(root_err, abort, transport, e);
+                                    break;
                                 }
                             }
-                            abort.store(true, Ordering::SeqCst);
-                            // Fail fast: kill every in-flight sibling
-                            // (pipe children die outright; socket
-                            // daemons abort at their next draw write)
-                            // instead of letting healthy workers finish
-                            // a doomed run. Their threads surface
-                            // secondary errors, but first-write-wins
-                            // keeps this one as the root cause.
-                            transport.cancel_all();
+                        }
+                    });
+                }
+                drop(tx);
+                leader.drain_stream(&rx)?;
+                Ok(())
+            })
+        }
+        FailurePolicy::Retry => {
+            let max_attempts = cfg.max_retries.saturating_add(1);
+            // Requeueable work: failed machines go to the back after
+            // their partial rows are reset, so surviving endpoints pick
+            // them up.
+            let pending: Mutex<VecDeque<usize>> =
+                Mutex::new((0..cfg.machines).collect());
+            let attempts: Mutex<Vec<usize>> =
+                Mutex::new(vec![0; cfg.machines]);
+            let slot_failures: Mutex<Vec<usize>> =
+                Mutex::new(vec![0; slots]);
+            // Every failed attempt, endpoint and cause included — the
+            // structured diagnostic when the run ultimately fails.
+            let attempt_log: Mutex<Vec<String>> = Mutex::new(Vec::new());
+            let live_endpoints = AtomicUsize::new(slots);
+            let completed = AtomicUsize::new(0);
+            std::thread::scope(|scope| -> Result<()> {
+                for slot in 0..slots {
+                    let tx = tx.clone();
+                    let manifests = &manifests;
+                    let manifest_paths = &manifest_paths;
+                    let results = &results;
+                    let root_err = &root_err;
+                    let abort = &abort;
+                    let pending = &pending;
+                    let attempts = &attempts;
+                    let slot_failures = &slot_failures;
+                    let attempt_log = &attempt_log;
+                    let live_endpoints = &live_endpoints;
+                    let completed = &completed;
+                    let retries = &retries;
+                    let quarantines = &quarantines;
+                    let missed = &missed;
+                    scope.spawn(move || loop {
+                        if abort.load(Ordering::SeqCst) {
                             break;
                         }
-                    }
+                        let m = pending.lock().unwrap().pop_front();
+                        let Some(m) = m else {
+                            // Queue empty but machines may still be in
+                            // flight on other endpoints — and a flight
+                            // can fail and requeue, so idle endpoints
+                            // poll instead of exiting.
+                            if completed.load(Ordering::SeqCst)
+                                >= cfg.machines
+                            {
+                                break;
+                            }
+                            std::thread::sleep(Duration::from_millis(10));
+                            continue;
+                        };
+                        let attempt = {
+                            let mut a = attempts.lock().unwrap();
+                            a[m] += 1;
+                            a[m]
+                        };
+                        match run_assignment(
+                            transport,
+                            slot,
+                            &manifests[m],
+                            &manifest_paths[m],
+                            dim,
+                            &tx,
+                        ) {
+                            Ok(out) => {
+                                results.lock().unwrap()[m] = Some(out);
+                                completed.fetch_add(1, Ordering::SeqCst);
+                            }
+                            Err(e) => {
+                                if e.to_string()
+                                    .contains(LIVENESS_EXPIRED_MARKER)
+                                {
+                                    missed.fetch_add(1, Ordering::SeqCst);
+                                }
+                                attempt_log.lock().unwrap().push(format!(
+                                    "machine {m} attempt \
+                                     {attempt}/{max_attempts} on endpoint \
+                                     {slot}: {e}"
+                                ));
+                                // Discard the failed attempt's partial
+                                // rows before any retry traffic can
+                                // land behind them. This machine has
+                                // exactly one live sender (this
+                                // thread), so on the leader's FIFO
+                                // channel the Reset is ordered after
+                                // the partial stream and before the
+                                // retry's.
+                                let _ = tx
+                                    .send(LeaderMsg::Reset { machine: m });
+                                if attempt >= max_attempts {
+                                    fail_run(
+                                        root_err,
+                                        abort,
+                                        transport,
+                                        Error::Runtime(format!(
+                                            "machine {m}: retries \
+                                             exhausted after \
+                                             {max_attempts} attempts:\n  {}",
+                                            attempt_log
+                                                .lock()
+                                                .unwrap()
+                                                .join("\n  ")
+                                        )),
+                                    );
+                                    break;
+                                }
+                                retries.fetch_add(1, Ordering::SeqCst);
+                                let quarantine_now = {
+                                    let mut sf =
+                                        slot_failures.lock().unwrap();
+                                    sf[slot] += 1;
+                                    sf[slot] >= QUARANTINE_AFTER
+                                };
+                                // Capped exponential backoff on the
+                                // failing endpoint; the shard requeues
+                                // after the sleep so a healthy sibling
+                                // is not held up waiting on it.
+                                let backoff_ms = (RETRY_BACKOFF_BASE_MS
+                                    << (attempt - 1).min(4))
+                                .min(RETRY_BACKOFF_CAP_MS);
+                                std::thread::sleep(Duration::from_millis(
+                                    backoff_ms,
+                                ));
+                                pending.lock().unwrap().push_back(m);
+                                if quarantine_now {
+                                    quarantines
+                                        .fetch_add(1, Ordering::SeqCst);
+                                    if live_endpoints
+                                        .fetch_sub(1, Ordering::SeqCst)
+                                        == 1
+                                    {
+                                        // This was the last live
+                                        // endpoint and it just failed a
+                                        // machine, so work is
+                                        // outstanding with nowhere to
+                                        // run it.
+                                        fail_run(
+                                            root_err,
+                                            abort,
+                                            transport,
+                                            Error::Runtime(format!(
+                                                "all {slots} worker \
+                                                 endpoints quarantined \
+                                                 after repeated \
+                                                 failures:\n  {}",
+                                                attempt_log
+                                                    .lock()
+                                                    .unwrap()
+                                                    .join("\n  ")
+                                            )),
+                                        );
+                                    }
+                                    break;
+                                }
+                            }
+                        }
+                    });
                 }
-            });
+                drop(tx);
+                // No `all_finished` early exit here: under retry a
+                // machine can finish and *then* a sibling's failure
+                // arrives, so completion is not stable until every
+                // sender is gone — exiting early would strand Reset
+                // messages and land a retried stream on top of the
+                // failed prefix.
+                leader.drain_stream_all(&rx)?;
+                Ok(())
+            })
         }
-        drop(tx);
-        leader.drain_stream(&rx)?;
-        Ok(())
-    });
+    };
     drained?;
     if let Some(e) = root_err.into_inner().unwrap() {
         return Err(e);
@@ -429,8 +626,39 @@ pub fn run_with_transport(
         t0,
         Some(&leader),
     )?;
+    out.metrics.shard_retries = retries.load(Ordering::SeqCst);
+    out.metrics.endpoints_quarantined = quarantines.load(Ordering::SeqCst);
+    out.metrics.heartbeats_missed = missed.load(Ordering::SeqCst);
     out.run_dir = Some(run_dir);
     Ok(out)
+}
+
+/// Total failures after which an endpoint is benched under the retry
+/// policy: the job proceeds on the surviving pool and the endpoint is
+/// never dialed again this run.
+const QUARANTINE_AFTER: usize = 2;
+
+/// Capped exponential backoff before a failed shard requeues:
+/// `base · 2^(attempt-1)`, capped.
+const RETRY_BACKOFF_BASE_MS: u64 = 100;
+const RETRY_BACKOFF_CAP_MS: u64 = 2_000;
+
+/// Record `e` as the run's root cause (first writer wins), flag the
+/// abort, and cancel every in-flight worker through the transport.
+fn fail_run(
+    root_err: &Mutex<Option<Error>>,
+    abort: &AtomicBool,
+    transport: &dyn Transport,
+    e: Error,
+) {
+    {
+        let mut first = root_err.lock().unwrap();
+        if first.is_none() {
+            *first = Some(e);
+        }
+    }
+    abort.store(true, Ordering::SeqCst);
+    transport.cancel_all();
 }
 
 /// Execute one manifest on one transport endpoint: open the
@@ -512,6 +740,15 @@ fn run_assignment(
                 return Err(Error::Runtime(format!(
                     "worker {from}: remote failure: {message}"
                 )));
+            }
+            WireMsg::Heartbeat { machine: from } => {
+                if from != machine {
+                    return Err(Error::Runtime(format!(
+                        "worker {machine}: heartbeat for machine {from}"
+                    )));
+                }
+                // Liveness beacon only: its arrival already reset the
+                // socket read deadline; nothing lands.
             }
         }
     }
@@ -615,6 +852,12 @@ fn finish_run(
         total_secs: t0.elapsed().as_secs_f64(),
         draw_peak_bytes: draw_stats.peak_resident_bytes,
         draw_spilled_bytes: draw_stats.spilled_bytes,
+        // Resilience counters are owned by the transport scheduler,
+        // which stamps them after this returns; thread/sequential runs
+        // have no endpoints to retry or quarantine.
+        shard_retries: 0,
+        endpoints_quarantined: 0,
+        heartbeats_missed: 0,
     };
     Ok(PipelineOutput {
         subposteriors,
@@ -896,15 +1139,18 @@ mod tests {
     use crate::coordinator::transport::{
         Transport, WireMsg, WorkerConnection, WorkerSummary,
     };
-    use std::collections::VecDeque;
 
-    /// Per-machine scripted wire streams, taken once each.
-    type ScriptedStreams = Mutex<Vec<Option<Vec<WireMsg>>>>;
+    /// Per-machine queues of scripted attempt streams: each `connect`
+    /// for a machine pops its next stream, so a retried shard replays
+    /// the next scripted attempt. Popping an empty queue — a machine
+    /// assigned more times than scripted — is a test bug and panics.
+    type ScriptedStreams = Mutex<Vec<VecDeque<Vec<WireMsg>>>>;
 
     /// In-memory transport: each machine's wire stream is scripted.
     /// Exercises the oversubscription scheduler without spawning
     /// processes (the real endpoints are covered by the
-    /// `process_pipeline` / `socket_pipeline` integration tests).
+    /// `process_pipeline` / `socket_pipeline` / `fault_injection`
+    /// integration tests).
     struct MockTransport {
         slots: usize,
         streams: ScriptedStreams,
@@ -912,10 +1158,22 @@ mod tests {
 
     impl MockTransport {
         fn new(slots: usize, streams: Vec<Vec<WireMsg>>) -> MockTransport {
+            MockTransport::with_attempts(
+                slots,
+                streams.into_iter().map(|s| vec![s]).collect(),
+            )
+        }
+
+        /// Transport whose machine `m` serves `attempts[m][k]` as its
+        /// k-th connection's stream — the retry scheduler's harness.
+        fn with_attempts(
+            slots: usize,
+            attempts: Vec<Vec<Vec<WireMsg>>>,
+        ) -> MockTransport {
             MockTransport {
                 slots,
                 streams: Mutex::new(
-                    streams.into_iter().map(Some).collect(),
+                    attempts.into_iter().map(Into::into).collect(),
                 ),
             }
         }
@@ -951,8 +1209,8 @@ mod tests {
             _manifest_path: &Path,
         ) -> Result<Box<dyn WorkerConnection>> {
             let msgs = self.streams.lock().unwrap()[manifest.machine]
-                .take()
-                .expect("machine assigned twice");
+                .pop_front()
+                .expect("machine assigned more times than scripted");
             Ok(Box::new(MockConnection { msgs: msgs.into() }))
         }
     }
@@ -1149,6 +1407,176 @@ mod tests {
         let transport = MockTransport::new(2, streams);
         let err = run_with_transport(&c, &data, &transport).unwrap_err();
         assert!(err.to_string().contains("chunk for machine"), "{err}");
+    }
+
+    /// Tentpole gate at the scheduler level: a machine killed
+    /// mid-stream under `--failure-policy retry` is reset and
+    /// re-dispatched, and the retained draws — subposteriors *and*
+    /// combined — are byte-identical to a run that never failed. The
+    /// retry is visible only in the metrics.
+    #[test]
+    fn retry_replays_killed_machine_and_matches_clean_run() {
+        let data = synth::gaussian(400, 1, 37);
+        let clean = run_with_transport(
+            &cfg(3, 6),
+            &data,
+            &MockTransport::new(
+                2,
+                (0..3).map(|m| scripted_stream(m, 6)).collect(),
+            ),
+        )
+        .unwrap();
+        assert_eq!(clean.metrics.shard_retries, 0);
+
+        let mut c = cfg(3, 6);
+        c.failure_policy = FailurePolicy::Retry;
+        // Machine 1 dies mid-stream on its first attempt (4 draws land,
+        // then EOF with no summary), then replays clean.
+        let mut first = scripted_stream(1, 6);
+        first.truncate(4);
+        let out = run_with_transport(
+            &c,
+            &data,
+            &MockTransport::with_attempts(
+                2,
+                vec![
+                    vec![scripted_stream(0, 6)],
+                    vec![first, scripted_stream(1, 6)],
+                    vec![scripted_stream(2, 6)],
+                ],
+            ),
+        )
+        .unwrap();
+        for (a, b) in clean.subposteriors.iter().zip(&out.subposteriors) {
+            assert_eq!(
+                a.samples.as_slice(),
+                b.samples.as_slice(),
+                "machine {} diverged through the retry",
+                a.machine
+            );
+        }
+        assert_eq!(
+            clean.combined.as_slice(),
+            out.combined.as_slice(),
+            "combined draws must not see the failure"
+        );
+        assert_eq!(
+            clean.metrics.scalars_transferred,
+            out.metrics.scalars_transferred,
+            "reset must rewind the failed attempt's scalar accounting"
+        );
+        assert_eq!(out.metrics.shard_retries, 1);
+        assert_eq!(out.metrics.endpoints_quarantined, 0);
+        assert_eq!(out.metrics.heartbeats_missed, 0);
+    }
+
+    /// When a machine fails on every attempt, the run fails with a
+    /// structured diagnostic naming every attempt — machine, attempt
+    /// number, endpoint, and cause.
+    #[test]
+    fn retries_exhausted_surface_every_attempt() {
+        let data = synth::gaussian(200, 1, 38);
+        let mut c = cfg(2, 3);
+        c.failure_policy = FailurePolicy::Retry;
+        c.max_retries = 1;
+        let mut dead = scripted_stream(1, 3);
+        dead.truncate(1);
+        let err = run_with_transport(
+            &c,
+            &data,
+            &MockTransport::with_attempts(
+                2,
+                vec![vec![scripted_stream(0, 3)], vec![dead.clone(), dead]],
+            ),
+        )
+        .unwrap_err();
+        let text = err.to_string();
+        assert!(text.contains("retries exhausted"), "{text}");
+        assert!(
+            text.contains("machine 1 attempt 1/2")
+                && text.contains("machine 1 attempt 2/2"),
+            "diagnostic must name every attempt: {text}"
+        );
+        assert!(text.contains("without a summary frame"), "{text}");
+    }
+
+    /// A single endpoint that keeps failing is quarantined, and with no
+    /// survivors the run fails naming the quarantine — not a hang, not
+    /// an opaque worker error.
+    #[test]
+    fn quarantining_the_last_endpoint_is_a_structured_error() {
+        let data = synth::gaussian(200, 1, 39);
+        let mut c = cfg(1, 3);
+        c.failure_policy = FailurePolicy::Retry;
+        c.max_retries = 5; // retries to spare: quarantine must fire first
+        let mut dead = scripted_stream(0, 3);
+        dead.truncate(2);
+        let err = run_with_transport(
+            &c,
+            &data,
+            &MockTransport::with_attempts(1, vec![vec![dead.clone(), dead]]),
+        )
+        .unwrap_err();
+        let text = err.to_string();
+        assert!(
+            text.contains("endpoints quarantined"),
+            "expected the quarantine diagnostic: {text}"
+        );
+    }
+
+    /// Heartbeat frames are liveness beacons only: interleaving them
+    /// with the draw stream changes nothing about the results, and a
+    /// beacon tagged for the wrong machine is a protocol violation.
+    #[test]
+    fn heartbeat_frames_are_liveness_only() {
+        let data = synth::gaussian(200, 1, 40);
+        let c = cfg(2, 3);
+        let plain = run_with_transport(
+            &c,
+            &data,
+            &MockTransport::new(
+                2,
+                (0..2).map(|m| scripted_stream(m, 3)).collect(),
+            ),
+        )
+        .unwrap();
+        let noisy_streams: Vec<Vec<WireMsg>> = (0..2)
+            .map(|m| {
+                let mut v = Vec::new();
+                for msg in scripted_stream(m, 3) {
+                    v.push(WireMsg::Heartbeat { machine: m });
+                    v.push(msg);
+                }
+                v
+            })
+            .collect();
+        let noisy = run_with_transport(
+            &c,
+            &data,
+            &MockTransport::new(2, noisy_streams),
+        )
+        .unwrap();
+        for (a, b) in plain.subposteriors.iter().zip(&noisy.subposteriors)
+        {
+            assert_eq!(a.samples.as_slice(), b.samples.as_slice());
+            assert_eq!(a.draw_times, b.draw_times);
+        }
+        assert_eq!(plain.combined.as_slice(), noisy.combined.as_slice());
+        assert_eq!(
+            plain.metrics.scalars_transferred,
+            noisy.metrics.scalars_transferred,
+            "beacons must not count as transferred draw scalars"
+        );
+
+        let mut cross = scripted_stream(0, 3);
+        cross.insert(1, WireMsg::Heartbeat { machine: 1 });
+        let err = run_with_transport(
+            &c,
+            &data,
+            &MockTransport::new(2, vec![cross, scripted_stream(1, 3)]),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("heartbeat for machine"), "{err}");
     }
 
     /// A draw tagged for the wrong machine (an endpoint mixing up

@@ -23,18 +23,19 @@
 //! autodetection, and emit bit-identical frames — which is what keeps
 //! socket ≡ process ≡ thread draws byte-for-byte.
 
+use std::cell::{Cell, RefCell};
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::path::Path;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::config;
 use crate::coordinator::transport::{
-    encode_error, encode_summary, write_frame, write_frame_bytes,
-    DrawEncoder, FrameReader, WorkerManifest, WorkerSummary,
-    DEFAULT_MAX_FRAME_BYTES,
+    encode_error, encode_heartbeat, encode_summary, write_frame,
+    write_frame_bytes, DrawEncoder, FaultSpec, FrameReader,
+    WorkerManifest, WorkerSummary, DEFAULT_MAX_FRAME_BYTES,
 };
-use crate::coordinator::worker::{run_worker_with, DrawMsg};
+use crate::coordinator::worker::{run_worker_with_ticks, DrawMsg};
 use crate::data::{io, Dataset};
 use crate::error::{Error, Result};
 use crate::rng::Pcg64;
@@ -74,6 +75,27 @@ pub fn run_manifest_with_data<F>(
 where
     F: FnMut(&[u8]) -> std::io::Result<()>,
 {
+    let hb = if wm.heartbeat_secs > 0 {
+        Some(Duration::from_secs(wm.heartbeat_secs as u64))
+    } else {
+        None
+    };
+    run_manifest_with_data_at(wm, data, sink, hb)
+}
+
+/// [`run_manifest_with_data`] with an explicit heartbeat interval —
+/// the manifest's `heartbeat_secs` resolved to a `Duration` (tests use
+/// `Duration::ZERO` to force a beacon on every tick without waiting
+/// wall-clock seconds).
+fn run_manifest_with_data_at<F>(
+    wm: &WorkerManifest,
+    data: &Dataset,
+    sink: &mut F,
+    heartbeat: Option<Duration>,
+) -> Result<()>
+where
+    F: FnMut(&[u8]) -> std::io::Result<()>,
+{
     if wm.machine >= wm.machines {
         return Err(Error::Config(format!(
             "machine {} out of range ({} machines)",
@@ -102,14 +124,23 @@ where
     // `draw_batch` draws per chunk frame — either way this is the only
     // place draws are serialized, so pipe and socket workers stay
     // frame-identical.
-    let mut enc = DrawEncoder::new(
+    let enc = DrawEncoder::new(
         wm.wire_format,
         wm.draw_batch,
         wm.machine,
         target.dim(),
     );
-    let mut broken = false;
-    let result = run_worker_with(
+    // The emit and tick callbacks both need the encoder and sink (the
+    // tick writes RPHB beacon frames on the same stream), so they
+    // share them through a RefCell; emit and tick never nest, so the
+    // borrows never overlap.
+    let state = RefCell::new((enc, sink));
+    let broken = Cell::new(false);
+    // Beacon clock: any frame (draw chunk or beacon) counts as
+    // traffic, so heartbeats only fill genuine silence — notably the
+    // frame-free burn-in stretch.
+    let last_frame = Cell::new(Instant::now());
+    let result = run_worker_with_ticks(
         wm.machine,
         target.as_ref(),
         sampler,
@@ -118,13 +149,38 @@ where
         wm.thin,
         rng,
         &mut |msg: &DrawMsg| {
-            if enc.push(msg, sink).is_err() {
-                broken = true;
+            let mut guard = state.borrow_mut();
+            let (enc, sink) = &mut *guard;
+            let pushed = enc.push(msg, &mut |frame: &[u8]| {
+                last_frame.set(Instant::now());
+                sink(frame)
+            });
+            if pushed.is_err() {
+                broken.set(true);
             }
-            !broken
+            !broken.get()
+        },
+        &mut || {
+            let Some(interval) = heartbeat else { return true };
+            if broken.get() {
+                return false;
+            }
+            if last_frame.get().elapsed() >= interval {
+                let mut guard = state.borrow_mut();
+                let (_, sink) = &mut *guard;
+                last_frame.set(Instant::now());
+                if sink(encode_heartbeat(wm.machine).as_bytes()).is_err()
+                {
+                    // The peer is gone: the rest of the chain is dead
+                    // compute, exactly like a failed draw write.
+                    broken.set(true);
+                }
+            }
+            !broken.get()
         },
     );
-    if broken || enc.flush(sink).is_err() {
+    let (mut enc, sink) = state.into_inner();
+    if broken.get() || enc.flush(sink).is_err() {
         return Err(Error::Runtime(format!(
             "worker {}: draw stream closed mid-run",
             wm.machine
@@ -149,6 +205,21 @@ pub struct ServeOptions {
     pub max_jobs: Option<usize>,
     /// Frame cap for inbound manifest frames.
     pub max_frame_bytes: usize,
+    /// How long a freshly accepted connection may take to deliver its
+    /// manifest frame (`--manifest-timeout-secs`). The daemon serves
+    /// one connection at a time, so without this bound a single idle
+    /// connection (port scanner, health check, half-open leader) would
+    /// wedge the accept loop forever; a timed-out connection is
+    /// dropped and the daemon moves on. A real leader sends the
+    /// manifest immediately after connecting — even when its
+    /// connection waited in the accept backlog, the frame is already
+    /// buffered by the time the daemon reads — so the 30 s default is
+    /// generous.
+    pub manifest_timeout: Duration,
+    /// Deterministic chaos hook (`--fault <spec>`): apply this
+    /// [`FaultSpec`] to every job — CI's way of standing up a
+    /// misbehaving endpoint without OS-level packet tricks.
+    pub fault: Option<FaultSpec>,
 }
 
 impl Default for ServeOptions {
@@ -156,6 +227,8 @@ impl Default for ServeOptions {
         ServeOptions {
             max_jobs: None,
             max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            manifest_timeout: DEFAULT_MANIFEST_TIMEOUT,
+            fault: None,
         }
     }
 }
@@ -188,7 +261,19 @@ pub fn serve(
             .peer_addr()
             .map(|a| a.to_string())
             .unwrap_or_else(|_| "<unknown>".into());
-        if let Err(e) = handle_conn(stream, opts.max_frame_bytes) {
+        if opts.fault == Some(FaultSpec::RefuseDial) {
+            // Chaos hook: hang up before reading the manifest — what a
+            // crashed-but-still-bound or firewalled endpoint looks
+            // like to the leader.
+            eprintln!("serve: fault: refusing connection from {peer}");
+            stream.shutdown(Shutdown::Both).ok();
+            served += 1;
+            if opts.max_jobs.is_some_and(|cap| served >= cap) {
+                break;
+            }
+            continue;
+        }
+        if let Err(e) = handle_conn(stream, opts) {
             eprintln!("serve: job from {peer} failed: {e}");
         }
         served += 1;
@@ -199,43 +284,82 @@ pub fn serve(
     Ok(())
 }
 
-/// How long a freshly accepted connection may take to deliver its
-/// manifest frame. The daemon serves one connection at a time, so
-/// without this bound a single idle connection (port scanner, health
-/// check, half-open leader) would wedge the accept loop forever; a
-/// timed-out connection is dropped and the daemon moves on. A real
-/// leader sends the manifest immediately after connecting — even when
-/// its connection waited in the accept backlog, the frame is already
-/// buffered by the time the daemon reads — so 30 s is generous.
-const MANIFEST_READ_TIMEOUT: Duration = Duration::from_secs(30);
+/// Default bound on the manifest read — see
+/// [`ServeOptions::manifest_timeout`].
+const DEFAULT_MANIFEST_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// One job: read the manifest frame, stream the run back, close.
-fn handle_conn(stream: TcpStream, max_frame_bytes: usize) -> Result<()> {
+fn handle_conn(stream: TcpStream, opts: &ServeOptions) -> Result<()> {
     stream.set_nodelay(true).ok();
     // Only the inbound frames (manifest, plus the optional inline
     // shard frame, both sent immediately by a real leader) are
     // bounded: after them, the daemon only writes, so no further read
-    // can block the loop.
-    stream.set_read_timeout(Some(MANIFEST_READ_TIMEOUT)).ok();
+    // can block the loop. A failure to arm the bound would silently
+    // reopen the wedged-accept-loop hole, so it fails the job (logged
+    // by the accept loop; the daemon stays up) instead of being
+    // swallowed.
+    stream
+        .set_read_timeout(Some(opts.manifest_timeout))
+        .map_err(|e| {
+            Error::Runtime(format!(
+                "arming the {:?} manifest read timeout: {e}",
+                opts.manifest_timeout
+            ))
+        })?;
     let reader = stream.try_clone().map_err(Error::Io)?;
-    let mut frames =
-        FrameReader::with_max_frame(BufReader::new(reader), max_frame_bytes);
+    let mut frames = FrameReader::with_max_frame(
+        BufReader::new(reader),
+        opts.max_frame_bytes,
+    );
     let payload = frames.read_frame()?.ok_or_else(|| {
         Error::Runtime("connection closed before a manifest frame".into())
     })?;
     let wm = WorkerManifest::from_json(&Json::parse(&payload)?)?;
     let mut out = BufWriter::new(stream.try_clone().map_err(Error::Io)?);
+    // Chaos hooks on the outbound stream: count frames, and misbehave
+    // exactly as the armed `--fault` spec says. `fault_stream` is a
+    // raw clone so DropAfterFrames can hard-kill the socket (FIN
+    // mid-stream) rather than politely erroring in-band.
+    let fault = opts.fault;
+    let fault_stream = stream.try_clone().map_err(Error::Io)?;
+    let mut frames_out = 0usize;
+    let mut sink = |frame: &[u8]| -> std::io::Result<()> {
+        match fault {
+            Some(FaultSpec::DropAfterFrames(n)) if frames_out >= n => {
+                fault_stream.shutdown(Shutdown::Both).ok();
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::BrokenPipe,
+                    format!("fault: connection dropped after {n} frames"),
+                ));
+            }
+            Some(FaultSpec::DelayMillis(ms)) => {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            _ => {}
+        }
+        if let Some(FaultSpec::CorruptFrame(n)) = fault {
+            if frames_out == n {
+                frames_out += 1;
+                let mut bad = frame.to_vec();
+                // Flip the first byte: a chunk loses its magic, JSON
+                // loses its brace — either way the leader's decode
+                // fails structurally instead of yielding wrong draws.
+                if let Some(b) = bad.first_mut() {
+                    *b ^= 0xFF;
+                }
+                return write_frame_bytes(&mut out, &bad);
+            }
+        }
+        frames_out += 1;
+        write_frame_bytes(&mut out, frame)
+    };
     let run = if wm.shard_inline {
         // Inline delivery: the next frame is the shard's spilled bytes
         // (format autodetected, exactly as a file read would) — the
         // daemon's filesystem is never involved.
         match frames.read_frame_bytes() {
             Ok(Some(bytes)) => match io::shard_from_bytes(&bytes) {
-                Ok(data) => run_manifest_with_data(
-                    &wm,
-                    &data,
-                    &mut |frame: &[u8]| write_frame_bytes(&mut out, frame),
-                ),
+                Ok(data) => run_manifest_with_data(&wm, &data, &mut sink),
                 Err(e) => Err(e),
             },
             Ok(None) => Err(Error::Runtime(
@@ -244,9 +368,7 @@ fn handle_conn(stream: TcpStream, max_frame_bytes: usize) -> Result<()> {
             Err(e) => Err(e),
         }
     } else {
-        run_manifest(&wm, &mut |frame: &[u8]| {
-            write_frame_bytes(&mut out, frame)
-        })
+        run_manifest(&wm, &mut sink)
     };
     if let Err(e) = &run {
         // Best-effort in-band failure report; if the leader is already
@@ -265,6 +387,10 @@ mod tests {
     use super::*;
     use crate::coordinator::transport::{WireFormat, WireMsg};
     use crate::data::synth;
+
+    /// One bound for every blocking wait in this module — a daemon
+    /// that takes longer than this to announce is already wedged.
+    const RECV_TIMEOUT: Duration = Duration::from_secs(30);
 
     fn spill_manifest(
         dir: &Path,
@@ -291,6 +417,7 @@ mod tests {
             shard_inline: false,
             wire_format: WireFormat::Json,
             draw_batch: 1,
+            heartbeat_secs: 0,
         }
     }
 
@@ -506,7 +633,7 @@ mod tests {
             serve("127.0.0.1:0", &opts, &mut announcer).unwrap();
         });
         let addr = addr_rx
-            .recv_timeout(std::time::Duration::from_secs(30))
+            .recv_timeout(RECV_TIMEOUT)
             .expect("daemon never announced its address");
 
         let stream = TcpStream::connect(&addr).unwrap();
@@ -530,6 +657,9 @@ mod tests {
                 }
                 WireMsg::Error { message, .. } => {
                     panic!("unexpected remote failure: {message}")
+                }
+                WireMsg::Heartbeat { .. } => {
+                    panic!("heartbeats must be off when heartbeat_secs=0")
                 }
             }
         }
@@ -579,7 +709,7 @@ mod tests {
             serve("127.0.0.1:0", &opts, &mut announcer).unwrap();
         });
         let addr = addr_rx
-            .recv_timeout(std::time::Duration::from_secs(30))
+            .recv_timeout(RECV_TIMEOUT)
             .expect("daemon never announced its address");
 
         let stream = TcpStream::connect(&addr).unwrap();
@@ -601,6 +731,9 @@ mod tests {
                 }
                 WireMsg::Error { message, .. } => {
                     panic!("inline job failed remotely: {message}")
+                }
+                WireMsg::Heartbeat { .. } => {
+                    panic!("heartbeats must be off when heartbeat_secs=0")
                 }
             }
         }
@@ -627,7 +760,7 @@ mod tests {
             serve("127.0.0.1:0", &opts, &mut announcer).ok();
         });
         let addr = addr_rx
-            .recv_timeout(std::time::Duration::from_secs(30))
+            .recv_timeout(RECV_TIMEOUT)
             .expect("daemon never announced its address");
         let stream = TcpStream::connect(&addr).unwrap();
         let mut writer = stream.try_clone().unwrap();
@@ -671,7 +804,7 @@ mod tests {
             serve("127.0.0.1:0", &opts, &mut announcer).ok();
         });
         let addr = addr_rx
-            .recv_timeout(std::time::Duration::from_secs(30))
+            .recv_timeout(RECV_TIMEOUT)
             .expect("daemon never announced its address");
 
         // Job 1: broken manifest → error frame.
@@ -706,6 +839,119 @@ mod tests {
             }
         }
         assert_eq!(summaries, 1);
+        daemon.join().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// RPHB beacons interleave with the draw stream when the manifest
+    /// arms them — and never perturb the draws. A zero interval forces
+    /// a beacon on every tick, so the beacon count is deterministic
+    /// (one per chain iteration, burn-in included) without the test
+    /// waiting wall-clock seconds; the draw frames must be
+    /// byte-identical to a beacon-free run of the same manifest.
+    #[test]
+    fn heartbeats_interleave_without_perturbing_draws() {
+        let dir = std::env::temp_dir().join("repro_serve_hb_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let wm = spill_manifest(&dir, 1, 3, io::ShardFormat::Binary);
+        let data = io::read_shard(Path::new(&wm.shard_path)).unwrap();
+
+        let mut quiet: Vec<Vec<u8>> = Vec::new();
+        run_manifest_with_data_at(&wm, &data, &mut |f: &[u8]| {
+            quiet.push(f.to_vec());
+            Ok(())
+        }, None)
+        .unwrap();
+
+        let mut noisy: Vec<Vec<u8>> = Vec::new();
+        run_manifest_with_data_at(&wm, &data, &mut |f: &[u8]| {
+            noisy.push(f.to_vec());
+            Ok(())
+        }, Some(Duration::ZERO))
+        .unwrap();
+
+        let beacons: Vec<&Vec<u8>> = noisy
+            .iter()
+            .filter(|f| {
+                matches!(
+                    WireMsg::decode_frame(f).unwrap(),
+                    WireMsg::Heartbeat { .. }
+                )
+            })
+            .collect();
+        // total iterations = burn_in + (samples-1)*thin + 1 = 5+24+1.
+        assert_eq!(
+            beacons.len(),
+            30,
+            "zero interval must beacon once per chain iteration"
+        );
+        for f in &beacons {
+            match WireMsg::decode_frame(f).unwrap() {
+                WireMsg::Heartbeat { machine } => assert_eq!(machine, 1),
+                _ => unreachable!(),
+            }
+        }
+        let payload: Vec<&Vec<u8>> = noisy
+            .iter()
+            .filter(|f| {
+                !matches!(
+                    WireMsg::decode_frame(f).unwrap(),
+                    WireMsg::Heartbeat { .. }
+                )
+            })
+            .collect();
+        assert_eq!(
+            payload,
+            quiet.iter().collect::<Vec<_>>(),
+            "beacons must leave the draw/summary frames byte-identical"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// `--fault drop-after:N` hard-kills the connection mid-stream: the
+    /// client sees exactly N frames then EOF with no summary — the
+    /// wire shape of a worker crash, which is what the retry scheduler
+    /// is tested against.
+    #[test]
+    fn serve_drop_after_fault_kills_the_stream_mid_run() {
+        let dir = std::env::temp_dir().join("repro_serve_dropfault_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let wm = spill_manifest(&dir, 0, 2, io::ShardFormat::Json);
+        let opts = ServeOptions {
+            max_jobs: Some(1),
+            fault: Some(FaultSpec::DropAfterFrames(3)),
+            ..Default::default()
+        };
+        let (mut announcer, addr_rx) = Announcer::channel();
+        let daemon = std::thread::spawn(move || {
+            serve("127.0.0.1:0", &opts, &mut announcer).ok();
+        });
+        let addr = addr_rx
+            .recv_timeout(RECV_TIMEOUT)
+            .expect("daemon never announced its address");
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        write_frame(&mut writer, &wm.to_json().render()).unwrap();
+        let mut frames = FrameReader::new(BufReader::new(stream));
+        let mut draws = 0usize;
+        let mut summaries = 0usize;
+        loop {
+            match frames.read_frame() {
+                Ok(Some(payload)) => {
+                    match WireMsg::decode(&payload).unwrap() {
+                        WireMsg::Draw(_) => draws += 1,
+                        WireMsg::Summary(_) => summaries += 1,
+                        other => panic!("unexpected frame {other:?}"),
+                    }
+                }
+                // Clean EOF or a torn frame — both are valid shapes
+                // for a hard mid-stream kill; what matters is that the
+                // stream ended early without a summary.
+                Ok(None) | Err(_) => break,
+            }
+        }
+        assert_eq!(draws, 3, "exactly N frames escape before the drop");
+        assert_eq!(summaries, 0, "a dropped job must never summarize");
         daemon.join().unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -63,8 +63,15 @@ use crate::runtime::json::{self, Json};
 /// Transports carry their own cap — see [`Transport::max_frame_bytes`].
 pub const DEFAULT_MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
 
-/// Dial timeout for socket endpoints (see [`SocketTransport`]).
-const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+/// Default dial timeout for socket endpoints (see [`SocketTransport`]);
+/// override with the `connect_timeout_secs` config key /
+/// `--connect-timeout-secs` flag.
+pub const DEFAULT_CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Marker every liveness-deadline expiry message carries, so the
+/// scheduler can tell "the peer went silent past the deadline" from
+/// other stream failures without a dedicated error variant.
+pub const LIVENESS_EXPIRED_MARKER: &str = "liveness deadline expired";
 
 /// Draw-plane encoding, selected by the `wire_format` config key /
 /// `--wire-format` flag and negotiated per worker via the
@@ -531,6 +538,15 @@ pub enum WireMsg {
     /// up reports its root cause in-band instead of just closing the
     /// stream.
     Error { machine: usize, message: String },
+    /// In-band `RPHB` liveness beacon: the worker emits one between
+    /// draw frames whenever `heartbeat_secs` elapse without other
+    /// traffic (notably across the frame-free burn-in stretch), so a
+    /// leader holding a read deadline can tell "alive but not
+    /// retaining draws yet" from "wedged or partitioned". Carries no
+    /// draw data; the scheduler validates the machine id and drops it.
+    /// Manifest-negotiated (`heartbeat_secs` field) so old daemons —
+    /// which never emit it — keep working.
+    Heartbeat { machine: usize },
 }
 
 /// Encode one float for the wire. Finite values go through [`Json`]'s
@@ -601,6 +617,16 @@ pub fn encode_error(machine: usize, message: &str) -> String {
     .render()
 }
 
+/// Encode an `RPHB` heartbeat beacon as a frame payload (a JSON
+/// control frame — the draw plane's wire format does not apply).
+pub fn encode_heartbeat(machine: usize) -> String {
+    json::obj(vec![
+        ("type", Json::Str("hb".into())),
+        ("machine", Json::Num(machine as f64)),
+    ])
+    .render()
+}
+
 impl WireMsg {
     /// Decode a raw frame payload from either plane: binary chunk
     /// frames announce themselves with [`DRAW_MAGIC`]; anything else
@@ -638,6 +664,9 @@ impl WireMsg {
             "error" => Ok(WireMsg::Error {
                 machine: j.get("machine")?.as_usize()?,
                 message: j.get("message")?.as_str()?.to_string(),
+            }),
+            "hb" => Ok(WireMsg::Heartbeat {
+                machine: j.get("machine")?.as_usize()?,
             }),
             other => {
                 Err(Error::Parse(format!("unknown wire message type '{other}'")))
@@ -685,6 +714,12 @@ pub struct WorkerManifest {
     /// ignored in JSON mode). Consumers clamp to ≥ 1. Absent in old
     /// manifests ⇒ 1.
     pub draw_batch: usize,
+    /// Heartbeat interval: the worker emits an `RPHB` beacon frame
+    /// ([`WireMsg::Heartbeat`]) whenever this many seconds pass
+    /// without any other frame on the wire. `0` disables heartbeats
+    /// entirely, and absent in old manifests ⇒ `0`, so daemons and
+    /// leaders that predate the beacon interoperate unchanged.
+    pub heartbeat_secs: usize,
 }
 
 impl WorkerManifest {
@@ -703,6 +738,7 @@ impl WorkerManifest {
             ("shard_inline", Json::Bool(self.shard_inline)),
             ("wire_format", Json::Str(self.wire_format.name().into())),
             ("draw_batch", Json::Num(self.draw_batch as f64)),
+            ("heartbeat_secs", Json::Num(self.heartbeat_secs as f64)),
         ])
     }
 
@@ -723,6 +759,12 @@ impl WorkerManifest {
             Ok(v) => v.as_usize()?,
             Err(_) => 1,
         };
+        // Optional for backward compatibility with pre-heartbeat
+        // manifests: absent ⇒ no beacons.
+        let heartbeat_secs = match j.get("heartbeat_secs") {
+            Ok(v) => v.as_usize()?,
+            Err(_) => 0,
+        };
         Ok(WorkerManifest {
             machine: j.get("machine")?.as_usize()?,
             machines: j.get("machines")?.as_usize()?,
@@ -739,6 +781,7 @@ impl WorkerManifest {
             shard_inline,
             wire_format,
             draw_batch,
+            heartbeat_secs,
         })
     }
 
@@ -1001,6 +1044,16 @@ impl Drop for PipeConnection {
 pub struct SocketTransport {
     addrs: Vec<String>,
     max_frame_bytes: usize,
+    /// Dial timeout (`connect_timeout_secs` config key).
+    connect_timeout: Duration,
+    /// Liveness deadline: longest silence tolerated between frames
+    /// from a connected worker before its stream fails with a
+    /// structured expiry error. `None` (the default) keeps reads
+    /// unbounded — the pre-heartbeat behavior, where a worker
+    /// legitimately emits nothing for the whole burn-in stretch.
+    /// Pair with manifest-negotiated heartbeats so an *alive* worker
+    /// always has traffic inside the deadline.
+    read_deadline: Option<Duration>,
     /// Ship each shard inline as a binary frame after the manifest
     /// frame (`shard_inline` config key / `--shard-inline`): daemons
     /// stop needing a shared filesystem. The shard bytes sent are the
@@ -1025,9 +1078,31 @@ impl SocketTransport {
         Ok(SocketTransport {
             addrs,
             max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            connect_timeout: DEFAULT_CONNECT_TIMEOUT,
+            read_deadline: None,
             inline_shards: false,
             live: Mutex::new(Vec::new()),
         })
+    }
+
+    /// Override the dial timeout (the `connect_timeout_secs` config
+    /// key / `--connect-timeout-secs` flag).
+    pub fn with_connect_timeout(mut self, t: Duration) -> SocketTransport {
+        self.connect_timeout = t;
+        self
+    }
+
+    /// Arm a liveness deadline on every connection's reads (the
+    /// `liveness_timeout_secs` config key / `--liveness-timeout-secs`
+    /// flag): a worker silent for longer fails its stream with a
+    /// structured [`LIVENESS_EXPIRED_MARKER`] error instead of hanging
+    /// the endpoint loop forever.
+    pub fn with_read_deadline(
+        mut self,
+        deadline: Option<Duration>,
+    ) -> SocketTransport {
+        self.read_deadline = deadline;
+        self
     }
 
     /// Enable (or disable) inline shard delivery — see the
@@ -1074,8 +1149,9 @@ impl Transport for SocketTransport {
         // Bound the dial: an unroutable endpoint should fail the run,
         // not hang it. (A merely *busy* daemon still accepts promptly —
         // the OS completes the handshake into the listen backlog.)
-        // Reads stay unbounded on purpose: a worker legitimately emits
-        // no frames for the whole burn-in stretch.
+        // Reads stay unbounded unless a liveness deadline is armed: a
+        // deadline-free worker legitimately emits no frames for the
+        // whole burn-in stretch.
         let sock_addr = addr
             .to_socket_addrs()
             .map_err(|e| {
@@ -1090,7 +1166,7 @@ impl Transport for SocketTransport {
                 ))
             })?;
         let stream =
-            TcpStream::connect_timeout(&sock_addr, CONNECT_TIMEOUT)
+            TcpStream::connect_timeout(&sock_addr, self.connect_timeout)
                 .map_err(|e| {
                     Error::Runtime(format!(
                         "connecting to worker {addr} for machine {}: {e}",
@@ -1098,6 +1174,16 @@ impl Transport for SocketTransport {
                     ))
                 })?;
         stream.set_nodelay(true).ok();
+        if let Some(deadline) = self.read_deadline {
+            // A failed set_read_timeout would silently disarm the
+            // liveness contract the caller asked for — propagate it.
+            stream.set_read_timeout(Some(deadline)).map_err(|e| {
+                Error::Runtime(format!(
+                    "arming the {deadline:?} liveness read deadline on \
+                     worker {addr}: {e}"
+                ))
+            })?;
+        }
         // Register with the cancel list *before* any write: the inline
         // shard frame below can be tens of MB, and a daemon that stops
         // draining its socket would block that write forever — the
@@ -1168,6 +1254,7 @@ impl Transport for SocketTransport {
                 self.max_frame_bytes,
             ),
             buf: Vec::new(),
+            read_deadline: self.read_deadline,
         }))
     }
 
@@ -1193,13 +1280,32 @@ struct SocketConnection {
     frames: FrameReader<BufReader<TcpStream>>,
     /// Reused frame-payload buffer (see [`FrameReader::read_frame_into`]).
     buf: Vec<u8>,
+    /// The armed liveness deadline, kept for the expiry diagnostic.
+    read_deadline: Option<Duration>,
 }
 
 impl WorkerConnection for SocketConnection {
     fn recv(&mut self) -> Result<Option<WireMsg>> {
-        match self.frames.read_frame_into(&mut self.buf)? {
-            Some(_) => WireMsg::decode_frame(&self.buf).map(Some),
-            None => Ok(None),
+        match self.frames.read_frame_into(&mut self.buf) {
+            Ok(Some(_)) => WireMsg::decode_frame(&self.buf).map(Some),
+            Ok(None) => Ok(None),
+            // A timed-out read is the armed deadline firing, not a
+            // stream fault: report it as a liveness expiry the
+            // scheduler can recognize (and count) by its marker.
+            Err(Error::Io(e))
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) && self.read_deadline.is_some() =>
+            {
+                Err(Error::Runtime(format!(
+                    "{LIVENESS_EXPIRED_MARKER}: no frame (draw or \
+                     heartbeat) within {:?} — peer wedged or partitioned",
+                    self.read_deadline.unwrap_or_default()
+                )))
+            }
+            Err(e) => Err(e),
         }
     }
 
@@ -1207,6 +1313,168 @@ impl WorkerConnection for SocketConnection {
         // A clean close after the summary frame is the daemon's whole
         // success signal; failures arrive in-band as error frames.
         Ok(())
+    }
+}
+
+/// One deterministic misbehavior, parsed from a `--fault` spec token.
+///
+/// The same grammar drives both chaos surfaces: leader-side, a
+/// [`FaultInjector`] wrapper transport applies the fault to a slot's
+/// connections; daemon-side, `repro serve --fault <spec>` applies it
+/// to every job's outbound frame stream — so the retry/heartbeat/
+/// quarantine matrix is exercisable over real pipes and sockets
+/// without OS-level packet tricks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSpec {
+    /// Refuse the dial (leader-side: `connect` errors; daemon-side:
+    /// accept then immediately close, before reading the manifest).
+    RefuseDial,
+    /// Drop the connection after N frames have crossed it.
+    DropAfterFrames(usize),
+    /// Sleep this many milliseconds before every frame — a slow link.
+    DelayMillis(u64),
+    /// Corrupt frame N (0-based): daemon-side the payload's bytes are
+    /// actually flipped on the wire; leader-side the received frame is
+    /// replaced by the structured parse error real corruption decodes
+    /// to.
+    CorruptFrame(usize),
+}
+
+impl FaultSpec {
+    /// Parse a spec token: `refuse-dial`, `drop-after:N`,
+    /// `delay-ms:MS`, or `corrupt:N`.
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let s = s.trim();
+        if s == "refuse-dial" {
+            return Ok(FaultSpec::RefuseDial);
+        }
+        let (kind, arg) = s.split_once(':').ok_or_else(|| {
+            Error::Config(format!(
+                "bad fault spec '{s}' (expected refuse-dial, \
+                 drop-after:N, delay-ms:MS, or corrupt:N)"
+            ))
+        })?;
+        let n: u64 = arg.trim().parse().map_err(|_| {
+            Error::Config(format!(
+                "bad fault spec '{s}': '{}' is not a number",
+                arg.trim()
+            ))
+        })?;
+        match kind.trim() {
+            "drop-after" => Ok(FaultSpec::DropAfterFrames(n as usize)),
+            "delay-ms" => Ok(FaultSpec::DelayMillis(n)),
+            "corrupt" => Ok(FaultSpec::CorruptFrame(n as usize)),
+            other => Err(Error::Config(format!(
+                "unknown fault kind '{other}' (expected refuse-dial, \
+                 drop-after, delay-ms, or corrupt)"
+            ))),
+        }
+    }
+}
+
+/// Deterministic chaos wrapper: forwards everything to an inner
+/// transport, applying a per-slot [`FaultSpec`] to that slot's
+/// connections. Slots without a fault behave exactly like the inner
+/// transport, so a mixed pool (one faulty endpoint, W−1 healthy ones)
+/// is one `with_fault` call — the shape every retry/quarantine test
+/// wants.
+pub struct FaultInjector<T: Transport> {
+    inner: T,
+    faults: Mutex<Vec<Option<FaultSpec>>>,
+}
+
+impl<T: Transport> FaultInjector<T> {
+    pub fn new(inner: T) -> FaultInjector<T> {
+        let slots = inner.slots();
+        FaultInjector { inner, faults: Mutex::new(vec![None; slots]) }
+    }
+
+    /// Arm `fault` on endpoint `slot`'s future connections.
+    pub fn with_fault(self, slot: usize, fault: FaultSpec) -> Self {
+        self.faults.lock().unwrap()[slot] = Some(fault);
+        self
+    }
+}
+
+impl<T: Transport> Transport for FaultInjector<T> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn slots(&self) -> usize {
+        self.inner.slots()
+    }
+
+    fn connect(
+        &self,
+        slot: usize,
+        manifest: &WorkerManifest,
+        manifest_path: &Path,
+    ) -> Result<Box<dyn WorkerConnection>> {
+        let fault = self.faults.lock().unwrap()[slot];
+        if let Some(FaultSpec::RefuseDial) = fault {
+            return Err(Error::Runtime(format!(
+                "fault injector: endpoint {slot} refused the dial for \
+                 machine {}",
+                manifest.machine
+            )));
+        }
+        let inner = self.inner.connect(slot, manifest, manifest_path)?;
+        Ok(Box::new(FaultConnection { inner, fault, frames_seen: 0 }))
+    }
+
+    fn max_frame_bytes(&self) -> usize {
+        self.inner.max_frame_bytes()
+    }
+
+    fn wants_inline_shard(&self) -> bool {
+        self.inner.wants_inline_shard()
+    }
+
+    fn cancel_all(&self) {
+        self.inner.cancel_all()
+    }
+}
+
+struct FaultConnection {
+    inner: Box<dyn WorkerConnection>,
+    fault: Option<FaultSpec>,
+    frames_seen: usize,
+}
+
+impl WorkerConnection for FaultConnection {
+    fn recv(&mut self) -> Result<Option<WireMsg>> {
+        match self.fault {
+            Some(FaultSpec::DropAfterFrames(n))
+                if self.frames_seen >= n =>
+            {
+                return Err(Error::Runtime(format!(
+                    "fault injector: connection dropped after {n} frames"
+                )));
+            }
+            Some(FaultSpec::DelayMillis(ms)) => {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            _ => {}
+        }
+        let msg = self.inner.recv()?;
+        if msg.is_some() {
+            if let Some(FaultSpec::CorruptFrame(n)) = self.fault {
+                if self.frames_seen == n {
+                    self.frames_seen += 1;
+                    // What a bit-flipped RPDRAW1 payload decodes to.
+                    return Err(Error::Parse(format!(
+                        "fault injector: frame {n} corrupted in flight"
+                    )));
+                }
+            }
+            self.frames_seen += 1;
+        }
+        Ok(msg)
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.inner.finish()
     }
 }
 
@@ -1279,6 +1547,7 @@ mod tests {
             shard_inline: true,
             wire_format: WireFormat::Json,
             draw_batch: 1,
+            heartbeat_secs: 0,
         };
         let back =
             WorkerManifest::from_json(&Json::parse(&m.to_json().render()).unwrap())
@@ -1488,6 +1757,7 @@ mod tests {
             shard_inline: false,
             wire_format: WireFormat::Json,
             draw_batch: 1,
+            heartbeat_secs: 0,
         };
         let err =
             t.connect(0, &m, Path::new("/tmp/none.json")).unwrap_err();
@@ -1531,6 +1801,7 @@ mod tests {
             shard_inline: true,
             wire_format: WireFormat::Json,
             draw_batch: 1,
+            heartbeat_secs: 0,
         };
         let err = t.connect(0, &m, Path::new("/tmp/none.json")).unwrap_err();
         let text = err.to_string();
@@ -1557,6 +1828,7 @@ mod tests {
             shard_inline: true,
             wire_format: WireFormat::Binary,
             draw_batch: 7,
+            heartbeat_secs: 5,
         };
         let dir = std::env::temp_dir().join("repro_transport_test");
         std::fs::create_dir_all(&dir).unwrap();
@@ -1585,6 +1857,7 @@ mod tests {
             shard_inline: false,
             wire_format: WireFormat::Binary,
             draw_batch: 64,
+            heartbeat_secs: 0,
         };
         let back = WorkerManifest::from_json(
             &Json::parse(&m.to_json().render()).unwrap(),
@@ -1881,5 +2154,203 @@ mod tests {
             "equal-sized frames must reuse the allocation"
         );
         assert!(r.read_frame_into(&mut buf).unwrap().is_none());
+    }
+
+    /// The RPHB beacon is a JSON control frame: it round-trips through
+    /// both decode paths and never collides with the draw plane.
+    #[test]
+    fn heartbeat_frame_roundtrips() {
+        let payload = encode_heartbeat(6);
+        match WireMsg::decode(&payload).unwrap() {
+            WireMsg::Heartbeat { machine } => assert_eq!(machine, 6),
+            other => panic!("wrong variant {other:?}"),
+        }
+        match WireMsg::decode_frame(payload.as_bytes()).unwrap() {
+            WireMsg::Heartbeat { machine } => assert_eq!(machine, 6),
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    /// Manifests written before heartbeats existed decode with the
+    /// beacon disabled — old leaders and daemons interoperate.
+    #[test]
+    fn manifest_heartbeat_field_backcompat() {
+        let mut m = WorkerManifest {
+            machine: 0,
+            machines: 2,
+            seed: 1,
+            samples: 5,
+            burn_in: 0,
+            thin: 1,
+            prior_weight: 0.5,
+            sampler: "rwm:1".into(),
+            shard_path: "/tmp/s.bin".into(),
+            dim: 2,
+            shard_inline: false,
+            wire_format: WireFormat::Json,
+            draw_batch: 1,
+            heartbeat_secs: 3,
+        };
+        let back = WorkerManifest::from_json(
+            &Json::parse(&m.to_json().render()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(m, back, "heartbeat_secs must survive the round-trip");
+        let mut obj = match m.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        obj.remove("heartbeat_secs");
+        let old = WorkerManifest::from_json(&Json::Obj(obj)).unwrap();
+        m.heartbeat_secs = 0;
+        assert_eq!(m, old, "missing field must decode as beacon-off");
+    }
+
+    #[test]
+    fn fault_spec_parses_tokens() {
+        assert_eq!(
+            FaultSpec::parse("refuse-dial").unwrap(),
+            FaultSpec::RefuseDial
+        );
+        assert_eq!(
+            FaultSpec::parse(" drop-after:3 ").unwrap(),
+            FaultSpec::DropAfterFrames(3)
+        );
+        assert_eq!(
+            FaultSpec::parse("delay-ms:250").unwrap(),
+            FaultSpec::DelayMillis(250)
+        );
+        assert_eq!(
+            FaultSpec::parse("corrupt:0").unwrap(),
+            FaultSpec::CorruptFrame(0)
+        );
+        assert!(FaultSpec::parse("drop-after:x").is_err());
+        assert!(FaultSpec::parse("flood").is_err());
+        assert!(FaultSpec::parse("jitter:5").is_err());
+    }
+
+    /// Scripted transport for fault-injector unit tests: every connect
+    /// on a slot replays the same message sequence.
+    struct ReplayTransport {
+        script: Vec<WireMsg>,
+    }
+
+    struct ReplayConnection {
+        msgs: std::collections::VecDeque<WireMsg>,
+    }
+
+    impl WorkerConnection for ReplayConnection {
+        fn recv(&mut self) -> Result<Option<WireMsg>> {
+            Ok(self.msgs.pop_front())
+        }
+        fn finish(&mut self) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    impl Transport for ReplayTransport {
+        fn name(&self) -> &'static str {
+            "replay"
+        }
+        fn slots(&self) -> usize {
+            2
+        }
+        fn connect(
+            &self,
+            _slot: usize,
+            _manifest: &WorkerManifest,
+            _manifest_path: &Path,
+        ) -> Result<Box<dyn WorkerConnection>> {
+            Ok(Box::new(ReplayConnection {
+                msgs: self.script.iter().cloned().collect(),
+            }))
+        }
+    }
+
+    fn replay_script() -> Vec<WireMsg> {
+        vec![
+            WireMsg::Draw(draw(0, vec![1.0], false)),
+            WireMsg::Draw(draw(0, vec![2.0], false)),
+            WireMsg::Summary(WorkerSummary {
+                machine: 0,
+                accept_rate: 0.5,
+                wall_secs: 0.25,
+            }),
+        ]
+    }
+
+    /// The injector is deterministic and slot-scoped: the faulted slot
+    /// misbehaves exactly as specified while the clean slot passes the
+    /// whole script through untouched.
+    #[test]
+    fn fault_injector_is_deterministic_and_slot_scoped() {
+        let wm = WorkerManifest {
+            machine: 0,
+            machines: 1,
+            seed: 1,
+            samples: 2,
+            burn_in: 0,
+            thin: 1,
+            prior_weight: 1.0,
+            sampler: "rwm:1".into(),
+            shard_path: "/tmp/none".into(),
+            dim: 1,
+            shard_inline: false,
+            wire_format: WireFormat::Json,
+            draw_batch: 1,
+            heartbeat_secs: 0,
+        };
+        let p = Path::new("/tmp/none.json");
+
+        // drop-after:1 — one frame crosses, then the connection dies.
+        let t = FaultInjector::new(ReplayTransport {
+            script: replay_script(),
+        })
+        .with_fault(0, FaultSpec::DropAfterFrames(1));
+        let mut conn = t.connect(0, &wm, p).unwrap();
+        assert!(conn.recv().unwrap().is_some());
+        let err = conn.recv().unwrap_err();
+        assert!(
+            err.to_string().contains("dropped after 1 frames"),
+            "{err}"
+        );
+        // The clean slot replays everything.
+        let mut clean = t.connect(1, &wm, p).unwrap();
+        let mut n = 0;
+        while clean.recv().unwrap().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 3, "unfaulted slot must pass the script through");
+
+        // corrupt:1 — frame 0 decodes, frame 1 is a parse error, and
+        // the stream recovers afterwards (the frame was consumed).
+        let t = FaultInjector::new(ReplayTransport {
+            script: replay_script(),
+        })
+        .with_fault(0, FaultSpec::CorruptFrame(1));
+        let mut conn = t.connect(0, &wm, p).unwrap();
+        assert!(conn.recv().unwrap().is_some());
+        let err = conn.recv().unwrap_err();
+        assert!(matches!(err, Error::Parse(_)), "{err:?}");
+
+        // refuse-dial — connect itself fails, naming slot and machine.
+        let t = FaultInjector::new(ReplayTransport {
+            script: replay_script(),
+        })
+        .with_fault(0, FaultSpec::RefuseDial);
+        let err = t.connect(0, &wm, p).unwrap_err();
+        assert!(err.to_string().contains("refused the dial"), "{err}");
+
+        // delay-ms — frames still arrive, just later.
+        let t = FaultInjector::new(ReplayTransport {
+            script: replay_script(),
+        })
+        .with_fault(0, FaultSpec::DelayMillis(1));
+        let mut conn = t.connect(0, &wm, p).unwrap();
+        let mut n = 0;
+        while conn.recv().unwrap().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 3, "a slow link loses nothing");
     }
 }

@@ -77,12 +77,40 @@ pub fn run_worker(
 pub fn run_worker_with(
     machine: usize,
     target: &dyn LogDensity,
+    sampler: Box<dyn Sampler>,
+    n_samples: usize,
+    burn_in: usize,
+    thin: usize,
+    rng: Pcg64,
+    emit: &mut dyn FnMut(&DrawMsg) -> bool,
+) -> SubposteriorSamples {
+    run_worker_with_ticks(
+        machine, target, sampler, n_samples, burn_in, thin, rng, emit,
+        &mut || true,
+    )
+}
+
+/// [`run_worker_with`] plus a per-iteration `tick` callback, fired on
+/// *every* sampler step — including the whole burn-in stretch, where
+/// `emit` never runs. This is the worker-side liveness hook: the
+/// process/daemon wrapper uses it to put `RPHB` heartbeat frames on
+/// the wire while no draws are flowing, so a leader holding a read
+/// deadline can tell "burning in" from "wedged". `tick` returning
+/// `false` aborts the chain exactly like `emit` returning `false`
+/// (e.g. the heartbeat write failed: the peer is gone). The tick
+/// never touches the sampler, RNG, or retained draws, so retained
+/// output is byte-identical at any tick cadence.
+#[allow(clippy::too_many_arguments)]
+pub fn run_worker_with_ticks(
+    machine: usize,
+    target: &dyn LogDensity,
     mut sampler: Box<dyn Sampler>,
     n_samples: usize,
     burn_in: usize,
     thin: usize,
     mut rng: Pcg64,
     emit: &mut dyn FnMut(&DrawMsg) -> bool,
+    tick: &mut dyn FnMut() -> bool,
 ) -> SubposteriorSamples {
     let start = Instant::now();
     let dim = target.dim();
@@ -105,6 +133,10 @@ pub fn run_worker_with(
 
     let mut aborted = false;
     for i in 0..total {
+        if !tick() {
+            aborted = true;
+            break;
+        }
         // Freeze adaptation before the first post-burn-in step — also
         // when `burn_in == 0`, where the retained draws start at i = 0
         // (an adaptive sampler mutating its step size during retained
@@ -323,6 +355,63 @@ mod tests {
             Some(&tx),
         );
         assert_eq!(out.samples.len(), 50);
+    }
+
+    /// The liveness tick fires on every iteration — burn-in included,
+    /// where `emit` never runs — never perturbs the retained draws,
+    /// and aborts the chain when it returns false.
+    #[test]
+    fn tick_covers_burnin_and_never_perturbs_draws() {
+        let target = gaussian_target();
+        let plain = run_worker(
+            0,
+            &target,
+            SamplerKind::Rwm { scale: 1.0 }.build(1),
+            10,
+            6,
+            2,
+            Pcg64::seed_from(9),
+            None,
+        );
+        let mut ticks = 0usize;
+        let ticked = run_worker_with_ticks(
+            0,
+            &target,
+            SamplerKind::Rwm { scale: 1.0 }.build(1),
+            10,
+            6,
+            2,
+            Pcg64::seed_from(9),
+            &mut |_msg| true,
+            &mut || {
+                ticks += 1;
+                true
+            },
+        );
+        // total = burn_in + (n-1)·thin + 1 = 6 + 18 + 1 = 25 ticks.
+        assert_eq!(ticks, 25, "one tick per sampler iteration");
+        assert_eq!(
+            plain.samples.as_slice(),
+            ticked.samples.as_slice(),
+            "ticks must not perturb retained draws"
+        );
+        // A false tick aborts immediately — even inside burn-in.
+        let mut n = 0usize;
+        let aborted = run_worker_with_ticks(
+            0,
+            &target,
+            SamplerKind::Rwm { scale: 1.0 }.build(1),
+            10,
+            6,
+            2,
+            Pcg64::seed_from(9),
+            &mut |_msg| true,
+            &mut || {
+                n += 1;
+                n <= 3
+            },
+        );
+        assert_eq!(aborted.samples.len(), 0, "aborted inside burn-in");
     }
 
     #[test]

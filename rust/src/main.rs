@@ -194,6 +194,43 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
                     },
                 )?));
             }
+            if let Some(v) = args.get("failure-policy") {
+                b = b.failure_policy(
+                    repro::config::FailurePolicy::parse(v)?,
+                );
+            }
+            if let Some(v) = args.get("max-retries") {
+                b = b.max_retries(v.parse().map_err(|_| {
+                    Error::Config(format!("bad --max-retries: {v}"))
+                })?);
+            }
+            if let Some(v) = args.get("heartbeat-secs") {
+                b = b.heartbeat_secs(v.parse().map_err(|_| {
+                    Error::Config(format!("bad --heartbeat-secs: {v}"))
+                })?);
+            }
+            if let Some(v) = args.get("liveness-timeout-secs") {
+                b = b.liveness_timeout_secs(v.parse().map_err(|_| {
+                    Error::Config(format!(
+                        "bad --liveness-timeout-secs: {v}"
+                    ))
+                })?);
+            }
+            if let Some(v) = args.get("connect-timeout-secs") {
+                let secs: usize = v.parse().map_err(|_| {
+                    Error::Config(format!(
+                        "bad --connect-timeout-secs: {v}"
+                    ))
+                })?;
+                if secs == 0 {
+                    return Err(Error::Config(
+                        "--connect-timeout-secs must be >= 1 (got 0); \
+                         a zero dial timeout can never connect"
+                            .into(),
+                    ));
+                }
+                b = b.connect_timeout_secs(secs);
+            }
             if let Some(d) = args.get("artifacts") {
                 b = b.artifact_dir(d);
             }
@@ -360,9 +397,14 @@ fn cmd_worker(args: &Args) -> Result<()> {
 /// ephemeral ports are discoverable), serve one manifest per
 /// connection. `--jobs N` exits after N jobs (0 = serve until killed);
 /// `--max-frame-bytes B` raises the inbound frame cap for leaders
-/// shipping large shards inline (`--shard-inline true`).
+/// shipping large shards inline (`--shard-inline true`);
+/// `--manifest-timeout-secs S` bounds how long an accepted connection
+/// may take to deliver its manifest frame; `--fault SPEC` arms the
+/// deterministic chaos layer (refuse-dial | drop-after:N | delay-ms:MS
+/// | corrupt:N) so CI can stand up a misbehaving endpoint.
 fn cmd_serve(args: &Args) -> Result<()> {
     use repro::coordinator::serve::{serve, ServeOptions};
+    use repro::coordinator::FaultSpec;
     let listen = args.get("listen").unwrap_or("127.0.0.1:0");
     let jobs = args.get_usize("jobs", 0)?;
     let mut opts = ServeOptions {
@@ -376,6 +418,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         opts.max_frame_bytes = b.parse().map_err(|_| {
             Error::Config(format!("bad --max-frame-bytes: {b}"))
         })?;
+    }
+    if let Some(s) = args.get("manifest-timeout-secs") {
+        let secs: u64 = s.parse().map_err(|_| {
+            Error::Config(format!("bad --manifest-timeout-secs: {s}"))
+        })?;
+        if secs == 0 {
+            return Err(Error::Config(
+                "--manifest-timeout-secs must be >= 1 (got 0); \
+                 an unbounded manifest read would let one idle \
+                 connection wedge the daemon"
+                    .into(),
+            ));
+        }
+        opts.manifest_timeout = std::time::Duration::from_secs(secs);
+    }
+    if let Some(spec) = args.get("fault") {
+        opts.fault = Some(FaultSpec::parse(spec)?);
     }
     serve(listen, &opts, &mut std::io::stdout())
 }
@@ -412,7 +471,10 @@ fn usage() -> &'static str {
                    [--process-mode true [--worker-bin PATH] \\\n\
                     [--worker-slots W]] \\\n\
                    [--workers HOST:PORT,… (repro serve daemons) \\\n\
-                    [--shard-inline true] [--max-frame-bytes B]] \\\n\
+                    [--shard-inline true] [--max-frame-bytes B] \\\n\
+                    [--heartbeat-secs S] [--liveness-timeout-secs S] \\\n\
+                    [--connect-timeout-secs S]] \\\n\
+                   [--failure-policy failfast|retry [--max-retries N]] \\\n\
                    [--use-runtime true --artifacts DIR] [--config FILE]\n\
      single-chain  --model M --n N --d D --samples T [--out FILE]\n\
      combine       --method NAME [--t T] [--combine-threads K] \\\n\

@@ -12,8 +12,10 @@ use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use repro::combine::CombineMethod;
-use repro::config::PipelineConfig;
-use repro::coordinator::pipeline::run_with_transport;
+use repro::config::{FailurePolicy, PipelineConfig};
+use repro::coordinator::pipeline::{
+    run_native, run_process, run_with_transport, PipelineOutput,
+};
 use repro::coordinator::transport::{
     encode_summary, write_frame, write_frame_bytes, DrawChunk,
     PipeTransport, SocketTransport, Transport, WireFormat, WorkerManifest,
@@ -37,7 +39,32 @@ fn manifest(dir: &Path, machine: usize) -> WorkerManifest {
         shard_inline: false,
         wire_format: WireFormat::Binary,
         draw_batch: 3,
+        heartbeat_secs: 0,
     }
+}
+
+/// Byte-identity across the retry path: retained draws, combined
+/// output, and leader-ingested scalar counts must all match the
+/// unfaulted reference run exactly.
+fn assert_identical(a: &PipelineOutput, b: &PipelineOutput, label: &str) {
+    assert_eq!(a.subposteriors.len(), b.subposteriors.len());
+    for (sa, sb) in a.subposteriors.iter().zip(&b.subposteriors) {
+        assert_eq!(
+            sa.samples.as_slice(),
+            sb.samples.as_slice(),
+            "{label}: machine {} draws diverged",
+            sa.machine
+        );
+    }
+    assert_eq!(
+        a.combined.as_slice(),
+        b.combined.as_slice(),
+        "{label}: combined output diverged"
+    );
+    assert_eq!(
+        a.metrics.scalars_transferred, b.metrics.scalars_transferred,
+        "{label}: leader must retain the same scalar count"
+    );
 }
 
 /// One well-formed RPDRAW1 chunk frame's payload bytes.
@@ -209,4 +236,163 @@ fn pipeline_fails_fast_on_worker_killed_mid_stream() {
         "root cause must be the structured frame diagnostic: {text}"
     );
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// One `repro serve` daemon with optional extra flags (notably
+/// `--fault SPEC` to arm the deterministic chaos layer); killed on
+/// drop so failing tests never leak daemons.
+struct Daemon {
+    child: std::process::Child,
+    addr: String,
+}
+
+impl Daemon {
+    fn spawn(extra: &[&str]) -> Daemon {
+        use std::io::{BufRead, BufReader};
+        use std::process::{Command, Stdio};
+        let mut child = Command::new(env!("CARGO_BIN_EXE_repro"))
+            .args(["serve", "--listen", "127.0.0.1:0"])
+            .args(extra)
+            .stdin(Stdio::null())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning repro serve");
+        let stdout = child.stdout.take().unwrap();
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).unwrap();
+        let addr = line
+            .trim()
+            .strip_prefix("LISTENING ")
+            .unwrap_or_else(|| panic!("bad announce line {line:?}"))
+            .to_string();
+        Daemon { child, addr }
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        self.child.kill().ok();
+        self.child.wait().ok();
+    }
+}
+
+/// Tentpole pin over a real pipe: machine 0's first worker process
+/// dies before emitting a single frame; under `--failure-policy
+/// retry` the scheduler discards the dead attempt, re-dispatches the
+/// shard, and the retained draws are byte-identical to thread mode.
+/// The determinism contract — worker RNG derived from (seed, machine),
+/// never the endpoint — is what makes the replay free.
+#[cfg(unix)]
+#[test]
+fn retry_replays_killed_pipe_worker_byte_identically() {
+    use std::os::unix::fs::PermissionsExt;
+    let dir = std::env::temp_dir().join("repro_fault_pipe_retry");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let marker = dir.join("died_once");
+    let script = dir.join("flaky_worker.sh");
+    std::fs::write(
+        &script,
+        format!(
+            "#!/bin/sh\n\
+             if [ ! -e '{marker}' ]; then\n\
+               : > '{marker}'\n\
+               exit 1\n\
+             fi\n\
+             exec '{real}' \"$@\"\n",
+            marker = marker.display(),
+            real = env!("CARGO_BIN_EXE_repro"),
+        ),
+    )
+    .unwrap();
+    std::fs::set_permissions(
+        &script,
+        std::fs::Permissions::from_mode(0o755),
+    )
+    .unwrap();
+
+    let data = synth::gaussian(600, 2, 19);
+    let cfg = PipelineConfig::builder("gaussian")
+        .machines(2)
+        .samples_per_machine(50)
+        .method(CombineMethod::Parametric)
+        .seed(29)
+        .failure_policy(FailurePolicy::Retry)
+        .max_retries(2)
+        .build();
+    let clean = run_native(&cfg, &data).unwrap();
+    let transport = PipeTransport::new(PathBuf::from(&script), 1);
+    let out = run_with_transport(&cfg, &data, &transport).unwrap();
+    assert_identical(&out, &clean, "pipe retry vs thread");
+    assert_eq!(
+        out.metrics.shard_retries, 1,
+        "exactly one shard re-dispatch"
+    );
+    assert_eq!(out.metrics.endpoints_quarantined, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Tentpole pin over real sockets: one daemon in the fleet hard-kills
+/// every stream after 2 frames (`--fault drop-after:2`). Under retry
+/// the scheduler re-dispatches each killed shard, benches the flaky
+/// endpoint once it keeps failing, and the retained draws stay
+/// byte-identical to thread mode.
+#[test]
+fn retry_over_sockets_survives_a_flaky_daemon_byte_identically() {
+    let flaky = Daemon::spawn(&["--fault", "drop-after:2"]);
+    let clean = Daemon::spawn(&[]);
+    let data = synth::gaussian(1_200, 2, 31);
+    let base = PipelineConfig::builder("gaussian")
+        .machines(4)
+        .samples_per_machine(80)
+        .method(CombineMethod::Semiparametric)
+        .seed(43)
+        .failure_policy(FailurePolicy::Retry)
+        .max_retries(5)
+        .build();
+    let thread_out = run_native(&base, &data).unwrap();
+    let mut sc = base.clone();
+    sc.workers = format!("{},{}", flaky.addr, clean.addr);
+    let socket_out = run_process(&sc, &data).unwrap();
+    assert_identical(&socket_out, &thread_out, "socket retry vs thread");
+    assert!(
+        socket_out.metrics.shard_retries >= 1,
+        "the killed shard must have been re-dispatched: {}",
+        socket_out.metrics
+    );
+    assert!(
+        socket_out.metrics.endpoints_quarantined <= 1,
+        "only the flaky endpoint may be benched: {}",
+        socket_out.metrics
+    );
+}
+
+/// The same kill-mid-stream fault under the default fail-fast policy
+/// stays the existing structured error: the run fails promptly naming
+/// the frame-level root cause, with no retry and no hang.
+#[test]
+fn failfast_on_flaky_daemon_is_a_structured_error() {
+    let flaky = Daemon::spawn(&["--fault", "drop-after:2"]);
+    let data = synth::gaussian(600, 2, 13);
+    let mut cfg = PipelineConfig::builder("gaussian")
+        .machines(2)
+        .samples_per_machine(60)
+        .method(CombineMethod::Parametric)
+        .seed(17)
+        .build();
+    cfg.workers = flaky.addr.clone();
+    let t0 = Instant::now();
+    let err = run_process(&cfg, &data).unwrap_err();
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "fail-fast contract: the run must not hang on a killed stream"
+    );
+    let text = err.to_string().to_lowercase();
+    assert!(
+        text.contains("frame")
+            || text.contains("connection")
+            || text.contains("reset"),
+        "root cause must name the stream failure: {text}"
+    );
 }

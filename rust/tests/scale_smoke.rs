@@ -1,0 +1,125 @@
+//! Scale smoke over the fault-tolerant socket plane: M = 64 logical
+//! machines oversubscribed onto W = 8 real `repro serve` daemons, every
+//! daemon armed with a per-frame delay fault (`--fault delay-ms:2`) and
+//! the leader holding heartbeat + liveness deadlines. The run must
+//! finish inside the liveness budget (slow-but-alive peers are *not*
+//! failures), miss zero heartbeats, and stay byte-identical to thread
+//! mode — the scale, chaos, and liveness layers compose without
+//! touching a draw.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use repro::combine::CombineMethod;
+use repro::config::{FailurePolicy, PipelineConfig};
+use repro::coordinator::pipeline;
+use repro::coordinator::transport::WireFormat;
+use repro::data::synth;
+
+/// One `repro serve` daemon with extra flags; killed on drop.
+struct Daemon {
+    child: Child,
+    addr: String,
+}
+
+impl Daemon {
+    fn spawn(extra: &[&str]) -> Daemon {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_repro"))
+            .args(["serve", "--listen", "127.0.0.1:0"])
+            .args(extra)
+            .stdin(Stdio::null())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning repro serve");
+        let stdout = child.stdout.take().unwrap();
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).unwrap();
+        let addr = line
+            .trim()
+            .strip_prefix("LISTENING ")
+            .unwrap_or_else(|| panic!("bad announce line {line:?}"))
+            .to_string();
+        Daemon { child, addr }
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        self.child.kill().ok();
+        self.child.wait().ok();
+    }
+}
+
+#[test]
+fn m64_over_w8_delayed_daemons_is_byte_identical_within_liveness_budget() {
+    const MACHINES: usize = 64;
+    const WORKERS: usize = 8;
+    let data = synth::gaussian(6_400, 2, 71);
+    let base = PipelineConfig::builder("gaussian")
+        .machines(MACHINES)
+        .samples_per_machine(30)
+        .method(CombineMethod::Parametric)
+        .seed(97)
+        .wire_format(WireFormat::Binary)
+        .draw_batch(64)
+        .failure_policy(FailurePolicy::Retry)
+        .max_retries(2)
+        .heartbeat_secs(1)
+        .liveness_timeout_secs(20)
+        .build();
+    let thread_out = pipeline::run_native(&base, &data).unwrap();
+
+    let daemons: Vec<Daemon> = (0..WORKERS)
+        .map(|_| Daemon::spawn(&["--fault", "delay-ms:2"]))
+        .collect();
+    let spec = daemons
+        .iter()
+        .map(|d| d.addr.as_str())
+        .collect::<Vec<_>>()
+        .join(",");
+    let mut sc = base.clone();
+    sc.workers = spec;
+
+    let t0 = Instant::now();
+    let socket_out = pipeline::run_process(&sc, &data).unwrap();
+    let elapsed = t0.elapsed();
+
+    // Liveness budget: 2 ms/frame of injected delay across ~2 frames ×
+    // 64 jobs is well under the 20 s per-read deadline; the whole run
+    // has to land inside a few deadline windows, not wander off.
+    assert!(
+        elapsed < Duration::from_secs(120),
+        "M={MACHINES} over W={WORKERS} delayed daemons took {elapsed:?}"
+    );
+    assert_eq!(
+        socket_out.metrics.heartbeats_missed, 0,
+        "delayed-but-alive daemons must never trip the liveness deadline"
+    );
+    assert_eq!(
+        socket_out.metrics.endpoints_quarantined, 0,
+        "delay faults are not failures; no endpoint may be benched"
+    );
+
+    assert_eq!(socket_out.subposteriors.len(), MACHINES);
+    for (sa, sb) in
+        socket_out.subposteriors.iter().zip(&thread_out.subposteriors)
+    {
+        assert_eq!(
+            sa.samples.as_slice(),
+            sb.samples.as_slice(),
+            "machine {} draws diverged under delay faults",
+            sa.machine
+        );
+    }
+    assert_eq!(
+        socket_out.combined.as_slice(),
+        thread_out.combined.as_slice(),
+        "combined output diverged under delay faults"
+    );
+    assert_eq!(
+        socket_out.metrics.scalars_transferred,
+        thread_out.metrics.scalars_transferred
+    );
+}
