@@ -563,6 +563,229 @@ fn main() -> repro::error::Result<()> {
         );
     }
 
+    // --- leader I/O: thread-per-endpoint vs poll(2) reactor at W=64 ------
+    // The reactor tentpole's gate: W=64 localhost TCP streams each
+    // carrying 256 framed payloads, drained by (a) 64 blocking
+    // FrameReader threads — the threads driver's shape, spawn cost
+    // included — and (b) one poll(2) loop over nonblocking sockets
+    // feeding RecvBuf incremental decoders — the reactor's shape.
+    // Checksums must agree, and CI's bench-smoke job hard-fails if the
+    // reactor dispatches slower than thread-per-endpoint.
+    #[cfg(unix)]
+    {
+        use repro::coordinator::reactor::{sys, RecvBuf};
+        use repro::coordinator::transport::{
+            write_frame_bytes, FrameReader, DEFAULT_MAX_FRAME_BYTES,
+        };
+        use std::io::{Read, Write};
+        use std::net::{TcpListener, TcpStream};
+        use std::os::unix::io::AsRawFd;
+
+        const W: usize = 64;
+        const FRAMES: usize = 256;
+        const PAYLOAD: usize = 200;
+
+        // W accepted connection pairs; each server side streams its 256
+        // frames from a writer thread and FINs. Setup and writers stay
+        // outside the timed region — only the drain is the experiment.
+        let setup = || -> (Vec<TcpStream>, Vec<std::thread::JoinHandle<()>>)
+        {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let mut clients = Vec::with_capacity(W);
+            let mut servers = Vec::with_capacity(W);
+            for _ in 0..W {
+                clients.push(TcpStream::connect(addr).unwrap());
+                servers.push(listener.accept().unwrap().0);
+            }
+            let writers: Vec<_> = servers
+                .into_iter()
+                .enumerate()
+                .map(|(c, mut s)| {
+                    std::thread::spawn(move || {
+                        let mut buf =
+                            Vec::with_capacity(FRAMES * (PAYLOAD + 8));
+                        let mut payload = [0u8; PAYLOAD];
+                        for i in 0..FRAMES {
+                            for (j, b) in payload.iter_mut().enumerate() {
+                                *b = ((c + i + j) % 251) as u8;
+                            }
+                            write_frame_bytes(&mut buf, &payload).unwrap();
+                        }
+                        s.write_all(&buf).unwrap();
+                        // drop → FIN
+                    })
+                })
+                .collect();
+            (clients, writers)
+        };
+
+        let threads_rep = || -> (f64, u64) {
+            let (clients, writers) = setup();
+            let t0 = std::time::Instant::now();
+            let readers: Vec<_> = clients
+                .into_iter()
+                .map(|s| {
+                    std::thread::spawn(move || {
+                        let mut fr = FrameReader::new(
+                            std::io::BufReader::new(s),
+                        );
+                        let mut payload = Vec::new();
+                        let mut frames = 0usize;
+                        let mut sum = 0u64;
+                        while fr
+                            .read_frame_into(&mut payload)
+                            .unwrap()
+                            .is_some()
+                        {
+                            frames += 1;
+                            sum += payload
+                                .iter()
+                                .map(|&b| b as u64)
+                                .sum::<u64>();
+                        }
+                        (frames, sum)
+                    })
+                })
+                .collect();
+            let mut frames = 0usize;
+            let mut sum = 0u64;
+            for r in readers {
+                let (n, s) = r.join().unwrap();
+                frames += n;
+                sum += s;
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            for w in writers {
+                w.join().unwrap();
+            }
+            assert_eq!(frames, W * FRAMES, "threads drain dropped frames");
+            (secs, sum)
+        };
+
+        let reactor_rep = || -> (f64, u64) {
+            let (streams, writers) = setup();
+            for s in &streams {
+                s.set_nonblocking(true).unwrap();
+            }
+            let t0 = std::time::Instant::now();
+            let mut bufs: Vec<RecvBuf> = (0..W)
+                .map(|_| RecvBuf::new(DEFAULT_MAX_FRAME_BYTES))
+                .collect();
+            let mut live = vec![true; W];
+            let mut payload = Vec::new();
+            let mut chunk = [0u8; 65536];
+            let mut frames = 0usize;
+            let mut sum = 0u64;
+            while live.iter().any(|&l| l) {
+                let mut fds = Vec::new();
+                let mut idx = Vec::new();
+                for (c, s) in streams.iter().enumerate() {
+                    if live[c] {
+                        fds.push(sys::PollFd {
+                            fd: s.as_raw_fd(),
+                            events: sys::POLLIN,
+                            revents: 0,
+                        });
+                        idx.push(c);
+                    }
+                }
+                sys::poll_fds(&mut fds, 1_000).unwrap();
+                for (k, pfd) in fds.iter().enumerate() {
+                    if pfd.revents == 0 {
+                        continue;
+                    }
+                    let c = idx[k];
+                    let mut eof = false;
+                    loop {
+                        match (&streams[c]).read(&mut chunk) {
+                            Ok(0) => {
+                                eof = true;
+                                break;
+                            }
+                            Ok(n) => {
+                                bufs[c].extend_from_slice(&chunk[..n])
+                            }
+                            Err(e)
+                                if e.kind()
+                                    == std::io::ErrorKind::WouldBlock =>
+                            {
+                                break
+                            }
+                            Err(e)
+                                if e.kind()
+                                    == std::io::ErrorKind::Interrupted =>
+                            {
+                                continue
+                            }
+                            Err(e) => panic!("bench reactor read: {e}"),
+                        }
+                    }
+                    while bufs[c]
+                        .pop_frame_into(&mut payload, eof)
+                        .unwrap()
+                        .is_some()
+                    {
+                        frames += 1;
+                        sum += payload
+                            .iter()
+                            .map(|&b| b as u64)
+                            .sum::<u64>();
+                    }
+                    if eof {
+                        live[c] = false;
+                    }
+                }
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            for w in writers {
+                w.join().unwrap();
+            }
+            assert_eq!(frames, W * FRAMES, "reactor drain dropped frames");
+            (secs, sum)
+        };
+
+        let median3 = |f: &dyn Fn() -> (f64, u64)| -> (f64, u64) {
+            let mut reps: Vec<(f64, u64)> = (0..3).map(|_| f()).collect();
+            reps.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            reps[1]
+        };
+        let (secs_threads, sum_threads) = median3(&threads_rep);
+        let (secs_reactor, sum_reactor) = median3(&reactor_rep);
+        assert_eq!(
+            sum_threads, sum_reactor,
+            "dispatch payload checksum diverged across drivers"
+        );
+        let ops = W * FRAMES;
+        row(&format!("frame_dispatch_threads_W{W}"), secs_threads, ops);
+        row(&format!("frame_dispatch_reactor_W{W}"), secs_reactor, ops);
+        println!(
+            "reactor dispatch vs thread-per-endpoint (W={W}, \
+             {FRAMES} frames × {PAYLOAD} B): {:.2}×",
+            secs_threads / secs_reactor
+        );
+        records.push(common::BenchRecord {
+            name: format!("frame_dispatch_threads_W{W}"),
+            ns_per_op: secs_threads * 1e9,
+            threads: W,
+            speedup: 1.0,
+        });
+        records.push(common::BenchRecord {
+            name: format!("frame_dispatch_reactor_W{W}"),
+            ns_per_op: secs_reactor * 1e9,
+            threads: 1,
+            speedup: secs_threads / secs_reactor,
+        });
+        assert!(
+            secs_reactor <= 1.1 * secs_threads,
+            "poll(2) reactor dispatch ({}) must not lose to \
+             thread-per-endpoint ({}) at W={W} — the single poller \
+             stopped paying for itself",
+            common::fmt_secs(secs_reactor),
+            common::fmt_secs(secs_threads)
+        );
+    }
+
     // --- combine end-to-end at working sizes -----------------------------
     let mut rng = Pcg64::seed_from(9);
     let sets: Vec<SampleMatrix> = (0..10)

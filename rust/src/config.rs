@@ -49,6 +49,43 @@ impl FailurePolicy {
     }
 }
 
+/// Which leader-side I/O runtime drives the socket transport
+/// (`io_driver` key / `--io-driver`). The choice never changes the
+/// retained draws — machine RNG streams are `root.split(m)`, so the
+/// driver only changes *when* bytes arrive, never *what* lands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IoDriver {
+    /// One blocking OS thread per worker endpoint (the historical
+    /// behavior, and the only driver for pipe/native runs).
+    #[default]
+    Threads,
+    /// A `poll(2)` reactor: one thread (or a small fixed pool,
+    /// `reactor_threads`) multiplexes every endpoint through
+    /// nonblocking sockets — leader thread count independent of W.
+    /// Socket transport only; pipe and native runs keep the thread
+    /// driver regardless.
+    Reactor,
+}
+
+impl IoDriver {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "threads" => Ok(IoDriver::Threads),
+            "reactor" => Ok(IoDriver::Reactor),
+            other => Err(Error::Config(format!(
+                "unknown io_driver '{other}' (expected threads | reactor)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            IoDriver::Threads => "threads",
+            IoDriver::Reactor => "reactor",
+        }
+    }
+}
+
 /// Full configuration of an embarrassingly-parallel MCMC run.
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
@@ -184,6 +221,17 @@ pub struct PipelineConfig {
     /// `--connect-timeout-secs`; zero is rejected at parse).
     /// Default 30.
     pub connect_timeout_secs: usize,
+    /// Leader-side socket I/O runtime (`io_driver` key /
+    /// `--io-driver {threads,reactor}`). Default `threads` until the
+    /// reactor smoke is green in CI; consulted only for socket runs —
+    /// pipe and native runs keep the thread driver either way.
+    pub io_driver: IoDriver,
+    /// Reactor thread-pool size under `io_driver = reactor`
+    /// (`reactor_threads` key / `--reactor-threads`; zero is rejected
+    /// at parse). Endpoints are partitioned across the pool; machines
+    /// are pulled from one shared queue. Default 1 — the whole point
+    /// is that leader thread count no longer scales with W.
+    pub reactor_threads: usize,
 }
 
 impl PipelineConfig {
@@ -303,6 +351,11 @@ impl PipelineConfig {
             "connect_timeout_secs",
             b.connect_timeout_secs,
         )?;
+        if let Some(v) = get("io_driver") {
+            b.io_driver = IoDriver::parse(&v)?;
+        }
+        b.reactor_threads =
+            parse_usize("reactor_threads", b.reactor_threads)?;
         // Degenerate knobs are rejected here, with the key named, rather
         // than silently clamped or left to panic deep in the draw plane.
         if b.connect_timeout_secs == 0 {
@@ -320,6 +373,13 @@ impl PipelineConfig {
         if b.chunk_rows == 0 {
             return Err(Error::Config(
                 "chunk_rows must be >= 1 (got 0)".into(),
+            ));
+        }
+        if b.reactor_threads == 0 {
+            return Err(Error::Config(
+                "reactor_threads must be >= 1 (got 0); \
+                 a reactor with no threads polls nothing"
+                    .into(),
             ));
         }
         Ok(b.build())
@@ -416,6 +476,8 @@ pub struct PipelineConfigBuilder {
     heartbeat_secs: usize,
     liveness_timeout_secs: usize,
     connect_timeout_secs: usize,
+    io_driver: IoDriver,
+    reactor_threads: usize,
 }
 
 impl PipelineConfigBuilder {
@@ -452,6 +514,8 @@ impl PipelineConfigBuilder {
             heartbeat_secs: 0,
             liveness_timeout_secs: 0,
             connect_timeout_secs: 30,
+            io_driver: IoDriver::Threads,
+            reactor_threads: 1,
         }
     }
 
@@ -621,6 +685,18 @@ impl PipelineConfigBuilder {
     }
 
     /// Leader liveness deadline in seconds (`0` = disabled) — see
+    /// `PipelineConfig::io_driver`.
+    pub fn io_driver(mut self, d: IoDriver) -> Self {
+        self.io_driver = d;
+        self
+    }
+
+    /// `PipelineConfig::reactor_threads` (clamped to ≥ 1).
+    pub fn reactor_threads(mut self, n: usize) -> Self {
+        self.reactor_threads = n.max(1);
+        self
+    }
+
     /// `PipelineConfig::liveness_timeout_secs`.
     pub fn liveness_timeout_secs(mut self, s: usize) -> Self {
         self.liveness_timeout_secs = s;
@@ -679,6 +755,8 @@ impl PipelineConfigBuilder {
             max_retries: self.max_retries,
             heartbeat_secs: self.heartbeat_secs,
             liveness_timeout_secs: self.liveness_timeout_secs,
+            io_driver: self.io_driver,
+            reactor_threads: self.reactor_threads.max(1),
             connect_timeout_secs: self.connect_timeout_secs.max(1),
         }
     }
@@ -906,6 +984,35 @@ mod tests {
             "model = gaussian\nmax_retries = some\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn cfg_file_io_driver_keys() {
+        let c = PipelineConfig::from_str_cfg(
+            "model = gaussian\n\
+             io_driver = reactor\n\
+             reactor_threads = 2\n",
+        )
+        .unwrap();
+        assert_eq!(c.io_driver, IoDriver::Reactor);
+        assert_eq!(c.reactor_threads, 2);
+        // Defaults: thread-per-endpoint, one reactor thread.
+        let c = PipelineConfig::from_str_cfg("model = gaussian\n").unwrap();
+        assert_eq!(c.io_driver, IoDriver::Threads);
+        assert_eq!(c.reactor_threads, 1);
+        // Bad values are structured errors naming the key.
+        let err = PipelineConfig::from_str_cfg(
+            "model = gaussian\nio_driver = epoll\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("io_driver"), "{err}");
+        let err = PipelineConfig::from_str_cfg(
+            "model = gaussian\nreactor_threads = 0\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("reactor_threads"), "{err}");
+        assert_eq!(IoDriver::parse("threads").unwrap().name(), "threads");
+        assert_eq!(IoDriver::parse("reactor").unwrap().name(), "reactor");
     }
 
     #[test]

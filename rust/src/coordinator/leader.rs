@@ -177,6 +177,10 @@ impl Leader {
 
     /// Drain a mixed draw/chunk stream ([`LeaderMsg`]) until every
     /// worker has sent its final message (or the channel closes).
+    /// Driver-agnostic: the thread-per-endpoint scheduler and the
+    /// `poll(2)` reactor ([`crate::coordinator::reactor`]) feed the
+    /// same channel, so the leader cannot tell the drivers apart —
+    /// one half of the `--io-driver` byte-identity contract.
     pub fn drain_stream(&mut self, rx: &Receiver<LeaderMsg>) -> Result<()> {
         for msg in rx.iter() {
             self.ingest_msg(msg)?;
@@ -193,7 +197,8 @@ impl Leader {
     /// then a *different* machine's failure arrives, so "all finished"
     /// is not a stable condition until every sender is gone — exiting
     /// early would strand Reset messages in the channel and ingest a
-    /// retried stream on top of the failed prefix.
+    /// retried stream on top of the failed prefix. Both retry
+    /// schedulers (threads and reactor) drain through here.
     pub fn drain_stream_all(
         &mut self,
         rx: &Receiver<LeaderMsg>,

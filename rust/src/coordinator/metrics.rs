@@ -36,6 +36,17 @@ pub struct RunMetrics {
     /// partitioned peer the deadline converted into a schedulable
     /// failure.
     pub heartbeats_missed: usize,
+    /// `poll(2)` returns across all reactor threads (`--io-driver
+    /// reactor`); `0` under the threads driver.
+    pub reactor_wakeups: usize,
+    /// Milliseconds from scheduler start to the first draw/chunk frame
+    /// landing on the leader; `0.0` when no frame arrived (or under
+    /// drivers that don't measure it).
+    pub time_to_first_draw_ms: f64,
+    /// Per-endpoint busy fraction (seconds a worker connection was
+    /// open on that slot / scheduler wall time); empty under the
+    /// threads driver.
+    pub endpoint_busy: Vec<f64>,
 }
 
 impl RunMetrics {
@@ -61,6 +72,15 @@ impl RunMetrics {
             return 1.0;
         }
         self.max_worker_secs() / mean
+    }
+
+    /// Mean per-endpoint busy fraction; `0.0` when not measured.
+    pub fn mean_endpoint_busy(&self) -> f64 {
+        if self.endpoint_busy.is_empty() {
+            return 0.0;
+        }
+        self.endpoint_busy.iter().sum::<f64>()
+            / self.endpoint_busy.len() as f64
     }
 }
 
@@ -88,12 +108,19 @@ impl fmt::Display for RunMetrics {
             "draw_peak_bytes={} draw_spilled_bytes={}",
             self.draw_peak_bytes, self.draw_spilled_bytes
         )?;
-        write!(
+        writeln!(
             f,
             "shard_retries={} endpoints_quarantined={} heartbeats_missed={}",
             self.shard_retries,
             self.endpoints_quarantined,
             self.heartbeats_missed
+        )?;
+        write!(
+            f,
+            "reactor_wakeups={} time_to_first_draw_ms={:.1} endpoint_busy(mean)={:.3}",
+            self.reactor_wakeups,
+            self.time_to_first_draw_ms,
+            self.mean_endpoint_busy()
         )
     }
 }
@@ -118,6 +145,9 @@ mod tests {
             shard_retries: 2,
             endpoints_quarantined: 1,
             heartbeats_missed: 3,
+            reactor_wakeups: 42,
+            time_to_first_draw_ms: 12.5,
+            endpoint_busy: vec![0.5, 0.9],
         };
         assert!((m.mean_accept_rate() - 0.7).abs() < 1e-12);
         assert!((m.max_worker_secs() - 3.0).abs() < 1e-12);
@@ -129,6 +159,10 @@ mod tests {
         assert!(s.contains("shard_retries=2"));
         assert!(s.contains("endpoints_quarantined=1"));
         assert!(s.contains("heartbeats_missed=3"));
+        assert!((m.mean_endpoint_busy() - 0.7).abs() < 1e-12);
+        assert!(s.contains("reactor_wakeups=42"));
+        assert!(s.contains("time_to_first_draw_ms=12.5"));
+        assert!(s.contains("endpoint_busy(mean)=0.700"));
     }
 
     #[test]

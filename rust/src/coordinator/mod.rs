@@ -20,6 +20,8 @@ pub mod leader;
 pub mod metrics;
 pub mod partition;
 pub mod pipeline;
+#[cfg(unix)]
+pub mod reactor;
 pub mod serve;
 pub mod timing;
 pub mod transport;

@@ -17,11 +17,11 @@ use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::combine;
-use crate::config::{self, FailurePolicy, PipelineConfig};
+use crate::config::{self, FailurePolicy, IoDriver, PipelineConfig};
 use crate::coordinator::metrics::RunMetrics;
 use crate::coordinator::partition::Partitioner;
 use crate::coordinator::timing::ClusterTiming;
@@ -251,6 +251,20 @@ pub fn run_process(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutpu
                 cfg.liveness_timeout_secs, cfg.heartbeat_secs
             )));
         }
+        if cfg.io_driver == IoDriver::Reactor {
+            #[cfg(unix)]
+            {
+                return run_reactor_socket(cfg, data);
+            }
+            #[cfg(not(unix))]
+            {
+                return Err(Error::Config(
+                    "--io-driver reactor needs a unix poll(2) host; \
+                     use --io-driver threads"
+                        .into(),
+                ));
+            }
+        }
         let mut transport = SocketTransport::from_spec(&cfg.workers)?
             .with_inline_shards(cfg.shard_inline)
             .with_connect_timeout(Duration::from_secs(
@@ -310,57 +324,15 @@ pub fn run_with_transport(
     transport: &dyn Transport,
 ) -> Result<PipelineOutput> {
     validate_combine_backend(cfg)?;
-    let shards =
-        Partitioner::Contiguous.split(data.len(), cfg.machines, cfg.seed)?;
-    let prior_w = 1.0 / cfg.machines as f64;
     let dim = data.param_dim();
     let t0 = Instant::now();
-
-    // Spill every shard + manifest up front: assignments are pulled off
-    // a queue by whichever endpoint frees up first, so all files must
-    // exist before the first connection.
     let run_dir = RunDir::create(cfg.seed)?;
-    let mut manifests = Vec::with_capacity(cfg.machines);
-    let mut manifest_paths = Vec::with_capacity(cfg.machines);
-    for (m, shard) in shards.iter().enumerate() {
-        let shard_path = run_dir.path().join(format!(
-            "shard_{m}.{}",
-            cfg.shard_format.extension()
-        ));
-        io::write_shard(&shard_path, &data.select(shard)?, cfg.shard_format)?;
-        let manifest = WorkerManifest {
-            machine: m,
-            machines: cfg.machines,
-            seed: cfg.seed,
-            samples: cfg.samples_per_machine,
-            burn_in: cfg.burn_in,
-            thin: cfg.thin,
-            prior_weight: prior_w,
-            sampler: config::sampler_spec(&cfg.sampler),
-            shard_path: shard_path.to_string_lossy().into_owned(),
-            dim,
-            // The transport decides shard delivery: inline frames for
-            // socket fleets without a shared filesystem, path mode
-            // otherwise. Setting it on the manifest keeps leader and
-            // worker in lockstep about the frame sequence.
-            shard_inline: transport.wants_inline_shard(),
-            // The draw plane: JSON per-draw frames or batched binary
-            // chunks. Negotiated through the manifest so a worker that
-            // predates the binary plane simply ignores the fields and
-            // streams JSON, which the leader accepts frame-by-frame.
-            wire_format: cfg.wire_format,
-            draw_batch: cfg.draw_batch,
-            // Manifest-negotiated heartbeats: a worker that predates
-            // RPHB beacons ignores the field and never beacons, which
-            // is only fatal if the leader also armed a liveness
-            // deadline — exactly the contract the knobs document.
-            heartbeat_secs: cfg.heartbeat_secs,
-        };
-        let manifest_path = run_dir.path().join(format!("worker_{m}.json"));
-        manifest.save(&manifest_path)?;
-        manifests.push(manifest);
-        manifest_paths.push(manifest_path);
-    }
+    let (manifests, manifest_paths) = spill_assignments(
+        cfg,
+        data,
+        &run_dir,
+        transport.wants_inline_shard(),
+    )?;
 
     let slots = transport.slots().clamp(1, cfg.machines);
     let (tx, rx) = channel::<LeaderMsg>();
@@ -444,6 +416,11 @@ pub fn run_with_transport(
             // them up.
             let pending: Mutex<VecDeque<usize>> =
                 Mutex::new((0..cfg.machines).collect());
+            // Wakes idle endpoints the moment work requeues or the
+            // run resolves — replacing the old 10 ms sleep-poll, which
+            // cost up to a sleep of tail latency per requeue and kept
+            // idle endpoint threads busy-waiting.
+            let sched_cv = Condvar::new();
             let attempts: Mutex<Vec<usize>> =
                 Mutex::new(vec![0; cfg.machines]);
             let slot_failures: Mutex<Vec<usize>> =
@@ -462,6 +439,7 @@ pub fn run_with_transport(
                     let root_err = &root_err;
                     let abort = &abort;
                     let pending = &pending;
+                    let sched_cv = &sched_cv;
                     let attempts = &attempts;
                     let slot_failures = &slot_failures;
                     let attempt_log = &attempt_log;
@@ -474,19 +452,35 @@ pub fn run_with_transport(
                         if abort.load(Ordering::SeqCst) {
                             break;
                         }
-                        let m = pending.lock().unwrap().pop_front();
-                        let Some(m) = m else {
-                            // Queue empty but machines may still be in
-                            // flight on other endpoints — and a flight
-                            // can fail and requeue, so idle endpoints
-                            // poll instead of exiting.
-                            if completed.load(Ordering::SeqCst)
-                                >= cfg.machines
-                            {
-                                break;
+                        // Queue empty but machines may still be in
+                        // flight on other endpoints — and a flight can
+                        // fail and requeue, so idle endpoints park on
+                        // the Condvar until a completion or requeue
+                        // signals (the timeout only backstops a
+                        // notification racing in before the park).
+                        let m = {
+                            let mut q = pending.lock().unwrap();
+                            loop {
+                                if abort.load(Ordering::SeqCst)
+                                    || completed.load(Ordering::SeqCst)
+                                        >= cfg.machines
+                                {
+                                    break None;
+                                }
+                                if let Some(m) = q.pop_front() {
+                                    break Some(m);
+                                }
+                                q = sched_cv
+                                    .wait_timeout(
+                                        q,
+                                        Duration::from_millis(500),
+                                    )
+                                    .unwrap()
+                                    .0;
                             }
-                            std::thread::sleep(Duration::from_millis(10));
-                            continue;
+                        };
+                        let Some(m) = m else {
+                            break;
                         };
                         let attempt = {
                             let mut a = attempts.lock().unwrap();
@@ -504,6 +498,9 @@ pub fn run_with_transport(
                             Ok(out) => {
                                 results.lock().unwrap()[m] = Some(out);
                                 completed.fetch_add(1, Ordering::SeqCst);
+                                // The last completion releases every
+                                // parked endpoint to exit.
+                                sched_cv.notify_all();
                             }
                             Err(e) => {
                                 if e.to_string()
@@ -541,6 +538,9 @@ pub fn run_with_transport(
                                                 .join("\n  ")
                                         )),
                                     );
+                                    // Parked siblings must observe the
+                                    // abort, not wait out the backstop.
+                                    sched_cv.notify_all();
                                     break;
                                 }
                                 retries.fetch_add(1, Ordering::SeqCst);
@@ -561,6 +561,9 @@ pub fn run_with_transport(
                                     backoff_ms,
                                 ));
                                 pending.lock().unwrap().push_back(m);
+                                // Hand the requeued machine to an idle
+                                // endpoint immediately.
+                                sched_cv.notify_all();
                                 if quarantine_now {
                                     quarantines
                                         .fetch_add(1, Ordering::SeqCst);
@@ -588,6 +591,7 @@ pub fn run_with_transport(
                                                     .join("\n  ")
                                             )),
                                         );
+                                        sched_cv.notify_all();
                                     }
                                     break;
                                 }
@@ -633,15 +637,174 @@ pub fn run_with_transport(
     Ok(out)
 }
 
+/// Spill every shard + manifest up front: assignments are pulled off
+/// a queue by whichever endpoint frees up first, so all files must
+/// exist before the first connection. Shared by the threads driver
+/// ([`run_with_transport`]) and the reactor driver — both see the
+/// same manifests, which is what carries the byte-identity contract
+/// across `--io-driver` values.
+fn spill_assignments(
+    cfg: &PipelineConfig,
+    data: &Dataset,
+    run_dir: &RunDir,
+    inline_shards: bool,
+) -> Result<(Vec<WorkerManifest>, Vec<PathBuf>)> {
+    let shards =
+        Partitioner::Contiguous.split(data.len(), cfg.machines, cfg.seed)?;
+    let prior_w = 1.0 / cfg.machines as f64;
+    let dim = data.param_dim();
+    let mut manifests = Vec::with_capacity(cfg.machines);
+    let mut manifest_paths = Vec::with_capacity(cfg.machines);
+    for (m, shard) in shards.iter().enumerate() {
+        let shard_path = run_dir.path().join(format!(
+            "shard_{m}.{}",
+            cfg.shard_format.extension()
+        ));
+        io::write_shard(&shard_path, &data.select(shard)?, cfg.shard_format)?;
+        let manifest = WorkerManifest {
+            machine: m,
+            machines: cfg.machines,
+            seed: cfg.seed,
+            samples: cfg.samples_per_machine,
+            burn_in: cfg.burn_in,
+            thin: cfg.thin,
+            prior_weight: prior_w,
+            sampler: config::sampler_spec(&cfg.sampler),
+            shard_path: shard_path.to_string_lossy().into_owned(),
+            dim,
+            // The transport decides shard delivery: inline frames for
+            // socket fleets without a shared filesystem, path mode
+            // otherwise. Setting it on the manifest keeps leader and
+            // worker in lockstep about the frame sequence.
+            shard_inline: inline_shards,
+            // The draw plane: JSON per-draw frames or batched binary
+            // chunks. Negotiated through the manifest so a worker that
+            // predates the binary plane simply ignores the fields and
+            // streams JSON, which the leader accepts frame-by-frame.
+            wire_format: cfg.wire_format,
+            draw_batch: cfg.draw_batch,
+            // Manifest-negotiated heartbeats: a worker that predates
+            // RPHB beacons ignores the field and never beacons, which
+            // is only fatal if the leader also armed a liveness
+            // deadline — exactly the contract the knobs document.
+            heartbeat_secs: cfg.heartbeat_secs,
+        };
+        let manifest_path = run_dir.path().join(format!("worker_{m}.json"));
+        manifest.save(&manifest_path)?;
+        manifests.push(manifest);
+        manifest_paths.push(manifest_path);
+    }
+    Ok((manifests, manifest_paths))
+}
+
+/// Socket mode under `--io-driver reactor`: same spill prelude, same
+/// leader drain, same failure-policy semantics — but the W endpoints
+/// are multiplexed by the `poll(2)` reactor pool
+/// ([`crate::coordinator::reactor`]) instead of W blocking threads, so
+/// the leader's thread count is independent of W. Retained draws are
+/// byte-identical to the threads driver by construction: the reactor
+/// consumes the same manifests and only changes *when* bytes arrive.
+#[cfg(unix)]
+fn run_reactor_socket(
+    cfg: &PipelineConfig,
+    data: &Dataset,
+) -> Result<PipelineOutput> {
+    use crate::coordinator::reactor;
+    use crate::coordinator::transport::DEFAULT_MAX_FRAME_BYTES;
+
+    validate_combine_backend(cfg)?;
+    let addrs: Vec<String> = cfg
+        .workers
+        .split(',')
+        .map(|a| a.trim().to_string())
+        .filter(|a| !a.is_empty())
+        .collect();
+    if addrs.is_empty() {
+        return Err(Error::Config(
+            "socket transport needs at least one worker address".into(),
+        ));
+    }
+    let dim = data.param_dim();
+    let t0 = Instant::now();
+    let run_dir = RunDir::create(cfg.seed)?;
+    let (manifests, _manifest_paths) =
+        spill_assignments(cfg, data, &run_dir, cfg.shard_inline)?;
+    let rcfg = reactor::ReactorConfig {
+        addrs,
+        connect_timeout: Duration::from_secs(
+            cfg.connect_timeout_secs as u64,
+        ),
+        liveness: (cfg.liveness_timeout_secs > 0)
+            .then(|| Duration::from_secs(cfg.liveness_timeout_secs as u64)),
+        max_frame_bytes: if cfg.max_frame_bytes != 0 {
+            cfg.max_frame_bytes
+        } else {
+            DEFAULT_MAX_FRAME_BYTES
+        },
+        failure_policy: cfg.failure_policy,
+        max_retries: cfg.max_retries,
+        reactor_threads: cfg.reactor_threads,
+        dim,
+    };
+    let (tx, rx) = channel::<LeaderMsg>();
+    let mut leader =
+        Leader::with_store_config(cfg.machines, dim, store_config(cfg));
+    leader.set_combine_threads(cfg.combine_threads);
+    leader.set_combine_cache_budget(cache_budget_bytes(cfg));
+    leader.set_combine_kernel(cfg.combine_backend);
+    let outcome = std::thread::scope(
+        |scope| -> Result<reactor::ReactorOutcome> {
+            let manifests = &manifests;
+            let rcfg = &rcfg;
+            let handle = scope
+                .spawn(move || reactor::run_reactor(rcfg, manifests, tx));
+            match cfg.failure_policy {
+                FailurePolicy::Failfast => leader.drain_stream(&rx)?,
+                FailurePolicy::Retry => leader.drain_stream_all(&rx)?,
+            }
+            handle
+                .join()
+                .map_err(|_| Error::Runtime("reactor pool panicked".into()))
+        },
+    )?;
+    if let Some(e) = outcome.root_err {
+        return Err(e);
+    }
+    let subposteriors: Vec<SubposteriorSamples> = outcome
+        .results
+        .into_iter()
+        .map(|o| o.ok_or_else(|| Error::Runtime("worker died".into())))
+        .collect::<Result<_>>()?;
+    let mut out = finish_run(
+        cfg,
+        subposteriors,
+        leader.scalars_received,
+        t0,
+        Some(&leader),
+    )?;
+    out.metrics.shard_retries = outcome.retries;
+    out.metrics.endpoints_quarantined = outcome.quarantines;
+    out.metrics.heartbeats_missed = outcome.missed;
+    out.metrics.reactor_wakeups = outcome.wakeups;
+    out.metrics.time_to_first_draw_ms =
+        outcome.time_to_first_draw_ms.unwrap_or(0.0);
+    out.metrics.endpoint_busy = outcome.endpoint_busy;
+    out.run_dir = Some(run_dir);
+    Ok(out)
+}
+
 /// Total failures after which an endpoint is benched under the retry
 /// policy: the job proceeds on the surviving pool and the endpoint is
-/// never dialed again this run.
-const QUARANTINE_AFTER: usize = 2;
+/// never dialed again this run. Shared with the reactor driver so both
+/// schedulers bench endpoints on the same evidence.
+pub(crate) const QUARANTINE_AFTER: usize = 2;
 
 /// Capped exponential backoff before a failed shard requeues:
-/// `base · 2^(attempt-1)`, capped.
-const RETRY_BACKOFF_BASE_MS: u64 = 100;
-const RETRY_BACKOFF_CAP_MS: u64 = 2_000;
+/// `base · 2^(attempt-1)`, capped. Shared with the reactor driver,
+/// which serves the same schedule from its poll timeout instead of a
+/// thread sleep.
+pub(crate) const RETRY_BACKOFF_BASE_MS: u64 = 100;
+pub(crate) const RETRY_BACKOFF_CAP_MS: u64 = 2_000;
 
 /// Record `e` as the run's root cause (first writer wins), flag the
 /// abort, and cancel every in-flight worker through the transport.
@@ -852,12 +1015,16 @@ fn finish_run(
         total_secs: t0.elapsed().as_secs_f64(),
         draw_peak_bytes: draw_stats.peak_resident_bytes,
         draw_spilled_bytes: draw_stats.spilled_bytes,
-        // Resilience counters are owned by the transport scheduler,
-        // which stamps them after this returns; thread/sequential runs
-        // have no endpoints to retry or quarantine.
+        // Resilience counters and reactor telemetry are owned by the
+        // transport scheduler, which stamps them after this returns;
+        // thread/sequential runs have no endpoints to retry, quarantine
+        // or poll.
         shard_retries: 0,
         endpoints_quarantined: 0,
         heartbeats_missed: 0,
+        reactor_wakeups: 0,
+        time_to_first_draw_ms: 0.0,
+        endpoint_busy: Vec::new(),
     };
     Ok(PipelineOutput {
         subposteriors,

@@ -1,0 +1,1414 @@
+//! Event-driven leader I/O: a hand-rolled `poll(2)` reactor that
+//! multiplexes every worker socket on one thread (or a small fixed
+//! pool, `--reactor-threads`), replacing thread-per-endpoint.
+//!
+//! The paper's workers need essentially no communication until the
+//! combination stage, so the leader's job is pure I/O fan-in — which
+//! a blocking thread per endpoint over-provisions by W threads and the
+//! retry scheduler's 10 ms sleep-poll. Here each connection is a small
+//! state machine: a reused receive buffer feeds the existing
+//! [`FrameReader`] grammar incrementally (the reactor re-parses off an
+//! in-memory slice, so the wire protocol is untouched), writes
+//! (manifest frame, optional inline shard) go through a nonblocking
+//! send queue with partial-write resume, and heartbeat/liveness
+//! deadlines are per-connection entries folded into the poll timeout
+//! instead of per-read `set_read_timeout` calls. Dispatch, requeue,
+//! backoff and quarantine are re-driven off reactor events (readable,
+//! frame complete, deadline expired, endpoint free) with the *same*
+//! constants, attempt-log format, and Reset-before-requeue ordering as
+//! the threads driver — so retained draws stay byte-identical: machine
+//! m's RNG stream is `root.split(m)`, a function of the manifest, and
+//! the reactor only changes *when* bytes arrive, never *what* lands.
+//!
+//! No new dependencies: the `poll(2)`/`pipe(2)`/`fcntl(2)` bindings
+//! are bare `extern "C"` declarations in the same idiom as the
+//! hand-rolled `mmap` in [`crate::data::io`].
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::config::FailurePolicy;
+use crate::coordinator::pipeline::{
+    QUARANTINE_AFTER, RETRY_BACKOFF_BASE_MS, RETRY_BACKOFF_CAP_MS,
+};
+use crate::coordinator::transport::{
+    write_frame_bytes, FrameReader, WireMsg, WorkerManifest, WorkerSummary,
+    LIVENESS_EXPIRED_MARKER,
+};
+use crate::coordinator::LeaderMsg;
+use crate::error::{Error, FrameError, Result};
+use crate::types::{SampleMatrix, SubposteriorSamples};
+
+/// Minimal `poll(2)` / `pipe(2)` / `fcntl(2)` bindings — no libc crate
+/// (the repo is dependency-free by design), just the syscall wrappers
+/// every unix libc exports with these C signatures. Public so the
+/// `micro_hotpath` bench can drive the same poll loop it measures.
+pub mod sys {
+    use std::os::unix::io::RawFd;
+
+    // POSIX poll event bits, identical on linux and the BSDs
+    // (incl. macOS).
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    const F_GETFL: i32 = 3;
+    const F_SETFL: i32 = 4;
+    #[cfg(target_os = "linux")]
+    const O_NONBLOCK: i32 = 0o4000;
+    #[cfg(not(target_os = "linux"))]
+    const O_NONBLOCK: i32 = 0x0004;
+
+    /// `struct pollfd` — layout fixed by POSIX.
+    #[repr(C)]
+    #[derive(Debug, Clone, Copy)]
+    pub struct PollFd {
+        pub fd: RawFd,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    extern "C" {
+        // nfds_t is `unsigned long` on linux; `usize` matches it on
+        // every LP64 target this repo builds for.
+        fn poll(fds: *mut PollFd, nfds: usize, timeout_ms: i32) -> i32;
+        fn pipe(fds: *mut RawFd) -> i32;
+        fn fcntl(fd: RawFd, cmd: i32, arg: i32) -> i32;
+        fn read(fd: RawFd, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: RawFd, buf: *const u8, count: usize) -> isize;
+        fn close(fd: RawFd) -> i32;
+    }
+
+    /// `poll(2)` over a pollfd set, retrying on EINTR. `timeout_ms < 0`
+    /// blocks until an event; `0` polls without blocking.
+    pub fn poll_fds(
+        fds: &mut [PollFd],
+        timeout_ms: i32,
+    ) -> std::io::Result<usize> {
+        loop {
+            let rc =
+                unsafe { poll(fds.as_mut_ptr(), fds.len(), timeout_ms) };
+            if rc >= 0 {
+                return Ok(rc as usize);
+            }
+            let err = std::io::Error::last_os_error();
+            if err.kind() != std::io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        }
+    }
+
+    fn set_nonblocking(fd: RawFd) -> std::io::Result<()> {
+        let flags = unsafe { fcntl(fd, F_GETFL, 0) };
+        if flags < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        if unsafe { fcntl(fd, F_SETFL, flags | O_NONBLOCK) } < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Self-pipe wakeup: the read end sits in every poll set, so any
+    /// thread can interrupt a poller mid-wait by writing a byte —
+    /// that's how completions, requeues, and `abort` reach a reactor
+    /// blocked with an infinite timeout. Both ends are nonblocking:
+    /// a full pipe on `wake` means a wakeup is already pending, which
+    /// is exactly the semantics we want (no lost-wakeup race — the
+    /// byte persists until drained).
+    pub struct WakePipe {
+        read_fd: RawFd,
+        write_fd: RawFd,
+    }
+
+    impl WakePipe {
+        pub fn new() -> std::io::Result<WakePipe> {
+            let mut fds: [RawFd; 2] = [0; 2];
+            if unsafe { pipe(fds.as_mut_ptr()) } != 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+            for fd in fds {
+                if let Err(e) = set_nonblocking(fd) {
+                    unsafe {
+                        close(fds[0]);
+                        close(fds[1]);
+                    }
+                    return Err(e);
+                }
+            }
+            Ok(WakePipe { read_fd: fds[0], write_fd: fds[1] })
+        }
+
+        pub fn read_fd(&self) -> RawFd {
+            self.read_fd
+        }
+
+        pub fn wake(&self) {
+            let byte = [1u8];
+            // EAGAIN ⇒ the pipe already holds an undrained wakeup.
+            unsafe { write(self.write_fd, byte.as_ptr(), 1) };
+        }
+
+        /// Drain pending wakeup bytes (called when poll reports the
+        /// read end readable).
+        pub fn drain(&self) {
+            let mut buf = [0u8; 256];
+            loop {
+                let n = unsafe {
+                    read(self.read_fd, buf.as_mut_ptr(), buf.len())
+                };
+                if n < buf.len() as isize {
+                    break;
+                }
+            }
+        }
+    }
+
+    impl Drop for WakePipe {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.read_fd);
+                close(self.write_fd);
+            }
+        }
+    }
+}
+
+/// Per-connection receive buffer feeding the [`FrameReader`] grammar
+/// incrementally: bytes accumulate across readable events, and a frame
+/// pops only once it is complete. Truncation mid-frame is "need more
+/// bytes" while the connection is open and a structured
+/// [`FrameError`] once it hit EOF — exactly the split the blocking
+/// reader gets for free from `read_exact`.
+pub struct RecvBuf {
+    bytes: Vec<u8>,
+    max_frame_bytes: usize,
+}
+
+impl RecvBuf {
+    pub fn new(max_frame_bytes: usize) -> RecvBuf {
+        RecvBuf { bytes: Vec::new(), max_frame_bytes }
+    }
+
+    pub fn extend_from_slice(&mut self, chunk: &[u8]) {
+        self.bytes.extend_from_slice(chunk);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    /// Pop the next complete frame into `out` (reused across calls),
+    /// returning its payload length; `Ok(None)` when the buffered
+    /// bytes do not yet hold a full frame. With `eof` set, a partial
+    /// frame is a protocol violation (`TruncatedPrefix` /
+    /// `TruncatedPayload`) instead of "wait for more".
+    pub fn pop_frame_into(
+        &mut self,
+        out: &mut Vec<u8>,
+        eof: bool,
+    ) -> Result<Option<usize>> {
+        if self.bytes.is_empty() {
+            return Ok(None);
+        }
+        let mut fr =
+            FrameReader::with_max_frame(&self.bytes[..], self.max_frame_bytes);
+        match fr.read_frame_into(out) {
+            Ok(Some(len)) => {
+                let rest = fr.into_inner().len();
+                let consumed = self.bytes.len() - rest;
+                self.bytes.drain(..consumed);
+                Ok(Some(len))
+            }
+            Ok(None) => Ok(None),
+            Err(Error::Frame(
+                FrameError::TruncatedPrefix
+                | FrameError::TruncatedPayload { .. },
+            )) if !eof => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+}
+
+/// Nonblocking send queue with partial-write resume: frames are
+/// appended whole and pumped out whenever the socket reports writable,
+/// picking up exactly where the last `EWOULDBLOCK` stopped.
+pub struct SendBuf {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl SendBuf {
+    pub fn new() -> SendBuf {
+        SendBuf { buf: Vec::new(), pos: 0 }
+    }
+
+    pub fn enqueue_frame(&mut self, payload: &[u8]) {
+        write_frame_bytes(&mut self.buf, payload)
+            .expect("Vec<u8> writes are infallible");
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    /// Write as much queued data as the sink accepts. `Ok(true)` when
+    /// fully drained, `Ok(false)` on `EWOULDBLOCK` (re-arm `POLLOUT`
+    /// and resume later).
+    pub fn pump<W: Write>(&mut self, w: &mut W) -> std::io::Result<bool> {
+        while self.pos < self.buf.len() {
+            match w.write(&self.buf[self.pos..]) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WriteZero,
+                        "peer accepted zero bytes",
+                    ));
+                }
+                Ok(n) => self.pos += n,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    return Ok(false);
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        self.buf.clear();
+        self.pos = 0;
+        Ok(true)
+    }
+}
+
+impl Default for SendBuf {
+    fn default() -> Self {
+        SendBuf::new()
+    }
+}
+
+/// Per-connection accumulation of one machine's stream — the reactor's
+/// counterpart of the threads driver's `run_assignment` body, with the
+/// same validation and the same error strings (they land in attempt
+/// logs and CI greps).
+struct Collector {
+    machine: usize,
+    dim: usize,
+    samples: SampleMatrix,
+    draw_times: Vec<f64>,
+    summary: Option<WorkerSummary>,
+}
+
+impl Collector {
+    fn new(machine: usize, dim: usize) -> Collector {
+        Collector {
+            machine,
+            dim,
+            samples: SampleMatrix::new(dim),
+            draw_times: Vec::new(),
+            summary: None,
+        }
+    }
+
+    fn on_msg(
+        &mut self,
+        msg: WireMsg,
+        tx: &Sender<LeaderMsg>,
+    ) -> Result<()> {
+        let machine = self.machine;
+        let dim = self.dim;
+        match msg {
+            WireMsg::Draw(d) => {
+                if d.machine != machine || d.theta.len() != dim {
+                    return Err(Error::Runtime(format!(
+                        "worker {machine}: draw for machine {} with dim {}",
+                        d.machine,
+                        d.theta.len()
+                    )));
+                }
+                self.samples.push(&d.theta);
+                self.draw_times.push(d.elapsed);
+                // Leader hung up → keep draining (mirrors thread mode).
+                let _ = tx.send(LeaderMsg::Draw(d));
+            }
+            WireMsg::Chunk(chunk) => {
+                if chunk.machine != machine
+                    || chunk.dim != dim
+                    || chunk.thetas.len() != chunk.elapsed.len() * dim
+                {
+                    return Err(Error::Runtime(format!(
+                        "worker {machine}: chunk for machine {} with dim {} \
+                         ({} scalars, {} rows)",
+                        chunk.machine,
+                        chunk.dim,
+                        chunk.thetas.len(),
+                        chunk.elapsed.len()
+                    )));
+                }
+                self.samples.push_rows(&chunk.thetas);
+                self.draw_times.extend_from_slice(&chunk.elapsed);
+                let _ = tx.send(LeaderMsg::Chunk(chunk));
+            }
+            WireMsg::Summary(s) => {
+                if s.machine != machine {
+                    return Err(Error::Runtime(format!(
+                        "worker {machine}: summary for machine {}",
+                        s.machine
+                    )));
+                }
+                self.summary = Some(s);
+            }
+            WireMsg::Error { machine: from, message } => {
+                return Err(Error::Runtime(format!(
+                    "worker {from}: remote failure: {message}"
+                )));
+            }
+            WireMsg::Heartbeat { machine: from } => {
+                if from != machine {
+                    return Err(Error::Runtime(format!(
+                        "worker {machine}: heartbeat for machine {from}"
+                    )));
+                }
+                // Liveness beacon only: its arrival already re-armed
+                // the connection deadline; nothing lands.
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(self) -> Result<SubposteriorSamples> {
+        let machine = self.machine;
+        let summary = self.summary.ok_or_else(|| {
+            Error::Runtime(format!(
+                "worker {machine}: stream ended without a summary frame"
+            ))
+        })?;
+        Ok(SubposteriorSamples {
+            machine,
+            samples: self.samples,
+            accept_rate: summary.accept_rate,
+            wall_secs: summary.wall_secs,
+            draw_times: self.draw_times,
+        })
+    }
+}
+
+/// One in-flight worker connection: a nonblocking socket plus the
+/// state machine that feeds it (send queue) and drains it (receive
+/// buffer → frame decoder → collector).
+struct Conn {
+    stream: TcpStream,
+    addr: String,
+    machine: usize,
+    attempt: usize,
+    send: SendBuf,
+    recv: RecvBuf,
+    /// Reused frame payload buffer — the reactor's half of the
+    /// no-per-draw-allocation contract.
+    frame: Vec<u8>,
+    collector: Collector,
+    eof: bool,
+    /// Liveness deadline: re-armed whenever *any* bytes arrive (draw
+    /// or heartbeat traffic both count, matching the blocking driver's
+    /// per-read `set_read_timeout` semantics).
+    deadline: Option<Instant>,
+    started: Instant,
+}
+
+/// Everything `run_reactor` needs, lifted off the `PipelineConfig` by
+/// the pipeline so this module stays independent of config plumbing.
+pub struct ReactorConfig {
+    /// Worker endpoint addresses (`host:port`, one per slot).
+    pub addrs: Vec<String>,
+    pub connect_timeout: Duration,
+    /// Per-connection liveness deadline; `None` disarms.
+    pub liveness: Option<Duration>,
+    pub max_frame_bytes: usize,
+    pub failure_policy: FailurePolicy,
+    /// Re-dispatch budget per machine under the retry policy.
+    pub max_retries: usize,
+    /// Reactor pool size (clamped to the endpoint count).
+    pub reactor_threads: usize,
+    /// Parameter dimension (validated against every frame).
+    pub dim: usize,
+}
+
+/// What the reactor hands back to the pipeline: per-machine results,
+/// the first root-cause error, the resilience counters the threads
+/// driver also reports, and the reactor-specific telemetry.
+pub struct ReactorOutcome {
+    pub results: Vec<Option<SubposteriorSamples>>,
+    pub root_err: Option<Error>,
+    pub retries: usize,
+    pub quarantines: usize,
+    pub missed: usize,
+    /// Total `poll(2)` returns across the pool.
+    pub wakeups: usize,
+    /// Milliseconds from scheduler start to the first draw/chunk frame.
+    pub time_to_first_draw_ms: Option<f64>,
+    /// Per-endpoint busy fraction (connection-open seconds / wall).
+    pub endpoint_busy: Vec<f64>,
+}
+
+/// Scheduler state shared across the reactor pool — the same fields
+/// the threads driver keeps per-scope, so the two drivers make
+/// identical scheduling decisions from identical inputs.
+struct Shared {
+    machines: usize,
+    slots_total: usize,
+    max_attempts: usize,
+    policy: FailurePolicy,
+    start: Instant,
+    pending: Mutex<VecDeque<usize>>,
+    attempts: Mutex<Vec<usize>>,
+    attempt_log: Mutex<Vec<String>>,
+    /// Failure counts per *global* endpoint slot.
+    slot_failures: Mutex<Vec<usize>>,
+    completed: AtomicUsize,
+    live_endpoints: AtomicUsize,
+    abort: AtomicBool,
+    root_err: Mutex<Option<Error>>,
+    results: Mutex<Vec<Option<SubposteriorSamples>>>,
+    retries: AtomicUsize,
+    quarantines: AtomicUsize,
+    missed: AtomicUsize,
+    first_draw_ms: Mutex<Option<f64>>,
+    /// One self-pipe per reactor thread.
+    wakes: Vec<sys::WakePipe>,
+}
+
+impl Shared {
+    fn wake_all(&self) {
+        for w in &self.wakes {
+            w.wake();
+        }
+    }
+
+    /// Record `e` as the run's root cause (first writer wins), flag
+    /// the abort, and wake every poller so in-flight connections drop
+    /// promptly — the reactor's `cancel_all`.
+    fn fail(&self, e: Error) {
+        {
+            let mut first = self.root_err.lock().unwrap();
+            if first.is_none() {
+                *first = Some(e);
+            }
+        }
+        self.abort.store(true, Ordering::SeqCst);
+        self.wake_all();
+    }
+
+    fn note_first_draw(&self) {
+        let mut g = self.first_draw_ms.lock().unwrap();
+        if g.is_none() {
+            *g = Some(self.start.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+}
+
+/// Wrap a stream-level error exactly as the threads driver's
+/// `run_assignment` does, so attempt logs and root causes read the
+/// same under either `--io-driver`.
+fn bad_frame(machine: usize, e: &Error) -> Error {
+    Error::Runtime(format!(
+        "worker {machine} (socket transport): bad frame: {e}"
+    ))
+}
+
+/// One reactor thread: owns a strided subset of the global endpoint
+/// slots and multiplexes all of their connections on a single
+/// `poll(2)` loop.
+struct ReactorThread<'a> {
+    idx: usize,
+    cfg: &'a ReactorConfig,
+    shared: &'a Shared,
+    manifests: &'a [WorkerManifest],
+    tx: Sender<LeaderMsg>,
+    /// Global slot index per local endpoint.
+    slots: Vec<usize>,
+    conns: Vec<Option<Conn>>,
+    quarantined: Vec<bool>,
+    /// Machines in capped-exponential backoff after a failure on one
+    /// of this reactor's endpoints: `(release_at, machine)` — the
+    /// poll-timeout analogue of the threads driver's backoff sleep.
+    parked: Vec<(Instant, usize)>,
+    wakeups: usize,
+    busy_secs: Vec<f64>,
+}
+
+impl<'a> ReactorThread<'a> {
+    fn new(
+        idx: usize,
+        cfg: &'a ReactorConfig,
+        shared: &'a Shared,
+        manifests: &'a [WorkerManifest],
+        tx: Sender<LeaderMsg>,
+        slots: Vec<usize>,
+    ) -> ReactorThread<'a> {
+        let n = slots.len();
+        ReactorThread {
+            idx,
+            cfg,
+            shared,
+            manifests,
+            tx,
+            slots,
+            conns: (0..n).map(|_| None).collect(),
+            quarantined: vec![false; n],
+            parked: Vec::new(),
+            wakeups: 0,
+            busy_secs: vec![0.0; n],
+        }
+    }
+
+    fn run(mut self) -> (usize, Vec<(usize, f64)>) {
+        loop {
+            if self.shared.abort.load(Ordering::SeqCst) {
+                self.teardown();
+                break;
+            }
+            let now = Instant::now();
+            self.release_parked(now);
+            self.dispatch();
+            if self.done() {
+                break;
+            }
+
+            // Poll set: this reactor's wake pipe first, then every
+            // live connection (write interest only while the send
+            // queue holds undelivered bytes).
+            let mut fds = Vec::with_capacity(1 + self.conns.len());
+            fds.push(sys::PollFd {
+                fd: self.shared.wakes[self.idx].read_fd(),
+                events: sys::POLLIN,
+                revents: 0,
+            });
+            let mut fd_conn = Vec::with_capacity(self.conns.len());
+            for (ci, conn) in self.conns.iter().enumerate() {
+                if let Some(c) = conn {
+                    let mut events = sys::POLLIN;
+                    if !c.send.is_empty() {
+                        events |= sys::POLLOUT;
+                    }
+                    fds.push(sys::PollFd {
+                        fd: c.stream.as_raw_fd(),
+                        events,
+                        revents: 0,
+                    });
+                    fd_conn.push(ci);
+                }
+            }
+            let timeout = self.next_timeout_ms(Instant::now());
+            if let Err(e) = sys::poll_fds(&mut fds, timeout) {
+                self.shared
+                    .fail(Error::Runtime(format!("reactor poll(2): {e}")));
+                continue;
+            }
+            self.wakeups += 1;
+            if fds[0].revents != 0 {
+                self.shared.wakes[self.idx].drain();
+            }
+            for (k, &ci) in fd_conn.iter().enumerate() {
+                let revents = fds[k + 1].revents;
+                if revents != 0 {
+                    self.service_conn(ci, revents);
+                }
+            }
+            self.expire_deadlines(Instant::now());
+        }
+        let per_slot = self
+            .slots
+            .iter()
+            .copied()
+            .zip(self.busy_secs.iter().copied())
+            .collect();
+        (self.wakeups, per_slot)
+    }
+
+    /// All work globally done and nothing local still in flight?
+    fn done(&self) -> bool {
+        self.shared.completed.load(Ordering::SeqCst)
+            >= self.shared.machines
+            && self.conns.iter().all(Option::is_none)
+            && self.parked.is_empty()
+    }
+
+    /// Move machines whose backoff elapsed back onto the shared queue
+    /// (and wake the pool — an idle sibling may own the free slot).
+    fn release_parked(&mut self, now: Instant) {
+        let mut due = Vec::new();
+        self.parked.retain(|&(release_at, m)| {
+            if release_at <= now {
+                due.push(m);
+                false
+            } else {
+                true
+            }
+        });
+        if !due.is_empty() {
+            let mut q = self.shared.pending.lock().unwrap();
+            for m in due {
+                q.push_back(m);
+            }
+            drop(q);
+            self.shared.wake_all();
+        }
+    }
+
+    /// Assign queued machines to this reactor's free endpoints.
+    fn dispatch(&mut self) {
+        for ci in 0..self.conns.len() {
+            if self.shared.abort.load(Ordering::SeqCst) {
+                return;
+            }
+            if self.conns[ci].is_some() || self.quarantined[ci] {
+                continue;
+            }
+            let m = self.shared.pending.lock().unwrap().pop_front();
+            let Some(m) = m else {
+                return;
+            };
+            let attempt = {
+                let mut a = self.shared.attempts.lock().unwrap();
+                a[m] += 1;
+                a[m]
+            };
+            match self.start_conn(ci, m, attempt) {
+                Ok(conn) => self.conns[ci] = Some(conn),
+                Err(e) => self.on_failure(ci, m, attempt, e),
+            }
+        }
+    }
+
+    /// Dial one endpoint and queue the manifest (plus the inline shard
+    /// when the manifest promises one). The dial itself is the
+    /// bounded blocking `connect_timeout` — identical to the threads
+    /// driver — and the socket goes nonblocking before any I/O.
+    fn start_conn(
+        &mut self,
+        ci: usize,
+        machine: usize,
+        attempt: usize,
+    ) -> Result<Conn> {
+        let addr = &self.cfg.addrs[self.slots[ci]];
+        let manifest = &self.manifests[machine];
+        let mut resolved = addr.to_socket_addrs().map_err(|e| {
+            Error::Runtime(format!("resolving worker address {addr}: {e}"))
+        })?;
+        let sock_addr = resolved.next().ok_or_else(|| {
+            Error::Runtime(format!(
+                "worker address {addr} resolved to nothing"
+            ))
+        })?;
+        let stream =
+            TcpStream::connect_timeout(&sock_addr, self.cfg.connect_timeout)
+                .map_err(|e| {
+                    Error::Runtime(format!(
+                        "connecting to worker {addr} for machine \
+                         {machine}: {e}"
+                    ))
+                })?;
+        stream.set_nodelay(true).ok();
+        stream.set_nonblocking(true).map_err(|e| {
+            Error::Runtime(format!(
+                "setting O_NONBLOCK on worker {addr}: {e}"
+            ))
+        })?;
+        let mut send = SendBuf::new();
+        send.enqueue_frame(manifest.to_json().render().as_bytes());
+        if manifest.shard_inline {
+            let bytes =
+                std::fs::read(&manifest.shard_path).map_err(|e| {
+                    Error::Runtime(format!(
+                        "reading spilled shard {} for inline delivery: {e}",
+                        manifest.shard_path
+                    ))
+                })?;
+            if bytes.len() > self.cfg.max_frame_bytes {
+                return Err(Error::Runtime(format!(
+                    "machine {machine}'s shard is {} bytes, over the \
+                     {}-byte inline-frame cap — raise it on both ends \
+                     (`pipeline --max-frame-bytes` / the `max_frame_bytes` \
+                     config key on the leader, `repro serve \
+                     --max-frame-bytes` on the daemons) or use path mode \
+                     (drop --shard-inline) over a shared filesystem",
+                    bytes.len(),
+                    self.cfg.max_frame_bytes
+                )));
+            }
+            send.enqueue_frame(&bytes);
+        }
+        let now = Instant::now();
+        let mut conn = Conn {
+            stream,
+            addr: addr.clone(),
+            machine,
+            attempt,
+            send,
+            recv: RecvBuf::new(self.cfg.max_frame_bytes),
+            frame: Vec::new(),
+            collector: Collector::new(machine, self.cfg.dim),
+            eof: false,
+            deadline: self.cfg.liveness.map(|d| now + d),
+            started: now,
+        };
+        // Optimistic first pump: manifest (and usually the whole
+        // inline shard) fits the kernel send buffer; leftovers resume
+        // on POLLOUT.
+        self.pump_send(&mut conn)?;
+        Ok(conn)
+    }
+
+    fn pump_send(&self, c: &mut Conn) -> Result<()> {
+        c.send.pump(&mut &c.stream).map(|_| ()).map_err(|e| {
+            Error::Runtime(format!(
+                "sending manifest for machine {} to {}: {e}",
+                c.machine, c.addr
+            ))
+        })
+    }
+
+    /// Drain the socket and every complete frame behind it. Stream- or
+    /// grammar-level trouble returns the same wrapped "bad frame"
+    /// error the blocking driver produces; collector-level validation
+    /// errors pass through unwrapped.
+    fn drive_read(&self, c: &mut Conn) -> Result<()> {
+        let mut chunk = [0u8; 65536];
+        loop {
+            match (&c.stream).read(&mut chunk) {
+                Ok(0) => {
+                    c.eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    c.recv.extend_from_slice(&chunk[..n]);
+                    if let Some(d) = self.cfg.liveness {
+                        c.deadline = Some(Instant::now() + d);
+                    }
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    break;
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    return Err(bad_frame(c.machine, &Error::Io(e)));
+                }
+            }
+        }
+        loop {
+            match c.recv.pop_frame_into(&mut c.frame, c.eof) {
+                Ok(Some(len)) => {
+                    let msg = WireMsg::decode_frame(&c.frame[..len])
+                        .map_err(|e| bad_frame(c.machine, &e))?;
+                    if matches!(
+                        msg,
+                        WireMsg::Draw(_) | WireMsg::Chunk(_)
+                    ) {
+                        self.shared.note_first_draw();
+                    }
+                    c.collector.on_msg(msg, &self.tx)?;
+                }
+                Ok(None) => break,
+                Err(e) => return Err(bad_frame(c.machine, &e)),
+            }
+        }
+        Ok(())
+    }
+
+    fn service_conn(&mut self, ci: usize, revents: i16) {
+        let Some(mut c) = self.conns[ci].take() else {
+            return;
+        };
+        if revents & sys::POLLOUT != 0 {
+            if let Err(e) = self.pump_send(&mut c) {
+                self.conn_failed(ci, c, e);
+                return;
+            }
+        }
+        if revents
+            & (sys::POLLIN | sys::POLLHUP | sys::POLLERR | sys::POLLNVAL)
+            != 0
+        {
+            if let Err(e) = self.drive_read(&mut c) {
+                self.conn_failed(ci, c, e);
+                return;
+            }
+            if c.eof {
+                self.finalize(ci, c);
+                return;
+            }
+        }
+        self.conns[ci] = Some(c);
+    }
+
+    /// Clean end-of-stream: account the slot busy time and complete or
+    /// fail the machine on the summary check.
+    fn finalize(&mut self, ci: usize, c: Conn) {
+        self.busy_secs[ci] += c.started.elapsed().as_secs_f64();
+        let (machine, attempt) = (c.machine, c.attempt);
+        match c.collector.finish() {
+            Ok(sub) => {
+                self.shared.results.lock().unwrap()[machine] = Some(sub);
+                self.shared.completed.fetch_add(1, Ordering::SeqCst);
+                // Siblings idling on an empty queue exit through
+                // `done()` — and the drain loop's last sender drops
+                // when the pool does.
+                self.shared.wake_all();
+            }
+            Err(e) => self.on_failure(ci, machine, attempt, e),
+        }
+    }
+
+    /// Connection-level failure: drop the socket (the daemon aborts
+    /// its chain at the next failed write — the reactor's
+    /// `cancel_all` analogue) and route through the scheduler.
+    fn conn_failed(&mut self, ci: usize, c: Conn, e: Error) {
+        self.busy_secs[ci] += c.started.elapsed().as_secs_f64();
+        let (machine, attempt) = (c.machine, c.attempt);
+        drop(c);
+        self.on_failure(ci, machine, attempt, e);
+    }
+
+    /// The scheduler's failure path — byte-for-byte the threads
+    /// driver's semantics: fail-fast kills the run on the first error;
+    /// retry logs the attempt, Resets the leader rows *before* any
+    /// requeue, parks the machine for the capped exponential backoff,
+    /// and quarantines the endpoint after `QUARANTINE_AFTER` failures.
+    fn on_failure(
+        &mut self,
+        ci: usize,
+        machine: usize,
+        attempt: usize,
+        e: Error,
+    ) {
+        let sh = self.shared;
+        if sh.policy == FailurePolicy::Failfast {
+            sh.fail(e);
+            return;
+        }
+        let slot = self.slots[ci];
+        let max_attempts = sh.max_attempts;
+        if e.to_string().contains(LIVENESS_EXPIRED_MARKER) {
+            sh.missed.fetch_add(1, Ordering::SeqCst);
+        }
+        sh.attempt_log.lock().unwrap().push(format!(
+            "machine {machine} attempt {attempt}/{max_attempts} on \
+             endpoint {slot}: {e}"
+        ));
+        // Discard the failed attempt's partial rows before any retry
+        // traffic can land behind them; this machine has exactly one
+        // live connection, so the leader's FIFO channel orders the
+        // Reset after the partial stream and before the retry's.
+        let _ = self.tx.send(LeaderMsg::Reset { machine });
+        if attempt >= max_attempts {
+            sh.fail(Error::Runtime(format!(
+                "machine {machine}: retries exhausted after \
+                 {max_attempts} attempts:\n  {}",
+                sh.attempt_log.lock().unwrap().join("\n  ")
+            )));
+            return;
+        }
+        sh.retries.fetch_add(1, Ordering::SeqCst);
+        let quarantine_now = {
+            let mut sf = sh.slot_failures.lock().unwrap();
+            sf[slot] += 1;
+            sf[slot] >= QUARANTINE_AFTER
+        };
+        // Capped exponential backoff, served from the poll timeout
+        // instead of a thread sleep: the machine requeues when the
+        // deadline passes, and this reactor's other connections keep
+        // streaming meanwhile.
+        let backoff_ms = (RETRY_BACKOFF_BASE_MS << (attempt - 1).min(4))
+            .min(RETRY_BACKOFF_CAP_MS);
+        self.parked.push((
+            Instant::now() + Duration::from_millis(backoff_ms),
+            machine,
+        ));
+        if quarantine_now {
+            sh.quarantines.fetch_add(1, Ordering::SeqCst);
+            self.quarantined[ci] = true;
+            if sh.live_endpoints.fetch_sub(1, Ordering::SeqCst) == 1 {
+                // Last live endpoint just failed a machine: work is
+                // outstanding with nowhere to run it.
+                sh.fail(Error::Runtime(format!(
+                    "all {} worker endpoints quarantined after repeated \
+                     failures:\n  {}",
+                    sh.slots_total,
+                    sh.attempt_log.lock().unwrap().join("\n  ")
+                )));
+            }
+        }
+    }
+
+    /// Liveness deadlines that passed while the poller slept — the
+    /// timeout-wheel replacement for per-read `set_read_timeout`.
+    fn expire_deadlines(&mut self, now: Instant) {
+        for ci in 0..self.conns.len() {
+            let expired = self.conns[ci]
+                .as_ref()
+                .and_then(|c| c.deadline)
+                .is_some_and(|d| d <= now);
+            if expired {
+                let c = self.conns[ci].take().unwrap();
+                let machine = c.machine;
+                let inner = Error::Runtime(format!(
+                    "{LIVENESS_EXPIRED_MARKER}: no frame (draw or \
+                     heartbeat) within {:?} — peer wedged or partitioned",
+                    self.cfg.liveness.unwrap_or_default()
+                ));
+                self.conn_failed(ci, c, bad_frame(machine, &inner));
+            }
+        }
+    }
+
+    /// Next poll timeout in ms: the soonest liveness deadline or
+    /// backoff release, `-1` (block until an event) when neither is
+    /// armed. Rounded up so a deadline never wakes the poller early
+    /// into a spin.
+    fn next_timeout_ms(&self, now: Instant) -> i32 {
+        let mut next: Option<Instant> = None;
+        for c in self.conns.iter().flatten() {
+            if let Some(d) = c.deadline {
+                next = Some(next.map_or(d, |n| n.min(d)));
+            }
+        }
+        for &(release_at, _) in &self.parked {
+            next = Some(next.map_or(release_at, |n| n.min(release_at)));
+        }
+        match next {
+            None => -1,
+            Some(t) => {
+                let ms =
+                    t.saturating_duration_since(now).as_millis() as u64;
+                (ms + 1).min(i32::MAX as u64) as i32
+            }
+        }
+    }
+
+    /// Abort path: drop every connection (daemons abort at their next
+    /// failed write) and account the busy time.
+    fn teardown(&mut self) {
+        for ci in 0..self.conns.len() {
+            if let Some(c) = self.conns[ci].take() {
+                self.busy_secs[ci] += c.started.elapsed().as_secs_f64();
+            }
+        }
+    }
+}
+
+/// Drive every manifest to completion over the endpoint pool with a
+/// `poll(2)` reactor per `reactor_threads` slice (endpoint slots are
+/// strided across the pool). Blocks until all machines complete or the
+/// run fails; the caller drains the leader channel concurrently and
+/// reads the outcome after joining.
+pub fn run_reactor(
+    cfg: &ReactorConfig,
+    manifests: &[WorkerManifest],
+    tx: Sender<LeaderMsg>,
+) -> ReactorOutcome {
+    let machines = manifests.len();
+    let slots_total = cfg.addrs.len().clamp(1, machines.max(1));
+    let pool = cfg.reactor_threads.clamp(1, slots_total);
+    let mut wakes = Vec::with_capacity(pool);
+    for _ in 0..pool {
+        match sys::WakePipe::new() {
+            Ok(w) => wakes.push(w),
+            Err(e) => {
+                return ReactorOutcome {
+                    results: (0..machines).map(|_| None).collect(),
+                    root_err: Some(Error::Runtime(format!(
+                        "creating reactor wake pipe: {e}"
+                    ))),
+                    retries: 0,
+                    quarantines: 0,
+                    missed: 0,
+                    wakeups: 0,
+                    time_to_first_draw_ms: None,
+                    endpoint_busy: vec![0.0; slots_total],
+                };
+            }
+        }
+    }
+    let shared = Shared {
+        machines,
+        slots_total,
+        max_attempts: cfg.max_retries.saturating_add(1),
+        policy: cfg.failure_policy,
+        start: Instant::now(),
+        pending: Mutex::new((0..machines).collect()),
+        attempts: Mutex::new(vec![0; machines]),
+        attempt_log: Mutex::new(Vec::new()),
+        slot_failures: Mutex::new(vec![0; slots_total]),
+        completed: AtomicUsize::new(0),
+        live_endpoints: AtomicUsize::new(slots_total),
+        abort: AtomicBool::new(false),
+        root_err: Mutex::new(None),
+        results: Mutex::new((0..machines).map(|_| None).collect()),
+        retries: AtomicUsize::new(0),
+        quarantines: AtomicUsize::new(0),
+        missed: AtomicUsize::new(0),
+        first_draw_ms: Mutex::new(None),
+        wakes,
+    };
+
+    let mut per_thread: Vec<(usize, Vec<(usize, f64)>)> = Vec::new();
+    let mut panicked = false;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..pool)
+            .map(|r| {
+                let tx = tx.clone();
+                let shared = &shared;
+                scope.spawn(move || {
+                    let slots: Vec<usize> =
+                        (r..slots_total).step_by(pool).collect();
+                    ReactorThread::new(r, cfg, shared, manifests, tx, slots)
+                        .run()
+                })
+            })
+            .collect();
+        drop(tx);
+        for h in handles {
+            match h.join() {
+                Ok(out) => per_thread.push(out),
+                Err(_) => panicked = true,
+            }
+        }
+    });
+    if panicked {
+        shared.fail(Error::Runtime("reactor thread panicked".into()));
+    }
+
+    let wall = shared.start.elapsed().as_secs_f64().max(f64::EPSILON);
+    let mut endpoint_busy = vec![0.0; slots_total];
+    let mut wakeups = 0usize;
+    for (w, per_slot) in per_thread {
+        wakeups += w;
+        for (slot, busy) in per_slot {
+            endpoint_busy[slot] = (busy / wall).min(1.0);
+        }
+    }
+
+    ReactorOutcome {
+        results: shared.results.into_inner().unwrap(),
+        root_err: shared.root_err.into_inner().unwrap(),
+        retries: shared.retries.load(Ordering::SeqCst),
+        quarantines: shared.quarantines.load(Ordering::SeqCst),
+        missed: shared.missed.load(Ordering::SeqCst),
+        wakeups,
+        time_to_first_draw_ms: shared.first_draw_ms.into_inner().unwrap(),
+        endpoint_busy,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::transport::{
+        encode_draw, encode_summary, WireFormat,
+    };
+    use crate::coordinator::worker::DrawMsg;
+    use std::io::BufReader;
+    use std::net::TcpListener;
+    use std::sync::mpsc::channel;
+
+    fn frame(payload: &[u8]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_frame_bytes(&mut buf, payload).unwrap();
+        buf
+    }
+
+    /// Satellite edge case: a frame straddling two readable events —
+    /// split mid-prefix and mid-payload — assembles once the remainder
+    /// lands, and back-to-back frames in one buffer pop in order.
+    #[test]
+    fn recv_buf_assembles_frames_split_across_events() {
+        let payload = b"hello, reactor".to_vec();
+        let wire = frame(&payload);
+        let mut out = Vec::new();
+        for split in 1..wire.len() {
+            let mut rb = RecvBuf::new(1024);
+            rb.extend_from_slice(&wire[..split]);
+            assert!(
+                rb.pop_frame_into(&mut out, false).unwrap().is_none(),
+                "partial frame (split at {split}) must wait for more bytes"
+            );
+            rb.extend_from_slice(&wire[split..]);
+            let len = rb.pop_frame_into(&mut out, false).unwrap().unwrap();
+            assert_eq!(&out[..len], &payload[..]);
+            assert!(rb.is_empty());
+        }
+        // Two frames delivered in one readable event.
+        let mut rb = RecvBuf::new(1024);
+        rb.extend_from_slice(&frame(b"first"));
+        rb.extend_from_slice(&frame(b"second"));
+        let n1 = rb.pop_frame_into(&mut out, false).unwrap().unwrap();
+        assert_eq!(&out[..n1], b"first");
+        let n2 = rb.pop_frame_into(&mut out, false).unwrap().unwrap();
+        assert_eq!(&out[..n2], b"second");
+        assert!(rb.pop_frame_into(&mut out, false).unwrap().is_none());
+    }
+
+    /// A partial frame is "need more bytes" while the stream is open
+    /// and a structured truncation once it hit EOF; grammar violations
+    /// surface immediately either way.
+    #[test]
+    fn recv_buf_truncation_surfaces_at_eof() {
+        let mut out = Vec::new();
+        let mut rb = RecvBuf::new(1024);
+        rb.extend_from_slice(b"12"); // prefix missing its newline
+        assert!(rb.pop_frame_into(&mut out, false).unwrap().is_none());
+        assert!(matches!(
+            rb.pop_frame_into(&mut out, true),
+            Err(Error::Frame(FrameError::TruncatedPrefix))
+        ));
+
+        let mut rb = RecvBuf::new(1024);
+        rb.extend_from_slice(b"5\nab"); // payload cut mid-frame
+        assert!(rb.pop_frame_into(&mut out, false).unwrap().is_none());
+        assert!(matches!(
+            rb.pop_frame_into(&mut out, true),
+            Err(Error::Frame(FrameError::TruncatedPayload { expected: 5 }))
+        ));
+
+        let mut rb = RecvBuf::new(1024);
+        rb.extend_from_slice(b"xyz\n"); // corrupt prefix: instant error
+        assert!(matches!(
+            rb.pop_frame_into(&mut out, false),
+            Err(Error::Frame(FrameError::BadPrefix(_)))
+        ));
+    }
+
+    /// Accepts 3 bytes per call and returns `EWOULDBLOCK` on every
+    /// other call — the worst-case trickle sink.
+    struct Trickle {
+        out: Vec<u8>,
+        calls: usize,
+    }
+
+    impl Write for Trickle {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.calls += 1;
+            if self.calls % 2 == 0 {
+                return Err(std::io::ErrorKind::WouldBlock.into());
+            }
+            let n = buf.len().min(3);
+            self.out.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    /// Satellite edge case: a manifest write interrupted by
+    /// `EWOULDBLOCK` resumes from the exact byte, over as many
+    /// writable events as it takes.
+    #[test]
+    fn send_buf_resumes_partial_writes() {
+        let manifest_ish = vec![7u8; 100];
+        let mut sb = SendBuf::new();
+        sb.enqueue_frame(&manifest_ish);
+        let expected = frame(&manifest_ish);
+        let mut sink = Trickle { out: Vec::new(), calls: 0 };
+        let mut pumps = 0;
+        while !sb.pump(&mut sink).unwrap() {
+            pumps += 1;
+            assert!(pumps < 10_000, "pump never drained");
+        }
+        assert!(pumps > 1, "trickle sink must force multiple resumes");
+        assert_eq!(sink.out, expected);
+        assert!(sb.is_empty());
+    }
+
+    /// Satellite edge case: a wake (the `cancel_all` path) interrupts
+    /// a poller blocked on a long timeout.
+    #[test]
+    fn wake_pipe_interrupts_poll_mid_wait() {
+        let wp = std::sync::Arc::new(sys::WakePipe::new().unwrap());
+        let waker = wp.clone();
+        let t0 = Instant::now();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            waker.wake();
+        });
+        let mut fds = [sys::PollFd {
+            fd: wp.read_fd(),
+            events: sys::POLLIN,
+            revents: 0,
+        }];
+        let n = sys::poll_fds(&mut fds, 10_000).unwrap();
+        assert_eq!(n, 1, "wake byte must be reported as readable");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "poll must return on the wake, not the timeout"
+        );
+        wp.drain();
+        // Drained: an immediate re-poll reports nothing.
+        let n = sys::poll_fds(&mut fds, 0).unwrap();
+        assert_eq!(n, 0);
+        h.join().unwrap();
+    }
+
+    fn manifest(machine: usize, dim: usize) -> WorkerManifest {
+        WorkerManifest {
+            machine,
+            machines: 1,
+            seed: 7,
+            samples: 1,
+            burn_in: 0,
+            thin: 1,
+            prior_weight: 1.0,
+            sampler: "rwm:0.5".into(),
+            shard_path: "unused-by-reactor-tests".into(),
+            dim,
+            shard_inline: false,
+            wire_format: WireFormat::Json,
+            draw_batch: 1,
+            heartbeat_secs: 0,
+        }
+    }
+
+    fn rcfg(addrs: Vec<String>) -> ReactorConfig {
+        ReactorConfig {
+            addrs,
+            connect_timeout: Duration::from_secs(5),
+            liveness: None,
+            max_frame_bytes: 1 << 20,
+            failure_policy: FailurePolicy::Failfast,
+            max_retries: 0,
+            reactor_threads: 1,
+            dim: 1,
+        }
+    }
+
+    /// Full loop against a scripted in-process server: manifest out,
+    /// one draw + summary back, clean close — the machine completes
+    /// and the telemetry counters move.
+    #[test]
+    fn reactor_completes_a_scripted_stream() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader =
+                FrameReader::new(BufReader::new(stream.try_clone().unwrap()));
+            let m = reader.read_frame().unwrap().expect("manifest frame");
+            assert!(m.contains("\"machine\""));
+            let mut w = &stream;
+            let draw = encode_draw(&DrawMsg {
+                machine: 0,
+                theta: vec![1.5],
+                elapsed: 0.1,
+                last: true,
+            });
+            write_frame_bytes(&mut w, draw.as_bytes()).unwrap();
+            let summary = encode_summary(&WorkerSummary {
+                machine: 0,
+                accept_rate: 0.5,
+                wall_secs: 0.1,
+            });
+            write_frame_bytes(&mut w, summary.as_bytes()).unwrap();
+        });
+        let (tx, rx) = channel();
+        let cfg = rcfg(vec![addr]);
+        let out = run_reactor(&cfg, &[manifest(0, 1)], tx);
+        server.join().unwrap();
+        assert!(out.root_err.is_none(), "{:?}", out.root_err);
+        let sub = out.results[0].as_ref().expect("machine 0 completed");
+        assert_eq!(sub.samples.len(), 1);
+        assert_eq!(sub.draw_times, vec![0.1]);
+        assert!((sub.accept_rate - 0.5).abs() < 1e-12);
+        assert!(out.wakeups > 0, "poll must have woken at least once");
+        assert!(out.time_to_first_draw_ms.is_some());
+        assert_eq!(out.endpoint_busy.len(), 1);
+        // The leader channel saw the draw before the reactor returned.
+        assert!(matches!(rx.try_recv(), Ok(LeaderMsg::Draw(_))));
+    }
+
+    /// Satellite edge case: a liveness deadline expires from the poll
+    /// timeout (no bytes ever arrive after the accept) and surfaces
+    /// the same structured marker the blocking driver raises — and
+    /// under retry with an exhausted budget it counts a missed
+    /// heartbeat.
+    #[test]
+    fn liveness_expiry_fires_from_poll_timeout() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            // Hold the connection open, silently, past the deadline.
+            std::thread::sleep(Duration::from_millis(1200));
+            drop(stream);
+        });
+        let (tx, _rx) = channel();
+        let mut cfg = rcfg(vec![addr]);
+        cfg.liveness = Some(Duration::from_millis(300));
+        cfg.failure_policy = FailurePolicy::Retry;
+        cfg.max_retries = 0; // one attempt: first expiry is terminal
+        let t0 = Instant::now();
+        let out = run_reactor(&cfg, &[manifest(0, 1)], tx);
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "expiry must fire from the poll timeout, not hang"
+        );
+        let err = out.root_err.expect("run must fail").to_string();
+        assert!(
+            err.contains(LIVENESS_EXPIRED_MARKER),
+            "unexpected root cause: {err}"
+        );
+        assert_eq!(out.missed, 1);
+        assert!(out.results[0].is_none());
+        server.join().unwrap();
+    }
+
+    /// Satellite edge case: a fail-fast abort on one reactor wakes a
+    /// sibling blocked in an infinite poll on a silent connection.
+    #[test]
+    fn failfast_abort_wakes_sibling_poller() {
+        let silent = TcpListener::bind("127.0.0.1:0").unwrap();
+        let silent_addr = silent.local_addr().unwrap().to_string();
+        let keeper = std::thread::spawn(move || {
+            let (stream, _) = silent.accept().ok()?;
+            std::thread::sleep(Duration::from_millis(100));
+            Some(stream)
+        });
+        // A port with nothing listening: bind, learn the port, drop.
+        let refused_addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let (tx, _rx) = channel();
+        let mut cfg = rcfg(vec![silent_addr.clone(), refused_addr]);
+        cfg.reactor_threads = 2; // one poller per endpoint
+        let t0 = Instant::now();
+        let out = run_reactor(
+            &cfg,
+            &[manifest(0, 1), manifest(1, 1)],
+            tx,
+        );
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "abort must wake the sibling poller, not wait out its poll"
+        );
+        let err = out.root_err.expect("refused dial must fail the run");
+        assert!(
+            err.to_string().contains("connecting to worker"),
+            "unexpected root cause: {err}"
+        );
+        // If the abort won the race before the silent endpoint was
+        // ever dialed, unblock its accept so the thread can exit.
+        let _ = TcpStream::connect(&silent_addr);
+        let _ = keeper.join();
+    }
+}

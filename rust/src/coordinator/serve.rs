@@ -14,7 +14,12 @@
 //! clean-EOF success signal the leader's
 //! [`SocketTransport`](crate::coordinator::transport::SocketTransport)
 //! expects. Job failures are reported in-band as `error` frames since a
-//! remote daemon has no stderr the leader could collect.
+//! remote daemon has no stderr the leader could collect. The daemon is
+//! leader-driver-agnostic: whether the leader runs thread-per-endpoint
+//! or the `poll(2)` reactor (`--io-driver reactor`,
+//! [`crate::coordinator::reactor`]), the wire contract here — manifest
+//! in, frames out, clean EOF — is unchanged; the reactor only reads
+//! the same stream nonblockingly.
 //!
 //! [`run_manifest`] is the shared execution path: the pipe-mode
 //! `worker` CLI subcommand drives it with a stdout sink, [`serve`] with

@@ -266,6 +266,15 @@ impl<R: BufRead> FrameReader<R> {
         }
         Ok(Some(len))
     }
+
+    /// Consume the reader, returning the underlying stream. The
+    /// reactor's incremental decoder (`coordinator::reactor`) parses
+    /// frames off an in-memory slice and needs the unconsumed
+    /// remainder back to know how many buffered bytes a completed
+    /// frame consumed.
+    pub fn into_inner(self) -> R {
+        self.inner
+    }
 }
 
 /// End-of-run telemetry a worker cannot attach to any single draw.

@@ -216,6 +216,22 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
                     ))
                 })?);
             }
+            if let Some(v) = args.get("io-driver") {
+                b = b.io_driver(repro::config::IoDriver::parse(v)?);
+            }
+            if let Some(v) = args.get("reactor-threads") {
+                let n: usize = v.parse().map_err(|_| {
+                    Error::Config(format!("bad --reactor-threads: {v}"))
+                })?;
+                if n == 0 {
+                    return Err(Error::Config(
+                        "--reactor-threads must be >= 1 (got 0); \
+                         a reactor with no threads polls nothing"
+                            .into(),
+                    ));
+                }
+                b = b.reactor_threads(n);
+            }
             if let Some(v) = args.get("connect-timeout-secs") {
                 let secs: usize = v.parse().map_err(|_| {
                     Error::Config(format!(
@@ -473,7 +489,8 @@ fn usage() -> &'static str {
                    [--workers HOST:PORT,… (repro serve daemons) \\\n\
                     [--shard-inline true] [--max-frame-bytes B] \\\n\
                     [--heartbeat-secs S] [--liveness-timeout-secs S] \\\n\
-                    [--connect-timeout-secs S]] \\\n\
+                    [--connect-timeout-secs S] \\\n\
+                    [--io-driver threads|reactor [--reactor-threads K]]] \\\n\
                    [--failure-policy failfast|retry [--max-retries N]] \\\n\
                    [--use-runtime true --artifacts DIR] [--config FILE]\n\
      single-chain  --model M --n N --d D --samples T [--out FILE]\n\

@@ -12,7 +12,7 @@ use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use repro::combine::CombineMethod;
-use repro::config::{FailurePolicy, PipelineConfig};
+use repro::config::{FailurePolicy, IoDriver, PipelineConfig};
 use repro::coordinator::pipeline::{
     run_native, run_process, run_with_transport, PipelineOutput,
 };
@@ -387,6 +387,165 @@ fn failfast_on_flaky_daemon_is_a_structured_error() {
     assert!(
         t0.elapsed() < Duration::from_secs(30),
         "fail-fast contract: the run must not hang on a killed stream"
+    );
+    let text = err.to_string().to_lowercase();
+    assert!(
+        text.contains("frame")
+            || text.contains("connection")
+            || text.contains("reset"),
+        "root cause must name the stream failure: {text}"
+    );
+}
+
+/// The drop-after chaos spec re-run under `--io-driver reactor`: the
+/// poll(2) leader must drive the same retry scheduler — re-dispatch
+/// the killed shards, bench the flaky endpoint, and retain draws
+/// byte-identical to thread mode. Same scenario as
+/// [`retry_over_sockets_survives_a_flaky_daemon_byte_identically`],
+/// different leader I/O plane.
+#[cfg(unix)]
+#[test]
+fn reactor_retry_survives_a_flaky_daemon_byte_identically() {
+    let flaky = Daemon::spawn(&["--fault", "drop-after:2"]);
+    let clean = Daemon::spawn(&[]);
+    let data = synth::gaussian(1_200, 2, 31);
+    let base = PipelineConfig::builder("gaussian")
+        .machines(4)
+        .samples_per_machine(80)
+        .method(CombineMethod::Semiparametric)
+        .seed(43)
+        .failure_policy(FailurePolicy::Retry)
+        .max_retries(5)
+        .build();
+    let thread_out = run_native(&base, &data).unwrap();
+    let mut sc = base.clone();
+    sc.workers = format!("{},{}", flaky.addr, clean.addr);
+    sc.io_driver = IoDriver::Reactor;
+    let reactor_out = run_process(&sc, &data).unwrap();
+    assert_identical(&reactor_out, &thread_out, "reactor retry vs thread");
+    assert!(
+        reactor_out.metrics.shard_retries >= 1,
+        "the killed shard must have been re-dispatched: {}",
+        reactor_out.metrics
+    );
+    assert!(
+        reactor_out.metrics.endpoints_quarantined <= 1,
+        "only the flaky endpoint may be benched: {}",
+        reactor_out.metrics
+    );
+    assert!(
+        reactor_out.metrics.reactor_wakeups > 0,
+        "a reactor run must report poll wakeups: {}",
+        reactor_out.metrics
+    );
+}
+
+/// The corrupt chaos spec under the reactor: one daemon flips a byte
+/// in frame 1 of every stream, so every attempt on that endpoint dies
+/// in decode. Retry must re-dispatch, quarantine the corrupting
+/// endpoint, finish on the clean one — and the surviving draws carry
+/// no trace of the corruption (byte-identical to thread mode, never a
+/// silently wrong float).
+#[cfg(unix)]
+#[test]
+fn reactor_retry_survives_a_corrupting_daemon_byte_identically() {
+    let corrupting = Daemon::spawn(&["--fault", "corrupt:1"]);
+    let clean = Daemon::spawn(&[]);
+    let data = synth::gaussian(900, 2, 37);
+    let base = PipelineConfig::builder("gaussian")
+        .machines(3)
+        .samples_per_machine(60)
+        .method(CombineMethod::Parametric)
+        .seed(53)
+        .failure_policy(FailurePolicy::Retry)
+        .max_retries(5)
+        .build();
+    let thread_out = run_native(&base, &data).unwrap();
+    let mut sc = base.clone();
+    sc.workers = format!("{},{}", corrupting.addr, clean.addr);
+    sc.io_driver = IoDriver::Reactor;
+    let reactor_out = run_process(&sc, &data).unwrap();
+    assert_identical(
+        &reactor_out,
+        &thread_out,
+        "reactor corrupt-retry vs thread",
+    );
+    assert!(
+        reactor_out.metrics.shard_retries >= 1,
+        "corrupted attempts must have been re-dispatched: {}",
+        reactor_out.metrics
+    );
+    assert!(
+        reactor_out.metrics.endpoints_quarantined <= 1,
+        "only the corrupting endpoint may be benched: {}",
+        reactor_out.metrics
+    );
+}
+
+/// The delay-ms chaos spec under the reactor: slow-but-alive daemons
+/// are not failures. With per-frame delay on every endpoint the
+/// reactor's poll-timeout liveness wheel must stay quiet (no missed
+/// heartbeats, no quarantine) and the draws stay byte-identical.
+#[cfg(unix)]
+#[test]
+fn reactor_delay_faults_are_slow_but_alive_and_byte_identical() {
+    let daemons: Vec<Daemon> =
+        (0..2).map(|_| Daemon::spawn(&["--fault", "delay-ms:2"])).collect();
+    let data = synth::gaussian(800, 2, 41);
+    let base = PipelineConfig::builder("gaussian")
+        .machines(4)
+        .samples_per_machine(40)
+        .method(CombineMethod::Parametric)
+        .seed(59)
+        .failure_policy(FailurePolicy::Retry)
+        .max_retries(2)
+        .heartbeat_secs(1)
+        .liveness_timeout_secs(20)
+        .build();
+    let thread_out = run_native(&base, &data).unwrap();
+    let mut sc = base.clone();
+    sc.workers = daemons
+        .iter()
+        .map(|d| d.addr.as_str())
+        .collect::<Vec<_>>()
+        .join(",");
+    sc.io_driver = IoDriver::Reactor;
+    let reactor_out = run_process(&sc, &data).unwrap();
+    assert_identical(
+        &reactor_out,
+        &thread_out,
+        "reactor delay-ms vs thread",
+    );
+    assert_eq!(
+        reactor_out.metrics.heartbeats_missed, 0,
+        "delayed-but-alive daemons must never trip the liveness wheel"
+    );
+    assert_eq!(reactor_out.metrics.endpoints_quarantined, 0);
+    assert_eq!(reactor_out.metrics.shard_retries, 0);
+}
+
+/// Fail-fast under the reactor: the kill-mid-stream fault must abort
+/// the whole event loop promptly — the abort flag wakes every poller
+/// mid-wait — with the same structured frame diagnostic thread mode
+/// reports, and no hang.
+#[cfg(unix)]
+#[test]
+fn reactor_failfast_on_flaky_daemon_is_a_structured_error() {
+    let flaky = Daemon::spawn(&["--fault", "drop-after:2"]);
+    let data = synth::gaussian(600, 2, 13);
+    let mut cfg = PipelineConfig::builder("gaussian")
+        .machines(2)
+        .samples_per_machine(60)
+        .method(CombineMethod::Parametric)
+        .seed(17)
+        .build();
+    cfg.workers = flaky.addr.clone();
+    cfg.io_driver = IoDriver::Reactor;
+    let t0 = Instant::now();
+    let err = run_process(&cfg, &data).unwrap_err();
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "fail-fast contract: the reactor must not hang on a killed stream"
     );
     let text = err.to_string().to_lowercase();
     assert!(

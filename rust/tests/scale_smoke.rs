@@ -9,13 +9,19 @@
 
 use std::io::{BufRead, BufReader};
 use std::process::{Child, Command, Stdio};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use repro::combine::CombineMethod;
-use repro::config::{FailurePolicy, PipelineConfig};
+use repro::config::{FailurePolicy, IoDriver, PipelineConfig};
 use repro::coordinator::pipeline;
 use repro::coordinator::transport::WireFormat;
 use repro::data::synth;
+
+/// Serializes the scale tests within this binary: the reactor test
+/// samples the process-wide thread count, which only means anything
+/// while no sibling test is spawning its own workers.
+static SCALE_LOCK: Mutex<()> = Mutex::new(());
 
 /// One `repro serve` daemon with extra flags; killed on drop.
 struct Daemon {
@@ -52,8 +58,21 @@ impl Drop for Daemon {
     }
 }
 
+/// Current thread count of this process (linux: `/proc/self/status`).
+/// `None` where the proc filesystem is unavailable — callers skip the
+/// thread-count assertions there.
+fn process_threads() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+}
+
 #[test]
 fn m64_over_w8_delayed_daemons_is_byte_identical_within_liveness_budget() {
+    let _guard =
+        SCALE_LOCK.lock().unwrap_or_else(|poison| poison.into_inner());
     const MACHINES: usize = 64;
     const WORKERS: usize = 8;
     let data = synth::gaussian(6_400, 2, 71);
@@ -120,6 +139,133 @@ fn m64_over_w8_delayed_daemons_is_byte_identical_within_liveness_budget() {
     );
     assert_eq!(
         socket_out.metrics.scalars_transferred,
+        thread_out.metrics.scalars_transferred
+    );
+}
+
+/// The ROADMAP's "hundreds of machines" rung: M = 256 over W = 16 real
+/// daemons under `--io-driver reactor`, heartbeat + liveness armed and
+/// a few endpoints injecting per-frame delay. Byte-identical to thread
+/// mode, zero missed heartbeats — and the leader's thread count stays
+/// independent of W: one reactor poller multiplexes all 16 sockets
+/// where the threads driver would hold 16 blocking threads.
+#[test]
+fn m256_over_w16_reactor_is_byte_identical_with_flat_thread_count() {
+    let _guard =
+        SCALE_LOCK.lock().unwrap_or_else(|poison| poison.into_inner());
+    const MACHINES: usize = 256;
+    const WORKERS: usize = 16;
+    let data = synth::gaussian(12_800, 2, 73);
+    let base = PipelineConfig::builder("gaussian")
+        .machines(MACHINES)
+        .samples_per_machine(20)
+        .method(CombineMethod::Parametric)
+        .seed(101)
+        .wire_format(WireFormat::Binary)
+        .draw_batch(64)
+        .failure_policy(FailurePolicy::Retry)
+        .max_retries(2)
+        .heartbeat_secs(1)
+        .liveness_timeout_secs(30)
+        .build();
+    let thread_out = pipeline::run_native(&base, &data).unwrap();
+
+    // A few delayed endpoints among the healthy pool: slow-but-alive
+    // peers must not trip the liveness deadline under the reactor
+    // either.
+    let daemons: Vec<Daemon> = (0..WORKERS)
+        .map(|w| {
+            if w % 5 == 0 {
+                Daemon::spawn(&["--fault", "delay-ms:2"])
+            } else {
+                Daemon::spawn(&[])
+            }
+        })
+        .collect();
+    let spec = daemons
+        .iter()
+        .map(|d| d.addr.as_str())
+        .collect::<Vec<_>>()
+        .join(",");
+    let mut sc = base.clone();
+    sc.workers = spec;
+    sc.io_driver = IoDriver::Reactor;
+    sc.reactor_threads = 1;
+
+    // Thread-count watcher: sample the process-wide peak while the
+    // reactor run is in flight. `run_native` above already joined its
+    // workers, so the baseline is this test plus cargo's harness.
+    let baseline = process_threads();
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(
+        false,
+    ));
+    let watcher = baseline.map(|_| {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut peak = 0usize;
+            while !stop.load(std::sync::atomic::Ordering::SeqCst) {
+                if let Some(n) = process_threads() {
+                    peak = peak.max(n);
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            peak
+        })
+    });
+
+    let t0 = Instant::now();
+    let reactor_out = pipeline::run_process(&sc, &data).unwrap();
+    let elapsed = t0.elapsed();
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    let peak = watcher.map(|w| w.join().unwrap());
+
+    assert!(
+        elapsed < Duration::from_secs(240),
+        "M={MACHINES} over W={WORKERS} reactor daemons took {elapsed:?}"
+    );
+    assert_eq!(
+        reactor_out.metrics.heartbeats_missed, 0,
+        "delayed-but-alive daemons must never trip the liveness deadline"
+    );
+    assert_eq!(reactor_out.metrics.endpoints_quarantined, 0);
+    assert!(
+        reactor_out.metrics.reactor_wakeups > 0,
+        "the reactor run must report poll wakeups"
+    );
+    assert!(reactor_out.metrics.time_to_first_draw_ms > 0.0);
+    assert_eq!(reactor_out.metrics.endpoint_busy.len(), WORKERS);
+
+    // Leader thread count independent of W: the reactor run adds one
+    // poller + the scheduler spawn + this watcher — nowhere near the
+    // W=16 blocking readers thread mode would hold open.
+    if let (Some(base_threads), Some(peak)) = (baseline, peak) {
+        let delta = peak.saturating_sub(base_threads);
+        assert!(
+            delta <= 6,
+            "reactor leader grew by {delta} threads over W={WORKERS} \
+             endpoints (baseline {base_threads}, peak {peak}) — the \
+             poller must multiplex, not spawn per endpoint"
+        );
+    }
+
+    assert_eq!(reactor_out.subposteriors.len(), MACHINES);
+    for (sa, sb) in
+        reactor_out.subposteriors.iter().zip(&thread_out.subposteriors)
+    {
+        assert_eq!(
+            sa.samples.as_slice(),
+            sb.samples.as_slice(),
+            "machine {} draws diverged under the reactor driver",
+            sa.machine
+        );
+    }
+    assert_eq!(
+        reactor_out.combined.as_slice(),
+        thread_out.combined.as_slice(),
+        "combined output diverged under the reactor driver"
+    );
+    assert_eq!(
+        reactor_out.metrics.scalars_transferred,
         thread_out.metrics.scalars_transferred
     );
 }
