@@ -275,6 +275,12 @@ impl PipelineConfig {
             })?),
         };
         b.thin = parse_usize("thin", b.thin)?;
+        b.threads = match get("threads") {
+            None => b.threads,
+            Some(v) => Some(v.parse().map_err(|_| {
+                Error::Parse(format!("bad usize for threads: {v}"))
+            })?),
+        };
         b.seed = match get("seed") {
             None => b.seed,
             Some(v) => v
@@ -387,6 +393,80 @@ impl PipelineConfig {
 
     pub fn from_file(path: &str) -> Result<Self> {
         Self::from_str_cfg(&std::fs::read_to_string(path)?)
+    }
+
+    /// Render this config as the flat `key = value` text
+    /// [`PipelineConfig::from_str_cfg`] parses, covering every key the
+    /// parser accepts. The rendering round-trips exactly —
+    /// `from_str_cfg(&cfg.to_cfg_string())` rebuilds the config field
+    /// for field (sampler floats travel through [`sampler_spec`]'s
+    /// shortest-round-trip `{:e}` form; the seed is a plain decimal
+    /// `u64`). This is the job-spec wire format `repro submit` ships to
+    /// `repro leaderd`: the daemon re-parses the spec with exactly the
+    /// validation a `--config` file gets, so a submitted job and a solo
+    /// CLI run see identical configs — the root of the byte-identity
+    /// contract across the two entry points.
+    pub fn to_cfg_string(&self) -> String {
+        let mut s = String::with_capacity(768);
+        {
+            let mut kv = |k: &str, v: String| {
+                s.push_str(k);
+                s.push_str(" = ");
+                s.push_str(&v);
+                s.push('\n');
+            };
+            kv("model", self.model.clone());
+            kv("machines", self.machines.to_string());
+            kv("samples_per_machine", self.samples_per_machine.to_string());
+            kv("burn_in", self.burn_in.to_string());
+            kv("thin", self.thin.to_string());
+            kv("threads", self.threads.to_string());
+            kv("seed", self.seed.to_string());
+            kv("sampler", sampler_spec(&self.sampler));
+            kv("method", self.method.name().to_string());
+            kv("t_out", self.t_out.to_string());
+            kv("combine_threads", self.combine_threads.to_string());
+            kv("use_runtime", self.use_runtime.to_string());
+            if !self.artifact_dir.is_empty() {
+                kv("artifact_dir", self.artifact_dir.clone());
+            }
+            kv("process_mode", self.process_mode.to_string());
+            if !self.worker_bin.is_empty() {
+                kv("worker_bin", self.worker_bin.clone());
+            }
+            if !self.workers.is_empty() {
+                kv("workers", self.workers.clone());
+            }
+            kv("worker_slots", self.worker_slots.to_string());
+            kv("shard_format", self.shard_format.name().to_string());
+            kv(
+                "combine_cache_budget_mb",
+                self.combine_cache_budget_mb.to_string(),
+            );
+            kv("combine_backend", self.combine_backend.name().to_string());
+            kv("shard_inline", self.shard_inline.to_string());
+            kv("max_frame_bytes", self.max_frame_bytes.to_string());
+            kv("wire_format", self.wire_format.name().to_string());
+            kv("draw_batch", self.draw_batch.to_string());
+            kv("chunk_rows", self.chunk_rows.to_string());
+            if let Some(mb) = self.draw_spill_budget_mb {
+                kv("draw_spill_budget_mb", mb.to_string());
+            }
+            kv("failure_policy", self.failure_policy.name().to_string());
+            kv("max_retries", self.max_retries.to_string());
+            kv("heartbeat_secs", self.heartbeat_secs.to_string());
+            kv(
+                "liveness_timeout_secs",
+                self.liveness_timeout_secs.to_string(),
+            );
+            kv(
+                "connect_timeout_secs",
+                self.connect_timeout_secs.to_string(),
+            );
+            kv("io_driver", self.io_driver.name().to_string());
+            kv("reactor_threads", self.reactor_threads.to_string());
+        }
+        s
     }
 }
 
@@ -795,6 +875,71 @@ mod tests {
                 "spec '{spec}' did not round-trip"
             );
         }
+    }
+
+    #[test]
+    fn cfg_string_roundtrips_every_key() {
+        // Every knob off its default, including a seed near u64::MAX
+        // and a sampler whose floats need shortest-round-trip `{:e}`
+        // rendering — the job-spec wire format must survive a
+        // parse → render → parse cycle without drift.
+        let cfg = PipelineConfig::builder("logistic")
+            .machines(7)
+            .samples_per_machine(300)
+            .burn_in(11)
+            .thin(3)
+            .threads(4)
+            .seed(u64::MAX - 5)
+            .sampler(SamplerKind::Nuts { step: 1.0 / 3.0, max_depth: 7 })
+            .method(CombineMethod::Pairwise)
+            .t_out(123)
+            .combine_threads(2)
+            .use_runtime(true)
+            .artifact_dir("artifacts/run1")
+            .process_mode(true)
+            .worker_bin("/usr/bin/repro")
+            .workers("127.0.0.1:9001,127.0.0.1:9002")
+            .worker_slots(3)
+            .shard_format(ShardFormat::Binary)
+            .combine_cache_budget_mb(64)
+            .combine_backend(CombineKernelKind::Blocked)
+            .shard_inline(true)
+            .max_frame_bytes(1 << 20)
+            .wire_format(WireFormat::Binary)
+            .draw_batch(17)
+            .chunk_rows(33)
+            .draw_spill_budget_mb(Some(8))
+            .failure_policy(FailurePolicy::Retry)
+            .max_retries(5)
+            .heartbeat_secs(2)
+            .liveness_timeout_secs(9)
+            .connect_timeout_secs(6)
+            .io_driver(IoDriver::Reactor)
+            .reactor_threads(3)
+            .build();
+        let text = cfg.to_cfg_string();
+        let back = PipelineConfig::from_str_cfg(&text).unwrap();
+        assert_eq!(back.to_cfg_string(), text, "render must be a fixpoint");
+        assert_eq!(back.seed, u64::MAX - 5);
+        assert_eq!(back.threads, 4);
+        assert_eq!(back.burn_in, 11);
+        assert_eq!(back.workers, "127.0.0.1:9001,127.0.0.1:9002");
+        assert_eq!(back.io_driver, IoDriver::Reactor);
+        assert_eq!(back.failure_policy, FailurePolicy::Retry);
+        assert_eq!(back.draw_spill_budget_mb, Some(8));
+        assert_eq!(
+            format!("{:?}", back.sampler),
+            format!("{:?}", cfg.sampler)
+        );
+        // Optional keys are omitted, not rendered as empty values.
+        let lean = PipelineConfig::builder("gaussian").build();
+        let lean_text = lean.to_cfg_string();
+        assert!(!lean_text.contains("artifact_dir"));
+        assert!(!lean_text.contains("worker_bin"));
+        assert!(!lean_text.contains("workers "));
+        assert!(!lean_text.contains("draw_spill_budget_mb"));
+        let lean_back = PipelineConfig::from_str_cfg(&lean_text).unwrap();
+        assert_eq!(lean_back.to_cfg_string(), lean_text);
     }
 
     #[test]

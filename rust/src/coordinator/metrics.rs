@@ -47,6 +47,15 @@ pub struct RunMetrics {
     /// open on that slot / scheduler wall time); empty under the
     /// threads driver.
     pub endpoint_busy: Vec<f64>,
+    /// Jobs the daemon accepted over its lifetime (`repro leaderd`);
+    /// `0` for a solo CLI run, which also suppresses the jobs line in
+    /// the Display rendering.
+    pub jobs_accepted: usize,
+    /// Accepted jobs that ended in the `failed` state.
+    pub jobs_failed: usize,
+    /// Per-job milliseconds between submission and the job's pipeline
+    /// starting — time spent queued behind `--max-concurrent-jobs`.
+    pub job_queue_wait_ms: Vec<f64>,
 }
 
 impl RunMetrics {
@@ -81,6 +90,16 @@ impl RunMetrics {
         }
         self.endpoint_busy.iter().sum::<f64>()
             / self.endpoint_busy.len() as f64
+    }
+
+    /// Mean per-job queue wait in milliseconds; `0.0` when no job
+    /// recorded one (daemon never saturated, or not a daemon run).
+    pub fn mean_job_queue_wait_ms(&self) -> f64 {
+        if self.job_queue_wait_ms.is_empty() {
+            return 0.0;
+        }
+        self.job_queue_wait_ms.iter().sum::<f64>()
+            / self.job_queue_wait_ms.len() as f64
     }
 }
 
@@ -121,7 +140,21 @@ impl fmt::Display for RunMetrics {
             self.reactor_wakeups,
             self.time_to_first_draw_ms,
             self.mean_endpoint_busy()
-        )
+        )?;
+        // Job accounting exists only for daemon (`repro leaderd`)
+        // lifetimes; solo runs never accept a job, so their summaries
+        // stay exactly as before the daemon existed.
+        if self.jobs_accepted > 0 {
+            write!(
+                f,
+                "\njobs_accepted={} jobs_failed={} \
+                 job_queue_wait_ms(mean)={:.1}",
+                self.jobs_accepted,
+                self.jobs_failed,
+                self.mean_job_queue_wait_ms()
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -148,6 +181,9 @@ mod tests {
             reactor_wakeups: 42,
             time_to_first_draw_ms: 12.5,
             endpoint_busy: vec![0.5, 0.9],
+            jobs_accepted: 0,
+            jobs_failed: 0,
+            job_queue_wait_ms: Vec::new(),
         };
         assert!((m.mean_accept_rate() - 0.7).abs() < 1e-12);
         assert!((m.max_worker_secs() - 3.0).abs() < 1e-12);
@@ -163,6 +199,23 @@ mod tests {
         assert!(s.contains("reactor_wakeups=42"));
         assert!(s.contains("time_to_first_draw_ms=12.5"));
         assert!(s.contains("endpoint_busy(mean)=0.700"));
+        // Solo runs (jobs_accepted == 0) never print the jobs line.
+        assert!(!s.contains("jobs_accepted"));
+    }
+
+    #[test]
+    fn daemon_metrics_print_job_line() {
+        let m = RunMetrics {
+            jobs_accepted: 3,
+            jobs_failed: 1,
+            job_queue_wait_ms: vec![10.0, 30.0],
+            ..RunMetrics::default()
+        };
+        assert!((m.mean_job_queue_wait_ms() - 20.0).abs() < 1e-12);
+        let s = format!("{m}");
+        assert!(s.contains("jobs_accepted=3"));
+        assert!(s.contains("jobs_failed=1"));
+        assert!(s.contains("job_queue_wait_ms(mean)=20.0"));
     }
 
     #[test]

@@ -14,7 +14,10 @@
 //! [`crate::config::PipelineConfig`], oversubscribing W < M worker
 //! endpoints without changing a byte of output; [`timing`] converts
 //! measured per-worker wall-clocks into the paper's cluster-time
-//! accounting.
+//! accounting. [`server`] promotes the leader itself into a service:
+//! `repro leaderd` multiplexes many concurrent pipeline *jobs* (each
+//! with its own seed-derived RNG root, combiner, and draw plane) over
+//! a shared worker fleet, byte-identical per job to a solo CLI run.
 
 pub mod leader;
 pub mod metrics;
@@ -23,6 +26,7 @@ pub mod pipeline;
 #[cfg(unix)]
 pub mod reactor;
 pub mod serve;
+pub mod server;
 pub mod timing;
 pub mod transport;
 pub mod worker;
@@ -32,6 +36,7 @@ pub use partition::Partitioner;
 pub use pipeline::{
     run_native, run_process, run_with_transport, PipelineOutput, RunDir,
 };
+pub use server::{JobSpec, LeaderdOptions, Shutdown};
 pub use timing::ClusterTiming;
 pub use transport::{
     FaultInjector, FaultSpec, PipeTransport, SocketTransport, Transport,

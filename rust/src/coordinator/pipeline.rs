@@ -15,7 +15,7 @@
 
 use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -57,9 +57,35 @@ pub struct PipelineOutput {
     pub run_dir: Option<RunDir>,
 }
 
+/// Pipeline lifecycle stages, surfaced to `_events` callers as they
+/// begin. The daemon's job state machine maps these onto `RPJOB1`
+/// lifecycle frames (`Sampling` → `running`, `Combining` →
+/// `combining`); a solo CLI run uses the plain entry points, whose
+/// no-op hook makes the phases invisible. Phases carry no data and
+/// never feed RNG state — they are observability only, so wiring them
+/// in cannot perturb the byte-identity contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunPhase {
+    /// Subposterior sampling has started (workers dialed/spawned).
+    Sampling,
+    /// All draws landed; the combine stage is starting.
+    Combining,
+}
+
 /// Run the full embarrassingly-parallel pipeline with native (pure-rust)
 /// subposterior evaluation and OS-thread workers.
 pub fn run_native(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutput> {
+    run_native_events(cfg, data, &|_| {})
+}
+
+/// [`run_native`] with lifecycle events: `on_phase` fires as each
+/// [`RunPhase`] begins. `Sync` because worker threads are alive when
+/// phases fire (the hook itself is only ever called from this thread).
+pub fn run_native_events(
+    cfg: &PipelineConfig,
+    data: &Dataset,
+    on_phase: &(dyn Fn(RunPhase) + Sync),
+) -> Result<PipelineOutput> {
     validate_combine_backend(cfg)?;
     let shards =
         Partitioner::Contiguous.split(data.len(), cfg.machines, cfg.seed)?;
@@ -89,6 +115,7 @@ pub fn run_native(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutput
     leader.set_combine_threads(cfg.combine_threads);
     leader.set_combine_cache_budget(cache_budget_bytes(cfg));
     leader.set_combine_kernel(cfg.combine_backend);
+    on_phase(RunPhase::Sampling);
     std::thread::scope(|scope| -> Result<()> {
         for _ in 0..n_threads {
             let tx = tx.clone();
@@ -145,6 +172,7 @@ pub fn run_native(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutput
         .map(|o| o.ok_or_else(|| Error::Runtime("worker died".into())))
         .collect::<Result<_>>()?;
 
+    on_phase(RunPhase::Combining);
     finish_run(cfg, subposteriors, leader.scalars_received, t0, Some(&leader))
 }
 
@@ -239,22 +267,23 @@ fn validate_combine_backend(cfg: &PipelineConfig) -> Result<()> {
 /// `rust/tests/process_pipeline.rs` and `rust/tests/socket_pipeline.rs`
 /// against real child processes and real localhost daemons.
 pub fn run_process(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutput> {
+    run_process_events(cfg, data, &|_| {})
+}
+
+/// [`run_process`] with lifecycle events — the daemon's job runner
+/// entry point: same transport dispatch, same byte-identity contract,
+/// plus [`RunPhase`] notifications for the RPJOB1 state machine.
+pub fn run_process_events(
+    cfg: &PipelineConfig,
+    data: &Dataset,
+    on_phase: &(dyn Fn(RunPhase) + Sync),
+) -> Result<PipelineOutput> {
     if !cfg.workers.is_empty() {
-        if cfg.liveness_timeout_secs > 0
-            && cfg.heartbeat_secs > 0
-            && cfg.liveness_timeout_secs <= cfg.heartbeat_secs
-        {
-            return Err(Error::Config(format!(
-                "liveness_timeout_secs ({}) must exceed heartbeat_secs \
-                 ({}) — a deadline no longer than the beacon interval \
-                 declares healthy workers dead",
-                cfg.liveness_timeout_secs, cfg.heartbeat_secs
-            )));
-        }
+        validate_liveness(cfg)?;
         if cfg.io_driver == IoDriver::Reactor {
             #[cfg(unix)]
             {
-                return run_reactor_socket(cfg, data);
+                return run_reactor_socket(cfg, data, on_phase);
             }
             #[cfg(not(unix))]
             {
@@ -265,22 +294,11 @@ pub fn run_process(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutpu
                 ));
             }
         }
-        let mut transport = SocketTransport::from_spec(&cfg.workers)?
-            .with_inline_shards(cfg.shard_inline)
-            .with_connect_timeout(Duration::from_secs(
-                cfg.connect_timeout_secs as u64,
-            ))
-            .with_read_deadline((cfg.liveness_timeout_secs > 0).then(
-                || Duration::from_secs(cfg.liveness_timeout_secs as u64),
-            ));
-        if cfg.max_frame_bytes != 0 {
-            transport =
-                transport.with_max_frame_bytes(cfg.max_frame_bytes);
-        }
-        return run_with_transport(cfg, data, &transport);
+        let transport = build_socket_transport(cfg)?;
+        return run_with_transport_events(cfg, data, &transport, on_phase);
     }
     if !cfg.process_mode {
-        return run_native(cfg, data);
+        return run_native_events(cfg, data, on_phase);
     }
     let worker_bin: PathBuf = if cfg.worker_bin.is_empty() {
         std::env::current_exe()?
@@ -296,7 +314,50 @@ pub fn run_process(cfg: &PipelineConfig, data: &Dataset) -> Result<PipelineOutpu
     if cfg.max_frame_bytes != 0 {
         transport = transport.with_max_frame_bytes(cfg.max_frame_bytes);
     }
-    run_with_transport(cfg, data, &transport)
+    run_with_transport_events(cfg, data, &transport, on_phase)
+}
+
+/// Reject a liveness deadline no longer than the heartbeat interval —
+/// such a deadline declares healthy workers dead between beacons.
+fn validate_liveness(cfg: &PipelineConfig) -> Result<()> {
+    if cfg.liveness_timeout_secs > 0
+        && cfg.heartbeat_secs > 0
+        && cfg.liveness_timeout_secs <= cfg.heartbeat_secs
+    {
+        return Err(Error::Config(format!(
+            "liveness_timeout_secs ({}) must exceed heartbeat_secs \
+             ({}) — a deadline no longer than the beacon interval \
+             declares healthy workers dead",
+            cfg.liveness_timeout_secs, cfg.heartbeat_secs
+        )));
+    }
+    Ok(())
+}
+
+/// Build the [`SocketTransport`] that `cfg.workers` describes — inline
+/// shards, connect timeout, liveness read deadline, frame cap — after
+/// validating the heartbeat/liveness pairing. Shared by
+/// [`run_process`] and the daemon's job runner
+/// (`coordinator::server::jobs`), so a submitted job dials its
+/// endpoints with exactly the tuning a solo CLI run would.
+pub(crate) fn build_socket_transport(
+    cfg: &PipelineConfig,
+) -> Result<SocketTransport> {
+    validate_liveness(cfg)?;
+    let mut transport = SocketTransport::from_spec(&cfg.workers)?
+        .with_inline_shards(cfg.shard_inline)
+        .with_connect_timeout(Duration::from_secs(
+            cfg.connect_timeout_secs as u64,
+        ))
+        .with_read_deadline(
+            (cfg.liveness_timeout_secs > 0).then(|| {
+                Duration::from_secs(cfg.liveness_timeout_secs as u64)
+            }),
+        );
+    if cfg.max_frame_bytes != 0 {
+        transport = transport.with_max_frame_bytes(cfg.max_frame_bytes);
+    }
+    Ok(transport)
 }
 
 /// Run the pipeline over any [`Transport`] — the paper's actual
@@ -322,6 +383,17 @@ pub fn run_with_transport(
     cfg: &PipelineConfig,
     data: &Dataset,
     transport: &dyn Transport,
+) -> Result<PipelineOutput> {
+    run_with_transport_events(cfg, data, transport, &|_| {})
+}
+
+/// [`run_with_transport`] with lifecycle events for the daemon's job
+/// state machine; see [`RunPhase`].
+pub fn run_with_transport_events(
+    cfg: &PipelineConfig,
+    data: &Dataset,
+    transport: &dyn Transport,
+    on_phase: &(dyn Fn(RunPhase) + Sync),
 ) -> Result<PipelineOutput> {
     validate_combine_backend(cfg)?;
     let dim = data.param_dim();
@@ -354,6 +426,12 @@ pub fn run_with_transport(
     let retries = AtomicUsize::new(0);
     let quarantines = AtomicUsize::new(0);
     let missed = AtomicUsize::new(0);
+    // Elapsed nanos of the first draw to land anywhere (first writer
+    // wins across endpoint threads); `u64::MAX` = none yet. Mirrors
+    // the reactor driver's `time_to_first_draw_ms` so the daemon can
+    // report the per-job row under either io-driver.
+    let first_draw_nanos = AtomicU64::new(u64::MAX);
+    on_phase(RunPhase::Sampling);
     let drained = match cfg.failure_policy {
         FailurePolicy::Failfast => {
             let next_machine = AtomicUsize::new(0);
@@ -366,6 +444,7 @@ pub fn run_with_transport(
                     let root_err = &root_err;
                     let abort = &abort;
                     let next_machine = &next_machine;
+                    let first_draw_nanos = &first_draw_nanos;
                     scope.spawn(move || {
                         // One endpoint's assignment loop: pull queued
                         // machines until the queue is empty or the run
@@ -383,6 +462,8 @@ pub fn run_with_transport(
                                 &manifest_paths[m],
                                 dim,
                                 &tx,
+                                t0,
+                                first_draw_nanos,
                             ) {
                                 Ok(out) => {
                                     results.lock().unwrap()[m] = Some(out);
@@ -448,6 +529,7 @@ pub fn run_with_transport(
                     let retries = &retries;
                     let quarantines = &quarantines;
                     let missed = &missed;
+                    let first_draw_nanos = &first_draw_nanos;
                     scope.spawn(move || loop {
                         if abort.load(Ordering::SeqCst) {
                             break;
@@ -494,6 +576,8 @@ pub fn run_with_transport(
                             &manifest_paths[m],
                             dim,
                             &tx,
+                            t0,
+                            first_draw_nanos,
                         ) {
                             Ok(out) => {
                                 results.lock().unwrap()[m] = Some(out);
@@ -623,6 +707,7 @@ pub fn run_with_transport(
         .map(|o| o.ok_or_else(|| Error::Runtime("worker died".into())))
         .collect::<Result<_>>()?;
 
+    on_phase(RunPhase::Combining);
     let mut out = finish_run(
         cfg,
         subposteriors,
@@ -633,6 +718,10 @@ pub fn run_with_transport(
     out.metrics.shard_retries = retries.load(Ordering::SeqCst);
     out.metrics.endpoints_quarantined = quarantines.load(Ordering::SeqCst);
     out.metrics.heartbeats_missed = missed.load(Ordering::SeqCst);
+    let first = first_draw_nanos.load(Ordering::SeqCst);
+    if first != u64::MAX {
+        out.metrics.time_to_first_draw_ms = first as f64 / 1e6;
+    }
     out.run_dir = Some(run_dir);
     Ok(out)
 }
@@ -708,6 +797,7 @@ fn spill_assignments(
 fn run_reactor_socket(
     cfg: &PipelineConfig,
     data: &Dataset,
+    on_phase: &(dyn Fn(RunPhase) + Sync),
 ) -> Result<PipelineOutput> {
     use crate::coordinator::reactor;
     use crate::coordinator::transport::DEFAULT_MAX_FRAME_BYTES;
@@ -752,6 +842,7 @@ fn run_reactor_socket(
     leader.set_combine_threads(cfg.combine_threads);
     leader.set_combine_cache_budget(cache_budget_bytes(cfg));
     leader.set_combine_kernel(cfg.combine_backend);
+    on_phase(RunPhase::Sampling);
     let outcome = std::thread::scope(
         |scope| -> Result<reactor::ReactorOutcome> {
             let manifests = &manifests;
@@ -775,6 +866,7 @@ fn run_reactor_socket(
         .into_iter()
         .map(|o| o.ok_or_else(|| Error::Runtime("worker died".into())))
         .collect::<Result<_>>()?;
+    on_phase(RunPhase::Combining);
     let mut out = finish_run(
         cfg,
         subposteriors,
@@ -806,6 +898,22 @@ pub(crate) const QUARANTINE_AFTER: usize = 2;
 pub(crate) const RETRY_BACKOFF_BASE_MS: u64 = 100;
 pub(crate) const RETRY_BACKOFF_CAP_MS: u64 = 2_000;
 
+/// Stamp the elapsed nanos of the run's first landed draw (first
+/// writer wins across endpoint threads). The cheap relaxed load makes
+/// the steady-state cost of this per-draw call one uncontended read.
+fn record_first_draw(t0: Instant, first: &AtomicU64) {
+    if first.load(Ordering::Relaxed) != u64::MAX {
+        return;
+    }
+    let nanos = t0.elapsed().as_nanos() as u64;
+    let _ = first.compare_exchange(
+        u64::MAX,
+        nanos.max(1),
+        Ordering::SeqCst,
+        Ordering::SeqCst,
+    );
+}
+
 /// Record `e` as the run's root cause (first writer wins), flag the
 /// abort, and cancel every in-flight worker through the transport.
 fn fail_run(
@@ -831,6 +939,7 @@ fn fail_run(
 /// status + stderr for pipe children, in-band error frames for socket
 /// daemons). On an error return the connection has been dropped, which
 /// cancels a still-running pipe child.
+#[allow(clippy::too_many_arguments)]
 fn run_assignment(
     transport: &dyn Transport,
     slot: usize,
@@ -838,6 +947,8 @@ fn run_assignment(
     manifest_path: &Path,
     dim: usize,
     tx: &Sender<LeaderMsg>,
+    t0: Instant,
+    first_draw_nanos: &AtomicU64,
 ) -> Result<SubposteriorSamples> {
     let machine = manifest.machine;
     let mut conn = transport.connect(slot, manifest, manifest_path)?;
@@ -857,6 +968,7 @@ fn run_assignment(
         };
         match msg {
             WireMsg::Draw(d) => {
+                record_first_draw(t0, first_draw_nanos);
                 if d.machine != machine || d.theta.len() != dim {
                     return Err(Error::Runtime(format!(
                         "worker {machine}: draw for machine {} with dim {}",
@@ -870,6 +982,7 @@ fn run_assignment(
                 let _ = tx.send(LeaderMsg::Draw(d));
             }
             WireMsg::Chunk(chunk) => {
+                record_first_draw(t0, first_draw_nanos);
                 if chunk.machine != machine
                     || chunk.dim != dim
                     || chunk.thetas.len() != chunk.elapsed.len() * dim
@@ -1025,6 +1138,12 @@ fn finish_run(
         reactor_wakeups: 0,
         time_to_first_draw_ms: 0.0,
         endpoint_busy: Vec::new(),
+        // Job accounting belongs to the daemon (`repro leaderd`),
+        // which aggregates it across runs; a single pipeline run is
+        // not itself a job.
+        jobs_accepted: 0,
+        jobs_failed: 0,
+        job_queue_wait_ms: Vec::new(),
     };
     Ok(PipelineOutput {
         subposteriors,

@@ -23,6 +23,12 @@
 //! No new dependencies: the `poll(2)`/`pipe(2)`/`fcntl(2)` bindings
 //! are bare `extern "C"` declarations in the same idiom as the
 //! hand-rolled `mmap` in [`crate::data::io`].
+//!
+//! One reactor instance serves one pipeline run. Under the leader
+//! daemon ([`crate::coordinator::server`]) each concurrent job that
+//! selects `--io-driver reactor` gets its own instance — reactors
+//! share no state, so multi-job concurrency composes with event-driven
+//! I/O without a shared event loop arbitrating between jobs.
 
 use std::collections::VecDeque;
 use std::io::{Read, Write};

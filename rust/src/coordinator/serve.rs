@@ -290,8 +290,12 @@ pub fn serve(
 }
 
 /// Default bound on the manifest read — see
-/// [`ServeOptions::manifest_timeout`].
-const DEFAULT_MANIFEST_TIMEOUT: Duration = Duration::from_secs(30);
+/// [`ServeOptions::manifest_timeout`]. Public because the leader
+/// daemon (`repro leaderd`) reuses it as the default bound on a
+/// client's submit frame: both daemons face the same
+/// idle-connection-wedges-the-loop hazard on their first inbound
+/// frame.
+pub const DEFAULT_MANIFEST_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// One job: read the manifest frame, stream the run back, close.
 fn handle_conn(stream: TcpStream, opts: &ServeOptions) -> Result<()> {

@@ -1,0 +1,126 @@
+//! `repro submit` client side of the `RPJOB1` protocol.
+//!
+//! One call = one job: dial the daemon, ship the submit frame, then
+//! fold the reply stream — JSON lifecycle frames interleaved with
+//! binary `RPDRAW1` result chunks — into a [`SubmitOutcome`]. Progress
+//! frames are surfaced through a callback so the CLI can narrate
+//! `submitted → running → combining` on stderr while the draw bytes
+//! accumulate bit-exact.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+
+use crate::coordinator::transport::{
+    write_frame, DrawChunk, FrameReader, DEFAULT_MAX_FRAME_BYTES,
+    DRAW_MAGIC,
+};
+use crate::error::{Error, Result};
+use crate::runtime::json::Json;
+use crate::types::SampleMatrix;
+
+use super::{JobSpec, JobState, JobUpdate};
+
+/// What a completed job handed back.
+#[derive(Debug)]
+pub struct SubmitOutcome {
+    /// Daemon-assigned job id.
+    pub job: u64,
+    /// Combined posterior draws, byte-identical to the solo CLI run of
+    /// the same spec.
+    pub combined: SampleMatrix,
+    /// Milliseconds the job queued behind `--max-concurrent-jobs`.
+    pub queue_wait_ms: f64,
+    /// The job's time-to-first-draw as measured by the daemon.
+    pub time_to_first_draw_ms: f64,
+}
+
+/// Submit `spec` to the leader daemon at `addr` and block until the
+/// job finishes. Every lifecycle frame is passed to `progress` as it
+/// arrives; a `failed` frame (including a drain-time refusal) becomes
+/// an `Err` carrying the daemon's error text.
+pub fn submit(
+    addr: &str,
+    spec: &JobSpec,
+    progress: &mut dyn FnMut(&JobUpdate),
+) -> Result<SubmitOutcome> {
+    let stream = TcpStream::connect(addr).map_err(|e| {
+        Error::Runtime(format!("dialing leader daemon {addr}: {e}"))
+    })?;
+    stream.set_nodelay(true).ok();
+    let mut frames = FrameReader::with_max_frame(
+        BufReader::new(stream.try_clone().map_err(Error::Io)?),
+        DEFAULT_MAX_FRAME_BYTES,
+    );
+    let mut w = BufWriter::new(stream);
+    write_frame(&mut w, &spec.to_frame())?;
+    w.flush().map_err(Error::Io)?;
+
+    let mut job = 0u64;
+    let mut queue_wait_ms = 0.0f64;
+    let mut combined: Option<SampleMatrix> = None;
+    loop {
+        let payload = frames.read_frame_bytes()?.ok_or_else(|| {
+            Error::Runtime(
+                "leaderd closed the connection before a done frame"
+                    .into(),
+            )
+        })?;
+        if payload.starts_with(DRAW_MAGIC) {
+            let chunk = DrawChunk::decode(&payload)?;
+            let m = combined
+                .get_or_insert_with(|| SampleMatrix::new(chunk.dim));
+            if chunk.dim != m.dim() {
+                return Err(Error::Runtime(format!(
+                    "result chunk dim {} != {}",
+                    chunk.dim,
+                    m.dim()
+                )));
+            }
+            m.push_rows(&chunk.thetas);
+            continue;
+        }
+        let text = String::from_utf8(payload).map_err(|e| {
+            Error::Parse(format!("non-UTF-8 state frame: {e}"))
+        })?;
+        let update = JobUpdate::from_json(&Json::parse(&text)?)?;
+        progress(&update);
+        if update.job != 0 {
+            job = update.job;
+        }
+        if let Some(qw) = update.queue_wait_ms {
+            queue_wait_ms = qw;
+        }
+        match update.state {
+            JobState::Failed => {
+                return Err(Error::Runtime(format!(
+                    "job {} failed: {}",
+                    update.job,
+                    update.error.as_deref().unwrap_or("unknown error")
+                )));
+            }
+            JobState::Done => {
+                let combined = combined.unwrap_or_else(|| {
+                    SampleMatrix::new(update.dim.unwrap_or(1))
+                });
+                if let Some(expect) = update.draws {
+                    if combined.len() != expect {
+                        return Err(Error::Runtime(format!(
+                            "done frame promised {expect} draws, \
+                             received {}",
+                            combined.len()
+                        )));
+                    }
+                }
+                return Ok(SubmitOutcome {
+                    job,
+                    combined,
+                    queue_wait_ms,
+                    time_to_first_draw_ms: update
+                        .time_to_first_draw_ms
+                        .unwrap_or(0.0),
+                });
+            }
+            _ => {}
+        }
+    }
+}

@@ -1,0 +1,482 @@
+//! Job scheduling for the leader daemon: admission control, fair
+//! endpoint leasing, and the per-job pipeline runner.
+//!
+//! Three pieces, each with one isolation job:
+//!
+//! - [`JobManager`] — the daemon-wide accountant. A FIFO-ticket
+//!   semaphore bounds how many pipelines *run* at once
+//!   (`--max-concurrent-jobs`); everything else about a job (RNG root,
+//!   combiner, draw plane, liveness/retry/quarantine state) lives
+//!   inside that job's own pipeline run, so concurrency shares no
+//!   sampler state between jobs.
+//! - [`EndpointPool`] — fair leasing of the shared worker fleet. A
+//!   worker daemon serves one connection at a time, so two jobs
+//!   dialing the same endpoint would otherwise serialize in the
+//!   endpoint's accept backlog in arrival order; the pool makes that
+//!   queue explicit and FIFO per endpoint, so one job's slow shards
+//!   delay a competitor by at most the shard in flight — never by an
+//!   unbounded backlog jump.
+//! - [`run_job`] — one submitted spec → one pipeline run, through
+//!   exactly the dispatch a solo CLI run uses. Determinism needs no
+//!   help from the scheduler: machine RNG streams are
+//!   `Pcg64::seed_from(job seed).split(m)` and the combine seed is
+//!   `job seed ^ 0x5EED`, both functions of the spec alone, so
+//!   retained draws are byte-identical to the solo run at any
+//!   concurrency or interleaving.
+
+use std::collections::{HashMap, VecDeque};
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::config::IoDriver;
+use crate::coordinator::metrics::RunMetrics;
+use crate::coordinator::pipeline::{self, PipelineOutput, RunPhase};
+use crate::coordinator::transport::{
+    Transport, WorkerConnection, WorkerManifest, WireMsg,
+};
+use crate::data::synth;
+use crate::error::Result;
+
+use super::{DaemonSummary, JobRow, JobSpec, JobState};
+
+/// Daemon-wide job accounting and admission control. All methods take
+/// `&self`; one manager is shared by every client-connection thread.
+pub struct JobManager {
+    max_concurrent: usize,
+    sched: Mutex<SchedState>,
+    sched_cv: Condvar,
+    /// Client-connection threads currently alive (submitted or not) —
+    /// the accept loop's drain barrier.
+    clients: AtomicUsize,
+    stats: Mutex<Stats>,
+    pool: Arc<EndpointPool>,
+}
+
+/// Run-slot semaphore state. FIFO tickets (not a bare counter) so a
+/// job that queued first runs first — queue-wait fairness is part of
+/// the daemon's contract, not an accident of `Condvar` wakeup order.
+struct SchedState {
+    running: usize,
+    queue: VecDeque<u64>,
+    next_ticket: u64,
+    draining: bool,
+}
+
+#[derive(Default)]
+struct Stats {
+    accepted: usize,
+    failed: usize,
+    rows: Vec<JobRow>,
+}
+
+impl JobManager {
+    pub fn new(max_concurrent_jobs: usize) -> JobManager {
+        JobManager {
+            max_concurrent: max_concurrent_jobs.max(1),
+            sched: Mutex::new(SchedState {
+                running: 0,
+                queue: VecDeque::new(),
+                next_ticket: 0,
+                draining: false,
+            }),
+            sched_cv: Condvar::new(),
+            clients: AtomicUsize::new(0),
+            stats: Mutex::new(Stats::default()),
+            pool: EndpointPool::new(),
+        }
+    }
+
+    /// The shared endpoint-lease pool jobs dial workers through.
+    pub fn endpoint_pool(&self) -> &Arc<EndpointPool> {
+        &self.pool
+    }
+
+    /// Admit a job: returns its id (1-based, assigned in submission
+    /// order — ids label jobs and never feed RNG state), or `None`
+    /// when the daemon is draining and refuses new work.
+    pub fn submit(&self) -> Option<u64> {
+        if self.sched.lock().unwrap().draining {
+            return None;
+        }
+        let mut stats = self.stats.lock().unwrap();
+        stats.accepted += 1;
+        let job = stats.accepted as u64;
+        stats.rows.push(JobRow {
+            job,
+            state: JobState::Submitted,
+            queue_wait_ms: 0.0,
+            time_to_first_draw_ms: 0.0,
+        });
+        Some(job)
+    }
+
+    /// Stop admitting new jobs; queued and running jobs finish
+    /// normally. Idempotent.
+    pub fn begin_drain(&self) {
+        self.sched.lock().unwrap().draining = true;
+        self.sched_cv.notify_all();
+    }
+
+    /// Block until a run slot is free (FIFO across waiting jobs); the
+    /// guard releases the slot on drop. The block is the job's queue
+    /// wait — measured by the caller, reported per job.
+    pub fn acquire_slot(&self) -> SlotGuard<'_> {
+        let ticket = {
+            let mut s = self.sched.lock().unwrap();
+            let t = s.next_ticket;
+            s.next_ticket += 1;
+            s.queue.push_back(t);
+            t
+        };
+        let mut s = self.sched.lock().unwrap();
+        while s.queue.front() != Some(&ticket)
+            || s.running >= self.max_concurrent
+        {
+            s = self.sched_cv.wait(s).unwrap();
+        }
+        s.queue.pop_front();
+        s.running += 1;
+        SlotGuard { mgr: self }
+    }
+
+    /// A client-connection thread came up / went away — the accept
+    /// loop drains by waiting for this to hit zero.
+    pub fn client_started(&self) {
+        self.clients.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn client_finished(&self) {
+        self.clients.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    pub fn active_clients(&self) -> usize {
+        self.clients.load(Ordering::SeqCst)
+    }
+
+    /// Record a job's terminal state plus its per-job metric row.
+    pub fn record_outcome(
+        &self,
+        job: u64,
+        state: JobState,
+        queue_wait_ms: f64,
+        time_to_first_draw_ms: f64,
+    ) {
+        let mut stats = self.stats.lock().unwrap();
+        if state == JobState::Failed {
+            stats.failed += 1;
+        }
+        if let Some(row) = stats.rows.iter_mut().find(|r| r.job == job) {
+            row.state = state;
+            row.queue_wait_ms = queue_wait_ms;
+            row.time_to_first_draw_ms = time_to_first_draw_ms;
+        }
+    }
+
+    /// The daemon's lifetime summary: job counters folded into a
+    /// [`RunMetrics`] (whose Display prints the grep-able
+    /// `jobs_accepted=…` line) plus the per-job rows.
+    pub fn summary(&self) -> DaemonSummary {
+        let stats = self.stats.lock().unwrap();
+        let metrics = RunMetrics {
+            jobs_accepted: stats.accepted,
+            jobs_failed: stats.failed,
+            job_queue_wait_ms: stats
+                .rows
+                .iter()
+                .map(|r| r.queue_wait_ms)
+                .collect(),
+            ..RunMetrics::default()
+        };
+        DaemonSummary { metrics, jobs: stats.rows.clone() }
+    }
+}
+
+/// RAII run slot from [`JobManager::acquire_slot`].
+pub struct SlotGuard<'a> {
+    mgr: &'a JobManager,
+}
+
+impl Drop for SlotGuard<'_> {
+    fn drop(&mut self) {
+        self.mgr.sched.lock().unwrap().running -= 1;
+        self.mgr.sched_cv.notify_all();
+    }
+}
+
+/// Fair, per-endpoint connection leasing over the shared worker fleet.
+/// Keyed by endpoint address so two jobs whose specs name overlapping
+/// endpoint lists contend exactly on the shared addresses and nowhere
+/// else — per-job endpoint lists are first-class.
+pub struct EndpointPool {
+    eps: Mutex<HashMap<String, EpState>>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct EpState {
+    busy: bool,
+    queue: VecDeque<u64>,
+    next_ticket: u64,
+}
+
+impl EndpointPool {
+    pub fn new() -> Arc<EndpointPool> {
+        Arc::new(EndpointPool {
+            eps: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Block until `addr` is free, FIFO among waiters. The returned
+    /// lease releases on drop — connection teardown included, since
+    /// the leased connection owns it.
+    pub fn acquire(self: &Arc<Self>, addr: &str) -> EndpointLease {
+        let ticket = {
+            let mut eps = self.eps.lock().unwrap();
+            let ep = eps.entry(addr.to_string()).or_default();
+            let t = ep.next_ticket;
+            ep.next_ticket += 1;
+            ep.queue.push_back(t);
+            t
+        };
+        let mut eps = self.eps.lock().unwrap();
+        loop {
+            let ep = eps.get_mut(addr).expect("endpoint entry exists");
+            if ep.queue.front() == Some(&ticket) && !ep.busy {
+                ep.queue.pop_front();
+                ep.busy = true;
+                return EndpointLease {
+                    pool: Arc::clone(self),
+                    addr: addr.to_string(),
+                };
+            }
+            eps = self.cv.wait(eps).unwrap();
+        }
+    }
+}
+
+/// Exclusive use of one endpoint address; released on drop.
+pub struct EndpointLease {
+    pool: Arc<EndpointPool>,
+    addr: String,
+}
+
+impl Drop for EndpointLease {
+    fn drop(&mut self) {
+        let mut eps = self.pool.eps.lock().unwrap();
+        if let Some(ep) = eps.get_mut(&self.addr) {
+            ep.busy = false;
+        }
+        drop(eps);
+        self.pool.cv.notify_all();
+    }
+}
+
+/// A [`Transport`] wrapper that takes an [`EndpointPool`] lease before
+/// each dial and holds it for the connection's lifetime. The inner
+/// scheduler is unchanged — oversubscription, retry, quarantine all
+/// behave as in a solo run — the lease only gates *when* the dial
+/// happens, which cannot change any job's retained draws (byte-identity
+/// is endpoint- and timing-independent by construction).
+pub(crate) struct LeasedTransport {
+    inner: crate::coordinator::transport::SocketTransport,
+    pool: Arc<EndpointPool>,
+    addrs: Vec<String>,
+}
+
+impl LeasedTransport {
+    pub(crate) fn new(
+        inner: crate::coordinator::transport::SocketTransport,
+        pool: Arc<EndpointPool>,
+        addrs: Vec<String>,
+    ) -> LeasedTransport {
+        LeasedTransport { inner, pool, addrs }
+    }
+}
+
+impl Transport for LeasedTransport {
+    fn name(&self) -> &'static str {
+        "leased-socket"
+    }
+
+    fn slots(&self) -> usize {
+        self.inner.slots()
+    }
+
+    fn connect(
+        &self,
+        slot: usize,
+        manifest: &WorkerManifest,
+        manifest_path: &Path,
+    ) -> Result<Box<dyn WorkerConnection>> {
+        let lease = self.pool.acquire(&self.addrs[slot]);
+        // Dial only after the lease: on failure the lease drops here
+        // and the endpoint frees for the next waiter immediately.
+        let conn = self.inner.connect(slot, manifest, manifest_path)?;
+        Ok(Box::new(LeasedConnection { conn, _lease: lease }))
+    }
+
+    fn max_frame_bytes(&self) -> usize {
+        self.inner.max_frame_bytes()
+    }
+
+    fn wants_inline_shard(&self) -> bool {
+        self.inner.wants_inline_shard()
+    }
+
+    fn cancel_all(&self) {
+        self.inner.cancel_all();
+    }
+}
+
+struct LeasedConnection {
+    conn: Box<dyn WorkerConnection>,
+    _lease: EndpointLease,
+}
+
+impl WorkerConnection for LeasedConnection {
+    fn recv(&mut self) -> Result<Option<WireMsg>> {
+        self.conn.recv()
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.conn.finish()
+    }
+}
+
+/// Run one submitted job spec end-to-end, returning the same
+/// [`PipelineOutput`] a solo CLI run produces for that spec.
+///
+/// Dispatch mirrors `repro pipeline` exactly — dataset from the spec's
+/// model/n/d seeded by the *job's* seed, then [`pipeline::run_process_events`]
+/// over the spec's worker list, process mode, or in-thread workers —
+/// with one insertion: socket jobs under the threads io-driver dial
+/// through a [`LeasedTransport`] so concurrent jobs share the fleet
+/// fairly. Reactor jobs keep their unleased dial: the reactor's whole
+/// point is nonblocking multiplexing, and worker daemons already
+/// serialize at one connection a time, so fairness costs at most the
+/// accept-backlog FIFO the OS provides. Both paths are byte-identical
+/// to the solo run by the RNG-root argument above.
+pub fn run_job(
+    spec: &JobSpec,
+    pool: &Arc<EndpointPool>,
+    on_phase: &(dyn Fn(RunPhase) + Sync),
+) -> Result<PipelineOutput> {
+    let cfg = spec.config()?;
+    if cfg.use_runtime {
+        return Err(crate::error::Error::Config(
+            "use_runtime jobs need a local artifact directory; run \
+             them via `repro pipeline`, not a leader daemon"
+                .into(),
+        ));
+    }
+    let data = synth::by_name(&cfg.model, spec.n, spec.d, cfg.seed)?;
+    if !cfg.workers.is_empty() && cfg.io_driver == IoDriver::Threads {
+        let inner = pipeline::build_socket_transport(&cfg)?;
+        let addrs: Vec<String> = cfg
+            .workers
+            .split(',')
+            .map(|a| a.trim().to_string())
+            .filter(|a| !a.is_empty())
+            .collect();
+        let transport =
+            LeasedTransport::new(inner, Arc::clone(pool), addrs);
+        return pipeline::run_with_transport_events(
+            &cfg, &data, &transport, on_phase,
+        );
+    }
+    if cfg.process_mode || !cfg.workers.is_empty() {
+        return pipeline::run_process_events(&cfg, &data, on_phase);
+    }
+    pipeline::run_native_events(&cfg, &data, on_phase)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    /// The run-slot semaphore really caps concurrency and wakes FIFO:
+    /// with one slot and three queued jobs, completions hand the slot
+    /// over in submission order.
+    #[test]
+    fn slot_semaphore_is_fifo_and_bounded() {
+        let mgr = Arc::new(JobManager::new(1));
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let first = mgr.acquire_slot();
+        let mut handles = Vec::new();
+        for i in 0..3 {
+            let mgr = Arc::clone(&mgr);
+            let order = Arc::clone(&order);
+            handles.push(std::thread::spawn(move || {
+                // Stagger queue entry so ticket order is deterministic.
+                std::thread::sleep(Duration::from_millis(30 * (i + 1)));
+                let guard = mgr.acquire_slot();
+                order.lock().unwrap().push(i);
+                drop(guard);
+            }));
+        }
+        // Let all three park behind the held slot, then release it.
+        std::thread::sleep(Duration::from_millis(200));
+        assert!(order.lock().unwrap().is_empty(), "slot cap violated");
+        drop(first);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2]);
+    }
+
+    /// Endpoint leases are exclusive per address, independent across
+    /// addresses, and FIFO among waiters on one address.
+    #[test]
+    fn endpoint_pool_is_exclusive_and_fifo() {
+        let pool = EndpointPool::new();
+        let a = pool.acquire("host:1");
+        // A different address is immediately available.
+        let b = pool.acquire("host:2");
+        drop(b);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for i in 0..3 {
+            let pool = Arc::clone(&pool);
+            let order = Arc::clone(&order);
+            handles.push(std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(30 * (i + 1)));
+                let lease = pool.acquire("host:1");
+                order.lock().unwrap().push(i);
+                drop(lease);
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(200));
+        assert!(
+            order.lock().unwrap().is_empty(),
+            "lease exclusivity violated"
+        );
+        drop(a);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2]);
+    }
+
+    /// Draining refuses new submissions but leaves ids and counters of
+    /// already-accepted jobs intact.
+    #[test]
+    fn drain_refuses_new_submissions() {
+        let mgr = JobManager::new(2);
+        assert_eq!(mgr.submit(), Some(1));
+        assert_eq!(mgr.submit(), Some(2));
+        mgr.begin_drain();
+        assert_eq!(mgr.submit(), None);
+        mgr.record_outcome(1, JobState::Done, 5.0, 1.0);
+        mgr.record_outcome(2, JobState::Failed, 15.0, 0.0);
+        let summary = mgr.summary();
+        assert_eq!(summary.metrics.jobs_accepted, 2);
+        assert_eq!(summary.metrics.jobs_failed, 1);
+        assert_eq!(summary.metrics.job_queue_wait_ms, vec![5.0, 15.0]);
+        assert_eq!(summary.jobs.len(), 2);
+        assert_eq!(summary.jobs[0].state, JobState::Done);
+        assert_eq!(summary.jobs[1].state, JobState::Failed);
+    }
+}

@@ -1,0 +1,684 @@
+//! Leader-as-a-service: the `repro leaderd` daemon and its `RPJOB1`
+//! job protocol.
+//!
+//! One CLI invocation = one pipeline run was the repo's shape through
+//! PR 9; this module promotes the leader into a persistent server.
+//! `repro leaderd --listen <addr>` accepts many concurrent sampling/
+//! combine **jobs** over the same length-prefixed frame grammar the
+//! worker wire uses. A job arrives as one JSON submit frame carrying
+//! the full pipeline config (the flat `key = value` text of
+//! [`crate::config::PipelineConfig::to_cfg_string`], re-parsed
+//! daemon-side with exactly the validation a `--config` file gets)
+//! plus the dataset size; the daemon streams back JSON lifecycle
+//! frames — `submitted → running → combining → done|failed` — and, on
+//! success, the combined posterior draws as binary `RPDRAW1` chunk
+//! frames (bit-exact), then closes the connection.
+//!
+//! Determinism under multiplexing is the core contract: each job's
+//! RNG root is `Pcg64::seed_from(spec seed)` and its combine seed
+//! `spec seed ^ 0x5EED` — functions of the spec, never of arrival
+//! order, job id, or which jobs run beside it — and each job owns its
+//! leader plane (`OnlineCombiner`, `DrawStore`, retry/quarantine
+//! state) inside its own pipeline run. Retained draws from a job are
+//! therefore byte-identical to the solo `repro pipeline` run of the
+//! same spec at any `--max-concurrent-jobs`, interleaving, io-driver,
+//! or failure policy — CI's `leaderd-smoke` job `cmp`s exactly that.
+//!
+//! Wire grammar (all frames length-prefixed, see
+//! [`crate::coordinator::transport`]):
+//!
+//! ```text
+//! client → daemon   {"rpjob":1,"type":"submit","cfg":"<cfg text>","n":N,"d":D}
+//! daemon → client   {"rpjob":1,"type":"state","job":J,"state":"submitted"}
+//!                   {"rpjob":1,"type":"state","job":J,"state":"running",
+//!                    "queue_wait_ms":…}
+//!                   {"rpjob":1,"type":"state","job":J,"state":"combining"}
+//!                   RPDRAW1 chunk frames (combined draws, machine 0)…
+//!                   {"rpjob":1,"type":"state","job":J,"state":"done",
+//!                    "draws":T,"dim":d,"queue_wait_ms":…,
+//!                    "time_to_first_draw_ms":…}
+//!            or     {"rpjob":1,"type":"state","job":J,"state":"failed",
+//!                    "error":"…"}
+//! ```
+
+pub mod client;
+pub mod jobs;
+
+use std::fmt;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{Shutdown as NetShutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::PipelineConfig;
+use crate::coordinator::metrics::RunMetrics;
+use crate::coordinator::pipeline::RunPhase;
+use crate::coordinator::serve::DEFAULT_MANIFEST_TIMEOUT;
+use crate::coordinator::transport::{
+    write_frame, write_frame_bytes, DrawChunk, FrameReader,
+    DEFAULT_MAX_FRAME_BYTES,
+};
+use crate::error::{Error, Result};
+use crate::runtime::json::{obj, Json};
+use crate::types::SampleMatrix;
+
+use jobs::JobManager;
+
+/// Everything a job needs to run: the full pipeline config as cfg
+/// text (seed, model, partition, combine tuning, worker endpoint list
+/// — endpoints may differ between jobs) plus the synthetic dataset
+/// size. The daemon re-parses the text with
+/// [`PipelineConfig::from_str_cfg`], so a submitted job and a solo
+/// `--config` run see identical validation and identical configs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// Flat `key = value` pipeline config
+    /// ([`PipelineConfig::to_cfg_string`]).
+    pub cfg_text: String,
+    /// Dataset rows (the CLI's `--n`).
+    pub n: usize,
+    /// Dataset parameter dimension (the CLI's `--d`; some models
+    /// ignore it).
+    pub d: usize,
+}
+
+impl JobSpec {
+    /// Build a spec from an already-validated config.
+    pub fn from_config(cfg: &PipelineConfig, n: usize, d: usize) -> JobSpec {
+        JobSpec { cfg_text: cfg.to_cfg_string(), n, d }
+    }
+
+    /// Parse the embedded config text.
+    pub fn config(&self) -> Result<PipelineConfig> {
+        PipelineConfig::from_str_cfg(&self.cfg_text)
+    }
+
+    /// The submit frame payload.
+    pub fn to_frame(&self) -> String {
+        obj(vec![
+            ("rpjob", Json::Num(1.0)),
+            ("type", Json::Str("submit".into())),
+            ("cfg", Json::Str(self.cfg_text.clone())),
+            ("n", Json::Num(self.n as f64)),
+            ("d", Json::Num(self.d as f64)),
+        ])
+        .render()
+    }
+
+    /// Decode a submit frame.
+    pub fn from_frame(j: &Json) -> Result<JobSpec> {
+        if j.get("rpjob")?.as_f64()? != 1.0 {
+            return Err(Error::Parse(
+                "unsupported rpjob protocol version".into(),
+            ));
+        }
+        if j.get("type")?.as_str()? != "submit" {
+            return Err(Error::Parse(format!(
+                "expected a submit frame, got type '{}'",
+                j.get("type")?.as_str()?
+            )));
+        }
+        Ok(JobSpec {
+            cfg_text: j.get("cfg")?.as_str()?.to_string(),
+            n: j.get("n")?.as_usize()?,
+            d: j.get("d")?.as_usize()?,
+        })
+    }
+}
+
+/// Job lifecycle states (`RPJOB1` state frames).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Submitted,
+    Running,
+    Combining,
+    Done,
+    Failed,
+}
+
+impl JobState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Submitted => "submitted",
+            JobState::Running => "running",
+            JobState::Combining => "combining",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<JobState> {
+        Ok(match s {
+            "submitted" => JobState::Submitted,
+            "running" => JobState::Running,
+            "combining" => JobState::Combining,
+            "done" => JobState::Done,
+            "failed" => JobState::Failed,
+            other => {
+                return Err(Error::Parse(format!(
+                    "unknown job state '{other}'"
+                )))
+            }
+        })
+    }
+}
+
+/// One `RPJOB1` state frame: a lifecycle transition plus whatever
+/// telemetry the state carries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobUpdate {
+    pub job: u64,
+    pub state: JobState,
+    /// Milliseconds queued behind `--max-concurrent-jobs` (from
+    /// `running` onward).
+    pub queue_wait_ms: Option<f64>,
+    /// Per-job time to first draw (on `done`).
+    pub time_to_first_draw_ms: Option<f64>,
+    /// Combined draw count (on `done`).
+    pub draws: Option<usize>,
+    /// Parameter dimension (on `done`).
+    pub dim: Option<usize>,
+    /// Structured failure (on `failed`).
+    pub error: Option<String>,
+}
+
+impl JobUpdate {
+    fn state_only(job: u64, state: JobState) -> JobUpdate {
+        JobUpdate {
+            job,
+            state,
+            queue_wait_ms: None,
+            time_to_first_draw_ms: None,
+            draws: None,
+            dim: None,
+            error: None,
+        }
+    }
+
+    fn failed(job: u64, error: &str) -> JobUpdate {
+        JobUpdate {
+            error: Some(error.to_string()),
+            ..JobUpdate::state_only(job, JobState::Failed)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("rpjob", Json::Num(1.0)),
+            ("type", Json::Str("state".into())),
+            ("job", Json::Num(self.job as f64)),
+            ("state", Json::Str(self.state.name().into())),
+        ];
+        if let Some(v) = self.queue_wait_ms {
+            fields.push(("queue_wait_ms", Json::Num(v)));
+        }
+        if let Some(v) = self.time_to_first_draw_ms {
+            fields.push(("time_to_first_draw_ms", Json::Num(v)));
+        }
+        if let Some(v) = self.draws {
+            fields.push(("draws", Json::Num(v as f64)));
+        }
+        if let Some(v) = self.dim {
+            fields.push(("dim", Json::Num(v as f64)));
+        }
+        if let Some(v) = &self.error {
+            fields.push(("error", Json::Str(v.clone())));
+        }
+        obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobUpdate> {
+        if j.get("rpjob")?.as_f64()? != 1.0
+            || j.get("type")?.as_str()? != "state"
+        {
+            return Err(Error::Parse(
+                "expected an rpjob state frame".into(),
+            ));
+        }
+        let o = j.as_obj()?;
+        let opt_f64 = |key: &str| -> Result<Option<f64>> {
+            o.get(key).map(Json::as_f64).transpose()
+        };
+        let opt_usize = |key: &str| -> Result<Option<usize>> {
+            o.get(key).map(Json::as_usize).transpose()
+        };
+        Ok(JobUpdate {
+            job: j.get("job")?.as_usize()? as u64,
+            state: JobState::parse(j.get("state")?.as_str()?)?,
+            queue_wait_ms: opt_f64("queue_wait_ms")?,
+            time_to_first_draw_ms: opt_f64("time_to_first_draw_ms")?,
+            draws: opt_usize("draws")?,
+            dim: opt_usize("dim")?,
+            error: o
+                .get("error")
+                .map(|e| e.as_str().map(str::to_string))
+                .transpose()?,
+        })
+    }
+}
+
+/// Options for [`leaderd`].
+#[derive(Debug, Clone)]
+pub struct LeaderdOptions {
+    /// Pipelines running at once; further jobs queue FIFO
+    /// (`--max-concurrent-jobs`).
+    pub max_concurrent_jobs: usize,
+    /// Stop accepting after this many connections and exit once they
+    /// drain (`--jobs N`; `None` = serve until shut down). The
+    /// deterministic-exit knob tests and CI share with `repro serve`.
+    pub max_jobs: Option<usize>,
+    /// Inbound frame cap (submit frames are small; this guards the
+    /// length prefix).
+    pub max_frame_bytes: usize,
+    /// Bound on a freshly accepted connection delivering its submit
+    /// frame — same idle-connection hazard, same default, as the
+    /// worker daemon's manifest timeout.
+    pub submit_timeout: Duration,
+}
+
+impl Default for LeaderdOptions {
+    fn default() -> Self {
+        LeaderdOptions {
+            max_concurrent_jobs: 2,
+            max_jobs: None,
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            submit_timeout: DEFAULT_MANIFEST_TIMEOUT,
+        }
+    }
+}
+
+/// Graceful-shutdown handle for [`leaderd`]: cloneable, signal-safe to
+/// observe (one atomic). Triggering makes the daemon refuse new
+/// submissions (in-band `failed` frames), drain in-flight jobs, and
+/// return its summary — the SIGTERM/ctrl-c path of the CLI.
+#[derive(Clone, Default)]
+pub struct Shutdown(Arc<AtomicBool>);
+
+impl Shutdown {
+    pub fn new() -> Shutdown {
+        Shutdown::default()
+    }
+
+    pub fn trigger(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_triggered(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// Per-job summary row in the daemon's exit report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRow {
+    pub job: u64,
+    pub state: JobState,
+    pub queue_wait_ms: f64,
+    pub time_to_first_draw_ms: f64,
+}
+
+/// What a daemon lifetime produced: aggregate job metrics (rendered
+/// through [`RunMetrics`], whose Display prints the grep-able
+/// `jobs_accepted=…` line) plus one row per job.
+#[derive(Debug, Clone)]
+pub struct DaemonSummary {
+    pub metrics: RunMetrics,
+    pub jobs: Vec<JobRow>,
+}
+
+impl fmt::Display for DaemonSummary {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "jobs_accepted={} jobs_failed={} job_queue_wait_ms(mean)={:.1}",
+            self.metrics.jobs_accepted,
+            self.metrics.jobs_failed,
+            self.metrics.mean_job_queue_wait_ms()
+        )?;
+        for row in &self.jobs {
+            writeln!(
+                f,
+                "job {}: state={} queue_wait_ms={:.1} \
+                 time_to_first_draw_ms={:.1}",
+                row.job,
+                row.state.name(),
+                row.queue_wait_ms,
+                row.time_to_first_draw_ms
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// How often the accept loop polls the nonblocking listener and the
+/// shutdown flag. Bounds shutdown latency, not job latency — client
+/// connections run on their own threads.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+/// Combined draws stream back in chunks of this many rows per RPDRAW1
+/// frame — small enough to pipeline, large enough to amortize frame
+/// overhead. A display/transport knob only: the bytes are bit-exact
+/// regardless.
+const RESULT_CHUNK_ROWS: usize = 512;
+
+/// Run the leader daemon: bind `addr`, announce `LISTENING <addr>` on
+/// `announce`, serve submit connections each on its own thread with up
+/// to `opts.max_concurrent_jobs` pipelines running at once, until
+/// `shutdown` triggers (drain, then return the summary) or the
+/// `opts.max_jobs` cap is reached. A failed job is reported to its own
+/// client in-band; the daemon stays up for the others.
+pub fn leaderd(
+    addr: &str,
+    opts: &LeaderdOptions,
+    shutdown: &Shutdown,
+    announce: &mut dyn Write,
+) -> Result<DaemonSummary> {
+    let listener = TcpListener::bind(addr).map_err(|e| {
+        Error::Runtime(format!("binding leader daemon to {addr}: {e}"))
+    })?;
+    let local = listener.local_addr().map_err(Error::Io)?;
+    listener.set_nonblocking(true).map_err(|e| {
+        Error::Runtime(format!("arming nonblocking accept: {e}"))
+    })?;
+    writeln!(announce, "LISTENING {local}")?;
+    announce.flush()?;
+
+    let manager = JobManager::new(opts.max_concurrent_jobs);
+    let mut accepted = 0usize;
+    std::thread::scope(|scope| {
+        loop {
+            let capped =
+                opts.max_jobs.is_some_and(|cap| accepted >= cap);
+            let draining = shutdown.is_triggered() || capped;
+            if draining {
+                manager.begin_drain();
+                // Keep accepting while clients are active so late
+                // submitters get an in-band refusal instead of a
+                // hang; once the last client thread exits, stop.
+                if manager.active_clients() == 0 {
+                    break;
+                }
+            }
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    accepted += 1;
+                    manager.client_started();
+                    let manager = &manager;
+                    scope.spawn(move || {
+                        if let Err(e) =
+                            handle_client(stream, manager, opts)
+                        {
+                            eprintln!("leaderd: client {peer}: {e}");
+                        }
+                        manager.client_finished();
+                    });
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(e) => eprintln!("leaderd: accept: {e}"),
+            }
+        }
+    });
+    Ok(manager.summary())
+}
+
+/// Send one state frame, flushed immediately so the client sees
+/// lifecycle progress in real time.
+fn send_update(
+    out: &Mutex<BufWriter<TcpStream>>,
+    update: &JobUpdate,
+) -> Result<()> {
+    let mut w = out.lock().unwrap();
+    write_frame(&mut *w, &update.to_json().render())?;
+    w.flush().map_err(Error::Io)
+}
+
+/// Stream the combined draw matrix back as binary RPDRAW1 chunk
+/// frames (machine 0, `last` on the final chunk). Bit-exact: the
+/// chunk encoding round-trips every f64 through `to_bits`, so the
+/// client-side CSV is byte-identical to the solo CLI's.
+fn stream_combined(
+    out: &Mutex<BufWriter<TcpStream>>,
+    combined: &SampleMatrix,
+) -> Result<()> {
+    let total = combined.len();
+    let dim = combined.dim();
+    let mut frame = Vec::new();
+    let mut start = 0usize;
+    while start < total {
+        let end = (start + RESULT_CHUNK_ROWS).min(total);
+        let mut thetas = Vec::with_capacity((end - start) * dim);
+        for i in start..end {
+            thetas.extend_from_slice(combined.row(i));
+        }
+        let chunk = DrawChunk {
+            machine: 0,
+            dim,
+            thetas,
+            // Combined draws carry no per-draw timing; zeros keep the
+            // frame layout uniform.
+            elapsed: vec![0.0; end - start],
+            last: end == total,
+        };
+        chunk.encode_into(&mut frame);
+        let mut w = out.lock().unwrap();
+        write_frame_bytes(&mut *w, &frame)?;
+        start = end;
+    }
+    out.lock().unwrap().flush().map_err(Error::Io)
+}
+
+/// One client connection: read the submit frame, run the job through
+/// the shared [`JobManager`], stream lifecycle + result frames back.
+fn handle_client(
+    stream: TcpStream,
+    manager: &JobManager,
+    opts: &LeaderdOptions,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    // Only the submit frame is read from the client; bounding it keeps
+    // an idle connection from pinning a client thread forever.
+    stream.set_read_timeout(Some(opts.submit_timeout)).map_err(|e| {
+        Error::Runtime(format!(
+            "arming the {:?} submit read timeout: {e}",
+            opts.submit_timeout
+        ))
+    })?;
+    let reader = stream.try_clone().map_err(Error::Io)?;
+    let mut frames = FrameReader::with_max_frame(
+        BufReader::new(reader),
+        opts.max_frame_bytes,
+    );
+    let payload = frames.read_frame()?.ok_or_else(|| {
+        Error::Runtime("connection closed before a submit frame".into())
+    })?;
+    let spec = JobSpec::from_frame(&Json::parse(&payload)?)?;
+    // Validate the spec up front so a malformed config is refused
+    // before it ever occupies a run slot.
+    spec.config()?;
+
+    let out = Mutex::new(BufWriter::new(
+        stream.try_clone().map_err(Error::Io)?,
+    ));
+    let result = match manager.submit() {
+        None => {
+            // Draining: refuse in-band (job id 0 = never admitted).
+            let refusal = JobUpdate::failed(
+                0,
+                "leaderd draining: submission refused",
+            );
+            send_update(&out, &refusal)
+        }
+        Some(job) => serve_job(&stream, &out, manager, opts, job, &spec),
+    };
+    out.lock().unwrap().flush().ok();
+    stream.shutdown(NetShutdown::Both).ok();
+    result
+}
+
+/// Drive one admitted job through its lifecycle.
+fn serve_job(
+    _stream: &TcpStream,
+    out: &Mutex<BufWriter<TcpStream>>,
+    manager: &JobManager,
+    _opts: &LeaderdOptions,
+    job: u64,
+    spec: &JobSpec,
+) -> Result<()> {
+    send_update(out, &JobUpdate::state_only(job, JobState::Submitted))?;
+    let wait_t0 = Instant::now();
+    let slot = manager.acquire_slot();
+    let queue_wait_ms = wait_t0.elapsed().as_secs_f64() * 1e3;
+    send_update(
+        out,
+        &JobUpdate {
+            queue_wait_ms: Some(queue_wait_ms),
+            ..JobUpdate::state_only(job, JobState::Running)
+        },
+    )?;
+    // Lifecycle hook: surface the combine transition as it happens.
+    // Best-effort — a client that stopped reading must not kill the
+    // pipeline mid-combine; the final done/failed frame reports the
+    // authoritative outcome.
+    let on_phase = |phase: RunPhase| {
+        if phase == RunPhase::Combining {
+            let _ = send_update(
+                out,
+                &JobUpdate::state_only(job, JobState::Combining),
+            );
+        }
+    };
+    let run = jobs::run_job(spec, manager.endpoint_pool(), &on_phase);
+    drop(slot);
+    match run {
+        Ok(output) => {
+            let ttfd = output.metrics.time_to_first_draw_ms;
+            manager.record_outcome(
+                job,
+                JobState::Done,
+                queue_wait_ms,
+                ttfd,
+            );
+            stream_combined(out, &output.combined)?;
+            send_update(
+                out,
+                &JobUpdate {
+                    queue_wait_ms: Some(queue_wait_ms),
+                    time_to_first_draw_ms: Some(ttfd),
+                    draws: Some(output.combined.len()),
+                    dim: Some(output.combined.dim()),
+                    ..JobUpdate::state_only(job, JobState::Done)
+                },
+            )
+        }
+        Err(e) => {
+            manager.record_outcome(
+                job,
+                JobState::Failed,
+                queue_wait_ms,
+                0.0,
+            );
+            send_update(out, &JobUpdate::failed(job, &e.to_string()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_spec_roundtrips_through_the_submit_frame() {
+        let cfg = PipelineConfig::builder("gaussian")
+            .machines(3)
+            .samples_per_machine(50)
+            .seed(123)
+            .build();
+        let spec = JobSpec::from_config(&cfg, 600, 2);
+        let back =
+            JobSpec::from_frame(&Json::parse(&spec.to_frame()).unwrap())
+                .unwrap();
+        assert_eq!(back, spec);
+        let cfg2 = back.config().unwrap();
+        assert_eq!(cfg2.seed, 123);
+        assert_eq!(cfg2.machines, 3);
+        assert_eq!(cfg2.to_cfg_string(), cfg.to_cfg_string());
+    }
+
+    #[test]
+    fn job_update_roundtrips_with_optional_fields() {
+        let full = JobUpdate {
+            job: 7,
+            state: JobState::Done,
+            queue_wait_ms: Some(12.25),
+            time_to_first_draw_ms: Some(3.5),
+            draws: Some(100),
+            dim: Some(4),
+            error: None,
+        };
+        let back =
+            JobUpdate::from_json(&Json::parse(&full.to_json().render())
+                .unwrap())
+            .unwrap();
+        assert_eq!(back, full);
+        let failed = JobUpdate::failed(2, "boom");
+        let back = JobUpdate::from_json(
+            &Json::parse(&failed.to_json().render()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.state, JobState::Failed);
+        assert_eq!(back.error.as_deref(), Some("boom"));
+        assert_eq!(back.queue_wait_ms, None);
+    }
+
+    #[test]
+    fn job_state_names_roundtrip() {
+        for s in [
+            JobState::Submitted,
+            JobState::Running,
+            JobState::Combining,
+            JobState::Done,
+            JobState::Failed,
+        ] {
+            assert_eq!(JobState::parse(s.name()).unwrap(), s);
+        }
+        assert!(JobState::parse("nope").is_err());
+    }
+
+    #[test]
+    fn daemon_summary_renders_per_job_rows() {
+        let summary = DaemonSummary {
+            metrics: RunMetrics {
+                jobs_accepted: 2,
+                jobs_failed: 1,
+                job_queue_wait_ms: vec![0.0, 50.0],
+                ..RunMetrics::default()
+            },
+            jobs: vec![
+                JobRow {
+                    job: 1,
+                    state: JobState::Done,
+                    queue_wait_ms: 0.0,
+                    time_to_first_draw_ms: 8.5,
+                },
+                JobRow {
+                    job: 2,
+                    state: JobState::Failed,
+                    queue_wait_ms: 50.0,
+                    time_to_first_draw_ms: 0.0,
+                },
+            ],
+        };
+        let s = summary.to_string();
+        assert!(s.contains("jobs_accepted=2"));
+        assert!(s.contains("jobs_failed=1"));
+        assert!(s.contains("job_queue_wait_ms(mean)=25.0"));
+        assert!(s.contains("job 1: state=done"));
+        assert!(s.contains("job 2: state=failed"));
+        assert!(s.contains("time_to_first_draw_ms=8.5"));
+    }
+}

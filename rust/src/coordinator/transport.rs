@@ -36,6 +36,11 @@
 //! answers in JSON still interoperates — mixed-version fleets degrade
 //! to the JSON plane instead of failing.
 //!
+//! The same grammar also carries the client↔leader-daemon `RPJOB1`
+//! protocol ([`crate::coordinator::server`]): JSON job-lifecycle
+//! frames interleaved with binary `RPDRAW1` result chunks, one frame
+//! vocabulary end to end.
+//!
 //! ## Float fidelity contract
 //!
 //! Both planes preserve every float *value*, including ±∞ and NaN

@@ -1,9 +1,30 @@
 //! Synthetic dataset generators matching the paper's experiments.
 
 use super::Dataset;
+use crate::error::{Error, Result};
 use crate::math::special::sigmoid;
 use crate::rng::Pcg64;
 use crate::types::SampleMatrix;
+
+/// Build a dataset from the CLI/job-spec model name. This is the
+/// single name→generator mapping shared by `repro pipeline` and the
+/// `leaderd` job runner, so a job spec resolves to exactly the data a
+/// solo CLI run would draw: same generator, same `(n, d, seed)`
+/// arguments (the GMM fixes `k = 10`, `dim = 2`, `sep = 5.0` as in the
+/// paper's mixture experiment; `poisson_gamma` ignores `d`).
+pub fn by_name(model: &str, n: usize, d: usize, seed: u64) -> Result<Dataset> {
+    Ok(match model {
+        "gaussian" => gaussian(n, d, seed),
+        "logistic" => logistic(n, d, seed),
+        "covtype" => covtype_like(n, d, seed),
+        "gmm" => gmm(n, 10, 2, 5.0, seed),
+        "poisson_gamma" => poisson_gamma(n, seed),
+        "linreg" => linreg(n, d, seed),
+        other => {
+            return Err(Error::Config(format!("unknown model '{other}'")))
+        }
+    })
+}
 
 /// Gaussian mean-estimation data: `x_i ~ N(μ*, I)` with
 /// `μ*_j = 1 + j/10`. Known `lik_prec = 1`, prior `N(0, I/0.1)`.

@@ -12,6 +12,11 @@
 //!   serve         (hidden) socket-mode worker daemon: listen on TCP,
 //!                 accept a manifest frame per connection, stream the
 //!                 run back — dialed by `pipeline --workers a,b,…`
+//!   leaderd       persistent leader daemon: accept many concurrent
+//!                 pipeline jobs over the RPJOB1 protocol, each
+//!                 byte-identical to the solo run of the same spec
+//!   submit        ship a pipeline job spec to a leaderd, stream back
+//!                 progress and combined draws
 //!
 //! Examples:
 //!   repro pipeline --model logistic --n 50000 --d 50 --machines 10 \
@@ -83,22 +88,17 @@ impl Args {
 }
 
 fn build_dataset(model: &str, n: usize, d: usize, seed: u64) -> Result<Dataset> {
-    Ok(match model {
-        "gaussian" => synth::gaussian(n, d, seed),
-        "logistic" => synth::logistic(n, d, seed),
-        "covtype" => synth::covtype_like(n, d, seed),
-        "gmm" => synth::gmm(n, 10, 2, 5.0, seed),
-        "poisson_gamma" => synth::poisson_gamma(n, seed),
-        "linreg" => synth::linreg(n, d, seed),
-        other => {
-            return Err(Error::Config(format!("unknown model '{other}'")))
-        }
-    })
+    synth::by_name(model, n, d, seed)
 }
 
-fn cmd_pipeline(args: &Args) -> Result<()> {
-    let cfg = match args.get("config") {
-        Some(path) => PipelineConfig::from_file(path)?,
+/// Build a [`PipelineConfig`] from CLI flags. Shared by `pipeline`
+/// (solo run) and `submit` (job shipped to a leader daemon) so a
+/// submitted spec accepts the identical flag surface — and therefore
+/// describes the identical run — as the solo CLI. `--config FILE`
+/// takes precedence over individual flags.
+fn pipeline_cfg_from_args(args: &Args) -> Result<PipelineConfig> {
+    match args.get("config") {
+        Some(path) => PipelineConfig::from_file(path),
         None => {
             let model = args.get("model").unwrap_or("gaussian").to_string();
             let mut b = PipelineConfig::builder(&model)
@@ -250,9 +250,13 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
             if let Some(d) = args.get("artifacts") {
                 b = b.artifact_dir(d);
             }
-            b.build()
+            Ok(b.build())
         }
-    };
+    }
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let cfg = pipeline_cfg_from_args(args)?;
     let n = args.get_usize("n", 10_000)?;
     let d = args.get_usize("d", 10)?;
     let data = build_dataset(&cfg.model, n, d, cfg.seed)?;
@@ -455,6 +459,145 @@ fn cmd_serve(args: &Args) -> Result<()> {
     serve(listen, &opts, &mut std::io::stdout())
 }
 
+/// Bridge SIGTERM/ctrl-c into the leader daemon's graceful-shutdown
+/// handle. The handler itself only flips one static atomic
+/// (async-signal-safe); a watcher thread forwards the flip to the
+/// [`repro::coordinator::Shutdown`] handle, which makes the daemon
+/// refuse new submissions, drain in-flight jobs, and exit 0.
+#[cfg(unix)]
+fn install_shutdown_signals(shutdown: &repro::coordinator::Shutdown) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static SIGNALED: AtomicBool = AtomicBool::new(false);
+    extern "C" fn on_signal(_sig: i32) {
+        SIGNALED.store(true, Ordering::SeqCst);
+    }
+    // Bare libc declaration, same idiom as coordinator::reactor — the
+    // repo links no signal crate.
+    extern "C" {
+        fn signal(sig: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal as usize);
+        signal(SIGTERM, on_signal as usize);
+    }
+    let shutdown = shutdown.clone();
+    std::thread::spawn(move || loop {
+        if SIGNALED.load(Ordering::SeqCst) {
+            shutdown.trigger();
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    });
+}
+
+#[cfg(not(unix))]
+fn install_shutdown_signals(_shutdown: &repro::coordinator::Shutdown) {}
+
+/// Leader daemon: bind `--listen`, print `LISTENING <addr>`, accept
+/// concurrent pipeline jobs over the RPJOB1 protocol with up to
+/// `--max-concurrent-jobs` running at once (further jobs queue FIFO).
+/// `--jobs N` exits after N connections drain (0 = serve until
+/// SIGTERM/ctrl-c, which drains gracefully); the per-job summary and
+/// aggregate job metrics print on exit.
+fn cmd_leaderd(args: &Args) -> Result<()> {
+    use repro::coordinator::server::{leaderd, LeaderdOptions, Shutdown};
+    let listen = args.get("listen").unwrap_or("127.0.0.1:0");
+    let defaults = LeaderdOptions::default();
+    let max_concurrent_jobs = args
+        .get_usize("max-concurrent-jobs", defaults.max_concurrent_jobs)?;
+    if max_concurrent_jobs == 0 {
+        return Err(Error::Config(
+            "--max-concurrent-jobs must be >= 1 (got 0); a daemon \
+             that can run nothing admits nothing"
+                .into(),
+        ));
+    }
+    let jobs = args.get_usize("jobs", 0)?;
+    let mut opts = LeaderdOptions {
+        max_concurrent_jobs,
+        max_jobs: if jobs == 0 { None } else { Some(jobs) },
+        ..defaults
+    };
+    if let Some(b) = args.get("max-frame-bytes") {
+        opts.max_frame_bytes = b.parse().map_err(|_| {
+            Error::Config(format!("bad --max-frame-bytes: {b}"))
+        })?;
+    }
+    if let Some(s) = args.get("submit-timeout-secs") {
+        let secs: u64 = s.parse().map_err(|_| {
+            Error::Config(format!("bad --submit-timeout-secs: {s}"))
+        })?;
+        if secs == 0 {
+            return Err(Error::Config(
+                "--submit-timeout-secs must be >= 1 (got 0); an \
+                 unbounded submit read would let one idle connection \
+                 pin a client thread forever"
+                    .into(),
+            ));
+        }
+        opts.submit_timeout = std::time::Duration::from_secs(secs);
+    }
+    let shutdown = Shutdown::new();
+    install_shutdown_signals(&shutdown);
+    let summary =
+        leaderd(listen, &opts, &shutdown, &mut std::io::stdout())?;
+    eprint!("{summary}");
+    Ok(())
+}
+
+/// Submit one pipeline job to a running leader daemon. Takes the same
+/// flag surface as `pipeline` (or `--config FILE`), ships the spec to
+/// `--to HOST:PORT`, narrates lifecycle frames on stderr, and writes
+/// the combined draws — byte-identical to the solo run of the same
+/// spec — to `--out`.
+fn cmd_submit(args: &Args) -> Result<()> {
+    use repro::coordinator::server::client::submit;
+    use repro::coordinator::server::{JobSpec, JobState, JobUpdate};
+    let to = args.get("to").ok_or_else(|| {
+        Error::Config(
+            "submit needs --to HOST:PORT (a running repro leaderd)"
+                .into(),
+        )
+    })?;
+    let cfg = pipeline_cfg_from_args(args)?;
+    let n = args.get_usize("n", 10_000)?;
+    let d = args.get_usize("d", 10)?;
+    let spec = JobSpec::from_config(&cfg, n, d);
+    eprintln!(
+        "submit → {to}: model={} n={n} M={} T={} method={} seed={}",
+        cfg.model,
+        cfg.machines,
+        cfg.samples_per_machine,
+        cfg.method.name(),
+        cfg.seed
+    );
+    let outcome = submit(to, &spec, &mut |u: &JobUpdate| match u.state {
+        JobState::Running => eprintln!(
+            "job {}: running (queued {:.1} ms)",
+            u.job,
+            u.queue_wait_ms.unwrap_or(0.0)
+        ),
+        JobState::Done => {}
+        _ => eprintln!("job {}: {}", u.job, u.state.name()),
+    })?;
+    eprintln!(
+        "job {}: done — {} draws (dim {}) queue_wait_ms={:.1} \
+         time_to_first_draw_ms={:.1}",
+        outcome.job,
+        outcome.combined.len(),
+        outcome.combined.dim(),
+        outcome.queue_wait_ms,
+        outcome.time_to_first_draw_ms
+    );
+    if let Some(path) = args.get("out") {
+        io::write_samples_csv(Path::new(path), &outcome.combined)?;
+        eprintln!("wrote {} draws to {path}", outcome.combined.len());
+    }
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     let dir = args.get("artifacts").unwrap_or("artifacts");
     let manifest = repro::runtime::Manifest::load(Path::new(dir))?;
@@ -475,7 +618,7 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn usage() -> &'static str {
-    "usage: repro <pipeline|single-chain|combine|eval|info> [flags]\n\
+    "usage: repro <pipeline|single-chain|combine|eval|info|leaderd|submit> [flags]\n\
      \n\
      pipeline      --model M --n N --d D --machines M --samples T \\\n\
                    --method NAME --seed S [--threads K] \\\n\
@@ -497,7 +640,12 @@ fn usage() -> &'static str {
      combine       --method NAME [--t T] [--combine-threads K] \\\n\
                    [--out FILE] m0.csv m1.csv …\n\
      eval          [--subsample K] a.csv b.csv\n\
-     info          [--artifacts DIR]"
+     info          [--artifacts DIR]\n\
+     leaderd       [--listen HOST:PORT] [--max-concurrent-jobs K] \\\n\
+                   [--jobs N] [--max-frame-bytes B] \\\n\
+                   [--submit-timeout-secs S]\n\
+     submit        --to HOST:PORT [pipeline flags | --config FILE] \\\n\
+                   [--n N] [--d D] [--out FILE]"
 }
 
 fn main() -> ExitCode {
@@ -523,6 +671,8 @@ fn main() -> ExitCode {
         "worker" => cmd_worker(&args),
         // Hidden: the socket-transport worker daemon.
         "serve" => cmd_serve(&args),
+        "leaderd" => cmd_leaderd(&args),
+        "submit" => cmd_submit(&args),
         "help" | "--help" | "-h" => {
             println!("{}", usage());
             Ok(())

@@ -1,0 +1,353 @@
+//! Leader-daemon integration: concurrent RPJOB1 jobs through an
+//! in-process `leaderd`, checked for the subsystem's one hard promise
+//! — every job's retained draws are byte-identical to the solo run of
+//! the same spec, at any concurrency, interleaving, io-driver, or
+//! failure policy — plus the scheduling behaviors around it (FIFO run
+//! slots, per-job endpoint lists over a shared worker fleet, chaos +
+//! retry, graceful drain).
+
+use std::io::{BufRead, BufReader, Write};
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use repro::config::PipelineConfig;
+use repro::coordinator::pipeline;
+use repro::coordinator::server::client;
+use repro::coordinator::server::{
+    leaderd, DaemonSummary, JobSpec, JobState, LeaderdOptions, Shutdown,
+};
+use repro::data::synth;
+use repro::error::Result;
+use repro::types::SampleMatrix;
+
+/// Captures the daemon's `LISTENING <addr>` announce line (which
+/// `writeln!` may deliver across several `write` calls) and hands the
+/// bound address to the test thread once it is complete.
+struct Announcer {
+    buf: Vec<u8>,
+    tx: mpsc::Sender<String>,
+    sent: bool,
+}
+
+impl Announcer {
+    fn channel() -> (Announcer, mpsc::Receiver<String>) {
+        let (tx, rx) = mpsc::channel();
+        (Announcer { buf: Vec::new(), tx, sent: false }, rx)
+    }
+}
+
+impl Write for Announcer {
+    fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+        self.buf.extend_from_slice(b);
+        if !self.sent {
+            if let Some(pos) = self.buf.iter().position(|&c| c == b'\n') {
+                let line = String::from_utf8_lossy(&self.buf[..pos]);
+                if let Some(rest) = line.trim().strip_prefix("LISTENING") {
+                    let _ = self.tx.send(rest.trim().to_string());
+                    self.sent = true;
+                }
+            }
+        }
+        Ok(b.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Boot an in-process leader daemon on an ephemeral port; returns its
+/// bound address, the shutdown handle, and the summary-bearing join
+/// handle.
+fn boot(
+    opts: LeaderdOptions,
+) -> (String, Shutdown, JoinHandle<Result<DaemonSummary>>) {
+    let (mut ann, rx) = Announcer::channel();
+    let shutdown = Shutdown::new();
+    let sd = shutdown.clone();
+    let handle = std::thread::spawn(move || {
+        leaderd("127.0.0.1:0", &opts, &sd, &mut ann)
+    });
+    let addr = rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("leaderd must announce LISTENING");
+    (addr, shutdown, handle)
+}
+
+/// One real `repro serve` worker daemon with extra flags; killed on
+/// drop.
+struct Daemon {
+    child: Child,
+    addr: String,
+}
+
+impl Daemon {
+    fn spawn(extra: &[&str]) -> Daemon {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_repro"))
+            .args(["serve", "--listen", "127.0.0.1:0"])
+            .args(extra)
+            .stdin(Stdio::null())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning repro serve");
+        let stdout = child.stdout.take().unwrap();
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).unwrap();
+        let addr = line
+            .trim()
+            .strip_prefix("LISTENING ")
+            .unwrap_or_else(|| panic!("bad announce line {line:?}"))
+            .to_string();
+        Daemon { child, addr }
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        self.child.kill().ok();
+        self.child.wait().ok();
+    }
+}
+
+fn assert_bit_identical(a: &SampleMatrix, b: &SampleMatrix) {
+    assert_eq!(a.len(), b.len(), "draw count");
+    assert_eq!(a.dim(), b.dim(), "dim");
+    for i in 0..a.len() {
+        let (ra, rb) = (a.row(i), b.row(i));
+        for j in 0..a.dim() {
+            assert_eq!(
+                ra[j].to_bits(),
+                rb[j].to_bits(),
+                "draw {i} coordinate {j} diverged"
+            );
+        }
+    }
+}
+
+/// Two same-spec jobs submitted concurrently both come back
+/// byte-identical to the solo in-thread run — the determinism-under-
+/// multiplexing contract — and the daemon's exit summary accounts for
+/// both.
+#[test]
+fn concurrent_same_spec_jobs_match_solo_native_run() {
+    let cfg = PipelineConfig::builder("gaussian")
+        .machines(4)
+        .samples_per_machine(300)
+        .seed(4242)
+        .build();
+    let (n, d) = (1200, 3);
+    let data = synth::by_name(&cfg.model, n, d, cfg.seed).unwrap();
+    let solo = pipeline::run_native(&cfg, &data).unwrap();
+
+    let opts = LeaderdOptions {
+        max_concurrent_jobs: 2,
+        max_jobs: Some(2),
+        ..Default::default()
+    };
+    let (addr, _shutdown, daemon) = boot(opts);
+    let spec = JobSpec::from_config(&cfg, n, d);
+    let outcomes: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let (spec, addr) = (spec.clone(), addr.clone());
+                s.spawn(move || {
+                    client::submit(&addr, &spec, &mut |_| {}).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let summary = daemon.join().unwrap().unwrap();
+    for outcome in &outcomes {
+        assert_bit_identical(&outcome.combined, &solo.combined);
+    }
+    assert_eq!(summary.metrics.jobs_accepted, 2);
+    assert_eq!(summary.metrics.jobs_failed, 0);
+    assert_eq!(summary.metrics.job_queue_wait_ms.len(), 2);
+    assert!(summary.jobs.iter().all(|j| j.state == JobState::Done));
+}
+
+/// Two different-seed jobs forced through a single run slot stay
+/// isolated: each matches its own solo run (no RNG or combiner state
+/// bleeds across jobs), and both queue-wait rows are reported.
+#[test]
+fn single_slot_daemon_serializes_jobs_without_cross_talk() {
+    let (n, d) = (900, 2);
+    let cfgs: Vec<PipelineConfig> = [11u64, 22]
+        .iter()
+        .map(|&seed| {
+            PipelineConfig::builder("gaussian")
+                .machines(3)
+                .samples_per_machine(250)
+                .seed(seed)
+                .build()
+        })
+        .collect();
+    let solos: Vec<SampleMatrix> = cfgs
+        .iter()
+        .map(|cfg| {
+            let data = synth::by_name(&cfg.model, n, d, cfg.seed).unwrap();
+            pipeline::run_native(cfg, &data).unwrap().combined
+        })
+        .collect();
+
+    let opts = LeaderdOptions {
+        max_concurrent_jobs: 1,
+        max_jobs: Some(2),
+        ..Default::default()
+    };
+    let (addr, _shutdown, daemon) = boot(opts);
+    let outcomes: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = cfgs
+            .iter()
+            .map(|cfg| {
+                let spec = JobSpec::from_config(cfg, n, d);
+                let addr = addr.clone();
+                s.spawn(move || {
+                    client::submit(&addr, &spec, &mut |_| {}).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let summary = daemon.join().unwrap().unwrap();
+    for (outcome, solo) in outcomes.iter().zip(&solos) {
+        assert_bit_identical(&outcome.combined, solo);
+    }
+    assert_eq!(summary.metrics.jobs_accepted, 2);
+    assert_eq!(summary.metrics.jobs_failed, 0);
+    assert_eq!(summary.jobs.len(), 2);
+}
+
+/// Socket jobs with *per-job endpoint lists* over a shared fleet —
+/// overlapping on one worker, one endpoint chaos-delayed, retry policy
+/// armed, and (on unix) one job under the reactor io-driver — all
+/// byte-identical to their solo in-thread runs.
+#[test]
+fn socket_jobs_with_per_job_endpoints_and_chaos_match_native() {
+    use repro::config::FailurePolicy;
+    let fleet = [
+        Daemon::spawn(&[]),
+        Daemon::spawn(&[]),
+        Daemon::spawn(&["--fault", "delay-ms:2"]),
+    ];
+    let (n, d) = (800, 2);
+    // Job 1: threads driver over workers {0, 1}, retry armed.
+    let cfg1 = PipelineConfig::builder("gaussian")
+        .machines(4)
+        .samples_per_machine(150)
+        .seed(7)
+        .workers(&format!("{},{}", fleet[0].addr, fleet[1].addr))
+        .failure_policy(FailurePolicy::Retry)
+        .build();
+    // Job 2: workers {1, 2} — sharing worker 1 with job 1, plus the
+    // chaos-delayed endpoint — under the reactor driver where the host
+    // has one, the threads driver elsewhere.
+    let mut b2 = PipelineConfig::builder("gaussian")
+        .machines(4)
+        .samples_per_machine(150)
+        .seed(31)
+        .workers(&format!("{},{}", fleet[1].addr, fleet[2].addr))
+        .failure_policy(FailurePolicy::Retry);
+    #[cfg(unix)]
+    {
+        b2 = b2.io_driver(repro::config::IoDriver::Reactor);
+    }
+    let cfg2 = b2.build();
+
+    let solos: Vec<SampleMatrix> = [&cfg1, &cfg2]
+        .iter()
+        .map(|cfg| {
+            let data = synth::by_name(&cfg.model, n, d, cfg.seed).unwrap();
+            pipeline::run_native(cfg, &data).unwrap().combined
+        })
+        .collect();
+
+    let opts = LeaderdOptions {
+        max_concurrent_jobs: 2,
+        max_jobs: Some(2),
+        ..Default::default()
+    };
+    let (addr, _shutdown, daemon) = boot(opts);
+    let outcomes: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = [&cfg1, &cfg2]
+            .iter()
+            .map(|cfg| {
+                let spec = JobSpec::from_config(cfg, n, d);
+                let addr = addr.clone();
+                s.spawn(move || {
+                    client::submit(&addr, &spec, &mut |_| {}).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let summary = daemon.join().unwrap().unwrap();
+    for (outcome, solo) in outcomes.iter().zip(&solos) {
+        assert_bit_identical(&outcome.combined, solo);
+    }
+    assert_eq!(summary.metrics.jobs_accepted, 2);
+    assert_eq!(summary.metrics.jobs_failed, 0);
+}
+
+/// Graceful drain: triggering shutdown mid-job lets the in-flight job
+/// finish normally, refuses a late submission with an in-band error,
+/// and the daemon returns its summary (exit 0 at the CLI).
+#[test]
+fn drain_finishes_inflight_job_and_refuses_new_submissions() {
+    // A chaos-delayed worker gives job 1 a guaranteed-long runtime
+    // (every frame write sleeps 25 ms), so the drain provably overlaps
+    // a running job instead of racing a fast one.
+    let worker = Daemon::spawn(&["--fault", "delay-ms:25"]);
+    let cfg = PipelineConfig::builder("gaussian")
+        .machines(3)
+        .samples_per_machine(120)
+        .seed(99)
+        .workers(&worker.addr)
+        .build();
+    let (n, d) = (600, 2);
+    let opts =
+        LeaderdOptions { max_concurrent_jobs: 1, ..Default::default() };
+    let (addr, shutdown, daemon) = boot(opts);
+    let spec = JobSpec::from_config(&cfg, n, d);
+
+    let (state_tx, state_rx) = mpsc::channel();
+    let job1 = {
+        let (addr, spec) = (addr.clone(), spec.clone());
+        std::thread::spawn(move || {
+            client::submit(&addr, &spec, &mut |u| {
+                let _ = state_tx.send(u.state);
+            })
+        })
+    };
+    // Wait until job 1 is actually running, then pull the plug.
+    loop {
+        match state_rx.recv_timeout(Duration::from_secs(20)).unwrap() {
+            JobState::Running => break,
+            _ => continue,
+        }
+    }
+    shutdown.trigger();
+    // Give the accept loop (25 ms poll) time to flip into draining.
+    std::thread::sleep(Duration::from_millis(300));
+    let refused = client::submit(&addr, &spec, &mut |_| {}).unwrap_err();
+    assert!(
+        refused.to_string().contains("refused"),
+        "late submission must be refused in-band, got: {refused}"
+    );
+    let outcome = job1
+        .join()
+        .unwrap()
+        .expect("in-flight job must finish during drain");
+    assert!(!outcome.combined.is_empty());
+    let summary = daemon
+        .join()
+        .unwrap()
+        .expect("daemon must exit cleanly after drain");
+    assert_eq!(summary.metrics.jobs_accepted, 1);
+    assert_eq!(summary.metrics.jobs_failed, 0);
+    assert_eq!(summary.jobs[0].state, JobState::Done);
+}
